@@ -1,0 +1,40 @@
+//! Regenerates every figure of the paper's evaluation section on the
+//! simulated testbed and prints paper-style tables (see EXPERIMENTS.md
+//! for the recorded paper-vs-measured comparison).
+//!
+//! ```sh
+//! cargo run --release --example paper_figures            # all figures
+//! cargo run --release --example paper_figures -- fig10   # one figure
+//! ```
+
+use wukong::bench::figures;
+
+fn main() {
+    let only: Option<String> = std::env::args().nth(1);
+    let run = |name: &str| only.as_deref().is_none_or(|o| o == name);
+
+    if run("fig4") || run("fig04") {
+        figures::fig04();
+    }
+    if run("fig7") || run("fig07") {
+        figures::fig07();
+    }
+    if run("fig8") || run("fig08") {
+        figures::fig08();
+    }
+    if run("fig9") || run("fig09") {
+        figures::fig09();
+    }
+    if run("fig10") {
+        figures::fig10();
+    }
+    if run("fig11") {
+        figures::fig11();
+    }
+    if run("fig12") {
+        figures::fig12();
+    }
+    if run("fig13") {
+        figures::fig13();
+    }
+}

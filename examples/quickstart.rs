@@ -1,0 +1,86 @@
+//! Quickstart: author a DAG with the builder API (the `dask.delayed`
+//! equivalent), submit it to WUKONG through the client facade, and read
+//! the report — the minimal end-to-end use of the public API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use wukong::prelude::*;
+
+fn main() {
+    // A small ETL-ish workflow: two sources fan in to a join, the join
+    // fans out to three transforms, which reduce to one result.
+    let mut b = DagBuilder::new();
+    let src_a = b.add_task("load-a", Payload::FixedMs { ms: 120.0 }, 32 << 20, &[]);
+    let src_b = b.add_task("load-b", Payload::FixedMs { ms: 80.0 }, 16 << 20, &[]);
+    let join = b.add_task("join", Payload::FixedMs { ms: 200.0 }, 48 << 20, &[src_a, src_b]);
+    let transforms: Vec<_> = (0..3)
+        .map(|i| {
+            b.add_task(
+                format!("transform-{i}"),
+                Payload::FixedMs { ms: 150.0 },
+                8 << 20,
+                &[join],
+            )
+        })
+        .collect();
+    b.add_task("report", Payload::FixedMs { ms: 60.0 }, 1 << 20, &transforms);
+    let dag = b.build().expect("valid DAG");
+
+    println!(
+        "workflow: {} tasks, {} leaves, depth {}, {} fan-ins, {} fan-outs",
+        dag.len(),
+        dag.leaves().len(),
+        dag.critical_path_len(),
+        dag.fan_in_count(),
+        dag.fan_out_count()
+    );
+
+    // Static schedules — what each initial executor receives (§IV-B).
+    let schedules = wukong::schedule::generate(&dag);
+    for s in schedules.iter() {
+        println!(
+            "  schedule for leaf {}: {} tasks, {} fan-in ops",
+            s.leaf,
+            s.task_count(),
+            s.fan_in_count()
+        );
+    }
+
+    // Run on the simulated serverless deployment (virtual time).
+    let cfg = SimConfig::default();
+    let result = engine::run_sim(async move { Client::new(cfg).compute(&dag).await });
+    println!("\n{}", result.report.row());
+    assert!(result.report.is_ok());
+    println!(
+        "final outputs: {} object(s), {} bytes",
+        result.outputs.len(),
+        result.outputs.values().map(|o| o.bytes).sum::<u64>()
+    );
+
+    // Compare with the serverful baseline on the same workflow.
+    let mut b2 = DagBuilder::new();
+    let a2 = b2.add_task("load-a", Payload::FixedMs { ms: 120.0 }, 32 << 20, &[]);
+    let dag2 = {
+        let b2 = &mut b2;
+        let src_b = b2.add_task("load-b", Payload::FixedMs { ms: 80.0 }, 16 << 20, &[]);
+        let join = b2.add_task("join", Payload::FixedMs { ms: 200.0 }, 48 << 20, &[a2, src_b]);
+        let ts: Vec<_> = (0..3)
+            .map(|i| {
+                b2.add_task(
+                    format!("transform-{i}"),
+                    Payload::FixedMs { ms: 150.0 },
+                    8 << 20,
+                    &[join],
+                )
+            })
+            .collect();
+        b2.add_task("report", Payload::FixedMs { ms: 60.0 }, 1 << 20, &ts);
+        std::mem::take(b2).build().unwrap()
+    };
+    let report = engine::run_sim(async move {
+        DaskCluster::ec2(SimConfig::default()).run(&dag2).await
+    });
+    println!("{}", report.row());
+}

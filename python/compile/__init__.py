@@ -1,0 +1,5 @@
+"""Build-time Python package: L2 JAX task payloads (model), L1 Pallas
+kernels (kernels/), and the AOT pipeline (aot) that lowers them to the
+HLO-text artifacts executed by the Rust runtime. Never imported at
+request time.
+"""

@@ -1,0 +1,64 @@
+"""AOT pipeline: lower every L2 payload in ``model.ARTIFACTS`` to HLO
+**text** under ``artifacts/``.
+
+HLO text — not ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. Lowering goes stablehlo -> XlaComputation with
+``return_tuple=True`` (the Rust runtime unwraps the 1-tuple).
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--only NAME]
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Converts a jax.jit(...).lower(...) result to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str) -> str:
+    """Lowers one registered artifact to HLO text."""
+    fn, example_args = model.ARTIFACTS[name]
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir",
+        default="../artifacts",
+        help="directory for <name>.hlo.txt files",
+    )
+    parser.add_argument(
+        "--only", default=None, help="lower a single artifact by name"
+    )
+    args = parser.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    names = [args.only] if args.only else sorted(model.ARTIFACTS)
+    for name in names:
+        text = lower_artifact(name)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

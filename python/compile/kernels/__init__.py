@@ -1,0 +1,19 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+* ``matmul`` — MXU-tiled dense matmul (GEMM / SVD2 projection / SVC).
+* ``add`` / ``add_tiled`` — elementwise combine (tree reduction, GEMM
+  partial-product sums).
+* ``reduce_sum`` — final collapse of the tree reduction.
+* ``ref`` — pure-jnp oracles for all of the above.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is both the correctness
+path (pytest vs ``ref``) and the AOT path (plain-HLO artifacts for the
+Rust runtime). Real-TPU performance is estimated from the BlockSpec VMEM
+footprint in DESIGN.md §7.
+"""
+
+from compile.kernels.elementwise import add, add_tiled, reduce_sum
+from compile.kernels.matmul import matmul, TILE
+
+__all__ = ["add", "add_tiled", "reduce_sum", "matmul", "TILE"]

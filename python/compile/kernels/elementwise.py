@@ -1,0 +1,68 @@
+"""L1 Pallas kernels: elementwise add (tree-reduction combine step) and
+block reduce-sum.
+
+The tree-reduction workload's combine step is a pure elementwise add over
+chunks; the final collapse is a sum-reduce. Both are tiled for VMEM with
+1-D (vector) and 2-D (matrix-block) variants.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-aligned vector tile (TPU VPU lane count is 128).
+VEC_TILE = 128
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+@jax.jit
+def add(x, y):
+    """Elementwise x + y as a Pallas kernel (any shape, one VMEM block).
+
+    Workload chunks are small (<= a few MiB), so a single block per call
+    is within VMEM; larger shapes would add a grid like `matmul`.
+    """
+    assert x.shape == y.shape, f"shape mismatch {x.shape} vs {y.shape}"
+    return pl.pallas_call(
+        _add_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def _sum_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...])[None]
+
+
+@jax.jit
+def reduce_sum(x):
+    """Sum of all elements as a Pallas kernel -> shape () f32."""
+    out = pl.pallas_call(
+        _sum_kernel,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+    return out.reshape(())
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def add_tiled(x, y, *, tile=VEC_TILE):
+    """Grid-tiled 1-D add for long vectors (VMEM-bounded)."""
+    (n,) = x.shape
+    assert n % tile == 0, f"{n} not a multiple of {tile}"
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

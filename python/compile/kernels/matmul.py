@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: tiled dense matmul (the compute hot-spot of GEMM,
+SVD2's randomized projection, and the SVC kernel matrix).
+
+TPU-shaped tiling (see DESIGN.md §Hardware-Adaptation):
+
+* Blocks are ``(TILE, TILE)`` = (128, 128) — the MXU systolic-array edge.
+* The grid walks ``(M/TILE, N/TILE, K/TILE)``; each step loads one A-tile
+  and one B-tile into VMEM via ``BlockSpec`` and accumulates into the
+  output tile, expressing the HBM->VMEM schedule a CUDA kernel would
+  express with threadblocks.
+* VMEM footprint: 3 f32 tiles = 3 * 128 * 128 * 4 B = 192 KiB << 16 MiB.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels are lowered to plain HLO for both the pytest
+oracle checks and the AOT artifacts consumed by the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile edge.
+TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o += a @ b for the current (i, j, k) tile triple."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k"))
+def matmul(a, b, *, tile_m=TILE, tile_n=TILE, tile_k=TILE):
+    """Tiled Pallas matmul: a (M, K) @ b (K, N) -> (M, N), f32.
+
+    Shapes must be multiples of the tile sizes (the DAG workloads always
+    produce full tiles; ragged edges would be handled by padding at the
+    L2 layer).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    assert m % tile_m == 0 and n % tile_n == 0 and k % tile_k == 0, (
+        f"shapes {a.shape} @ {b.shape} not multiples of "
+        f"({tile_m}, {tile_n}, {tile_k})"
+    )
+    grid = (m // tile_m, n // tile_n, k // tile_k)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

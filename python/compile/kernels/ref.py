@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle to float32 tolerance;
+pytest (python/tests/test_kernels.py) sweeps shapes with hypothesis and
+asserts allclose. This is the CORE correctness signal for L1.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Reference dense matmul in f32."""
+    return jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def add(x, y):
+    """Reference elementwise add in f32."""
+    return x.astype(jnp.float32) + y.astype(jnp.float32)
+
+
+def reduce_sum(x):
+    """Reference full reduce-sum in f32."""
+    return jnp.sum(x.astype(jnp.float32))
+
+
+def svc_step(w, x, y, lr=0.1):
+    """Reference linear-SVC subgradient step (squared hinge loss).
+
+    w: (F, 1), x: (S, F), y: (S, 1) in {-1, +1}. Returns updated w.
+    """
+    w = w.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    margin = y * (x @ w)  # (S, 1)
+    active = jnp.maximum(0.0, 1.0 - margin)  # squared hinge active set
+    grad = -2.0 * (x.T @ (active * y)) / x.shape[0] + 1e-4 * w
+    return w - lr * grad

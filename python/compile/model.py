@@ -1,0 +1,93 @@
+"""L2: JAX task payloads — the per-task compute graphs of the paper's
+workloads, composed from the L1 Pallas kernels.
+
+Each function here is one *task body* in the WUKONG DAG (the unit a Task
+Executor runs), not a whole workload: the DAG structure lives in the Rust
+workload builders (rust/src/workloads), mirroring how WUKONG ships task
+code inside static schedules while the scheduler owns the graph.
+
+``aot.py`` lowers each entry of ``ARTIFACTS`` once to HLO text; the Rust
+runtime compiles and caches them at startup.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.kernels import matmul as matmul_mod
+
+
+def tr_add(x, y):
+    """Tree-reduction combine: elementwise sum of two chunks (L1 kernel)."""
+    return kernels.add(x, y)
+
+
+def tr_sum(x):
+    """Tree-reduction final collapse: scalar sum of a chunk (L1 kernel)."""
+    return kernels.reduce_sum(x)
+
+
+def gemm_block(a, b):
+    """Blocked-GEMM partial product: one (TILE x TILE) block matmul."""
+    return kernels.matmul(a, b)
+
+
+def gemm_block_large(a, b):
+    """Multi-tile block matmul (grid-tiled kernel) for 256-edge blocks."""
+    return kernels.matmul(a, b, tile_m=128, tile_n=128, tile_k=128)
+
+
+def add_block(x, y):
+    """GEMM partial-product accumulation: elementwise block add."""
+    return kernels.add(x, y)
+
+
+def svc_step(w, x, y):
+    """One linear-SVC subgradient step (squared hinge).
+
+    The kernel-matrix product X @ w runs through the L1 Pallas matmul;
+    the remainder is elementwise jnp that XLA fuses around it.
+    w: (F, 1), x: (S, F), y: (S, 1).
+    """
+    s = x.shape[0]
+    margin = y * kernels.matmul(x, w, tile_m=s, tile_n=1, tile_k=x.shape[1])
+    active = jnp.maximum(0.0, 1.0 - margin)
+    grad = (
+        -2.0
+        * kernels.matmul(
+            x.T, active * y, tile_m=x.shape[1], tile_n=1, tile_k=s
+        )
+        / s
+        + 1e-4 * w
+    )
+    return w - 0.1 * grad
+
+
+# ---------------------------------------------------------------------------
+# AOT artifact registry: name -> (fn, example_args). Shapes are fixed at
+# lowering time (PJRT executables are monomorphic); the Rust workloads
+# build their DAGs in exactly these block shapes.
+# ---------------------------------------------------------------------------
+
+TILE = kernels.TILE  # 128
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+ARTIFACTS = {
+    # Tree reduction over 128-float chunks.
+    "add128": (tr_add, (_f32(TILE), _f32(TILE))),
+    "sum128": (tr_sum, (_f32(TILE),)),
+    # Blocked GEMM on 128x128 tiles.
+    "matmul128": (gemm_block, (_f32(TILE, TILE), _f32(TILE, TILE))),
+    "addmat128": (add_block, (_f32(TILE, TILE), _f32(TILE, TILE))),
+    # 2x2-tile block matmul (exercises the kernel grid in AOT form).
+    "matmul256": (gemm_block_large, (_f32(2 * TILE, 2 * TILE), _f32(2 * TILE, 2 * TILE))),
+    # SVC training step on one 256x16 chunk.
+    "svc_step": (svc_step, (_f32(16, 1), _f32(256, 16), _f32(256, 1))),
+}
+
+# Silence the "unused import" linters: matmul_mod is re-exported for tests.
+_ = matmul_mod

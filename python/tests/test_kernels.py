@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (multiples of the tile sizes) and input dtypes;
+every kernel output must match its ``ref`` oracle to f32 tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile import kernels
+from compile.kernels import ref
+
+# Interpret-mode Pallas is slow; keep example counts modest but meaningful.
+COMMON = dict(deadline=None, max_examples=20)
+
+DTYPES = [np.float32, np.float64, np.int32]
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(dtype, np.integer):
+        return rng.integers(-10, 10, size=shape).astype(dtype)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+class TestMatmul:
+    @settings(**COMMON)
+    @given(
+        m=st.integers(1, 3),
+        k=st.integers(1, 3),
+        n=st.integers(1, 3),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_on_tile_multiples(self, m, k, n, dtype, seed):
+        t = kernels.TILE
+        a = rand((m * t, k * t), dtype, seed)
+        b = rand((k * t, n * t), dtype, seed + 1)
+        got = kernels.matmul(jnp.asarray(a), jnp.asarray(b))
+        want = ref.matmul(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    @settings(**COMMON)
+    @given(
+        tiles=st.sampled_from([(32, 32, 32), (64, 32, 16), (16, 128, 64)]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_custom_tile_shapes(self, tiles, seed):
+        tm, tn, tk = tiles
+        a = rand((2 * tm, 2 * tk), np.float32, seed)
+        b = rand((2 * tk, 2 * tn), np.float32, seed + 1)
+        got = kernels.matmul(
+            jnp.asarray(a), jnp.asarray(b), tile_m=tm, tile_n=tn, tile_k=tk
+        )
+        np.testing.assert_allclose(
+            got, ref.matmul(jnp.asarray(a), jnp.asarray(b)), rtol=1e-4, atol=1e-3
+        )
+
+    def test_identity(self):
+        t = kernels.TILE
+        a = rand((t, t), np.float32, 0)
+        eye = np.eye(t, dtype=np.float32)
+        np.testing.assert_allclose(
+            kernels.matmul(jnp.asarray(a), jnp.asarray(eye)), a, rtol=1e-5
+        )
+
+    def test_rejects_ragged_shapes(self):
+        with pytest.raises(AssertionError):
+            kernels.matmul(jnp.zeros((100, 128)), jnp.zeros((128, 128)))
+
+    def test_rejects_mismatched_inner(self):
+        with pytest.raises(AssertionError):
+            kernels.matmul(jnp.zeros((128, 128)), jnp.zeros((256, 128)))
+
+
+class TestAdd:
+    @settings(**COMMON)
+    @given(
+        shape=st.sampled_from([(128,), (256,), (128, 128), (64, 32), (7, 13)]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, shape, dtype, seed):
+        x = rand(shape, dtype, seed)
+        y = rand(shape, dtype, seed + 1)
+        got = kernels.add(jnp.asarray(x), jnp.asarray(y))
+        np.testing.assert_allclose(
+            got, ref.add(jnp.asarray(x), jnp.asarray(y)), rtol=1e-6
+        )
+
+    @settings(**COMMON)
+    @given(blocks=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+    def test_tiled_add_matches_ref(self, blocks, seed):
+        n = blocks * 128
+        x = rand((n,), np.float32, seed)
+        y = rand((n,), np.float32, seed + 1)
+        got = kernels.add_tiled(jnp.asarray(x), jnp.asarray(y))
+        np.testing.assert_allclose(got, x + y, rtol=1e-6)
+
+    def test_commutative(self):
+        x = rand((128,), np.float32, 3)
+        y = rand((128,), np.float32, 4)
+        a = kernels.add(jnp.asarray(x), jnp.asarray(y))
+        b = kernels.add(jnp.asarray(y), jnp.asarray(x))
+        np.testing.assert_array_equal(a, b)
+
+
+class TestReduceSum:
+    @settings(**COMMON)
+    @given(
+        shape=st.sampled_from([(128,), (1024,), (128, 128), (3, 5, 7)]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, shape, seed):
+        x = rand(shape, np.float32, seed)
+        got = kernels.reduce_sum(jnp.asarray(x))
+        assert got.shape == ()
+        np.testing.assert_allclose(
+            got, ref.reduce_sum(jnp.asarray(x)), rtol=1e-4, atol=1e-3
+        )
+
+    def test_zeros(self):
+        assert float(kernels.reduce_sum(jnp.zeros(128))) == 0.0
+
+
+class TestTreeReductionProperty:
+    """End-to-end L1 property: pairwise-adding chunks then collapsing
+    equals the plain sum — the numeric invariant behind the TR workload."""
+
+    @settings(**COMMON)
+    @given(chunks=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+    def test_tree_reduce_equals_sum(self, chunks, seed):
+        data = [
+            jnp.asarray(rand((128,), np.float32, seed + i))
+            for i in range(chunks)
+        ]
+        level = data
+        while len(level) > 1:
+            level = [
+                kernels.add(level[i], level[i + 1])
+                for i in range(0, len(level), 2)
+            ]
+        got = kernels.reduce_sum(level[0])
+        want = ref.reduce_sum(jnp.concatenate(data))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)

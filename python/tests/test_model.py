@@ -1,0 +1,119 @@
+"""L2 correctness: model payloads (shapes + numerics vs oracles)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+COMMON = dict(deadline=None, max_examples=10)
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+class TestPayloadShapes:
+    def test_artifact_registry_is_complete(self):
+        # Every artifact the Rust workloads reference must be registered.
+        for name in ["add128", "sum128", "matmul128", "addmat128", "svc_step"]:
+            assert name in model.ARTIFACTS, name
+
+    def test_artifact_example_args_run(self):
+        for name, (fn, args) in model.ARTIFACTS.items():
+            concrete = [jnp.zeros(a.shape, a.dtype) for a in args]
+            out = fn(*concrete)
+            assert out is not None, name
+
+
+class TestTrPayloads:
+    @settings(**COMMON)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_tr_add(self, seed):
+        x, y = rand((128,), seed), rand((128,), seed + 1)
+        np.testing.assert_allclose(
+            model.tr_add(jnp.asarray(x), jnp.asarray(y)), x + y, rtol=1e-6
+        )
+
+    def test_tr_sum_scalar(self):
+        out = model.tr_sum(jnp.ones(128))
+        assert out.shape == ()
+        np.testing.assert_allclose(out, 128.0)
+
+
+class TestGemmPayloads:
+    @settings(**COMMON)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_gemm_block(self, seed):
+        a, b = rand((128, 128), seed), rand((128, 128), seed + 1)
+        np.testing.assert_allclose(
+            model.gemm_block(jnp.asarray(a), jnp.asarray(b)),
+            a @ b,
+            rtol=1e-4,
+            atol=1e-3,
+        )
+
+    def test_gemm_block_large(self):
+        a, b = rand((256, 256), 7), rand((256, 256), 8)
+        np.testing.assert_allclose(
+            model.gemm_block_large(jnp.asarray(a), jnp.asarray(b)),
+            a @ b,
+            rtol=1e-4,
+            atol=1e-2,
+        )
+
+    def test_blocked_equals_full(self):
+        """2x2 block decomposition with add_block == full matmul — the
+        numeric invariant behind the GEMM workload DAG."""
+        a, b = rand((256, 256), 1), rand((256, 256), 2)
+        full = a @ b
+        blocks = {}
+        for i in range(2):
+            for j in range(2):
+                partials = []
+                for k in range(2):
+                    ab = a[i * 128:(i + 1) * 128, k * 128:(k + 1) * 128]
+                    bb = b[k * 128:(k + 1) * 128, j * 128:(j + 1) * 128]
+                    partials.append(
+                        model.gemm_block(jnp.asarray(ab), jnp.asarray(bb))
+                    )
+                blocks[(i, j)] = model.add_block(partials[0], partials[1])
+        for (i, j), blk in blocks.items():
+            np.testing.assert_allclose(
+                blk,
+                full[i * 128:(i + 1) * 128, j * 128:(j + 1) * 128],
+                rtol=1e-4,
+                atol=1e-2,
+            )
+
+
+class TestSvcPayload:
+    @settings(**COMMON)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_svc_step_matches_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rand((16, 1), seed)
+        x = rand((256, 16), seed + 1)
+        y = rng.choice([-1.0, 1.0], size=(256, 1)).astype(np.float32)
+        got = model.svc_step(jnp.asarray(w), jnp.asarray(x), jnp.asarray(y))
+        want = ref.svc_step(jnp.asarray(w), jnp.asarray(x), jnp.asarray(y))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_svc_step_reduces_loss(self):
+        """A few steps on separable data must reduce the hinge loss."""
+        rng = np.random.default_rng(0)
+        true_w = rng.standard_normal((16, 1)).astype(np.float32)
+        x = rng.standard_normal((256, 16)).astype(np.float32)
+        y = np.sign(x @ true_w).astype(np.float32)
+
+        def loss(w):
+            margin = y * (x @ np.asarray(w))
+            return float(np.mean(np.maximum(0.0, 1.0 - margin) ** 2))
+
+        w = jnp.zeros((16, 1))
+        l0 = loss(w)
+        for _ in range(10):
+            w = model.svc_step(w, jnp.asarray(x), jnp.asarray(y))
+        assert loss(w) < l0

@@ -1,0 +1,14 @@
+//! Figure 4 — TR across the strawman/pub-sub/parallel-invoker design iterations
+//!
+//! Regenerates the figure's series on the simulated testbed (virtual
+//! time). Absolute numbers differ from the paper's AWS deployment; the
+//! reproduced quantity is the shape. See DESIGN.md §4 and EXPERIMENTS.md.
+
+fn main() {
+    let cells = wukong::bench::figures::fig04();
+    let failed = cells
+        .iter()
+        .filter(|c| c.failure.is_some() && !c.platform.starts_with("Dask"))
+        .count();
+    assert_eq!(failed, 0, "non-Dask platform failed (Dask OOMs are expected)");
+}

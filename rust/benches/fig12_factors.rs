@@ -1,0 +1,20 @@
+//! Figure 12 — factor analysis: how much each major WUKONG version
+//! contributed to the end-to-end improvement over the strawman
+//! (decentralization largest; then parallel invokers, KV proxy,
+//! shard-per-VM, local cache).
+
+fn main() {
+    let cells = wukong::bench::figures::fig12();
+    // The full WUKONG version must be the fastest of the lineage.
+    let full = cells.last().expect("cells");
+    let best = cells
+        .iter()
+        .filter(|c| c.mean().is_finite())
+        .map(|c| c.mean())
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        full.mean() <= best * 1.05,
+        "full WUKONG ({:.2}s) is not the fastest version ({best:.2}s)",
+        full.mean()
+    );
+}

@@ -1,0 +1,18 @@
+//! Figure 13 — CDF breakdown of individual task latencies in SVD2
+//! (50k×50k) on WUKONG: most tasks are fast; a minority suffers long KV
+//! reads/writes whose tail drives the workload's overall runtime.
+
+fn main() {
+    let (total, network, _compute) = wukong::bench::figures::fig13();
+    // Paper shape: a heavy network tail — the p99 total latency must be
+    // several times the median, and the network component must dominate
+    // the tail.
+    assert!(total.len() > 0);
+    assert!(
+        total.p99() > 2.0 * total.p50(),
+        "expected a heavy tail: p99 {:.3}s vs p50 {:.3}s",
+        total.p99(),
+        total.p50()
+    );
+    assert!(network.max() > 0.0, "no network time recorded");
+}

@@ -1,0 +1,118 @@
+//! Perf bench: wall-clock throughput of the L3 simulator hot path.
+//!
+//! Targets (DESIGN.md §7): the scheduler hot path must sustain >= 100k
+//! simulated task events/s so paper-scale sweeps complete in seconds.
+//! Tracked before/after in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
+use wukong::core::SimConfig;
+use wukong::engine::{run_sim, WukongEngine};
+use wukong::workloads;
+
+fn bench_case(name: &str, tasks: usize, iters: usize, mut run: impl FnMut()) -> f64 {
+    // Warm-up.
+    run();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        run();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let per_iter = dt / iters as f64;
+    let tasks_per_sec = tasks as f64 / per_iter;
+    println!(
+        "{name:<42} {per_iter:>9.4}s/run {:>12.0} tasks/s",
+        tasks_per_sec
+    );
+    tasks_per_sec
+}
+
+fn main() {
+    println!("=== perf: simulator hot-path throughput (wall clock) ===");
+    let cfg = SimConfig::test();
+
+    let tr = workloads::tree_reduction(1024, 0.0, &cfg);
+    let n_tr = tr.len();
+    bench_case("wukong/TR-1024 (1023 tasks)", n_tr, 5, || {
+        let (cfg, dag) = (cfg.clone(), tr.clone());
+        let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+        assert!(r.is_ok());
+    });
+
+    let tr8k = workloads::tree_reduction(8192, 0.0, &cfg);
+    let n8k = tr8k.len();
+    bench_case("wukong/TR-8192 (8191 tasks)", n8k, 3, || {
+        let (cfg, dag) = (cfg.clone(), tr8k.clone());
+        let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+        assert!(r.is_ok());
+    });
+
+    let gemm = workloads::gemm(25_000, &cfg);
+    let n_gemm = gemm.len();
+    bench_case(
+        &format!("wukong/GEMM-25k ({n_gemm} tasks)"),
+        n_gemm,
+        3,
+        || {
+            let (cfg, dag) = (cfg.clone(), gemm.clone());
+            let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+            assert!(r.is_ok());
+        },
+    );
+
+    let svd2 = workloads::svd2(100_000, &cfg);
+    let n_svd = svd2.len();
+    bench_case(
+        &format!("wukong/SVD2-100k ({n_svd} tasks)"),
+        n_svd,
+        3,
+        || {
+            let (cfg, dag) = (cfg.clone(), svd2.clone());
+            let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+            assert!(r.is_ok());
+        },
+    );
+
+    bench_case("parallel-invoker/TR-1024", n_tr, 3, || {
+        let (cfg, dag) = (cfg.clone(), tr.clone());
+        let r = run_sim(async move {
+            CentralizedEngine::new(cfg, DesignIteration::ParallelInvoker)
+                .run(&dag)
+                .await
+        });
+        assert!(r.is_ok());
+    });
+
+    bench_case("dask-ec2/GEMM-25k", n_gemm, 3, || {
+        let (cfg, dag) = (cfg.clone(), gemm.clone());
+        let r = run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await });
+        assert!(r.is_ok());
+    });
+
+    // Micro: raw executor event throughput (spawn+sleep+join).
+    let t0 = Instant::now();
+    let n = 200_000usize;
+    wukong::rt::run_virtual(async move {
+        let mut handles = Vec::with_capacity(1000);
+        for i in 0..n {
+            handles.push(wukong::rt::spawn(async move {
+                wukong::rt::sleep(std::time::Duration::from_micros((i % 97) as u64 + 1)).await;
+            }));
+            if handles.len() == 1000 {
+                for h in handles.drain(..) {
+                    h.await;
+                }
+            }
+        }
+        for h in handles {
+            h.await;
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<42} {:>9.4}s/run {:>12.0} timer-events/s",
+        "rt/spawn+sleep microbench (200k tasks)",
+        dt,
+        n as f64 / dt
+    );
+}

@@ -1,0 +1,16 @@
+//! Baseline schedulers.
+//!
+//! * The three centralized design iterations of the paper's motivational
+//!   study (§III): **strawman** (Fig. 1), **pub/sub** (Fig. 2), and
+//!   **parallel-invoker** (Fig. 3) — all Dask-derived centralized
+//!   schedulers driving single-task Lambda executions.
+//! * The **serverful Dask distributed** baseline (§V): a fixed worker
+//!   pool with a centralized locality-aware scheduler and direct
+//!   worker-to-worker transfers, including the memory accounting that
+//!   reproduces the paper's OOM failures.
+
+pub mod centralized;
+pub mod dask;
+
+pub use centralized::{CentralizedEngine, DesignIteration};
+pub use dask::DaskCluster;

@@ -1,0 +1,412 @@
+//! The paper's figures, as runnable sweeps (DESIGN.md §4 experiment index).
+//!
+//! Each `figNN()` regenerates one figure of the paper's evaluation:
+//! the same workloads, the same parameter sweeps, the same platform set —
+//! on the simulated testbed. Absolute seconds differ from the paper's AWS
+//! numbers; the reproduced quantity is the *shape* (who wins, rough
+//! factors, crossover points). Used by `rust/benches/figNN_*.rs` and
+//! `examples/paper_figures.rs`.
+
+use crate::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
+use crate::bench::{print_table, run_cell, Cell};
+use crate::core::SimConfig;
+use crate::dag::Dag;
+use crate::engine::{run_sim, WukongEngine};
+use crate::metrics::{Cdf, JobReport};
+use crate::workloads;
+
+/// Repeats per cell (error bars). Override with WUKONG_BENCH_REPEATS.
+pub fn repeats() -> usize {
+    std::env::var("WUKONG_BENCH_REPEATS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}
+
+fn cfg_with_seed(seed: u64) -> SimConfig {
+    SimConfig {
+        seed,
+        ..SimConfig::default()
+    }
+}
+
+/// All platform runners used across figures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Platform {
+    Strawman,
+    PubSub,
+    ParallelInvoker,
+    Wukong,
+    WukongIdeal,
+    DaskEc2,
+    DaskLaptop,
+}
+
+impl Platform {
+    pub fn label(self) -> &'static str {
+        match self {
+            Platform::Strawman => "Strawman",
+            Platform::PubSub => "Pub/Sub",
+            Platform::ParallelInvoker => "Parallel-Invoker",
+            Platform::Wukong => "WUKONG",
+            Platform::WukongIdeal => "WUKONG (ideal storage)",
+            Platform::DaskEc2 => "Dask (EC2)",
+            Platform::DaskLaptop => "Dask (Laptop)",
+        }
+    }
+
+    pub fn run(self, dag: &Dag, cfg: &SimConfig) -> JobReport {
+        let dag = dag.clone();
+        let cfg = cfg.clone();
+        match self {
+            Platform::Strawman => run_sim(async move {
+                CentralizedEngine::new(cfg, DesignIteration::Strawman)
+                    .run(&dag)
+                    .await
+            }),
+            Platform::PubSub => run_sim(async move {
+                CentralizedEngine::new(cfg, DesignIteration::PubSub)
+                    .run(&dag)
+                    .await
+            }),
+            Platform::ParallelInvoker => run_sim(async move {
+                CentralizedEngine::new(cfg, DesignIteration::ParallelInvoker)
+                    .run(&dag)
+                    .await
+            }),
+            Platform::Wukong => {
+                run_sim(async move { WukongEngine::new(cfg).run(&dag).await })
+            }
+            Platform::WukongIdeal => run_sim(async move {
+                WukongEngine::new(cfg.with_ideal_storage())
+                    .with_label("WUKONG (ideal storage)")
+                    .run(&dag)
+                    .await
+            }),
+            Platform::DaskEc2 => {
+                run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await })
+            }
+            Platform::DaskLaptop => {
+                run_sim(async move { DaskCluster::laptop(cfg).run(&dag).await })
+            }
+        }
+    }
+}
+
+/// Generic sweep: platforms x xs, `make_dag(x, cfg)`.
+fn sweep(
+    platforms: &[Platform],
+    xs: &[(String, Box<dyn Fn(&SimConfig) -> Dag>)],
+    reps: usize,
+) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for (xlabel, make) in xs {
+        for &p in platforms {
+            cells.push(run_cell(p.label(), xlabel.clone(), reps, |seed| {
+                let cfg = cfg_with_seed(seed);
+                let dag = make(&cfg);
+                p.run(&dag, &cfg)
+            }));
+        }
+    }
+    cells
+}
+
+fn xs_of(cells: &[Cell]) -> Vec<String> {
+    let mut xs = Vec::new();
+    for c in cells {
+        if !xs.contains(&c.x) {
+            xs.push(c.x.clone());
+        }
+    }
+    xs
+}
+
+fn platform_labels(platforms: &[Platform]) -> Vec<String> {
+    platforms.iter().map(|p| p.label().to_string()).collect()
+}
+
+/// Fig. 4 — design-iteration comparison on Tree Reduction (1024 elements,
+/// sleep delays 0/100/250/500 ms).
+pub fn fig04() -> Vec<Cell> {
+    let platforms = [
+        Platform::Strawman,
+        Platform::PubSub,
+        Platform::ParallelInvoker,
+    ];
+    let xs: Vec<(String, Box<dyn Fn(&SimConfig) -> Dag>)> = [0.0, 100.0, 250.0, 500.0]
+        .into_iter()
+        .map(|ms| {
+            (
+                format!("TR sleep={ms:.0}ms"),
+                Box::new(move |cfg: &SimConfig| workloads::tree_reduction(1024, ms, cfg))
+                    as Box<dyn Fn(&SimConfig) -> Dag>,
+            )
+        })
+        .collect();
+    let cells = sweep(&platforms, &xs, repeats());
+    print_table(
+        "Figure 4: TR across design iterations",
+        &xs_of(&cells),
+        &platform_labels(&platforms),
+        &cells,
+    );
+    crate::bench::print_speedups(&cells, "Parallel-Invoker", "Strawman");
+    cells
+}
+
+/// Fig. 7 — TR: WUKONG vs all prior iterations vs serverful Dask.
+pub fn fig07() -> Vec<Cell> {
+    let platforms = [
+        Platform::DaskLaptop,
+        Platform::DaskEc2,
+        Platform::Strawman,
+        Platform::PubSub,
+        Platform::ParallelInvoker,
+        Platform::Wukong,
+    ];
+    let xs: Vec<(String, Box<dyn Fn(&SimConfig) -> Dag>)> = [0.0, 100.0, 250.0, 500.0]
+        .into_iter()
+        .map(|ms| {
+            (
+                format!("TR sleep={ms:.0}ms"),
+                Box::new(move |cfg: &SimConfig| workloads::tree_reduction(1024, ms, cfg))
+                    as Box<dyn Fn(&SimConfig) -> Dag>,
+            )
+        })
+        .collect();
+    let cells = sweep(&platforms, &xs, repeats());
+    print_table(
+        "Figure 7: TR — WUKONG vs baselines",
+        &xs_of(&cells),
+        &platform_labels(&platforms),
+        &cells,
+    );
+    crate::bench::print_speedups(&cells, "WUKONG", "Dask (EC2)");
+    cells
+}
+
+/// Fig. 8 — GEMM 10k/25k/50k (both Dask setups OOM at 50k).
+pub fn fig08() -> Vec<Cell> {
+    let platforms = [Platform::DaskLaptop, Platform::DaskEc2, Platform::Wukong];
+    let xs: Vec<(String, Box<dyn Fn(&SimConfig) -> Dag>)> = [10_000usize, 25_000, 50_000]
+        .into_iter()
+        .map(|n| {
+            (
+                format!("GEMM {}k", n / 1000),
+                Box::new(move |cfg: &SimConfig| workloads::gemm(n, cfg))
+                    as Box<dyn Fn(&SimConfig) -> Dag>,
+            )
+        })
+        .collect();
+    let cells = sweep(&platforms, &xs, repeats());
+    print_table(
+        "Figure 8: GEMM",
+        &xs_of(&cells),
+        &platform_labels(&platforms),
+        &cells,
+    );
+    crate::bench::print_speedups(&cells, "WUKONG", "Dask (EC2)");
+    cells
+}
+
+/// Fig. 9 — SVD of tall-and-skinny matrices (200k..1000k rows).
+pub fn fig09() -> Vec<Cell> {
+    let platforms = [Platform::DaskLaptop, Platform::DaskEc2, Platform::Wukong];
+    let xs: Vec<(String, Box<dyn Fn(&SimConfig) -> Dag>)> =
+        [200_000usize, 400_000, 800_000, 1_000_000]
+            .into_iter()
+            .map(|rows| {
+                (
+                    format!("SVD1 {}k rows", rows / 1000),
+                    Box::new(move |cfg: &SimConfig| workloads::svd1(rows, cfg))
+                        as Box<dyn Fn(&SimConfig) -> Dag>,
+                )
+            })
+            .collect();
+    let cells = sweep(&platforms, &xs, repeats());
+    print_table(
+        "Figure 9: SVD1 (tall-and-skinny)",
+        &xs_of(&cells),
+        &platform_labels(&platforms),
+        &cells,
+    );
+    crate::bench::print_speedups(&cells, "WUKONG", "Dask (EC2)");
+    cells
+}
+
+/// Fig. 10 — randomized rank-5 SVD of square matrices (25k/50k/100k),
+/// including the ideal-storage WUKONG variant; also reports the Lambda
+/// counts the paper lists in §V-A.
+pub fn fig10() -> Vec<Cell> {
+    let platforms = [
+        Platform::DaskLaptop,
+        Platform::DaskEc2,
+        Platform::Wukong,
+        Platform::WukongIdeal,
+    ];
+    let xs: Vec<(String, Box<dyn Fn(&SimConfig) -> Dag>)> = [25_000usize, 50_000, 100_000]
+        .into_iter()
+        .map(|n| {
+            (
+                format!("SVD2 {}k", n / 1000),
+                Box::new(move |cfg: &SimConfig| workloads::svd2(n, cfg))
+                    as Box<dyn Fn(&SimConfig) -> Dag>,
+            )
+        })
+        .collect();
+    let cells = sweep(&platforms, &xs, repeats());
+    print_table(
+        "Figure 10: SVD2 (general matrix)",
+        &xs_of(&cells),
+        &platform_labels(&platforms),
+        &cells,
+    );
+    crate::bench::print_speedups(&cells, "WUKONG", "Dask (EC2)");
+    crate::bench::print_speedups(&cells, "WUKONG (ideal storage)", "Dask (EC2)");
+    // Lambda counts per size (paper: 84, 480, 295, 1082 for 10k..100k).
+    println!("\nLambda counts (paper §V-A: 84, 480, 295, 1082 for 10k/25k/50k/100k):");
+    for n in [10_000usize, 25_000, 50_000, 100_000] {
+        let cfg = cfg_with_seed(1);
+        let dag = workloads::svd2(n, &cfg);
+        let report = Platform::Wukong.run(&dag, &cfg);
+        println!(
+            "  SVD2 {:>4}k: {} lambdas ({} tasks)",
+            n / 1000,
+            report.lambdas_invoked,
+            report.tasks_executed
+        );
+    }
+    cells
+}
+
+/// Fig. 11 — SVC (100k..800k samples).
+pub fn fig11() -> Vec<Cell> {
+    let platforms = [Platform::DaskLaptop, Platform::DaskEc2, Platform::Wukong];
+    let xs: Vec<(String, Box<dyn Fn(&SimConfig) -> Dag>)> =
+        [100_000usize, 200_000, 400_000, 800_000]
+            .into_iter()
+            .map(|s| {
+                (
+                    format!("SVC {}k", s / 1000),
+                    Box::new(move |cfg: &SimConfig| workloads::svc(s, cfg))
+                        as Box<dyn Fn(&SimConfig) -> Dag>,
+                )
+            })
+            .collect();
+    let cells = sweep(&platforms, &xs, repeats());
+    print_table(
+        "Figure 11: SVC",
+        &xs_of(&cells),
+        &platform_labels(&platforms),
+        &cells,
+    );
+    crate::bench::print_speedups(&cells, "WUKONG", "Dask (EC2)");
+    cells
+}
+
+/// Fig. 12 — factor analysis: cumulative contribution of each major
+/// optimization from Strawman to full WUKONG, on SVD2 25k.
+pub fn fig12() -> Vec<Cell> {
+    let reps = repeats();
+    let make = |cfg: &SimConfig| workloads::svd2(25_000, cfg);
+    let mut cells: Vec<Cell> = Vec::new();
+
+    // Versions 1-3: the centralized design iterations.
+    for p in [
+        Platform::Strawman,
+        Platform::PubSub,
+        Platform::ParallelInvoker,
+    ] {
+        cells.push(run_cell(p.label(), "SVD2 25k", reps, |seed| {
+            let cfg = cfg_with_seed(seed);
+            p.run(&make(&cfg), &cfg)
+        }));
+    }
+
+    // Version 4: decentralized executors, but none of the later
+    // optimizations (no local cache, no proxy, shards share one VM).
+    let wukong_variant = |label: &'static str,
+                          tune: fn(&mut SimConfig)|
+     -> Cell {
+        run_cell(label, "SVD2 25k", reps, move |seed| {
+            let mut cfg = cfg_with_seed(seed);
+            tune(&mut cfg);
+            let dag = make(&cfg);
+            run_sim(async move {
+                WukongEngine::new(cfg).with_label(label).run(&dag).await
+            })
+        })
+    };
+    cells.push(wukong_variant("+Decentralization", |cfg| {
+        cfg.wukong.local_cache = false;
+        cfg.wukong.max_task_fanout = usize::MAX;
+        cfg.net.kv_shared_vm = true;
+    }));
+    // Version 5: + KV-store proxy for large fan-outs.
+    cells.push(wukong_variant("+KV Proxy", |cfg| {
+        cfg.wukong.local_cache = false;
+        cfg.net.kv_shared_vm = true;
+    }));
+    // Version 6: + one KV shard per VM.
+    cells.push(wukong_variant("+Shard per VM", |cfg| {
+        cfg.wukong.local_cache = false;
+    }));
+    // Version 7: + executor-local cache (full WUKONG).
+    cells.push(wukong_variant("+Local cache (full)", |_| {}));
+
+    println!("\n=== Figure 12: factor analysis (SVD2 25k) ===");
+    println!("{:<22} {:>10} {:>12}", "version", "mean (s)", "vs strawman");
+    let base = cells[0].mean();
+    for c in &cells {
+        if c.mean().is_finite() {
+            println!(
+                "{:<22} {:>9.2}s {:>11.2}x",
+                c.platform,
+                c.mean(),
+                base / c.mean()
+            );
+        } else {
+            println!("{:<22} {:>10}", c.platform, "FAIL");
+        }
+    }
+    cells
+}
+
+/// Fig. 13 — CDF breakdown of per-task latencies in SVD2 50k on WUKONG.
+/// Returns (total, fetch+store network, compute) CDFs.
+pub fn fig13() -> (Cdf, Cdf, Cdf) {
+    let cfg = cfg_with_seed(1);
+    let dag = workloads::svd2(50_000, &cfg);
+    let engine = WukongEngine::new(cfg).with_sampling();
+    let (report, metrics) =
+        run_sim(async move { engine.run_detailed(&dag).await });
+    assert!(report.is_ok(), "{report:?}");
+    let spans = metrics.task_spans();
+    let total = Cdf::from_durations(spans.iter().map(|s| s.total));
+    let network = Cdf::from_durations(spans.iter().map(|s| s.fetch + s.store));
+    let compute = Cdf::from_durations(spans.iter().map(|s| s.compute));
+
+    println!("\n=== Figure 13: CDF of task latencies, SVD2 50k on WUKONG ===");
+    println!("{:<12} {:>10} {:>10} {:>10}", "percentile", "total", "network", "compute");
+    for q in [0.10, 0.25, 0.50, 0.75, 0.90, 0.95, 0.99, 1.00] {
+        println!(
+            "p{:<11} {:>9.3}s {:>9.3}s {:>9.3}s",
+            (q * 100.0) as u32,
+            total.quantile(q),
+            network.quantile(q),
+            compute.quantile(q)
+        );
+    }
+    println!(
+        "tasks={} | network-dominated tail: {:.1}% of tasks spend >50% in I/O",
+        spans.len(),
+        100.0
+            * spans
+                .iter()
+                .filter(|s| (s.fetch + s.store) > s.compute)
+                .count() as f64
+            / spans.len().max(1) as f64
+    );
+    (total, network, compute)
+}

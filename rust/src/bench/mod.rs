@@ -1,0 +1,165 @@
+//! In-tree benchmark harness (criterion is unavailable offline).
+//!
+//! Each figure bench (`rust/benches/figNN_*.rs`, `harness = false`) is a
+//! plain binary built on these helpers: run a set of simulated platform
+//! configurations over a parameter sweep, repeat with distinct seeds for
+//! error bars, and print the paper-style series. Wall-clock timing of the
+//! simulator itself is reported too (the perf pass tracks it).
+
+pub mod figures;
+
+use crate::metrics::JobReport;
+use std::time::Instant;
+
+/// Aggregate of repeated runs of one (platform, parameter) cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub platform: String,
+    /// X-axis label (problem size / sleep delay / version name).
+    pub x: String,
+    /// Simulated makespans, seconds (NaN = failed/OOM).
+    pub samples: Vec<f64>,
+    /// Lambdas used in the first sample run.
+    pub lambdas: u64,
+    /// Wall-clock seconds the simulator itself took (all repeats).
+    pub wall_secs: f64,
+    /// Failure description if every repeat failed.
+    pub failure: Option<String>,
+}
+
+impl Cell {
+    pub fn mean(&self) -> f64 {
+        let ok: Vec<f64> = self.samples.iter().copied().filter(|v| v.is_finite()).collect();
+        if ok.is_empty() {
+            f64::NAN
+        } else {
+            ok.iter().sum::<f64>() / ok.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().filter(|v| v.is_finite()).fold(f64::NAN, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().filter(|v| v.is_finite()).fold(f64::NAN, f64::max)
+    }
+}
+
+/// Runs `repeats` seeded simulations of one configuration cell.
+pub fn run_cell(
+    platform: &str,
+    x: impl Into<String>,
+    repeats: usize,
+    mut run: impl FnMut(u64) -> JobReport,
+) -> Cell {
+    let wall0 = Instant::now();
+    let mut samples = Vec::with_capacity(repeats);
+    let mut lambdas = 0;
+    let mut failure = None;
+    for seed in 0..repeats as u64 {
+        let report = run(seed + 1);
+        if seed == 0 {
+            lambdas = report.lambdas_invoked;
+        }
+        if let Some(e) = &report.error {
+            failure = Some(e.to_string());
+        }
+        samples.push(report.seconds());
+    }
+    Cell {
+        platform: platform.to_string(),
+        x: x.into(),
+        samples,
+        lambdas,
+        wall_secs: wall0.elapsed().as_secs_f64(),
+        failure,
+    }
+}
+
+/// Prints a figure table: rows = x values, columns = platforms.
+pub fn print_table(title: &str, xs: &[String], platforms: &[String], cells: &[Cell]) {
+    println!("\n=== {title} ===");
+    print!("{:<18}", "x");
+    for p in platforms {
+        print!(" {p:>22}");
+    }
+    println!();
+    for x in xs {
+        print!("{x:<18}");
+        for p in platforms {
+            let cell = cells.iter().find(|c| &c.x == x && &c.platform == p);
+            match cell {
+                Some(c) if c.mean().is_finite() => {
+                    print!(" {:>13.2}s ±{:>5.2}", c.mean(), (c.max() - c.min()) / 2.0)
+                }
+                Some(_) => print!(" {:>22}", "OOM/FAIL"),
+                None => print!(" {:>22}", "-"),
+            }
+        }
+        println!();
+    }
+    let wall: f64 = cells.iter().map(|c| c.wall_secs).sum();
+    println!("(simulator wall time: {wall:.2}s)");
+}
+
+/// Prints speedup lines "A is N.NNx faster than B at x" for quick shape
+/// checks against the paper's claims.
+pub fn print_speedups(cells: &[Cell], a: &str, b: &str) {
+    let xs: Vec<&String> = {
+        let mut seen = Vec::new();
+        for c in cells {
+            if !seen.contains(&&c.x) {
+                seen.push(&c.x);
+            }
+        }
+        seen
+    };
+    for x in xs {
+        let fa = cells.iter().find(|c| &c.x == x && c.platform == a);
+        let fb = cells.iter().find(|c| &c.x == x && c.platform == b);
+        if let (Some(ca), Some(cb)) = (fa, fb) {
+            let (ma, mb) = (ca.mean(), cb.mean());
+            if ma.is_finite() && mb.is_finite() && ma > 0.0 {
+                println!("  {a} vs {b} @ {x}: {:.2}x", mb / ma);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::MetricsHub;
+    use std::time::Duration;
+
+    #[test]
+    fn cell_stats() {
+        let hub = MetricsHub::new();
+        let mut i = 0;
+        let cell = run_cell("P", "x1", 3, |_seed| {
+            i += 1;
+            JobReport::success("P", Duration::from_secs(i), &hub)
+        });
+        assert_eq!(cell.samples.len(), 3);
+        assert_eq!(cell.mean(), 2.0);
+        assert_eq!(cell.min(), 1.0);
+        assert_eq!(cell.max(), 3.0);
+        assert!(cell.failure.is_none());
+    }
+
+    #[test]
+    fn failed_cell_is_nan() {
+        let hub = MetricsHub::new();
+        let cell = run_cell("P", "x1", 2, |_| {
+            JobReport::failure(
+                "P",
+                Duration::ZERO,
+                &hub,
+                crate::core::EngineError::Job("boom".into()),
+            )
+        });
+        assert!(cell.mean().is_nan());
+        assert!(cell.failure.is_some());
+    }
+}

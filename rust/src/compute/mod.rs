@@ -1,0 +1,15 @@
+//! Task payloads and the calibrated compute-cost model.
+//!
+//! Every DAG task carries a [`Payload`] describing *what executing it
+//! costs* (simulation mode) or *what it actually computes* (real mode via
+//! the PJRT runtime). Benchmarks run paper-scale problems with modeled
+//! payloads; examples and tests run small problems with real numerics to
+//! prove the three layers compose.
+
+pub mod cost;
+pub mod payload;
+pub mod tensor;
+
+pub use cost::CostModel;
+pub use payload::{DataObj, Payload};
+pub use tensor::Tensor;

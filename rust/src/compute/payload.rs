@@ -1,0 +1,112 @@
+//! Task payloads and the data objects exchanged through the KV store.
+
+use crate::compute::tensor::Tensor;
+use std::sync::Arc;
+
+/// What a task *does*. Simulation-mode payloads model cost; real-mode
+/// payloads carry actual computation executed through the PJRT runtime.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// No work (pure coordination node).
+    Noop,
+    /// Sleep for a fixed duration — the paper's controllable-duration tasks
+    /// ("we intentionally added sleep-based delays", Fig. 4/7).
+    Sleep { ms: f64 },
+    /// Modeled compute: duration = `flops` / platform GFLOP/s (+ jitter).
+    Model { flops: f64 },
+    /// Modeled compute with an explicit duration (ms), independent of the
+    /// platform's compute speed (e.g. fixed-cost bookkeeping tasks).
+    FixedMs { ms: f64 },
+    /// A constant tensor (real mode leaf: "load/generate this block").
+    Const(Arc<Tensor>),
+    /// Real compute: execute the named AOT artifact over the task's inputs
+    /// via the PJRT runtime (`rust/src/runtime`). Inputs are the parent
+    /// outputs in parent order.
+    Pjrt { artifact: String },
+}
+
+impl Payload {
+    /// FLOP estimate used by the duration model (real payloads return 0 —
+    /// their cost is actual wall time).
+    pub fn flops(&self) -> f64 {
+        match self {
+            Payload::Model { flops } => *flops,
+            _ => 0.0,
+        }
+    }
+
+    /// True for payloads that require the PJRT runtime.
+    pub fn needs_runtime(&self) -> bool {
+        matches!(self, Payload::Pjrt { .. })
+    }
+}
+
+/// An object stored in the KV store (or a worker's local memory): always a
+/// size (drives the network cost model), optionally real tensor data.
+#[derive(Clone, Debug)]
+pub struct DataObj {
+    pub bytes: u64,
+    pub tensor: Option<Arc<Tensor>>,
+}
+
+impl DataObj {
+    /// A synthetic (size-only) object.
+    pub fn synthetic(bytes: u64) -> Self {
+        DataObj {
+            bytes,
+            tensor: None,
+        }
+    }
+
+    /// A real tensor object; size derived from the tensor.
+    pub fn tensor(t: Tensor) -> Self {
+        let bytes = t.size_bytes();
+        DataObj {
+            bytes,
+            tensor: Some(Arc::new(t)),
+        }
+    }
+
+    /// A real tensor object from an existing Arc.
+    pub fn tensor_arc(t: Arc<Tensor>) -> Self {
+        DataObj {
+            bytes: t.size_bytes(),
+            tensor: Some(t),
+        }
+    }
+
+    /// Borrow the tensor, panicking with a clear message if this is a
+    /// synthetic object (programming error in real-mode wiring).
+    pub fn expect_tensor(&self) -> &Arc<Tensor> {
+        self.tensor
+            .as_ref()
+            .expect("DataObj carries no tensor (synthetic object used in real-compute mode)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_has_no_tensor() {
+        let o = DataObj::synthetic(1024);
+        assert_eq!(o.bytes, 1024);
+        assert!(o.tensor.is_none());
+    }
+
+    #[test]
+    fn tensor_obj_sizes() {
+        let o = DataObj::tensor(Tensor::zeros(vec![4, 4]));
+        assert_eq!(o.bytes, 64);
+        assert_eq!(o.expect_tensor().numel(), 16);
+    }
+
+    #[test]
+    fn payload_flops() {
+        assert_eq!(Payload::Model { flops: 1e9 }.flops(), 1e9);
+        assert_eq!(Payload::Noop.flops(), 0.0);
+        assert!(Payload::Pjrt { artifact: "x".into() }.needs_runtime());
+        assert!(!Payload::Sleep { ms: 1.0 }.needs_runtime());
+    }
+}

@@ -1,0 +1,166 @@
+//! A minimal dense f32 tensor — the value type flowing through the engine
+//! in real-compute mode and across the PJRT boundary.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor { shape, data }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    /// 1-D tensor.
+    pub fn vec1(v: Vec<f32>) -> Self {
+        Tensor {
+            shape: vec![v.len()],
+            data: v,
+        }
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Size of the tensor payload in bytes (f32).
+    pub fn size_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Reference matmul (row-major, naive) — used to verify PJRT results.
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(rhs.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "inner dims");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &rhs.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * row[j];
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// Elementwise sum. Shapes must match.
+    pub fn add(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.shape, rhs.shape);
+        Tensor::new(
+            self.shape.clone(),
+            self.data
+                .iter()
+                .zip(&rhs.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        )
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Max |a - b| between two tensors of identical shape.
+    pub fn max_abs_diff(&self, rhs: &Tensor) -> f32 {
+        assert_eq!(self.shape, rhs.shape);
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// True if all elements differ by at most `tol`.
+    pub fn allclose(&self, rhs: &Tensor, tol: f32) -> bool {
+        self.shape == rhs.shape && self.max_abs_diff(rhs) <= tol
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn add_and_sum() {
+        let a = Tensor::vec1(vec![1.0, 2.0]);
+        let b = Tensor::vec1(vec![3.0, 4.0]);
+        let c = a.add(&b);
+        assert_eq!(c.data, vec![4.0, 6.0]);
+        assert_eq!(c.sum(), 10.0);
+    }
+
+    #[test]
+    fn allclose_tolerance() {
+        let a = Tensor::vec1(vec![1.0]);
+        let b = Tensor::vec1(vec![1.0 + 1e-7]);
+        assert!(a.allclose(&b, 1e-6));
+        assert!(!a.allclose(&b, 1e-9));
+    }
+
+    #[test]
+    fn size_bytes() {
+        assert_eq!(Tensor::zeros(vec![128, 128]).size_bytes(), 128 * 128 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![3], vec![1.0]);
+    }
+}

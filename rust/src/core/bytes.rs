@@ -1,0 +1,86 @@
+//! Byte-size helpers for the data-size-driven cost models.
+
+use std::fmt;
+
+pub const KB: u64 = 1 << 10;
+pub const MB: u64 = 1 << 20;
+pub const GB: u64 = 1 << 30;
+
+/// A size in bytes with human-readable formatting.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct ByteSize(pub u64);
+
+impl ByteSize {
+    pub const fn bytes(n: u64) -> Self {
+        ByteSize(n)
+    }
+    pub const fn kib(n: u64) -> Self {
+        ByteSize(n * KB)
+    }
+    pub const fn mib(n: u64) -> Self {
+        ByteSize(n * MB)
+    }
+    pub const fn gib(n: u64) -> Self {
+        ByteSize(n * GB)
+    }
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+}
+
+impl fmt::Display for ByteSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0 as f64;
+        if self.0 >= GB {
+            write!(f, "{:.2} GiB", b / GB as f64)
+        } else if self.0 >= MB {
+            write!(f, "{:.2} MiB", b / MB as f64)
+        } else if self.0 >= KB {
+            write!(f, "{:.2} KiB", b / KB as f64)
+        } else {
+            write!(f, "{} B", self.0)
+        }
+    }
+}
+
+impl fmt::Debug for ByteSize {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::ops::Add for ByteSize {
+    type Output = ByteSize;
+    fn add(self, rhs: Self) -> Self {
+        ByteSize(self.0 + rhs.0)
+    }
+}
+
+impl std::iter::Sum for ByteSize {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        ByteSize(iter.map(|b| b.0).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting() {
+        assert_eq!(ByteSize::bytes(12).to_string(), "12 B");
+        assert_eq!(ByteSize::kib(2).to_string(), "2.00 KiB");
+        assert_eq!(ByteSize::mib(3).to_string(), "3.00 MiB");
+        assert_eq!(ByteSize::gib(1).to_string(), "1.00 GiB");
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(ByteSize::kib(1) + ByteSize::kib(1), ByteSize::kib(2));
+        let total: ByteSize = [ByteSize::mib(1), ByteSize::mib(2)].into_iter().sum();
+        assert_eq!(total, ByteSize::mib(3));
+    }
+}

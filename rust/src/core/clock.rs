@@ -1,0 +1,108 @@
+//! Virtual-time clock facade over the [`crate::rt`] executor.
+//!
+//! The whole engine sleeps through this module. Under [`crate::rt::Mode::
+//! Virtual`] every sleep advances the virtual clock instantly when the
+//! executor is otherwise idle, turning ordinary async code into a
+//! deterministic discrete-event simulation. Under `Mode::Real` the
+//! identical code runs against the wall clock (used by the end-to-end
+//! PJRT examples).
+
+use std::time::Duration;
+
+/// An instant on the (possibly virtual) simulation timeline.
+pub type SimInstant = crate::rt::SimInstant;
+
+/// Returns the current (virtual or wall) time.
+#[inline]
+pub fn now() -> SimInstant {
+    crate::rt::now()
+}
+
+/// Sleeps for `d` on the (virtual or wall) timeline.
+#[inline]
+pub async fn sleep(d: Duration) {
+    if d > Duration::ZERO {
+        crate::rt::sleep(d).await;
+    }
+}
+
+/// A tiny convenience facade so components can hold a `Clock` value rather
+/// than calling free functions.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Clock;
+
+impl Clock {
+    #[inline]
+    pub fn now(&self) -> SimInstant {
+        now()
+    }
+
+    #[inline]
+    pub async fn sleep(&self, d: Duration) {
+        sleep(d).await;
+    }
+
+    /// Sleep expressed in whole milliseconds.
+    #[inline]
+    pub async fn sleep_ms(&self, ms: u64) {
+        sleep(Duration::from_millis(ms)).await;
+    }
+
+    /// Sleep expressed in whole microseconds.
+    #[inline]
+    pub async fn sleep_us(&self, us: u64) {
+        sleep(Duration::from_micros(us)).await;
+    }
+}
+
+/// Duration helper: milliseconds.
+#[inline]
+pub const fn ms(v: u64) -> Duration {
+    Duration::from_millis(v)
+}
+
+/// Duration helper: microseconds.
+#[inline]
+pub const fn us(v: u64) -> Duration {
+    Duration::from_micros(v)
+}
+
+/// Duration helper: fractional seconds (clamped at zero).
+#[inline]
+pub fn secs_f64(v: f64) -> Duration {
+    Duration::from_secs_f64(v.max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt;
+
+    #[test]
+    fn virtual_sleep_advances_instantly() {
+        let dt = rt::run_virtual(async {
+            let t0 = now();
+            sleep(Duration::from_secs(3600)).await;
+            now() - t0
+        });
+        assert_eq!(dt, Duration::from_secs(3600));
+    }
+
+    #[test]
+    fn zero_sleep_is_noop() {
+        rt::run_virtual(async {
+            let t0 = now();
+            sleep(Duration::ZERO).await;
+            assert_eq!(now(), t0);
+        });
+    }
+
+    #[test]
+    fn duration_helpers() {
+        assert_eq!(ms(5), Duration::from_millis(5));
+        assert_eq!(us(7), Duration::from_micros(7));
+        assert_eq!(secs_f64(0.5), Duration::from_millis(500));
+        // negative durations clamp to zero instead of panicking
+        assert_eq!(secs_f64(-1.0), Duration::ZERO);
+    }
+}

@@ -1,0 +1,310 @@
+//! Configuration for the simulated testbed.
+//!
+//! Defaults are calibrated to the paper's deployment (§V): AWS Lambda with
+//! 3 GB functions and ~50 ms Boto3 invocation latency, a 10-shard Redis
+//! cluster on c5.18xlarge VMs (25 Gbps NICs), a 5-node t2.2xlarge Dask
+//! cluster with 5 worker processes per node, and a 2-core laptop with 4
+//! workers × 2 GB.
+
+/// FaaS platform (AWS Lambda) parameters. See paper §II-A.
+#[derive(Clone, Debug)]
+pub struct FaasConfig {
+    /// Latency of one invocation API call as seen by the *caller*
+    /// (≈50 ms with Boto3, paper §III-C). Each invoker issues calls
+    /// sequentially — this is why parallel invokers matter.
+    pub invoke_latency_ms: f64,
+    /// Extra startup latency for a cold container.
+    pub cold_start_ms: f64,
+    /// Startup latency for a warm container.
+    pub warm_start_ms: f64,
+    /// Number of pre-warmed containers at job start (the paper warms a
+    /// Lambda pool before experiments, following ExCamera).
+    pub warm_pool: usize,
+    /// Platform-wide concurrent-execution cap (AWS default: 1000).
+    pub max_concurrency: usize,
+    /// Memory allocated to each function, bytes (paper: 3 GB).
+    pub memory_bytes: u64,
+    /// Function timeout (paper: 2 minutes), ms.
+    pub timeout_ms: u64,
+    /// Billing rounds execution duration up to this granularity (100 ms).
+    pub billing_granularity_ms: u64,
+    /// Automatic retries of failed executions (AWS Lambda: 2).
+    pub max_retries: u32,
+    /// Effective compute throughput of one function instance, GFLOP/s.
+    /// 3 GB Lambda ≈ 2 vCPUs of c5-class hardware at numpy-realistic
+    /// dense-kernel rates.
+    pub gflops: f64,
+}
+
+impl Default for FaasConfig {
+    fn default() -> Self {
+        FaasConfig {
+            invoke_latency_ms: 50.0,
+            cold_start_ms: 250.0,
+            warm_start_ms: 5.0,
+            warm_pool: 2048,
+            max_concurrency: 5000,
+            memory_bytes: 3 * (1 << 30),
+            timeout_ms: 120_000,
+            billing_granularity_ms: 100,
+            max_retries: 2,
+            gflops: 8.0,
+        }
+    }
+}
+
+/// Network / KV-store parameters. See paper §V (10 Redis shards on
+/// c5.18xlarge) and §V-B (shard-per-VM ablation).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Number of KV-store shards.
+    pub kv_shards: usize,
+    /// One-way message latency executor <-> KV store, microseconds.
+    pub kv_latency_us: f64,
+    /// Per-shard NIC bandwidth, bytes/second (c5.18xlarge: 25 Gbps).
+    pub kv_bandwidth_bps: f64,
+    /// If true, all shards contend for a single NIC (the pre-"shard per
+    /// VM" configuration of paper §V-B).
+    pub kv_shared_vm: bool,
+    /// Pub/sub message delivery latency, microseconds.
+    pub pubsub_latency_us: f64,
+    /// Cost of establishing + tearing down one TCP connection to the
+    /// centralized scheduler (strawman design, paper §III-B). This work is
+    /// serialized on the scheduler's accept loop, which is what lets a
+    /// thousand Lambdas flood it with IRQs.
+    pub tcp_conn_us: f64,
+    /// Scheduler-side CPU time to process one completion message,
+    /// microseconds (serialized; lower for pub/sub than for raw TCP).
+    pub sched_msg_cpu_us: f64,
+    /// Scheduler-side CPU time per pub/sub completion message, µs
+    /// (paper §III-B: "sending task completion messages through pub/sub
+    /// channels was more efficient than using a large number of
+    /// concurrent TCP connections").
+    pub sched_msg_cpu_pubsub_us: f64,
+    /// In-flight invocation calls one invoker process can pipeline
+    /// (async Boto3). Parallel-invoker multiplies this by
+    /// `WukongConfig::num_invokers`.
+    pub invoke_pipeline: usize,
+    /// Scheduler-side CPU per task handed to the parallel-invoker pool:
+    /// cloudpickle serialization of the task closure + multiprocessing
+    /// IPC, serialized on the scheduler's event loop. Calibrated so the
+    /// parallel-invoker version lands ~24% faster than strawman on TR
+    /// (paper §III-C, Fig. 4) rather than being invocation-bound.
+    pub sched_dispatch_us: f64,
+    /// Bandwidth of a Lambda function's NIC, bytes/s (≈ 600 Mbps at 3 GB).
+    pub lambda_bandwidth_bps: f64,
+    /// Direct worker<->worker bandwidth in the serverful baseline, bytes/s.
+    pub worker_bandwidth_bps: f64,
+    /// Worker<->worker message latency, microseconds.
+    pub worker_latency_us: f64,
+    /// Same-machine worker<->worker transfer bandwidth (loopback +
+    /// serialization), bytes/s. Dask workers are separate processes, so
+    /// even co-located transfers pay (de)serialization.
+    pub loopback_bandwidth_bps: f64,
+    /// Local-disk bandwidth for Dask's spill-to-disk path, bytes/s.
+    /// When a worker is over its memory high-water mark, object
+    /// accesses run at disk speed — this is what slows serverful Dask
+    /// to a crawl near its memory capacity (SVD2 100k, Fig. 10).
+    pub disk_bandwidth_bps: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            kv_shards: 10,
+            kv_latency_us: 300.0,
+            kv_bandwidth_bps: 25e9 / 8.0,
+            kv_shared_vm: false,
+            pubsub_latency_us: 200.0,
+            tcp_conn_us: 3000.0,
+            sched_msg_cpu_us: 1500.0,
+            sched_msg_cpu_pubsub_us: 300.0,
+            invoke_pipeline: 8,
+            sched_dispatch_us: 38_000.0,
+            lambda_bandwidth_bps: 600e6 / 8.0,
+            worker_bandwidth_bps: 1e9 / 8.0,
+            worker_latency_us: 150.0,
+            loopback_bandwidth_bps: 2e9,
+            disk_bandwidth_bps: 150e6,
+        }
+    }
+}
+
+/// Serverful cluster profile for the Dask baseline (paper §V).
+#[derive(Clone, Debug)]
+pub struct ClusterProfile {
+    /// Human-readable name used in reports ("Dask (EC2)", "Dask (Laptop)").
+    pub name: String,
+    /// Number of machines.
+    pub nodes: usize,
+    /// Worker processes per machine.
+    pub workers_per_node: usize,
+    /// Memory budget per worker process, bytes.
+    pub worker_memory_bytes: u64,
+    /// Sustained (baseline) compute throughput per worker process,
+    /// GFLOP/s. t2-class instances are *burstable*: they run at
+    /// `burst_gflops` until the per-worker CPU-credit budget
+    /// (`credit_flops`) is consumed, then throttle to this baseline —
+    /// which is why the serverful cluster keeps up on small problems and
+    /// falls behind on large ones (Figs. 9/11).
+    pub worker_gflops: f64,
+    /// Burst compute throughput per worker, GFLOP/s.
+    pub burst_gflops: f64,
+    /// CPU-credit budget per worker, in FLOPs executable at burst speed.
+    pub credit_flops: f64,
+    /// Centralized-scheduler overhead per task, µs (graph bookkeeping +
+    /// comms; Dask distributed measures ~1 ms/task). This serial cost is
+    /// exactly the "logically centralized scheduler would inevitably
+    /// introduce a performance bottleneck, especially for short-task
+    /// dominated workloads" of paper §I — it is what WUKONG's
+    /// decentralized executors eliminate.
+    pub dispatch_us: f64,
+    /// Effective memory amplification of numpy/Dask object management
+    /// (temporaries, serialization buffers, fragmentation). Object sizes
+    /// are multiplied by this in the worker memory accounting; calibrated
+    /// so the paper's observed OOMs (Figs. 8–10) reproduce.
+    pub memory_factor: f64,
+    /// Fraction of worker memory above which Dask spills objects to
+    /// disk (distributed's target/spill thresholds are 0.6/0.7).
+    pub spill_fraction: f64,
+}
+
+impl ClusterProfile {
+    /// The paper's 5-node EC2 cluster: t2.2xlarge (8 vCPU, 32 GiB), five
+    /// worker processes per VM.
+    pub fn ec2() -> Self {
+        ClusterProfile {
+            name: "Dask (EC2)".into(),
+            nodes: 5,
+            workers_per_node: 5,
+            worker_memory_bytes: 6 * (1 << 30),
+            worker_gflops: 3.0,
+            burst_gflops: 15.0,
+            credit_flops: 100e9,
+            dispatch_us: 1000.0,
+            memory_factor: 1.5,
+            spill_fraction: 0.6,
+        }
+    }
+
+    /// The paper's laptop: 2-core i5 @ 2.3 GHz, 4 workers × 2 GB.
+    pub fn laptop() -> Self {
+        ClusterProfile {
+            name: "Dask (Laptop)".into(),
+            nodes: 1,
+            workers_per_node: 4,
+            worker_memory_bytes: 2 * (1 << 30),
+            worker_gflops: 2.0,
+            burst_gflops: 2.5,
+            credit_flops: 1e15, // laptops don't credit-throttle
+            dispatch_us: 800.0,
+            memory_factor: 1.5,
+            spill_fraction: 0.6,
+        }
+    }
+
+    /// Total number of worker processes.
+    pub fn total_workers(&self) -> usize {
+        self.nodes * self.workers_per_node
+    }
+}
+
+/// WUKONG engine knobs (paper §IV, Appendix C).
+#[derive(Clone, Debug)]
+pub struct WukongConfig {
+    /// Fan-outs with at least this many out-edges are delegated to the KV
+    /// store proxy for parallel invocation (`max_task_fanout`).
+    pub max_task_fanout: usize,
+    /// Number of leaf Task-Invoker processes in the static scheduler
+    /// (`num_lambda_invokers`).
+    pub num_invokers: usize,
+    /// Number of parallel Fan-out Invoker processes in the storage manager.
+    pub proxy_invokers: usize,
+    /// If false, executors fall back to fetching every input from the KV
+    /// store (disables the local-cache data-locality optimization) — used
+    /// by the factor analysis (Fig. 12).
+    pub local_cache: bool,
+    /// If true, task outputs are *not* written to / read from the KV store
+    /// (zero-size transfers) — the "ideal storage" variant of Fig. 10.
+    pub ideal_storage: bool,
+}
+
+impl Default for WukongConfig {
+    fn default() -> Self {
+        WukongConfig {
+            max_task_fanout: 10,
+            num_invokers: 20,
+            proxy_invokers: 64,
+            local_cache: true,
+            ideal_storage: false,
+        }
+    }
+}
+
+/// Compute-model parameters shared by all platforms.
+#[derive(Clone, Debug)]
+pub struct ComputeConfig {
+    /// Relative run-to-run jitter applied to modeled task durations
+    /// (reproduces the error bars of the paper's figures). 0 disables.
+    pub jitter: f64,
+    /// Bytes per matrix element in the modeled workloads (Dask/numpy
+    /// default is float64).
+    pub element_bytes: u64,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        ComputeConfig {
+            jitter: 0.04,
+            element_bytes: 8,
+        }
+    }
+}
+
+/// Top-level simulation config.
+#[derive(Clone, Debug, Default)]
+pub struct SimConfig {
+    pub faas: FaasConfig,
+    pub net: NetConfig,
+    pub wukong: WukongConfig,
+    pub compute: ComputeConfig,
+    /// Seed for all simulation randomness.
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// Config used by deterministic tests: zero jitter.
+    pub fn test() -> Self {
+        let mut c = SimConfig::default();
+        c.compute.jitter = 0.0;
+        c
+    }
+
+    /// The ideal-storage variant (Fig. 10, yellow bars).
+    pub fn with_ideal_storage(mut self) -> Self {
+        self.wukong.ideal_storage = true;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = SimConfig::default();
+        assert_eq!(c.faas.invoke_latency_ms, 50.0);
+        assert_eq!(c.faas.billing_granularity_ms, 100);
+        assert_eq!(c.faas.max_retries, 2);
+        assert_eq!(c.net.kv_shards, 10);
+        assert_eq!(c.wukong.max_task_fanout, 10);
+        assert_eq!(c.wukong.num_invokers, 20);
+    }
+
+    #[test]
+    fn cluster_profiles() {
+        assert_eq!(ClusterProfile::ec2().total_workers(), 25);
+        assert_eq!(ClusterProfile::laptop().total_workers(), 4);
+    }
+}

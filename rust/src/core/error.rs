@@ -1,0 +1,77 @@
+//! Engine error type.
+
+use std::fmt;
+
+/// Errors surfaced by the engine and its substrates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineError {
+    /// A worker in the serverful baseline exceeded its memory budget
+    /// (reproduces the Dask OOM failures in Figs. 8–10 of the paper).
+    OutOfMemory {
+        worker: String,
+        needed_bytes: u64,
+        limit_bytes: u64,
+    },
+    /// A serverless function exceeded its configured timeout and was
+    /// forcibly terminated by the platform.
+    FunctionTimeout { executor: u64, limit_ms: u64 },
+    /// A function invocation failed after exhausting the platform's
+    /// automatic retries.
+    InvocationFailed { attempts: u32, reason: String },
+    /// A KV-store object was requested but never stored.
+    MissingObject { key: String },
+    /// The DAG failed validation (cycle, dangling edge, ...).
+    InvalidDag(String),
+    /// The PJRT runtime failed to load/compile/execute an artifact.
+    Runtime(String),
+    /// Job-level failure with context.
+    Job(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::OutOfMemory {
+                worker,
+                needed_bytes,
+                limit_bytes,
+            } => write!(
+                f,
+                "out of memory on {worker}: needed {needed_bytes} B, limit {limit_bytes} B"
+            ),
+            EngineError::FunctionTimeout { executor, limit_ms } => {
+                write!(f, "executor e{executor} exceeded {limit_ms} ms timeout")
+            }
+            EngineError::InvocationFailed { attempts, reason } => {
+                write!(f, "invocation failed after {attempts} attempts: {reason}")
+            }
+            EngineError::MissingObject { key } => write!(f, "missing KV object {key}"),
+            EngineError::InvalidDag(msg) => write!(f, "invalid DAG: {msg}"),
+            EngineError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            EngineError::Job(msg) => write!(f, "job failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+pub type EngineResult<T> = Result<T, EngineError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = EngineError::OutOfMemory {
+            worker: "laptop-w0".into(),
+            needed_bytes: 3_000_000_000,
+            limit_bytes: 2_000_000_000,
+        };
+        let s = e.to_string();
+        assert!(s.contains("laptop-w0") && s.contains("limit"));
+        assert!(EngineError::MissingObject { key: "out:3".into() }
+            .to_string()
+            .contains("out:3"));
+    }
+}

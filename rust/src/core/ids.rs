@@ -1,0 +1,105 @@
+//! Strongly-typed identifiers used across the engine.
+
+use std::fmt;
+
+/// Index of a task node within a [`crate::dag::Dag`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskId(pub u32);
+
+impl TaskId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Debug for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Identity of a task-executor instance (one serverless function invocation).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ExecutorId(pub u64);
+
+impl fmt::Debug for ExecutorId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "e{}", self.0)
+    }
+}
+
+impl fmt::Display for ExecutorId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "e{}", self.0)
+    }
+}
+
+/// Identity of a submitted job (one DAG execution).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl fmt::Debug for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
+/// Key of an object in the KV store. Task outputs are stored under
+/// `out:<task-id>`, fan-in dependency counters under `ctr:<task-id>`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct ObjectKey(pub String);
+
+impl ObjectKey {
+    /// Key under which the output of `task` is published.
+    pub fn output(task: TaskId) -> Self {
+        ObjectKey(format!("out:{}", task.0))
+    }
+
+    /// Key of the fan-in dependency counter of `task`.
+    pub fn counter(task: TaskId) -> Self {
+        ObjectKey(format!("ctr:{}", task.0))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl fmt::Debug for ObjectKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for ObjectKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_keys_are_disjoint() {
+        let t = TaskId(42);
+        assert_ne!(ObjectKey::output(t), ObjectKey::counter(t));
+        assert_eq!(ObjectKey::output(t).as_str(), "out:42");
+        assert_eq!(ObjectKey::counter(t).as_str(), "ctr:42");
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(TaskId(7).to_string(), "t7");
+        assert_eq!(ExecutorId(3).to_string(), "e3");
+        assert_eq!(format!("{:?}", JobId(1)), "job1");
+    }
+}

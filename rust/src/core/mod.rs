@@ -1,0 +1,18 @@
+//! Core primitives shared by every subsystem: the virtual clock, typed ids,
+//! configuration profiles, deterministic RNG, byte-size helpers and errors.
+
+pub mod bytes;
+pub mod clock;
+pub mod config;
+pub mod error;
+pub mod ids;
+pub mod rng;
+
+pub use bytes::{ByteSize, GB, KB, MB};
+pub use clock::{now, sleep, Clock, SimInstant};
+pub use config::{
+    ClusterProfile, ComputeConfig, FaasConfig, NetConfig, SimConfig, WukongConfig,
+};
+pub use error::{EngineError, EngineResult};
+pub use ids::{ExecutorId, JobId, ObjectKey, TaskId};
+pub use rng::SplitMix64;

@@ -1,0 +1,104 @@
+//! Deterministic, dependency-free RNG (SplitMix64) used everywhere the
+//! simulation needs randomness so that runs are reproducible from a seed.
+
+/// SplitMix64 PRNG — tiny, fast, and statistically good enough for jitter
+/// and synthetic-data generation. Not cryptographic.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn uniform_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n). Panics if n == 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        // Lemire's multiply-shift rejection-free approximation is fine here.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Multiplicative log-normal-ish jitter around 1.0 with the given
+    /// relative spread (e.g. 0.1 => roughly ±10%). Used to model run-to-run
+    /// variance of cloud infrastructure (error bars in the paper's figures).
+    pub fn jitter(&mut self, spread: f64) -> f64 {
+        // Sum of three uniforms approximates a bell curve (Irwin–Hall).
+        let u = (self.next_f64() + self.next_f64() + self.next_f64()) / 3.0;
+        1.0 + spread * (2.0 * u - 1.0)
+    }
+
+    /// Fill a vector with uniform f32s in [-1, 1) — synthetic tensor data.
+    pub fn fill_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.uniform_f32(-1.0, 1.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = SplitMix64::new(1);
+        let mut b = SplitMix64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+        }
+    }
+
+    #[test]
+    fn jitter_centred() {
+        let mut r = SplitMix64::new(11);
+        let mean: f64 = (0..10_000).map(|_| r.jitter(0.1)).sum::<f64>() / 10_000.0;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+        for _ in 0..1000 {
+            let j = r.jitter(0.1);
+            assert!((0.9..=1.1).contains(&j));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! DAG builder — the `dask.delayed`-style authoring API.
+//!
+//! Workload modules (`crate::workloads`) use this builder exactly the way a
+//! WUKONG user's Python job is converted by the DAG generator (paper
+//! §IV-B: "users submit a Python computing job to WUKONG's DAG generator,
+//! which converts the job into a DAG").
+
+use crate::compute::Payload;
+use crate::core::{EngineError, EngineResult, TaskId};
+use crate::dag::graph::{Dag, TaskSpec};
+use crate::dag::validate;
+
+/// Incrementally builds a [`Dag`].
+#[derive(Default, Debug)]
+pub struct DagBuilder {
+    tasks: Vec<TaskSpec>,
+    children: Vec<Vec<TaskId>>,
+    parents: Vec<Vec<TaskId>>,
+}
+
+impl DagBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Adds a task depending on `deps` (parent order is preserved and is
+    /// the input order for real-compute payloads). Returns its id.
+    pub fn add_task(
+        &mut self,
+        name: impl Into<String>,
+        payload: Payload,
+        output_bytes: u64,
+        deps: &[TaskId],
+    ) -> TaskId {
+        let id = TaskId(self.tasks.len() as u32);
+        self.tasks.push(TaskSpec {
+            id,
+            name: name.into(),
+            payload,
+            output_bytes,
+        });
+        self.children.push(Vec::new());
+        self.parents.push(Vec::with_capacity(deps.len()));
+        for &d in deps {
+            assert!(
+                d.index() < id.index(),
+                "dependency {d} must be added before {id}"
+            );
+            self.children[d.index()].push(id);
+            self.parents[id.index()].push(d);
+        }
+        id
+    }
+
+    /// Number of tasks added so far.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Finalizes and validates the DAG.
+    pub fn build(self) -> EngineResult<Dag> {
+        if self.tasks.is_empty() {
+            return Err(EngineError::InvalidDag("empty DAG".into()));
+        }
+        let dag = Dag::from_parts(self.tasks, self.children, self.parents);
+        validate::validate(&dag)?;
+        Ok(dag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_chain() {
+        let mut b = DagBuilder::new();
+        let t0 = b.add_task("t0", Payload::Noop, 1, &[]);
+        let t1 = b.add_task("t1", Payload::Noop, 1, &[t0]);
+        let _t2 = b.add_task("t2", Payload::Noop, 1, &[t1]);
+        let d = b.build().unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.critical_path_len(), 3);
+    }
+
+    #[test]
+    fn empty_dag_rejected() {
+        assert!(DagBuilder::new().build().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "must be added before")]
+    fn forward_dependency_panics() {
+        let mut b = DagBuilder::new();
+        let _ = b.add_task("a", Payload::Noop, 1, &[TaskId(5)]);
+    }
+
+    #[test]
+    fn parent_order_preserved() {
+        let mut b = DagBuilder::new();
+        let x = b.add_task("x", Payload::Noop, 1, &[]);
+        let y = b.add_task("y", Payload::Noop, 1, &[]);
+        let z = b.add_task("z", Payload::Noop, 1, &[y, x]);
+        let d = b.build().unwrap();
+        assert_eq!(d.parents(z), &[y, x]);
+    }
+}

@@ -1,0 +1,57 @@
+//! Graphviz DOT export for debugging and documentation.
+
+use crate::dag::graph::Dag;
+use std::fmt::Write;
+
+/// Renders the DAG in Graphviz DOT syntax. Fan-in nodes are drawn as
+/// diamonds, leaves as boxes.
+pub fn to_dot(dag: &Dag, graph_name: &str) -> String {
+    let mut s = String::new();
+    writeln!(s, "digraph \"{graph_name}\" {{").unwrap();
+    writeln!(s, "  rankdir=BT;").unwrap();
+    for t in dag.task_ids() {
+        let spec = dag.task(t);
+        let shape = if dag.in_degree(t) == 0 {
+            "box"
+        } else if dag.in_degree(t) > 1 {
+            "diamond"
+        } else {
+            "ellipse"
+        };
+        writeln!(
+            s,
+            "  {} [label=\"{}\" shape={shape}];",
+            t.0,
+            spec.name.replace('"', "'")
+        )
+        .unwrap();
+    }
+    for t in dag.task_ids() {
+        for &c in dag.children(t) {
+            writeln!(s, "  {} -> {};", t.0, c.0).unwrap();
+        }
+    }
+    writeln!(s, "}}").unwrap();
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+
+    #[test]
+    fn dot_contains_all_nodes_and_edges() {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("leaf", Payload::Noop, 1, &[]);
+        let c = b.add_task("mid", Payload::Noop, 1, &[a]);
+        b.add_task("sink", Payload::Noop, 1, &[c]);
+        let dag = b.build().unwrap();
+        let dot = to_dot(&dag, "test");
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("0 -> 1;"));
+        assert!(dot.contains("1 -> 2;"));
+        assert!(dot.contains("shape=box")); // leaf
+    }
+}

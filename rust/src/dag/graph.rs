@@ -1,0 +1,196 @@
+//! The task graph.
+
+use crate::compute::Payload;
+use crate::core::TaskId;
+
+/// One node of the DAG.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub id: TaskId,
+    /// Human-readable name ("matmul[2,3]"), used in reports and DOT dumps.
+    pub name: String,
+    /// What executing this task costs / computes.
+    pub payload: Payload,
+    /// Size of the task's output object, bytes (drives every network model).
+    /// In real-compute mode the actual tensor size supersedes this.
+    pub output_bytes: u64,
+}
+
+/// An immutable directed acyclic task graph with forward and reverse
+/// adjacency. Construct via [`crate::dag::DagBuilder`].
+#[derive(Clone, Debug)]
+pub struct Dag {
+    tasks: Vec<TaskSpec>,
+    children: Vec<Vec<TaskId>>,
+    parents: Vec<Vec<TaskId>>,
+}
+
+impl Dag {
+    pub(crate) fn from_parts(
+        tasks: Vec<TaskSpec>,
+        children: Vec<Vec<TaskId>>,
+        parents: Vec<Vec<TaskId>>,
+    ) -> Self {
+        Dag {
+            tasks,
+            children,
+            parents,
+        }
+    }
+
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// All task ids in insertion order.
+    pub fn task_ids(&self) -> impl Iterator<Item = TaskId> + '_ {
+        (0..self.tasks.len() as u32).map(TaskId)
+    }
+
+    pub fn task(&self, id: TaskId) -> &TaskSpec {
+        &self.tasks[id.index()]
+    }
+
+    pub fn children(&self, id: TaskId) -> &[TaskId] {
+        &self.children[id.index()]
+    }
+
+    pub fn parents(&self, id: TaskId) -> &[TaskId] {
+        &self.parents[id.index()]
+    }
+
+    /// In-degree of a node (number of input dependencies).
+    pub fn in_degree(&self, id: TaskId) -> usize {
+        self.parents[id.index()].len()
+    }
+
+    /// Out-degree of a node (fan-out width).
+    pub fn out_degree(&self, id: TaskId) -> usize {
+        self.children[id.index()].len()
+    }
+
+    /// Leaf nodes: tasks with no input dependencies. These are the roots of
+    /// WUKONG's static schedules (paper §IV-B: "For a DAG with n leaf
+    /// nodes, n static schedules are generated").
+    pub fn leaves(&self) -> Vec<TaskId> {
+        self.task_ids().filter(|&t| self.in_degree(t) == 0).collect()
+    }
+
+    /// Sink nodes: tasks with no downstream consumers (final outputs).
+    pub fn sinks(&self) -> Vec<TaskId> {
+        self.task_ids()
+            .filter(|&t| self.out_degree(t) == 0)
+            .collect()
+    }
+
+    /// A topological order (Kahn). The graph is validated acyclic at build
+    /// time, so this always covers every node.
+    pub fn topo_order(&self) -> Vec<TaskId> {
+        let n = self.len();
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.parents[i].len()).collect();
+        let mut queue: std::collections::VecDeque<TaskId> = self
+            .task_ids()
+            .filter(|t| indeg[t.index()] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(t) = queue.pop_front() {
+            order.push(t);
+            for &c in self.children(t) {
+                indeg[c.index()] -= 1;
+                if indeg[c.index()] == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+        debug_assert_eq!(order.len(), n, "cycle slipped past validation");
+        order
+    }
+
+    /// Length (in tasks) of the longest path — the critical path depth.
+    pub fn critical_path_len(&self) -> usize {
+        let mut depth = vec![0usize; self.len()];
+        for t in self.topo_order() {
+            let d = self
+                .parents(t)
+                .iter()
+                .map(|p| depth[p.index()])
+                .max()
+                .unwrap_or(0)
+                + 1;
+            depth[t.index()] = d;
+        }
+        depth.into_iter().max().unwrap_or(0)
+    }
+
+    /// Total modeled flops across all tasks.
+    pub fn total_flops(&self) -> f64 {
+        self.tasks.iter().map(|t| t.payload.flops()).sum()
+    }
+
+    /// Total bytes of all task outputs.
+    pub fn total_output_bytes(&self) -> u64 {
+        self.tasks.iter().map(|t| t.output_bytes).sum()
+    }
+
+    /// Count of fan-in nodes (in-degree > 1) — scheduling conflicts that
+    /// WUKONG resolves dynamically.
+    pub fn fan_in_count(&self) -> usize {
+        self.task_ids().filter(|&t| self.in_degree(t) > 1).count()
+    }
+
+    /// Count of fan-out nodes (out-degree > 1).
+    pub fn fan_out_count(&self) -> usize {
+        self.task_ids().filter(|&t| self.out_degree(t) > 1).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DagBuilder;
+
+    fn diamond() -> Dag {
+        // a -> {b, c} -> d
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 8, &[]);
+        let x = b.add_task("b", Payload::Noop, 8, &[a]);
+        let y = b.add_task("c", Payload::Noop, 8, &[a]);
+        b.add_task("d", Payload::Noop, 8, &[x, y]);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn degrees_and_leaves() {
+        let d = diamond();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.leaves(), vec![TaskId(0)]);
+        assert_eq!(d.sinks(), vec![TaskId(3)]);
+        assert_eq!(d.in_degree(TaskId(3)), 2);
+        assert_eq!(d.out_degree(TaskId(0)), 2);
+        assert_eq!(d.fan_in_count(), 1);
+        assert_eq!(d.fan_out_count(), 1);
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let d = diamond();
+        let order = d.topo_order();
+        let pos = |t: TaskId| order.iter().position(|&x| x == t).unwrap();
+        for t in d.task_ids() {
+            for &c in d.children(t) {
+                assert!(pos(t) < pos(c));
+            }
+        }
+    }
+
+    #[test]
+    fn critical_path() {
+        let d = diamond();
+        assert_eq!(d.critical_path_len(), 3);
+    }
+}

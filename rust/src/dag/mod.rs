@@ -1,0 +1,11 @@
+//! DAG representation — the Dask-graph equivalent that every scheduler in
+//! this repo consumes (paper §III-A: "parsed the user-defined job code,
+//! generated a DAG data structure").
+
+pub mod builder;
+pub mod dot;
+pub mod graph;
+pub mod validate;
+
+pub use builder::DagBuilder;
+pub use graph::{Dag, TaskSpec};

@@ -1,0 +1,89 @@
+//! DAG validation: acyclicity, edge symmetry, at least one leaf and sink.
+
+use crate::core::{EngineError, EngineResult};
+use crate::dag::graph::Dag;
+
+/// Validates structural invariants. The builder's API makes cycles
+/// impossible by construction (deps must precede), but `validate` is also
+/// the gatekeeper for DAGs deserialized or fuzz-generated in tests.
+pub fn validate(dag: &Dag) -> EngineResult<()> {
+    let n = dag.len();
+    if n == 0 {
+        return Err(EngineError::InvalidDag("empty DAG".into()));
+    }
+
+    // Edge symmetry: every child edge has a matching parent edge.
+    for t in dag.task_ids() {
+        for &c in dag.children(t) {
+            if c.index() >= n {
+                return Err(EngineError::InvalidDag(format!(
+                    "edge {t} -> {c} points outside the graph"
+                )));
+            }
+            if !dag.parents(c).contains(&t) {
+                return Err(EngineError::InvalidDag(format!(
+                    "asymmetric edge {t} -> {c}"
+                )));
+            }
+        }
+        for &p in dag.parents(t) {
+            if !dag.children(p).contains(&t) {
+                return Err(EngineError::InvalidDag(format!(
+                    "asymmetric edge {p} -> {t}"
+                )));
+            }
+        }
+    }
+
+    // Acyclicity: Kahn must consume every node.
+    if dag.topo_order().len() != n {
+        return Err(EngineError::InvalidDag("cycle detected".into()));
+    }
+
+    if dag.leaves().is_empty() {
+        return Err(EngineError::InvalidDag("no leaf nodes".into()));
+    }
+    if dag.sinks().is_empty() {
+        return Err(EngineError::InvalidDag("no sink nodes".into()));
+    }
+
+    // No duplicate parent edges (a task may not depend on the same task
+    // twice: it would corrupt the fan-in dependency counters).
+    for t in dag.task_ids() {
+        let ps = dag.parents(t);
+        let mut seen = std::collections::HashSet::new();
+        for p in ps {
+            if !seen.insert(p) {
+                return Err(EngineError::InvalidDag(format!(
+                    "duplicate edge {p} -> {t}"
+                )));
+            }
+        }
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+
+    #[test]
+    fn valid_dag_passes() {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 1, &[]);
+        b.add_task("b", Payload::Noop, 1, &[a]);
+        assert!(b.build().is_ok());
+    }
+
+    #[test]
+    fn duplicate_edge_rejected() {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 1, &[]);
+        b.add_task("b", Payload::Noop, 1, &[a, a]);
+        let err = b.build().unwrap_err();
+        assert!(matches!(err, EngineError::InvalidDag(_)));
+    }
+}

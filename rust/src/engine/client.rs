@@ -1,0 +1,80 @@
+//! Client facade — the `distributed.Client` equivalent of the paper's
+//! Appendix C: users build a DAG with the workload API (or `DagBuilder`)
+//! and submit it, getting back the report and final outputs.
+
+use crate::compute::DataObj;
+use crate::core::{SimConfig, TaskId};
+use crate::dag::Dag;
+use crate::engine::wukong::WukongEngine;
+use crate::metrics::JobReport;
+use crate::runtime::PjrtRuntime;
+use std::collections::HashMap;
+
+/// The result of a submitted job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub report: JobReport,
+    /// Final output of every sink task (tensors in real-compute mode).
+    pub outputs: HashMap<TaskId, DataObj>,
+}
+
+impl JobResult {
+    /// The single sink output, for single-result jobs.
+    pub fn single_output(&self) -> Option<&DataObj> {
+        if self.outputs.len() == 1 {
+            self.outputs.values().next()
+        } else {
+            None
+        }
+    }
+}
+
+/// User-facing handle to a WUKONG deployment.
+pub struct Client {
+    engine: WukongEngine,
+}
+
+impl Client {
+    /// Connects to a (simulated) deployment with the given config.
+    pub fn new(cfg: SimConfig) -> Self {
+        Client {
+            engine: WukongEngine::new(cfg),
+        }
+    }
+
+    /// Connects with a PJRT runtime for real-compute payloads.
+    pub fn with_runtime(cfg: SimConfig, rt: PjrtRuntime) -> Self {
+        Client {
+            engine: WukongEngine::new(cfg).with_runtime(rt),
+        }
+    }
+
+    /// Submits a DAG and awaits completion, like `client.compute(...)` in
+    /// Dask/WUKONG.
+    pub async fn compute(&self, dag: &Dag) -> JobResult {
+        let (report, outputs) = self.engine.run_with_outputs(dag).await;
+        JobResult { report, outputs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+
+    #[test]
+    fn client_compute_roundtrip() {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 16, &[]);
+        b.add_task("b", Payload::Noop, 16, &[a]);
+        let dag = b.build().unwrap();
+        let res = crate::engine::run_sim(async move {
+            Client::new(SimConfig::test()).compute(&dag).await
+        });
+        assert!(res.report.is_ok());
+        assert_eq!(res.outputs.len(), 1);
+        assert!(res.single_output().is_some());
+        assert_eq!(res.single_output().unwrap().bytes, 16);
+    }
+}

@@ -1,0 +1,27 @@
+//! The WUKONG engine front end: DAG submission, the static scheduler's
+//! initial Task-Executor invokers, the client subscriber, and the
+//! simulation/real runtime entry points.
+
+pub mod client;
+pub mod wukong;
+
+pub use client::{Client, JobResult};
+pub use wukong::WukongEngine;
+
+/// Runs a future to completion in deterministic **virtual time**
+/// (discrete-event simulation, see [`crate::rt`]).
+pub fn run_sim<F: std::future::Future + 'static>(fut: F) -> F::Output
+where
+    F::Output: 'static,
+{
+    crate::rt::run_virtual(fut)
+}
+
+/// Runs a future to completion against the **wall clock** (real-compute
+/// mode, used by the end-to-end PJRT examples).
+pub fn run_real<F: std::future::Future + 'static>(fut: F) -> F::Output
+where
+    F::Output: 'static,
+{
+    crate::rt::run_real(fut)
+}

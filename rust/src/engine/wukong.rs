@@ -1,0 +1,280 @@
+//! The WUKONG engine: static scheduling + initial executor invocation +
+//! client-side completion tracking (paper §IV, Fig. 5).
+
+use crate::compute::DataObj;
+use crate::core::{clock, EngineError, SimConfig, TaskId};
+use crate::dag::Dag;
+use crate::executor::ctx::WukongCtx;
+use crate::executor::task_executor::invoke_executor;
+use crate::faas::Faas;
+use crate::kvstore::{KvStore, Message};
+use crate::metrics::{JobReport, MetricsHub};
+use crate::runtime::PjrtRuntime;
+use crate::schedule;
+use crate::storage::StorageManager;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// The serverless DAG engine under study.
+pub struct WukongEngine {
+    cfg: SimConfig,
+    runtime: Option<PjrtRuntime>,
+    /// Enable per-task/per-op sampling (Fig. 13 runs).
+    sampling: bool,
+    /// Platform label in reports.
+    label: String,
+}
+
+impl WukongEngine {
+    pub fn new(cfg: SimConfig) -> Self {
+        WukongEngine {
+            cfg,
+            runtime: None,
+            sampling: false,
+            label: "WUKONG".into(),
+        }
+    }
+
+    /// Attaches the PJRT runtime (real-compute payloads).
+    pub fn with_runtime(mut self, rt: PjrtRuntime) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Enables detailed per-task span sampling.
+    pub fn with_sampling(mut self) -> Self {
+        self.sampling = true;
+        self
+    }
+
+    /// Overrides the report label (e.g. "WUKONG (ideal storage)").
+    pub fn with_label(mut self, label: impl Into<String>) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    /// Runs `dag` to completion, returning the job report.
+    pub async fn run(&self, dag: &Dag) -> JobReport {
+        self.run_inner(dag, false).await.0
+    }
+
+    /// Runs `dag` and additionally fetches every sink's final output
+    /// (real-compute mode: the numeric results).
+    pub async fn run_with_outputs(&self, dag: &Dag) -> (JobReport, HashMap<TaskId, DataObj>) {
+        let (report, outputs) = self.run_inner(dag, true).await;
+        (report, outputs)
+    }
+
+    /// Also exposes the metrics hub for detailed analysis (Fig. 13).
+    pub async fn run_detailed(&self, dag: &Dag) -> (JobReport, Arc<MetricsHub>) {
+        let metrics = Arc::new(MetricsHub::new());
+        if self.sampling {
+            metrics.enable_sampling();
+        }
+        let report = self.run_with_metrics(dag, metrics.clone(), false).await.0;
+        (report, metrics)
+    }
+
+    async fn run_inner(&self, dag: &Dag, collect: bool) -> (JobReport, HashMap<TaskId, DataObj>) {
+        let metrics = Arc::new(MetricsHub::new());
+        if self.sampling {
+            metrics.enable_sampling();
+        }
+        self.run_with_metrics(dag, metrics, collect).await
+    }
+
+    async fn run_with_metrics(
+        &self,
+        dag: &Dag,
+        metrics: Arc<MetricsHub>,
+        collect: bool,
+    ) -> (JobReport, HashMap<TaskId, DataObj>) {
+        let dag = Arc::new(dag.clone());
+        let faas = Faas::new(self.cfg.faas.clone(), metrics.clone());
+        let kv = KvStore::with_ideal(
+            self.cfg.net.clone(),
+            metrics.clone(),
+            self.cfg.wukong.ideal_storage,
+        );
+
+        // --- static scheduling (the Schedule Generator, §IV-B) -----------
+        let t0 = clock::now();
+        let schedules = Arc::new(schedule::generate(&dag));
+        let ctx = WukongCtx::new(
+            Arc::clone(&dag),
+            self.cfg.clone(),
+            faas,
+            kv.clone(),
+            metrics.clone(),
+            schedules,
+            self.runtime.clone(),
+        );
+
+        // Storage manager receives DAG + schedules, starts the proxy, and
+        // the client subscribes to final results *before* any executor can
+        // publish one.
+        let manager = StorageManager::start(Arc::clone(&ctx));
+        let mut finals = manager.subscribe_finals();
+
+        // --- initial Task Executor invokers (§IV-C) -----------------------
+        // The scheduler's invoker processes split the leaves round-robin
+        // and each issues its invocations sequentially (each API call costs
+        // ~50 ms — this is exactly the effect parallel invokers exist for).
+        let leaves = dag.leaves();
+        let n_invokers = self.cfg.wukong.num_invokers.max(1);
+        let mut invoker_handles = Vec::with_capacity(n_invokers.min(leaves.len()));
+        for inv in 0..n_invokers.min(leaves.len()) {
+            let my_leaves: Vec<TaskId> = leaves
+                .iter()
+                .copied()
+                .skip(inv)
+                .step_by(n_invokers)
+                .collect();
+            let ctx = Arc::clone(&ctx);
+            invoker_handles.push(crate::rt::spawn(async move {
+                for leaf in my_leaves {
+                    invoke_executor(Arc::clone(&ctx), leaf, None).await;
+                }
+            }));
+        }
+
+        // --- completion tracking ------------------------------------------
+        let sinks: HashSet<TaskId> = dag.sinks().into_iter().collect();
+        let mut done: HashSet<TaskId> = HashSet::with_capacity(sinks.len());
+        let mut failure: Option<EngineError> = None;
+        while done.len() < sinks.len() {
+            match finals.recv().await {
+                Some(Message::FinalResult { task }) => {
+                    done.insert(task);
+                }
+                Some(Message::JobFailed { reason }) => {
+                    failure = Some(EngineError::Job(reason));
+                    break;
+                }
+                Some(_) => {}
+                None => {
+                    failure = Some(EngineError::Job(
+                        "final-result channel closed prematurely".into(),
+                    ));
+                    break;
+                }
+            }
+        }
+        let makespan = clock::now() - t0;
+
+        for h in invoker_handles {
+            h.await;
+        }
+
+        // --- result collection (real-compute mode) ------------------------
+        let mut outputs = HashMap::new();
+        if collect && failure.is_none() {
+            for &s in &sinks {
+                match manager.fetch_final(s).await {
+                    Ok(obj) => {
+                        outputs.insert(s, obj);
+                    }
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        manager.shutdown();
+
+        // Exactly-once sanity: a successful run must have executed every
+        // task exactly once.
+        if failure.is_none() && !ctx.all_executed() {
+            failure = Some(EngineError::Job(format!(
+                "only {}/{} tasks executed",
+                ctx.executed_count(),
+                dag.len()
+            )));
+        }
+
+        let report = match failure {
+            None => JobReport::success(self.label.clone(), makespan, &metrics),
+            Some(e) => JobReport::failure(self.label.clone(), makespan, &metrics, e),
+        };
+        (report, outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+
+    fn diamond() -> Dag {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Sleep { ms: 10.0 }, 64, &[]);
+        let x = b.add_task("b", Payload::Sleep { ms: 10.0 }, 64, &[a]);
+        let y = b.add_task("c", Payload::Sleep { ms: 10.0 }, 64, &[a]);
+        b.add_task("d", Payload::Sleep { ms: 10.0 }, 64, &[x, y]);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn runs_diamond_to_completion() {
+        let report = crate::engine::run_sim(async {
+            let dag = diamond();
+            WukongEngine::new(SimConfig::test()).run(&dag).await
+        });
+        assert!(report.is_ok(), "report: {report:?}");
+        assert_eq!(report.tasks_executed, 4);
+        // 1 initial executor + 1 invoked at the fan-out.
+        assert_eq!(report.lambdas_invoked, 2);
+        assert!(report.makespan.as_millis() >= 40); // ≥ critical path sleeps
+    }
+
+    #[test]
+    fn multi_leaf_multi_sink() {
+        let mut b = DagBuilder::new();
+        let l1 = b.add_task("l1", Payload::Noop, 8, &[]);
+        let l2 = b.add_task("l2", Payload::Noop, 8, &[]);
+        let m = b.add_task("m", Payload::Noop, 8, &[l1, l2]);
+        b.add_task("s1", Payload::Noop, 8, &[m]);
+        b.add_task("s2", Payload::Noop, 8, &[m]);
+        let dag = b.build().unwrap();
+        let report = crate::engine::run_sim(async move {
+            WukongEngine::new(SimConfig::test()).run(&dag).await
+        });
+        assert!(report.is_ok(), "report: {report:?}");
+        assert_eq!(report.tasks_executed, 5);
+    }
+
+    #[test]
+    fn ideal_storage_faster_than_real() {
+        // A chain with large outputs: ideal storage removes transfer cost.
+        fn mk() -> Dag {
+            let mut b = DagBuilder::new();
+            let mut prev = b.add_task("l", Payload::Noop, 100 << 20, &[]);
+            // Force KV traffic with a fan-out at each step.
+            for i in 0..4 {
+                let x = b.add_task(format!("x{i}"), Payload::Noop, 100 << 20, &[prev]);
+                let y = b.add_task(format!("y{i}"), Payload::Noop, 8, &[prev]);
+                prev = b.add_task(format!("j{i}"), Payload::Noop, 100 << 20, &[x, y]);
+            }
+            b.build().unwrap()
+        }
+        let real = crate::engine::run_sim(async {
+            let dag = mk();
+            WukongEngine::new(SimConfig::test()).run(&dag).await
+        });
+        let ideal = crate::engine::run_sim(async {
+            let dag = mk();
+            WukongEngine::new(SimConfig::test().with_ideal_storage())
+                .run(&dag)
+                .await
+        });
+        assert!(real.is_ok() && ideal.is_ok());
+        assert!(
+            ideal.makespan < real.makespan,
+            "ideal {:?} !< real {:?}",
+            ideal.makespan,
+            real.makespan
+        );
+    }
+}

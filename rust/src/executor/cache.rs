@@ -1,0 +1,125 @@
+//! Executor-local data cache (paper §IV-C: "All intermediate task outputs
+//! are cached in the local memory of the Task Executor", and §V-C's data-
+//! locality analysis).
+
+use crate::compute::DataObj;
+use crate::core::TaskId;
+use std::collections::HashMap;
+
+/// Task outputs held in an executor's local memory.
+#[derive(Debug, Default)]
+pub struct LocalCache {
+    objects: HashMap<TaskId, DataObj>,
+    /// Tasks whose outputs this executor already wrote to the KV store
+    /// (avoid double writes at fan-out followed by fan-in).
+    stored: std::collections::HashSet<TaskId>,
+    /// Bytes currently cached (observability; Lambdas have 3 GB).
+    bytes: u64,
+    /// High-water mark.
+    peak_bytes: u64,
+}
+
+impl LocalCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, task: TaskId, obj: DataObj) {
+        self.bytes += obj.bytes;
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+        if let Some(old) = self.objects.insert(task, obj) {
+            self.bytes -= old.bytes;
+        }
+    }
+
+    pub fn get(&self, task: TaskId) -> Option<&DataObj> {
+        self.objects.get(&task)
+    }
+
+    pub fn contains(&self, task: TaskId) -> bool {
+        self.objects.contains_key(&task)
+    }
+
+    /// Marks `task`'s output as persisted to the KV store.
+    pub fn mark_stored(&mut self, task: TaskId) {
+        self.stored.insert(task);
+    }
+
+    /// True if this executor already wrote `task`'s output to the KV store.
+    pub fn is_stored(&self, task: TaskId) -> bool {
+        self.stored.contains(&task)
+    }
+
+    /// Drops a cached object (memory management along long paths).
+    pub fn evict(&mut self, task: TaskId) {
+        if let Some(o) = self.objects.remove(&task) {
+            self.bytes -= o.bytes;
+        }
+    }
+
+    /// Drops everything (used when the local-cache factor is disabled in
+    /// the Fig. 12 ablation).
+    pub fn clear(&mut self) {
+        self.objects.clear();
+        self.bytes = 0;
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_evict() {
+        let mut c = LocalCache::new();
+        c.insert(TaskId(1), DataObj::synthetic(100));
+        assert!(c.contains(TaskId(1)));
+        assert_eq!(c.bytes(), 100);
+        c.evict(TaskId(1));
+        assert!(!c.contains(TaskId(1)));
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.peak_bytes(), 100);
+    }
+
+    #[test]
+    fn stored_marking() {
+        let mut c = LocalCache::new();
+        assert!(!c.is_stored(TaskId(2)));
+        c.mark_stored(TaskId(2));
+        assert!(c.is_stored(TaskId(2)));
+    }
+
+    #[test]
+    fn reinsert_replaces_size() {
+        let mut c = LocalCache::new();
+        c.insert(TaskId(1), DataObj::synthetic(100));
+        c.insert(TaskId(1), DataObj::synthetic(50));
+        assert_eq!(c.bytes(), 50);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = LocalCache::new();
+        c.insert(TaskId(1), DataObj::synthetic(10));
+        c.insert(TaskId(2), DataObj::synthetic(20));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+    }
+}

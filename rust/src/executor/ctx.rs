@@ -1,0 +1,133 @@
+//! Shared per-job context for WUKONG executors.
+
+use crate::compute::CostModel;
+use crate::core::{EngineError, EngineResult, SimConfig, SplitMix64, TaskId};
+use crate::dag::Dag;
+use crate::faas::Faas;
+use crate::kvstore::KvStore;
+use crate::metrics::MetricsHub;
+use crate::runtime::PjrtRuntime;
+use crate::schedule::ScheduleSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Pub/sub channel on which sink results are announced to the client.
+pub const FINAL_CHANNEL: &str = "wukong:final";
+/// Pub/sub channel on which large fan-outs are delegated to the proxy.
+pub const FANOUT_CHANNEL: &str = "wukong:fanout";
+
+/// Everything a Task Executor needs, shared across the job.
+pub struct WukongCtx {
+    pub dag: Arc<Dag>,
+    pub cfg: SimConfig,
+    pub faas: Arc<Faas>,
+    pub kv: Arc<KvStore>,
+    pub metrics: Arc<MetricsHub>,
+    pub cost: CostModel,
+    pub schedules: Arc<ScheduleSet>,
+    pub runtime: Option<PjrtRuntime>,
+    /// Exactly-once execution guard (simulation invariant check; in the
+    /// real system this property is guaranteed by the fan-in counters).
+    executed: Mutex<Vec<bool>>,
+    executed_count: AtomicU64,
+}
+
+impl WukongCtx {
+    pub fn new(
+        dag: Arc<Dag>,
+        cfg: SimConfig,
+        faas: Arc<Faas>,
+        kv: Arc<KvStore>,
+        metrics: Arc<MetricsHub>,
+        schedules: Arc<ScheduleSet>,
+        runtime: Option<PjrtRuntime>,
+    ) -> Arc<Self> {
+        let n = dag.len();
+        Arc::new(WukongCtx {
+            dag,
+            cost: CostModel::new(cfg.compute.clone()),
+            cfg,
+            faas,
+            kv,
+            metrics,
+            schedules,
+            runtime,
+            executed: Mutex::new(vec![false; n]),
+            executed_count: AtomicU64::new(0),
+        })
+    }
+
+    /// Deterministic per-task duration jitter derived from the seed.
+    pub fn jitter_for(&self, task: TaskId) -> f64 {
+        if self.cfg.compute.jitter <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = SplitMix64::new(self.cfg.seed ^ (task.0 as u64).wrapping_mul(0x9E37));
+        rng.jitter(self.cfg.compute.jitter)
+    }
+
+    /// Marks `task` executed; errors if it was already executed (the
+    /// exactly-once invariant every scheduler in this repo must uphold).
+    pub fn mark_executed(&self, task: TaskId) -> EngineResult<()> {
+        let mut v = self.executed.lock().unwrap();
+        if v[task.index()] {
+            return Err(EngineError::Job(format!(
+                "task {task} executed twice — fan-in conflict resolution is broken"
+            )));
+        }
+        v[task.index()] = true;
+        self.executed_count.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn executed_count(&self) -> u64 {
+        self.executed_count.load(Ordering::Relaxed)
+    }
+
+    pub fn all_executed(&self) -> bool {
+        self.executed_count() == self.dag.len() as u64
+    }
+
+    /// Bandwidth of an executor's NIC (bytes/s).
+    pub fn lambda_bps(&self) -> f64 {
+        self.cfg.net.lambda_bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+    use crate::schedule;
+
+    fn ctx() -> Arc<WukongCtx> {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 1, &[]);
+        b.add_task("b", Payload::Noop, 1, &[a]);
+        let dag = Arc::new(b.build().unwrap());
+        let cfg = SimConfig::test();
+        let metrics = Arc::new(MetricsHub::new());
+        let faas = Faas::new(cfg.faas.clone(), metrics.clone());
+        let kv = KvStore::new(cfg.net.clone(), metrics.clone());
+        let schedules = Arc::new(schedule::generate(&dag));
+        WukongCtx::new(dag, cfg, faas, kv, metrics, schedules, None)
+    }
+
+    #[test]
+    fn exactly_once_guard() {
+        let c = ctx();
+        c.mark_executed(TaskId(0)).unwrap();
+        assert!(c.mark_executed(TaskId(0)).is_err());
+        assert_eq!(c.executed_count(), 1);
+        assert!(!c.all_executed());
+        c.mark_executed(TaskId(1)).unwrap();
+        assert!(c.all_executed());
+    }
+
+    #[test]
+    fn jitter_deterministic_and_unit_when_disabled() {
+        let c = ctx();
+        assert_eq!(c.jitter_for(TaskId(0)), 1.0); // test config: jitter off
+    }
+}

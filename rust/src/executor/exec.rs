@@ -1,0 +1,139 @@
+//! Payload execution — shared by WUKONG executors, the centralized-design
+//! Lambdas, and the serverful Dask workers. The *where it runs* differs per
+//! scheduler; *what it costs / computes* is identical.
+
+use crate::compute::{CostModel, DataObj, Payload, Tensor};
+use crate::core::{clock, EngineError, EngineResult};
+use crate::runtime::PjrtRuntime;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Executes `payload` over `inputs` on a platform with the given compute
+/// speed, returning the output object. Modeled payloads advance virtual
+/// time; `Pjrt` payloads run real kernels through the runtime.
+pub async fn run_payload(
+    payload: &Payload,
+    output_bytes: u64,
+    inputs: &[DataObj],
+    gflops: f64,
+    jitter: f64,
+    cost: &CostModel,
+    runtime: Option<&PjrtRuntime>,
+) -> EngineResult<DataObj> {
+    match payload {
+        Payload::Noop => Ok(DataObj::synthetic(output_bytes)),
+        Payload::Sleep { ms } => {
+            clock::sleep(Duration::from_secs_f64(ms * 1e-3)).await;
+            Ok(DataObj::synthetic(output_bytes))
+        }
+        Payload::FixedMs { ms } => {
+            clock::sleep(Duration::from_secs_f64(ms * 1e-3 * jitter)).await;
+            Ok(DataObj::synthetic(output_bytes))
+        }
+        Payload::Model { flops } => {
+            clock::sleep(cost.duration(*flops, gflops, jitter)).await;
+            Ok(DataObj::synthetic(output_bytes))
+        }
+        Payload::Const(t) => Ok(DataObj::tensor_arc(Arc::clone(t))),
+        Payload::Pjrt { artifact } => {
+            let rt = runtime.ok_or_else(|| {
+                EngineError::Runtime(format!(
+                    "payload '{artifact}' needs the PJRT runtime but none was configured"
+                ))
+            })?;
+            let tensors: Vec<Arc<Tensor>> = inputs
+                .iter()
+                .map(|o| {
+                    o.tensor.clone().ok_or_else(|| {
+                        EngineError::Runtime(format!(
+                            "artifact '{artifact}': input object carries no tensor"
+                        ))
+                    })
+                })
+                .collect::<EngineResult<_>>()?;
+            let out = rt.execute(artifact, tensors).await?;
+            Ok(DataObj::tensor(out))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::clock::now;
+
+    #[test]
+    fn sleep_payload_costs_its_duration() {
+        crate::rt::run_virtual(async {
+            let cm = CostModel::default();
+            let t0 = now();
+            let out = run_payload(
+                &Payload::Sleep { ms: 500.0 },
+                64,
+                &[],
+                10.0,
+                1.0,
+                &cm,
+                None,
+            )
+            .await
+            .unwrap();
+            assert_eq!(now() - t0, Duration::from_millis(500));
+            assert_eq!(out.bytes, 64);
+        });
+    }
+
+    #[test]
+    fn model_payload_scales_with_gflops() {
+        crate::rt::run_virtual(async {
+            let cm = CostModel::default();
+            let t0 = now();
+            run_payload(&Payload::Model { flops: 1e9 }, 0, &[], 10.0, 1.0, &cm, None)
+                .await
+                .unwrap();
+            assert_eq!(now() - t0, Duration::from_millis(100));
+        });
+    }
+
+    #[test]
+    fn const_payload_returns_tensor() {
+        crate::rt::run_virtual(async {
+            let cm = CostModel::default();
+            let t = Tensor::vec1(vec![1.0, 2.0]);
+            let out = run_payload(
+                &Payload::Const(Arc::new(t)),
+                0,
+                &[],
+                10.0,
+                1.0,
+                &cm,
+                None,
+            )
+            .await
+            .unwrap();
+            assert_eq!(out.expect_tensor().data, vec![1.0, 2.0]);
+            assert_eq!(out.bytes, 8);
+        });
+    }
+
+    #[test]
+    fn pjrt_without_runtime_errors() {
+        crate::rt::run_virtual(async {
+            let cm = CostModel::default();
+            let err = run_payload(
+                &Payload::Pjrt {
+                    artifact: "matmul128".into(),
+                },
+                0,
+                &[],
+                10.0,
+                1.0,
+                &cm,
+                None,
+            )
+            .await
+            .unwrap_err();
+            assert!(matches!(err, EngineError::Runtime(_)));
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! The WUKONG Task Executor — the AWS Lambda runtime of paper §IV-C.
+//!
+//! Each executor receives a static schedule, executes the tasks along a
+//! single path through it, caches intermediate outputs in local memory
+//! (data locality), resolves fan-in conflicts through KV-store dependency
+//! counters, and invokes new executors at fan-outs (directly for small
+//! fan-outs, via the storage-manager proxy for large ones).
+
+pub mod cache;
+pub mod ctx;
+pub mod exec;
+pub mod task_executor;
+
+pub use cache::LocalCache;
+pub use ctx::WukongCtx;
+pub use exec::run_payload;
+pub use task_executor::run_executor;

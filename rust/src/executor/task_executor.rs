@@ -1,0 +1,233 @@
+//! The Task Executor main loop (paper §IV-C, Fig. 6).
+//!
+//! An executor starts at one node of its static schedule (a leaf for the
+//! initial executors; a fan-out out-edge for dynamically invoked ones) and
+//! walks a single path:
+//!
+//! * **fan-in** (in-degree > 1): publish my in-edge output, atomically
+//!   increment the dependency counter; continue only if mine was the last
+//!   dependency, otherwise stop — no executor ever *waits* (Lambda bills
+//!   wait time).
+//! * **execute**: gather inputs (local cache first — data locality — then
+//!   KV store), run the payload, cache the output.
+//! * **fan-out**: trivial (1 out-edge) → continue; n > 1 → store output
+//!   once, *become* the executor of the first out-edge and invoke
+//!   executors for the rest (delegating to the storage-manager proxy when
+//!   the fan-out exceeds `max_task_fanout`); 0 out-edges → sink: store the
+//!   final result and announce it.
+
+use crate::compute::DataObj;
+use crate::core::{clock, EngineResult, ExecutorId, ObjectKey, TaskId};
+use crate::executor::cache::LocalCache;
+use crate::executor::ctx::{WukongCtx, FANOUT_CHANNEL, FINAL_CHANNEL};
+use crate::executor::exec::run_payload;
+use crate::kvstore::Message;
+use crate::metrics::TaskSpan;
+use std::sync::Arc;
+
+/// Runs one Task Executor starting at `start`. `arrived_from` is the
+/// parent along whose out-edge this executor was invoked (None for the
+/// initial leaf executors).
+pub async fn run_executor(
+    ctx: Arc<WukongCtx>,
+    start: TaskId,
+    arrived_from: Option<TaskId>,
+    exec_id: ExecutorId,
+) -> EngineResult<()> {
+    let mut cache = LocalCache::new();
+    let mut current = start;
+    let mut from = arrived_from;
+
+    loop {
+        let indeg = ctx.dag.in_degree(current);
+
+        // ---- fan-in resolution -----------------------------------------
+        if indeg > 1 {
+            // My in-edge output must be visible to whichever executor wins
+            // the conflict, so store it *before* incrementing (this is the
+            // ordering the real system uses: write data, then INCR).
+            if let Some(p) = from {
+                store_once(&ctx, &mut cache, p).await;
+            }
+            let n = ctx.kv.incr(&ObjectKey::counter(current)).await;
+            debug_assert!(
+                n as usize <= indeg,
+                "dependency counter exceeded in-degree"
+            );
+            if (n as usize) < indeg {
+                // Not all dependencies satisfied: save outputs and stop.
+                // (Outputs along my path were already persisted above /
+                // at fan-outs.)
+                return Ok(());
+            }
+            // Mine was the last dependency — I continue through the fan-in.
+        }
+
+        // ---- gather inputs ----------------------------------------------
+        let t_fetch = clock::now();
+        let mut inputs: Vec<DataObj> = Vec::with_capacity(indeg);
+        for &p in ctx.dag.parents(current) {
+            if ctx.cfg.wukong.local_cache {
+                if let Some(obj) = cache.get(p) {
+                    inputs.push(obj.clone());
+                    continue;
+                }
+            }
+            inputs.push(ctx.kv.get(&ObjectKey::output(p), ctx.lambda_bps()).await?);
+        }
+        let fetch = clock::now() - t_fetch;
+
+        // ---- execute ------------------------------------------------------
+        let spec = ctx.dag.task(current);
+        let t_exec = clock::now();
+        let out = run_payload(
+            &spec.payload,
+            spec.output_bytes,
+            &inputs,
+            ctx.faas.config().gflops,
+            ctx.jitter_for(current),
+            &ctx.cost,
+            ctx.runtime.as_ref(),
+        )
+        .await?;
+        let compute = clock::now() - t_exec;
+        ctx.mark_executed(current)?;
+        cache.insert(current, out);
+
+        // Inputs are consumed; drop parent objects we no longer need to
+        // bound executor memory on long paths.
+        for &p in ctx.dag.parents(current) {
+            cache.evict(p);
+        }
+
+        // Fig. 12 ablation: with the local cache disabled, every output
+        // goes straight to the KV store and nothing is kept locally.
+        if !ctx.cfg.wukong.local_cache {
+            store_once(&ctx, &mut cache, current).await;
+        }
+
+        // ---- fan-out ------------------------------------------------------
+        let children: &[TaskId] = ctx.dag.children(current);
+        let t_store = clock::now();
+        match children.len() {
+            // Sink: persist the final result and announce it.
+            0 => {
+                store_once(&ctx, &mut cache, current).await;
+                ctx.kv
+                    .publish(FINAL_CHANNEL, Message::FinalResult { task: current })
+                    .await;
+                let store = clock::now() - t_store;
+                ctx.metrics.record_task(TaskSpan {
+                    task: current,
+                    executor: exec_id,
+                    fetch,
+                    compute,
+                    store,
+                    total: fetch + compute + store,
+                });
+                return Ok(());
+            }
+            // Trivial fan-out: continue along the single out-edge. No
+            // network I/O at all — this is WUKONG's data-locality win.
+            1 => {
+                ctx.metrics.record_task(TaskSpan {
+                    task: current,
+                    executor: exec_id,
+                    fetch,
+                    compute,
+                    store: std::time::Duration::ZERO,
+                    total: fetch + compute,
+                });
+                from = Some(current);
+                current = children[0];
+            }
+            // Real fan-out: store the output once (the invoked executors
+            // read it from the KV store), invoke executors for all but the
+            // first out-edge, and become the executor of the first.
+            n => {
+                store_once(&ctx, &mut cache, current).await;
+                let invoke: Vec<TaskId> = children[1..].to_vec();
+                if n >= ctx.cfg.wukong.max_task_fanout {
+                    // Large fan-out: delegate invocation to the storage
+                    // manager's proxy (paper §IV-D) with a single pub/sub
+                    // message carrying the fan-out's DAG location.
+                    ctx.kv
+                        .publish(
+                            FANOUT_CHANNEL,
+                            Message::FanOutRequest {
+                                fan_out_task: current,
+                                invoke,
+                            },
+                        )
+                        .await;
+                } else {
+                    // Small fan-out: invoke the executors ourselves, in
+                    // parallel (paper §IV-D).
+                    let parent = current;
+                    let handles: Vec<_> = invoke
+                        .iter()
+                        .map(|&c| invoke_executor(Arc::clone(&ctx), c, Some(parent)))
+                        .collect();
+                    crate::rt::join_all(handles).await;
+                }
+                let store = clock::now() - t_store;
+                ctx.metrics.record_task(TaskSpan {
+                    task: current,
+                    executor: exec_id,
+                    fetch,
+                    compute,
+                    store,
+                    total: fetch + compute + store,
+                });
+                from = Some(current);
+                current = children[0];
+            }
+        }
+    }
+}
+
+/// Stores `task`'s cached output to the KV store if this executor has not
+/// already done so.
+async fn store_once(ctx: &Arc<WukongCtx>, cache: &mut LocalCache, task: TaskId) {
+    if cache.is_stored(task) || ctx.kv.contains(&ObjectKey::output(task)) {
+        cache.mark_stored(task);
+        return;
+    }
+    if let Some(obj) = cache.get(task) {
+        let obj = obj.clone();
+        ctx.kv
+            .put(&ObjectKey::output(task), obj, ctx.lambda_bps())
+            .await;
+        cache.mark_stored(task);
+    }
+}
+
+/// Invokes a new Task Executor through the FaaS platform, starting at
+/// `start`, arriving along the out-edge of `from`. Returns after the
+/// invocation API call completes (the executor itself runs detached; job
+/// failures propagate via the pub/sub failure channel).
+pub async fn invoke_executor(ctx: Arc<WukongCtx>, start: TaskId, from: Option<TaskId>) {
+    let faas = Arc::clone(&ctx.faas);
+    let body_ctx = Arc::clone(&ctx);
+    faas.invoke(move |exec_id| {
+        let ctx = Arc::clone(&body_ctx);
+        async move {
+            let r = Box::pin(run_executor(Arc::clone(&ctx), start, from, exec_id)).await;
+            if let Err(e) = &r {
+                // Surface the failure to the client, then swallow it so the
+                // platform does not blindly retry a non-idempotent executor
+                // (the paper defers richer fault handling to future work).
+                ctx.kv
+                    .publish(
+                        FINAL_CHANNEL,
+                        Message::JobFailed {
+                            reason: e.to_string(),
+                        },
+                    )
+                    .await;
+            }
+            Ok(())
+        }
+    })
+    .await;
+}

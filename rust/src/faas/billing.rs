@@ -1,0 +1,76 @@
+//! The FaaS billing model: per-invocation fee + GB-second metering with
+//! duration rounded **up** to the billing granularity (100 ms on Lambda).
+//! This is why WUKONG executors never wait on unresolved fan-ins (paper
+//! §IV-C: "AWS Lambda would bill Task Executors for wait time, which is
+//! why waiting is avoided").
+
+use std::time::Duration;
+
+/// Pricing model (defaults: AWS Lambda 2019 public pricing).
+#[derive(Clone, Debug)]
+pub struct Billing {
+    /// Dollars per single invocation ($0.20 per 1M requests).
+    pub per_invocation_usd: f64,
+    /// Dollars per GB-second of billed duration.
+    pub gb_second_usd: f64,
+    /// Billing granularity (100 ms).
+    pub granularity: Duration,
+    /// Function memory in GB (drives GB-seconds).
+    pub memory_gb: f64,
+}
+
+impl Default for Billing {
+    fn default() -> Self {
+        Billing {
+            per_invocation_usd: 0.20 / 1e6,
+            gb_second_usd: 0.000_016_67,
+            granularity: Duration::from_millis(100),
+            memory_gb: 3.0,
+        }
+    }
+}
+
+impl Billing {
+    /// Billable duration: rounded up to the granularity, minimum one unit.
+    pub fn billable(&self, execution: Duration) -> Duration {
+        let g = self.granularity.as_nanos().max(1);
+        let e = execution.as_nanos();
+        let units = e.div_ceil(g).max(1);
+        Duration::from_nanos((units * g) as u64)
+    }
+
+    /// Dollar cost of one invocation that executed for `execution`.
+    pub fn cost_usd(&self, execution: Duration) -> f64 {
+        self.per_invocation_usd
+            + self.billable(execution).as_secs_f64() * self.memory_gb * self.gb_second_usd
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounds_up_to_100ms() {
+        let b = Billing::default();
+        assert_eq!(b.billable(Duration::from_millis(1)), Duration::from_millis(100));
+        assert_eq!(b.billable(Duration::from_millis(100)), Duration::from_millis(100));
+        assert_eq!(b.billable(Duration::from_millis(101)), Duration::from_millis(200));
+        assert_eq!(b.billable(Duration::from_millis(250)), Duration::from_millis(300));
+    }
+
+    #[test]
+    fn zero_duration_still_bills_one_unit() {
+        let b = Billing::default();
+        assert_eq!(b.billable(Duration::ZERO), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn cost_increases_with_duration() {
+        let b = Billing::default();
+        assert!(b.cost_usd(Duration::from_secs(1)) > b.cost_usd(Duration::from_millis(100)));
+        // invocation fee alone for minimal call
+        let min = b.cost_usd(Duration::ZERO);
+        assert!(min > b.per_invocation_usd);
+    }
+}

@@ -1,0 +1,13 @@
+//! Simulated serverless (FaaS) platform — the AWS Lambda substrate.
+//!
+//! Models the properties the paper's experiments exercise (§II-A, §III-C):
+//! per-call invocation latency (~50 ms via Boto3), cold vs warm container
+//! starts with a pre-warmed pool, a platform concurrency cap, function
+//! timeouts with forcible termination, automatic retries (up to 2), and
+//! per-100 ms billing.
+
+pub mod billing;
+pub mod platform;
+
+pub use billing::Billing;
+pub use platform::Faas;

@@ -1,0 +1,307 @@
+//! The FaaS platform: function invocation, container lifecycle, timeouts,
+//! retries, concurrency cap, billing.
+
+use crate::core::{clock, EngineError, EngineResult, ExecutorId, FaasConfig};
+use crate::faas::billing::Billing;
+use crate::metrics::MetricsHub;
+use std::future::Future;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+use crate::rt::sync::Semaphore;
+use crate::rt::JoinHandle;
+
+/// The serverless platform. One instance per simulated job run.
+pub struct Faas {
+    cfg: FaasConfig,
+    billing: Billing,
+    metrics: Arc<MetricsHub>,
+    /// Warm containers currently available for reuse.
+    warm: Mutex<usize>,
+    /// Platform-wide concurrent execution cap.
+    concurrency: Arc<Semaphore>,
+    next_executor: AtomicU64,
+    active: AtomicU64,
+    peak_active: AtomicU64,
+    total_cost_nanousd: AtomicU64,
+}
+
+impl Faas {
+    pub fn new(cfg: FaasConfig, metrics: Arc<MetricsHub>) -> Arc<Self> {
+        let billing = Billing {
+            granularity: Duration::from_millis(cfg.billing_granularity_ms),
+            memory_gb: cfg.memory_bytes as f64 / (1u64 << 30) as f64,
+            ..Billing::default()
+        };
+        Arc::new(Faas {
+            warm: Mutex::new(cfg.warm_pool),
+            concurrency: Semaphore::new(cfg.max_concurrency),
+            cfg,
+            billing,
+            metrics,
+            next_executor: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            peak_active: AtomicU64::new(0),
+            total_cost_nanousd: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &FaasConfig {
+        &self.cfg
+    }
+
+    /// The invocation-API latency one caller pays per call. Exposed so
+    /// callers batching invocations can reason about it.
+    pub fn invoke_latency(&self) -> Duration {
+        Duration::from_secs_f64(self.cfg.invoke_latency_ms * 1e-3)
+    }
+
+    /// Invokes a function **asynchronously** (Lambda `Event` invocation).
+    ///
+    /// The caller pays the invocation-API latency (sequential per caller —
+    /// this is exactly why the paper needed parallel invoker processes,
+    /// §III-C). The function body starts after the container start delay,
+    /// runs under the platform timeout, and is retried up to
+    /// `max_retries` times on failure (AWS Lambda's automatic retry,
+    /// paper §IV-C "fault tolerance").
+    ///
+    /// `make_body` is called once per attempt with the executor id.
+    pub async fn invoke<F, Fut>(self: &Arc<Self>, mut make_body: F) -> JoinHandle<EngineResult<()>>
+    where
+        F: FnMut(ExecutorId) -> Fut + 'static,
+        Fut: Future<Output = EngineResult<()>> + 'static,
+    {
+        // The API call, as seen by the caller.
+        clock::sleep(self.invoke_latency()).await;
+
+        let platform = Arc::clone(self);
+        crate::rt::spawn(async move {
+            let mut attempts = 0u32;
+            loop {
+                attempts += 1;
+                let id = ExecutorId(platform.next_executor.fetch_add(1, Ordering::Relaxed));
+                let result = platform.run_container(id, make_body(id)).await;
+                match result {
+                    Ok(()) => return Ok(()),
+                    Err(e) if attempts <= platform.cfg.max_retries => {
+                        // Automatic retry of a failed async invocation.
+                        let _ = e;
+                        continue;
+                    }
+                    Err(e) => {
+                        return Err(EngineError::InvocationFailed {
+                            attempts,
+                            reason: e.to_string(),
+                        })
+                    }
+                }
+            }
+        })
+    }
+
+    /// Runs one container attempt: concurrency admission, start latency,
+    /// body under timeout, billing, container returned to the warm pool.
+    async fn run_container(
+        self: &Arc<Self>,
+        _id: ExecutorId,
+        body: impl Future<Output = EngineResult<()>>,
+    ) -> EngineResult<()> {
+        // Concurrency admission (throttled invocations queue).
+        let permit = self.concurrency.acquire_owned().await;
+
+        // Container start: warm if the pool has one, else cold.
+        let cold = {
+            let mut warm = self.warm.lock().unwrap();
+            if *warm > 0 {
+                *warm -= 1;
+                false
+            } else {
+                true
+            }
+        };
+        let start_delay = if cold {
+            self.cfg.cold_start_ms
+        } else {
+            self.cfg.warm_start_ms
+        };
+        clock::sleep(Duration::from_secs_f64(start_delay * 1e-3)).await;
+        self.metrics.record_invocation(cold);
+
+        let n = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_active.fetch_max(n, Ordering::Relaxed);
+
+        let t0 = clock::now();
+        let outcome = crate::rt::timeout(Duration::from_millis(self.cfg.timeout_ms), body).await;
+        let execution = clock::now() - t0;
+
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        // Container becomes warm for future invocations.
+        *self.warm.lock().unwrap() += 1;
+        drop(permit);
+
+        // Billing happens regardless of success.
+        let billed = self.billing.billable(execution);
+        self.metrics.record_billing(billed);
+        let cost = self.billing.cost_usd(execution);
+        self.total_cost_nanousd
+            .fetch_add((cost * 1e9) as u64, Ordering::Relaxed);
+
+        match outcome {
+            Ok(r) => r,
+            Err(_) => Err(EngineError::FunctionTimeout {
+                executor: _id.0,
+                limit_ms: self.cfg.timeout_ms,
+            }),
+        }
+    }
+
+    /// Highest number of simultaneously running functions observed.
+    pub fn peak_concurrency(&self) -> u64 {
+        self.peak_active.load(Ordering::Relaxed)
+    }
+
+    /// Total dollar cost accrued so far.
+    pub fn total_cost_usd(&self) -> f64 {
+        self.total_cost_nanousd.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(cfg: FaasConfig) -> (Arc<Faas>, Arc<MetricsHub>) {
+        let m = Arc::new(MetricsHub::new());
+        (Faas::new(cfg, m.clone()), m)
+    }
+
+    #[test]
+    fn invoke_charges_api_latency_to_caller() {
+        crate::rt::run_virtual(async {
+            let (faas, _m) = mk(FaasConfig::default());
+            let t0 = clock::now();
+            let h = faas.invoke(|_| async { Ok(()) }).await;
+            let api_dt = clock::now() - t0;
+            assert_eq!(api_dt, Duration::from_millis(50));
+            h.await.unwrap();
+        });
+    }
+
+    #[test]
+    fn cold_start_when_pool_exhausted() {
+        crate::rt::run_virtual(async {
+            let cfg = FaasConfig {
+                warm_pool: 1,
+                ..FaasConfig::default()
+            };
+            let (faas, m) = mk(cfg);
+            let h1 = faas.invoke(|_| async { Ok(()) }).await;
+            h1.await.unwrap();
+            // First call consumed the warm container but returned it.
+            let h2 = faas.invoke(|_| async { Ok(()) }).await;
+            h2.await.unwrap();
+            assert_eq!(m.cold_starts(), 0);
+            // Two concurrent calls: the second must cold-start.
+            let h3 = faas
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_secs(1)).await;
+                    Ok(())
+                })
+                .await;
+            let h4 = faas.invoke(|_| async { Ok(()) }).await;
+            h3.await.unwrap();
+            h4.await.unwrap();
+            assert_eq!(m.cold_starts(), 1);
+        });
+    }
+
+    #[test]
+    fn timeout_enforced_and_retried() {
+        crate::rt::run_virtual(async {
+            let cfg = FaasConfig {
+                timeout_ms: 100,
+                max_retries: 1,
+                ..FaasConfig::default()
+            };
+            let (faas, _m) = mk(cfg);
+            let h = faas
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_secs(10)).await;
+                    Ok(())
+                })
+                .await;
+            let err = h.await.unwrap_err();
+            match err {
+                EngineError::InvocationFailed { attempts, .. } => assert_eq!(attempts, 2),
+                e => panic!("unexpected error {e}"),
+            }
+        });
+    }
+
+    #[test]
+    fn retry_succeeds_on_second_attempt() {
+        crate::rt::run_virtual(async {
+            let (faas, _m) = mk(FaasConfig::default());
+            let flag = Arc::new(AtomicU64::new(0));
+            let h = faas
+                .invoke(move |_| {
+                    let flag = flag.clone();
+                    async move {
+                        if flag.fetch_add(1, Ordering::Relaxed) == 0 {
+                            Err(EngineError::Job("transient".into()))
+                        } else {
+                            Ok(())
+                        }
+                    }
+                })
+                .await;
+            assert!(h.await.is_ok());
+        });
+    }
+
+    #[test]
+    fn billing_rounds_up() {
+        crate::rt::run_virtual(async {
+            let (faas, m) = mk(FaasConfig::default());
+            let h = faas
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_millis(123)).await;
+                    Ok(())
+                })
+                .await;
+            h.await.unwrap();
+            assert_eq!(m.billed_ms(), 200);
+            assert!(faas.total_cost_usd() > 0.0);
+        });
+    }
+
+    #[test]
+    fn concurrency_cap_throttles() {
+        crate::rt::run_virtual(async {
+            let cfg = FaasConfig {
+                max_concurrency: 1,
+                warm_pool: 8,
+                ..FaasConfig::default()
+            };
+            let (faas, _m) = mk(cfg);
+            let t0 = clock::now();
+            let h1 = faas
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_secs(1)).await;
+                    Ok(())
+                })
+                .await;
+            let h2 = faas
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_secs(1)).await;
+                    Ok(())
+                })
+                .await;
+            h1.await.unwrap();
+            h2.await.unwrap();
+            // Serialized by the concurrency cap: >= 2s of function time.
+            assert!(clock::now() - t0 >= Duration::from_secs(2));
+            assert_eq!(faas.peak_concurrency(), 1);
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! Sharded key-value store with pub/sub and atomic counters — the Redis
+//! cluster of the paper's deployment (§V: ten c5.18xlarge shards), plus the
+//! network cost model that gives every operation a virtual-time price.
+
+pub mod netmodel;
+pub mod pubsub;
+pub mod store;
+
+pub use netmodel::Nic;
+pub use pubsub::{Message, PubSub, Subscription};
+pub use store::KvStore;

@@ -1,0 +1,125 @@
+//! Network cost model.
+//!
+//! Each endpoint NIC is modeled as a FIFO bandwidth server: a transfer
+//! queues for the NIC, holds it for `bytes / bandwidth`, then releases it.
+//! Queueing delay under burst load emerges naturally — this is what
+//! produces the heavy upper tail of KV latencies in Fig. 13 (a minority of
+//! tasks saw 10 s+ reads/writes when hundreds of Lambdas hit the shards at
+//! once) and the resource-contention effect of co-locating all shards on
+//! one VM (Fig. 12's "shard per VM" factor).
+
+use crate::core::clock;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A FIFO bandwidth server (one NIC / one network direction).
+pub struct Nic {
+    bytes_per_sec: f64,
+    queue: crate::rt::sync::Mutex<()>,
+}
+
+impl std::fmt::Debug for Nic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Nic({} B/s)", self.bytes_per_sec)
+    }
+}
+
+impl Nic {
+    pub fn new(bytes_per_sec: f64) -> Arc<Self> {
+        assert!(bytes_per_sec > 0.0);
+        Arc::new(Nic {
+            bytes_per_sec,
+            queue: crate::rt::sync::Mutex::new(()),
+        })
+    }
+
+    /// Pure service time of `bytes` at this NIC's bandwidth (no queueing).
+    pub fn service_time(&self, bytes: u64) -> Duration {
+        Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec)
+    }
+
+    /// Occupies the NIC for the service time of `bytes` (the rt mutex
+    /// is FIFO-fair). Zero-byte transfers don't queue.
+    pub async fn transfer(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let _guard = self.queue.lock().await;
+        clock::sleep(self.service_time(bytes)).await;
+    }
+
+    /// Transfer limited by *two* endpoints: this NIC (queued) and a slower
+    /// remote link (not queued — a Lambda's private NIC serves only its own
+    /// traffic). Total time = max of the two service times, with only the
+    /// local part holding this NIC.
+    pub async fn transfer_capped(&self, bytes: u64, remote_bps: f64) {
+        if bytes == 0 {
+            return;
+        }
+        let local = self.service_time(bytes);
+        let total = Duration::from_secs_f64(bytes as f64 / remote_bps.min(self.bytes_per_sec));
+        {
+            let _guard = self.queue.lock().await;
+            clock::sleep(local).await;
+        }
+        if total > local {
+            clock::sleep(total - local).await;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::clock::now;
+
+    #[test]
+    fn service_time_is_bytes_over_bw() {
+        crate::rt::run_virtual(async {
+            let nic = Nic::new(1000.0); // 1000 B/s
+            let t0 = now();
+            nic.transfer(500).await;
+            assert_eq!(now() - t0, Duration::from_millis(500));
+        });
+    }
+
+    #[test]
+    fn concurrent_transfers_queue() {
+        crate::rt::run_virtual(async {
+            let nic = Nic::new(1000.0);
+            let t0 = now();
+            let a = crate::rt::spawn({
+                let nic = nic.clone();
+                async move { nic.transfer(500).await }
+            });
+            let b = crate::rt::spawn({
+                let nic = nic.clone();
+                async move { nic.transfer(500).await }
+            });
+            a.await;
+            b.await;
+            // FIFO: the two transfers serialize -> 1s total, not 0.5s.
+            assert_eq!(now() - t0, Duration::from_secs(1));
+        });
+    }
+
+    #[test]
+    fn capped_transfer_respects_slow_remote() {
+        crate::rt::run_virtual(async {
+            let nic = Nic::new(10_000.0);
+            let t0 = now();
+            nic.transfer_capped(1000, 1000.0).await; // remote is 10x slower
+            assert_eq!(now() - t0, Duration::from_secs(1));
+        });
+    }
+
+    #[test]
+    fn zero_bytes_is_free() {
+        crate::rt::run_virtual(async {
+            let nic = Nic::new(1.0);
+            let t0 = now();
+            nic.transfer(0).await;
+            assert_eq!(now(), t0);
+        });
+    }
+}

@@ -1,0 +1,135 @@
+//! Publish/subscribe channels (Redis PubSub equivalent, paper §III-B).
+//!
+//! The centralized designs subscribe the scheduler to completion channels;
+//! WUKONG's storage manager subscribes its proxy to the large-fan-out
+//! channel and the client subscribes to the final-result channel.
+
+use crate::core::{ExecutorId, TaskId};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use crate::rt::sync::mpsc;
+
+/// Messages carried over pub/sub channels.
+#[derive(Clone, Debug)]
+pub enum Message {
+    /// A task finished (centralized designs: completion notification).
+    TaskDone { task: TaskId, executor: ExecutorId },
+    /// A large fan-out must be invoked by the proxy on behalf of an
+    /// executor (paper §IV-D "Large Fan-out Task Invocations"). The payload
+    /// identifies the fan-out's location in the DAG.
+    FanOutRequest {
+        fan_out_task: TaskId,
+        /// Children the proxy must invoke (the executor keeps one edge).
+        invoke: Vec<TaskId>,
+    },
+    /// A final (sink) task's result key is available.
+    FinalResult { task: TaskId },
+    /// Job-level failure broadcast.
+    JobFailed { reason: String },
+}
+
+/// A subscription handle: an unbounded receiver of channel messages.
+pub struct Subscription {
+    rx: mpsc::Receiver<Message>,
+}
+
+impl Subscription {
+    /// Awaits the next message (None if all publishers dropped).
+    pub async fn recv(&mut self) -> Option<Message> {
+        self.rx.recv().await
+    }
+}
+
+/// The channel registry. Publishing is instantaneous at the broker; the
+/// delivery latency is charged by the KV store front end (see
+/// `KvStore::publish`), matching Redis PubSub's near-wire-speed delivery.
+#[derive(Default)]
+pub struct PubSub {
+    channels: Mutex<HashMap<String, Vec<mpsc::Sender<Message>>>>,
+}
+
+impl std::fmt::Debug for PubSub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PubSub({} channels)", self.channels.lock().unwrap().len())
+    }
+}
+
+impl PubSub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Subscribes to `channel`, returning the receiving handle.
+    pub fn subscribe(&self, channel: &str) -> Subscription {
+        let (tx, rx) = mpsc::unbounded();
+        self.channels
+            .lock()
+            .unwrap()
+            .entry(channel.to_string())
+            .or_default()
+            .push(tx);
+        Subscription { rx }
+    }
+
+    /// Delivers `msg` to all current subscribers of `channel`. Returns the
+    /// number of subscribers reached.
+    pub fn publish(&self, channel: &str, msg: Message) -> usize {
+        let mut map = self.channels.lock().unwrap();
+        let Some(subs) = map.get_mut(channel) else {
+            return 0;
+        };
+        // Drop closed subscriptions as we go.
+        subs.retain(|tx| tx.send(msg.clone()).is_ok());
+        subs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_reaches_all_subscribers() {
+        crate::rt::run_virtual(async {
+            let ps = PubSub::new();
+            let mut s1 = ps.subscribe("done");
+            let mut s2 = ps.subscribe("done");
+            let n = ps.publish(
+                "done",
+                Message::TaskDone {
+                    task: TaskId(1),
+                    executor: ExecutorId(9),
+                },
+            );
+            assert_eq!(n, 2);
+            assert!(matches!(
+                s1.recv().await,
+                Some(Message::TaskDone { task: TaskId(1), .. })
+            ));
+            assert!(matches!(s2.recv().await, Some(Message::TaskDone { .. })));
+        });
+    }
+
+    #[test]
+    fn publish_to_empty_channel_is_zero() {
+        crate::rt::run_virtual(async {
+            let ps = PubSub::new();
+            assert_eq!(
+                ps.publish("nobody", Message::FinalResult { task: TaskId(0) }),
+                0
+            );
+        });
+    }
+
+    #[test]
+    fn dropped_subscriber_pruned() {
+        crate::rt::run_virtual(async {
+            let ps = PubSub::new();
+            {
+                let _s = ps.subscribe("c");
+            } // dropped immediately
+            let n = ps.publish("c", Message::FinalResult { task: TaskId(0) });
+            assert_eq!(n, 0);
+        });
+    }
+}

@@ -1,0 +1,334 @@
+//! The sharded KV store itself: put/get of data objects, atomic counters
+//! (fan-in dependency counters, paper §IV-C), and the pub/sub front end.
+
+use crate::compute::DataObj;
+use crate::core::{clock, EngineError, EngineResult, NetConfig, ObjectKey};
+use crate::kvstore::netmodel::Nic;
+use crate::kvstore::pubsub::{Message, PubSub, Subscription};
+use crate::metrics::{KvOpKind, MetricsHub};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+struct Shard {
+    objects: Mutex<HashMap<String, DataObj>>,
+    counters: Mutex<HashMap<String, u64>>,
+    nic: Arc<Nic>,
+}
+
+/// The KV store cluster. Cloneable by `Arc`.
+pub struct KvStore {
+    shards: Vec<Shard>,
+    pubsub: PubSub,
+    cfg: NetConfig,
+    metrics: Arc<MetricsHub>,
+    /// "Ideal storage" mode (Fig. 10 yellow bars): data still flows so
+    /// real-compute jobs stay correct, but every transfer is free.
+    ideal: bool,
+}
+
+impl KvStore {
+    pub fn new(cfg: NetConfig, metrics: Arc<MetricsHub>) -> Arc<Self> {
+        Self::with_ideal(cfg, metrics, false)
+    }
+
+    pub fn with_ideal(cfg: NetConfig, metrics: Arc<MetricsHub>, ideal: bool) -> Arc<Self> {
+        assert!(cfg.kv_shards > 0);
+        // Shard-per-VM: each shard gets its own NIC. Shared-VM mode (the
+        // pre-optimization configuration of Fig. 12): one NIC serves all
+        // shards, so bursts contend.
+        let shared: Option<Arc<Nic>> = if cfg.kv_shared_vm {
+            Some(Nic::new(cfg.kv_bandwidth_bps))
+        } else {
+            None
+        };
+        let shards = (0..cfg.kv_shards)
+            .map(|_| Shard {
+                objects: Mutex::new(HashMap::new()),
+                counters: Mutex::new(HashMap::new()),
+                nic: shared
+                    .clone()
+                    .unwrap_or_else(|| Nic::new(cfg.kv_bandwidth_bps)),
+            })
+            .collect();
+        Arc::new(KvStore {
+            shards,
+            pubsub: PubSub::new(),
+            cfg,
+            metrics,
+            ideal,
+        })
+    }
+
+    fn shard_of(&self, key: &str) -> &Shard {
+        // FNV-1a — stable, dependency-free key hashing.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    fn latency(&self) -> Duration {
+        Duration::from_secs_f64(self.cfg.kv_latency_us * 1e-6)
+    }
+
+    /// Stores `obj` under `key`, charging latency + bandwidth.
+    pub async fn put(&self, key: &ObjectKey, obj: DataObj, client_bps: f64) {
+        let t0 = clock::now();
+        let bytes = obj.bytes;
+        let shard = self.shard_of(key.as_str());
+        if !self.ideal {
+            clock::sleep(self.latency()).await;
+            shard.nic.transfer_capped(bytes, client_bps).await;
+        }
+        shard
+            .objects
+            .lock()
+            .unwrap()
+            .insert(key.as_str().to_string(), obj);
+        self.metrics
+            .record_kv_op(KvOpKind::Write, bytes, clock::now() - t0);
+    }
+
+    /// Retrieves the object under `key`, charging latency + bandwidth.
+    pub async fn get(&self, key: &ObjectKey, client_bps: f64) -> EngineResult<DataObj> {
+        let t0 = clock::now();
+        let shard = self.shard_of(key.as_str());
+        let obj = shard
+            .objects
+            .lock()
+            .unwrap()
+            .get(key.as_str())
+            .cloned()
+            .ok_or_else(|| EngineError::MissingObject {
+                key: key.as_str().to_string(),
+            })?;
+        if !self.ideal {
+            clock::sleep(self.latency()).await;
+            shard.nic.transfer_capped(obj.bytes, client_bps).await;
+        }
+        self.metrics
+            .record_kv_op(KvOpKind::Read, obj.bytes, clock::now() - t0);
+        Ok(obj)
+    }
+
+    /// Checks existence without transferring the value.
+    pub fn contains(&self, key: &ObjectKey) -> bool {
+        self.shard_of(key.as_str())
+            .objects
+            .lock()
+            .unwrap()
+            .contains_key(key.as_str())
+    }
+
+    /// Atomically increments the counter at `key` and returns the new
+    /// value (Redis INCR — the fan-in dependency counter of paper §IV-C).
+    /// Small fixed-size message: round-trip latency only.
+    pub async fn incr(&self, key: &ObjectKey) -> u64 {
+        let t0 = clock::now();
+        if !self.ideal {
+            clock::sleep(self.latency() * 2).await; // request + reply
+        }
+        let shard = self.shard_of(key.as_str());
+        let v = {
+            let mut counters = shard.counters.lock().unwrap();
+            let e = counters.entry(key.as_str().to_string()).or_insert(0);
+            *e += 1;
+            *e
+        };
+        self.metrics
+            .record_kv_op(KvOpKind::Incr, 0, clock::now() - t0);
+        v
+    }
+
+    /// Reads a counter without incrementing (tests / debugging).
+    pub fn counter_value(&self, key: &ObjectKey) -> u64 {
+        *self
+            .shard_of(key.as_str())
+            .counters
+            .lock()
+            .unwrap()
+            .get(key.as_str())
+            .unwrap_or(&0)
+    }
+
+    /// Publishes `msg` on `channel` with pub/sub delivery latency.
+    pub async fn publish(&self, channel: &str, msg: Message) -> usize {
+        let t0 = clock::now();
+        if !self.ideal {
+            clock::sleep(Duration::from_secs_f64(self.cfg.pubsub_latency_us * 1e-6)).await;
+        }
+        let n = self.pubsub.publish(channel, msg);
+        self.metrics
+            .record_kv_op(KvOpKind::Publish, 0, clock::now() - t0);
+        n
+    }
+
+    /// Subscribes to `channel` (no modeled cost: subscriptions are set up
+    /// once at job start, like Dask's cluster-init connections).
+    pub fn subscribe(&self, channel: &str) -> Subscription {
+        self.pubsub.subscribe(channel)
+    }
+
+    /// Number of stored objects across all shards (tests / reports).
+    pub fn object_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.objects.lock().unwrap().len())
+            .sum()
+    }
+
+    /// Total stored bytes across all shards.
+    pub fn stored_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.objects
+                    .lock()
+                    .unwrap()
+                    .values()
+                    .map(|o| o.bytes)
+                    .sum::<u64>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::TaskId;
+
+    fn store() -> Arc<KvStore> {
+        KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()))
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        crate::rt::run_virtual(async {
+            let kv = store();
+            let key = ObjectKey::output(TaskId(1));
+            kv.put(&key, DataObj::synthetic(1024), 1e9).await;
+            let obj = kv.get(&key, 1e9).await.unwrap();
+            assert_eq!(obj.bytes, 1024);
+            assert_eq!(kv.object_count(), 1);
+            assert_eq!(kv.stored_bytes(), 1024);
+        });
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        crate::rt::run_virtual(async {
+            let kv = store();
+            let err = kv.get(&ObjectKey::output(TaskId(9)), 1e9).await.unwrap_err();
+            assert!(matches!(err, EngineError::MissingObject { .. }));
+        });
+    }
+
+    #[test]
+    fn incr_is_atomic_and_monotonic() {
+        crate::rt::run_virtual(async {
+            let kv = store();
+            let key = ObjectKey::counter(TaskId(3));
+            assert_eq!(kv.incr(&key).await, 1);
+            assert_eq!(kv.incr(&key).await, 2);
+            assert_eq!(kv.incr(&key).await, 3);
+            assert_eq!(kv.counter_value(&key), 3);
+        });
+    }
+
+    #[test]
+    fn transfers_cost_virtual_time() {
+        crate::rt::run_virtual(async {
+            let kv = store();
+            let t0 = clock::now();
+            kv.put(
+                &ObjectKey::output(TaskId(0)),
+                DataObj::synthetic(100 * 1024 * 1024),
+                75e6, // lambda NIC ~600 Mbps
+            )
+            .await;
+            let dt = clock::now() - t0;
+            // 100 MiB at 75 MB/s ≈ 1.4 s — must be visible in virtual time.
+            assert!(dt > Duration::from_secs(1), "dt = {dt:?}");
+        });
+    }
+
+    #[test]
+    fn ideal_storage_is_free() {
+        crate::rt::run_virtual(async {
+            let kv = KvStore::with_ideal(NetConfig::default(), Arc::new(MetricsHub::new()), true);
+            let t0 = clock::now();
+            kv.put(
+                &ObjectKey::output(TaskId(0)),
+                DataObj::synthetic(1 << 30),
+                75e6,
+            )
+            .await;
+            kv.get(&ObjectKey::output(TaskId(0)), 75e6).await.unwrap();
+            assert_eq!(clock::now(), t0);
+        });
+    }
+
+    #[test]
+    fn shared_vm_contends() {
+        crate::rt::run_virtual(async {
+            // With all shards behind one NIC, two large transfers to different
+            // keys serialize; with shard-per-VM they proceed in parallel.
+            let metrics = Arc::new(MetricsHub::new());
+            let mut cfg = NetConfig {
+                kv_shared_vm: true,
+                kv_latency_us: 0.0,
+                ..NetConfig::default()
+            };
+            cfg.kv_bandwidth_bps = 1e6; // 1 MB/s to make it visible
+            let shared = KvStore::new(cfg.clone(), metrics.clone());
+            // Pick two keys that live on *different* shards so that the
+            // shard-per-VM configuration can actually parallelize them.
+            let (k1, k2) = {
+                let probe = KvStore::new(
+                    NetConfig {
+                        kv_shared_vm: false,
+                        ..NetConfig::default()
+                    },
+                    Arc::new(MetricsHub::new()),
+                );
+                let mut found = None;
+                'outer: for i in 0..32 {
+                    for j in (i + 1)..32 {
+                        let a = format!("key{i}");
+                        let b = format!("key{j}");
+                        if !std::ptr::eq(probe.shard_of(&a), probe.shard_of(&b)) {
+                            found = Some((a, b));
+                            break 'outer;
+                        }
+                    }
+                }
+                found.expect("no shard-distinct key pair in 32 probes")
+            };
+            let t0 = clock::now();
+            crate::rt::join_all(vec![
+                shared.put(&ObjectKey(k1.clone()), DataObj::synthetic(1_000_000), 1e9),
+                shared.put(&ObjectKey(k2.clone()), DataObj::synthetic(1_000_000), 1e9),
+            ])
+            .await;
+            let shared_dt = clock::now() - t0;
+
+            cfg.kv_shared_vm = false;
+            let split = KvStore::new(cfg, metrics);
+            let t1 = clock::now();
+            crate::rt::join_all(vec![
+                split.put(&ObjectKey(k1), DataObj::synthetic(1_000_000), 1e9),
+                split.put(&ObjectKey(k2), DataObj::synthetic(1_000_000), 1e9),
+            ])
+            .await;
+            let split_dt = clock::now() - t1;
+            assert!(
+                shared_dt > split_dt,
+                "shared {shared_dt:?} vs split {split_dt:?}"
+            );
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! # WUKONG — a serverless DAG engine (paper reproduction)
+//!
+//! A from-scratch reproduction of *"In Search of a Fast and Efficient
+//! Serverless DAG Engine"* (Carver, Zhang, Wang, Cheng; 2019): the WUKONG
+//! decentralized serverless DAG scheduler, every design iteration that led
+//! to it (strawman, pub/sub, parallel-invoker), a serverful Dask-style
+//! baseline, and the substrates they need (a FaaS platform, a sharded KV
+//! store with pub/sub, network cost models, and a purpose-built async
+//! runtime with a virtual clock), all executing in deterministic virtual
+//! time — plus a real-compute mode in which task payloads run AOT-compiled
+//! JAX/Pallas kernels through the PJRT runtime.
+//!
+//! ## Layering
+//! * **L3 (this crate)** — the coordination system under study.
+//! * **L2 (python/compile/model.py)** — JAX task payloads, AOT-lowered to
+//!   HLO text at build time (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels called by L2.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+//!
+//! ## Quick start
+//! ```no_run
+//! use wukong::prelude::*;
+//!
+//! let cfg = SimConfig::default();
+//! let dag = workloads::tree_reduction(1024, 100.0, &cfg);
+//! let report = engine::run_sim(async move {
+//!     WukongEngine::new(cfg).run(&dag).await
+//! });
+//! println!("{}", report.row());
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod compute;
+pub mod core;
+pub mod dag;
+pub mod engine;
+pub mod executor;
+pub mod faas;
+pub mod kvstore;
+pub mod metrics;
+pub mod rt;
+pub mod runtime;
+pub mod schedule;
+pub mod storage;
+pub mod workloads;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
+    pub use crate::compute::{DataObj, Payload, Tensor};
+    pub use crate::core::{ClusterProfile, EngineError, EngineResult, SimConfig, TaskId};
+    pub use crate::dag::{Dag, DagBuilder};
+    pub use crate::engine::{self, Client, WukongEngine};
+    pub use crate::metrics::{Cdf, JobReport};
+    pub use crate::runtime::PjrtRuntime;
+    pub use crate::workloads;
+}

@@ -1,0 +1,240 @@
+//! WUKONG CLI — run paper workloads on any of the engines and print
+//! paper-style reports. (Hand-rolled argument parsing: the build
+//! environment is offline, so no clap.)
+//!
+//! ```text
+//! wukong run --workload tr --size 1024 --sleep-ms 100 --platform wukong
+//! wukong run --workload svd2 --size 50000 --platform dask-ec2
+//! wukong compare --workload gemm --size 25000
+//! wukong stats --workload svd1 --size 200000
+//! wukong dot --workload tr --size 16
+//! ```
+
+use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
+use wukong::core::SimConfig;
+use wukong::dag::Dag;
+use wukong::engine::{run_sim, WukongEngine};
+use wukong::metrics::JobReport;
+use wukong::workloads;
+
+const USAGE: &str = "\
+wukong — serverless DAG engine (WUKONG reproduction), virtual-time simulator
+
+USAGE:
+    wukong <run|compare|stats|dot> [OPTIONS]
+
+OPTIONS:
+    --workload <tr|gemm|svd1|svd2|svc>   workload (required)
+    --size <N>       problem size: TR array length / GEMM,SVD2 n /
+                     SVD1 rows / SVC samples (required)
+    --sleep-ms <F>   per-task sleep delay for TR (default 0)
+    --platform <wukong|wukong-ideal|strawman|pubsub|parallel-invoker|
+                dask-ec2|dask-laptop>    (run only, default wukong)
+    --seed <N>       simulation seed (default 1)
+";
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Workload {
+    Tr,
+    Gemm,
+    Svd1,
+    Svd2,
+    Svc,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Platform {
+    Wukong,
+    WukongIdeal,
+    Strawman,
+    PubSub,
+    ParallelInvoker,
+    DaskEc2,
+    DaskLaptop,
+}
+
+struct Args {
+    command: String,
+    workload: Workload,
+    size: usize,
+    sleep_ms: f64,
+    platform: Platform,
+    seed: u64,
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}\n\n{USAGE}");
+    std::process::exit(2);
+}
+
+fn parse_args() -> Args {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        die("missing command");
+    }
+    let command = argv[0].clone();
+    if !["run", "compare", "stats", "dot"].contains(&command.as_str()) {
+        die(&format!("unknown command '{command}'"));
+    }
+    let mut workload = None;
+    let mut size = None;
+    let mut sleep_ms = 0.0;
+    let mut platform = Platform::Wukong;
+    let mut seed = 1u64;
+    let mut i = 1;
+    while i < argv.len() {
+        let flag = argv[i].as_str();
+        let val = argv
+            .get(i + 1)
+            .unwrap_or_else(|| die(&format!("missing value for {flag}")));
+        match flag {
+            "--workload" => {
+                workload = Some(match val.as_str() {
+                    "tr" => Workload::Tr,
+                    "gemm" => Workload::Gemm,
+                    "svd1" => Workload::Svd1,
+                    "svd2" => Workload::Svd2,
+                    "svc" => Workload::Svc,
+                    w => die(&format!("unknown workload '{w}'")),
+                })
+            }
+            "--size" => size = Some(val.parse().unwrap_or_else(|_| die("bad --size"))),
+            "--sleep-ms" => sleep_ms = val.parse().unwrap_or_else(|_| die("bad --sleep-ms")),
+            "--seed" => seed = val.parse().unwrap_or_else(|_| die("bad --seed")),
+            "--platform" => {
+                platform = match val.as_str() {
+                    "wukong" => Platform::Wukong,
+                    "wukong-ideal" => Platform::WukongIdeal,
+                    "strawman" => Platform::Strawman,
+                    "pubsub" => Platform::PubSub,
+                    "parallel-invoker" => Platform::ParallelInvoker,
+                    "dask-ec2" => Platform::DaskEc2,
+                    "dask-laptop" => Platform::DaskLaptop,
+                    p => die(&format!("unknown platform '{p}'")),
+                }
+            }
+            f => die(&format!("unknown flag '{f}'")),
+        }
+        i += 2;
+    }
+    Args {
+        command,
+        workload: workload.unwrap_or_else(|| die("--workload is required")),
+        size: size.unwrap_or_else(|| die("--size is required")),
+        sleep_ms,
+        platform,
+        seed,
+    }
+}
+
+fn build_dag(workload: Workload, size: usize, sleep_ms: f64, cfg: &SimConfig) -> Dag {
+    match workload {
+        Workload::Tr => workloads::tree_reduction(size, sleep_ms, cfg),
+        Workload::Gemm => workloads::gemm(size, cfg),
+        Workload::Svd1 => workloads::svd1(size, cfg),
+        Workload::Svd2 => workloads::svd2(size, cfg),
+        Workload::Svc => workloads::svc(size, cfg),
+    }
+}
+
+fn run_platform(platform: Platform, dag: &Dag, cfg: &SimConfig) -> JobReport {
+    let cfg = cfg.clone();
+    let dag = dag.clone();
+    match platform {
+        Platform::Wukong => run_sim(async move { WukongEngine::new(cfg).run(&dag).await }),
+        Platform::WukongIdeal => run_sim(async move {
+            WukongEngine::new(cfg.with_ideal_storage())
+                .with_label("WUKONG (ideal storage)")
+                .run(&dag)
+                .await
+        }),
+        Platform::Strawman => run_sim(async move {
+            CentralizedEngine::new(cfg, DesignIteration::Strawman)
+                .run(&dag)
+                .await
+        }),
+        Platform::PubSub => run_sim(async move {
+            CentralizedEngine::new(cfg, DesignIteration::PubSub)
+                .run(&dag)
+                .await
+        }),
+        Platform::ParallelInvoker => run_sim(async move {
+            CentralizedEngine::new(cfg, DesignIteration::ParallelInvoker)
+                .run(&dag)
+                .await
+        }),
+        Platform::DaskEc2 => run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await }),
+        Platform::DaskLaptop => run_sim(async move { DaskCluster::laptop(cfg).run(&dag).await }),
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    let cfg = SimConfig {
+        seed: args.seed,
+        ..SimConfig::default()
+    };
+    let dag = build_dag(args.workload, args.size, args.sleep_ms, &cfg);
+
+    match args.command.as_str() {
+        "run" => {
+            println!(
+                "workload={:?} size={} tasks={} leaves={} depth={}",
+                args.workload,
+                args.size,
+                dag.len(),
+                dag.leaves().len(),
+                dag.critical_path_len()
+            );
+            let report = run_platform(args.platform, &dag, &cfg);
+            println!("{}", report.row());
+        }
+        "compare" => {
+            println!(
+                "workload={:?} size={} tasks={} leaves={} depth={}",
+                args.workload,
+                args.size,
+                dag.len(),
+                dag.leaves().len(),
+                dag.critical_path_len()
+            );
+            for platform in [
+                Platform::DaskLaptop,
+                Platform::DaskEc2,
+                Platform::Strawman,
+                Platform::PubSub,
+                Platform::ParallelInvoker,
+                Platform::Wukong,
+            ] {
+                let report = run_platform(platform, &dag, &cfg);
+                println!("{}", report.row());
+            }
+        }
+        "dot" => {
+            print!(
+                "{}",
+                wukong::dag::dot::to_dot(&dag, &format!("{:?}", args.workload))
+            );
+        }
+        "stats" => {
+            let schedules = wukong::schedule::generate(&dag);
+            println!("tasks:          {}", dag.len());
+            println!("leaves:         {}", dag.leaves().len());
+            println!("sinks:          {}", dag.sinks().len());
+            println!("critical path:  {}", dag.critical_path_len());
+            println!("fan-ins:        {}", dag.fan_in_count());
+            println!("fan-outs:       {}", dag.fan_out_count());
+            println!("total GFLOPs:   {:.2}", dag.total_flops() / 1e9);
+            println!(
+                "total output:   {}",
+                wukong::core::ByteSize(dag.total_output_bytes())
+            );
+            println!("schedules:      {}", schedules.len());
+            println!(
+                "schedule bytes: {}",
+                wukong::core::ByteSize(schedules.total_payload_bytes())
+            );
+        }
+        _ => unreachable!(),
+    }
+}

@@ -1,0 +1,129 @@
+//! Empirical CDFs and percentile summaries (Fig. 13).
+
+use std::time::Duration;
+
+/// An empirical CDF over duration samples.
+#[derive(Clone, Debug, Default)]
+pub struct Cdf {
+    sorted_secs: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn from_durations(samples: impl IntoIterator<Item = Duration>) -> Self {
+        let mut v: Vec<f64> = samples.into_iter().map(|d| d.as_secs_f64()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Cdf { sorted_secs: v }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted_secs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted_secs.is_empty()
+    }
+
+    /// Value at quantile q ∈ [0, 1] (nearest-rank).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.sorted_secs.is_empty() {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let idx = ((q * self.sorted_secs.len() as f64).ceil() as usize)
+            .saturating_sub(1)
+            .min(self.sorted_secs.len() - 1);
+        self.sorted_secs[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+    pub fn max(&self) -> f64 {
+        *self.sorted_secs.last().unwrap_or(&0.0)
+    }
+    pub fn min(&self) -> f64 {
+        *self.sorted_secs.first().unwrap_or(&0.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sorted_secs.is_empty() {
+            0.0
+        } else {
+            self.sorted_secs.iter().sum::<f64>() / self.sorted_secs.len() as f64
+        }
+    }
+
+    /// Fraction of samples ≤ x seconds.
+    pub fn fraction_below(&self, x: f64) -> f64 {
+        if self.sorted_secs.is_empty() {
+            return 0.0;
+        }
+        let cnt = self.sorted_secs.partition_point(|&v| v <= x);
+        cnt as f64 / self.sorted_secs.len() as f64
+    }
+
+    /// Renders the CDF as `(value_seconds, cumulative_fraction)` points at
+    /// `n` evenly spaced ranks — the series the paper plots in Fig. 13.
+    pub fn series(&self, n: usize) -> Vec<(f64, f64)> {
+        if self.sorted_secs.is_empty() || n == 0 {
+            return vec![];
+        }
+        (1..=n)
+            .map(|i| {
+                let q = i as f64 / n as f64;
+                (self.quantile(q), q)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cdf(vals: &[u64]) -> Cdf {
+        Cdf::from_durations(vals.iter().map(|&v| Duration::from_secs(v)))
+    }
+
+    #[test]
+    fn quantiles() {
+        let c = cdf(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(c.p50(), 5.0);
+        assert_eq!(c.p90(), 9.0);
+        assert_eq!(c.max(), 10.0);
+        assert_eq!(c.min(), 1.0);
+        assert_eq!(c.mean(), 5.5);
+    }
+
+    #[test]
+    fn fraction_below() {
+        let c = cdf(&[1, 2, 3, 4]);
+        assert_eq!(c.fraction_below(2.0), 0.5);
+        assert_eq!(c.fraction_below(0.5), 0.0);
+        assert_eq!(c.fraction_below(10.0), 1.0);
+    }
+
+    #[test]
+    fn empty_cdf_is_safe() {
+        let c = Cdf::default();
+        assert_eq!(c.p50(), 0.0);
+        assert!(c.series(10).is_empty());
+        assert_eq!(c.fraction_below(1.0), 0.0);
+    }
+
+    #[test]
+    fn series_monotonic() {
+        let c = cdf(&[3, 1, 4, 1, 5, 9, 2, 6]);
+        let s = c.series(8);
+        for w in s.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+}

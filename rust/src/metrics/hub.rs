@@ -1,0 +1,198 @@
+//! Central metrics collector shared by every component of one job run.
+
+use crate::core::{ExecutorId, TaskId};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Kind of a KV-store operation, for the Fig. 13 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KvOpKind {
+    Read,
+    Write,
+    Incr,
+    Publish,
+}
+
+/// Per-task execution span (all virtual-time durations).
+#[derive(Clone, Debug)]
+pub struct TaskSpan {
+    pub task: TaskId,
+    pub executor: ExecutorId,
+    /// Time spent fetching inputs (KV reads / peer transfers).
+    pub fetch: Duration,
+    /// Time spent computing.
+    pub compute: Duration,
+    /// Time spent storing outputs.
+    pub store: Duration,
+    /// End-to-end task latency as observed by its executor.
+    pub total: Duration,
+}
+
+/// One KV operation sample.
+#[derive(Clone, Debug)]
+pub struct KvSample {
+    pub kind: KvOpKind,
+    pub bytes: u64,
+    pub latency: Duration,
+}
+
+/// Shared, cheaply-clonable metrics sink. Atomic counters for the hot
+/// path; mutex-guarded sample vectors for the detailed breakdowns.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    // hot-path counters
+    kv_reads: AtomicU64,
+    kv_writes: AtomicU64,
+    kv_incrs: AtomicU64,
+    kv_publishes: AtomicU64,
+    bytes_read: AtomicU64,
+    bytes_written: AtomicU64,
+    lambdas_invoked: AtomicU64,
+    cold_starts: AtomicU64,
+    tasks_executed: AtomicU64,
+    billed_ms: AtomicU64,
+    // detailed samples (disabled unless `sampling` is set, to keep the
+    // simulation hot path allocation-free for the big sweeps)
+    sampling: std::sync::atomic::AtomicBool,
+    task_spans: Mutex<Vec<TaskSpan>>,
+    kv_samples: Mutex<Vec<KvSample>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enables per-task / per-op sample recording (Fig. 13 runs).
+    pub fn enable_sampling(&self) {
+        self.sampling.store(true, Ordering::Relaxed);
+    }
+
+    pub fn sampling_enabled(&self) -> bool {
+        self.sampling.load(Ordering::Relaxed)
+    }
+
+    pub fn record_kv_op(&self, kind: KvOpKind, bytes: u64, latency: Duration) {
+        match kind {
+            KvOpKind::Read => {
+                self.kv_reads.fetch_add(1, Ordering::Relaxed);
+                self.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+            }
+            KvOpKind::Write => {
+                self.kv_writes.fetch_add(1, Ordering::Relaxed);
+                self.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+            }
+            KvOpKind::Incr => {
+                self.kv_incrs.fetch_add(1, Ordering::Relaxed);
+            }
+            KvOpKind::Publish => {
+                self.kv_publishes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if self.sampling_enabled() {
+            self.kv_samples.lock().unwrap().push(KvSample {
+                kind,
+                bytes,
+                latency,
+            });
+        }
+    }
+
+    pub fn record_invocation(&self, cold: bool) {
+        self.lambdas_invoked.fetch_add(1, Ordering::Relaxed);
+        if cold {
+            self.cold_starts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_task(&self, span: TaskSpan) {
+        self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+        if self.sampling_enabled() {
+            self.task_spans.lock().unwrap().push(span);
+        }
+    }
+
+    pub fn record_billing(&self, billed: Duration) {
+        self.billed_ms
+            .fetch_add(billed.as_millis() as u64, Ordering::Relaxed);
+    }
+
+    // -- accessors --------------------------------------------------------
+
+    pub fn lambdas_invoked(&self) -> u64 {
+        self.lambdas_invoked.load(Ordering::Relaxed)
+    }
+    pub fn cold_starts(&self) -> u64 {
+        self.cold_starts.load(Ordering::Relaxed)
+    }
+    pub fn tasks_executed(&self) -> u64 {
+        self.tasks_executed.load(Ordering::Relaxed)
+    }
+    pub fn kv_reads(&self) -> u64 {
+        self.kv_reads.load(Ordering::Relaxed)
+    }
+    pub fn kv_writes(&self) -> u64 {
+        self.kv_writes.load(Ordering::Relaxed)
+    }
+    pub fn kv_incrs(&self) -> u64 {
+        self.kv_incrs.load(Ordering::Relaxed)
+    }
+    pub fn kv_publishes(&self) -> u64 {
+        self.kv_publishes.load(Ordering::Relaxed)
+    }
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.load(Ordering::Relaxed)
+    }
+    pub fn billed_ms(&self) -> u64 {
+        self.billed_ms.load(Ordering::Relaxed)
+    }
+
+    pub fn task_spans(&self) -> Vec<TaskSpan> {
+        self.task_spans.lock().unwrap().clone()
+    }
+
+    pub fn kv_samples(&self) -> Vec<KvSample> {
+        self.kv_samples.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = MetricsHub::new();
+        m.record_kv_op(KvOpKind::Read, 100, Duration::from_millis(1));
+        m.record_kv_op(KvOpKind::Write, 200, Duration::from_millis(2));
+        m.record_kv_op(KvOpKind::Incr, 0, Duration::from_micros(300));
+        assert_eq!(m.kv_reads(), 1);
+        assert_eq!(m.kv_writes(), 1);
+        assert_eq!(m.kv_incrs(), 1);
+        assert_eq!(m.bytes_read(), 100);
+        assert_eq!(m.bytes_written(), 200);
+    }
+
+    #[test]
+    fn sampling_off_by_default() {
+        let m = MetricsHub::new();
+        m.record_kv_op(KvOpKind::Read, 100, Duration::from_millis(1));
+        assert!(m.kv_samples().is_empty());
+        m.enable_sampling();
+        m.record_kv_op(KvOpKind::Read, 100, Duration::from_millis(1));
+        assert_eq!(m.kv_samples().len(), 1);
+    }
+
+    #[test]
+    fn invocations_and_cold_starts() {
+        let m = MetricsHub::new();
+        m.record_invocation(true);
+        m.record_invocation(false);
+        assert_eq!(m.lambdas_invoked(), 2);
+        assert_eq!(m.cold_starts(), 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Metrics: virtual-time spans, histograms/CDFs, and job reports.
+//!
+//! Fig. 13 of the paper is a CDF breakdown of per-task latencies (compute
+//! vs KV read vs KV write); [`MetricsHub`] collects exactly those samples.
+
+pub mod histogram;
+pub mod hub;
+pub mod report;
+
+pub use histogram::Cdf;
+pub use hub::{KvOpKind, MetricsHub, TaskSpan};
+pub use report::{JobReport, KvStats};

@@ -1,0 +1,137 @@
+//! Job-level result report: everything the paper's figures need.
+
+use crate::core::EngineError;
+use crate::metrics::hub::MetricsHub;
+use std::time::Duration;
+
+/// KV-store traffic summary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub incrs: u64,
+    pub publishes: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+}
+
+/// The outcome of one DAG execution on one platform.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    /// Platform / scheduler label ("WUKONG", "Dask (EC2)", "Strawman", ...).
+    pub platform: String,
+    /// End-to-end makespan in virtual (or wall) time.
+    pub makespan: Duration,
+    /// Tasks executed (must equal DAG size on success).
+    pub tasks_executed: u64,
+    /// Serverless functions invoked (0 for the serverful baseline) —
+    /// reported per workload in paper §V-A.
+    pub lambdas_invoked: u64,
+    pub cold_starts: u64,
+    /// Total billed function time (100 ms rounding).
+    pub billed: Duration,
+    pub kv: KvStats,
+    /// Failure, if the job did not complete (e.g. Dask OOM).
+    pub error: Option<EngineError>,
+}
+
+impl JobReport {
+    pub fn success(platform: impl Into<String>, makespan: Duration, hub: &MetricsHub) -> Self {
+        JobReport {
+            platform: platform.into(),
+            makespan,
+            tasks_executed: hub.tasks_executed(),
+            lambdas_invoked: hub.lambdas_invoked(),
+            cold_starts: hub.cold_starts(),
+            billed: Duration::from_millis(hub.billed_ms()),
+            kv: KvStats {
+                reads: hub.kv_reads(),
+                writes: hub.kv_writes(),
+                incrs: hub.kv_incrs(),
+                publishes: hub.kv_publishes(),
+                bytes_read: hub.bytes_read(),
+                bytes_written: hub.bytes_written(),
+            },
+            error: None,
+        }
+    }
+
+    pub fn failure(
+        platform: impl Into<String>,
+        makespan: Duration,
+        hub: &MetricsHub,
+        error: EngineError,
+    ) -> Self {
+        let mut r = Self::success(platform, makespan, hub);
+        r.error = Some(error);
+        r
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Makespan in seconds, or NaN for failed jobs (plotted as "OOM" /
+    /// missing bars in the paper's figures).
+    pub fn seconds(&self) -> f64 {
+        if self.is_ok() {
+            self.makespan.as_secs_f64()
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// One formatted row for the paper-style tables.
+    pub fn row(&self) -> String {
+        if let Some(e) = &self.error {
+            format!("{:<24} FAILED: {e}", self.platform)
+        } else {
+            format!(
+                "{:<24} {:>9.2}s  tasks={:<6} lambdas={:<5} kv_r={:<7} kv_w={:<7} billed={:.1}s",
+                self.platform,
+                self.makespan.as_secs_f64(),
+                self.tasks_executed,
+                self.lambdas_invoked,
+                self.kv.reads,
+                self.kv.writes,
+                self.billed.as_secs_f64(),
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_from_hub() {
+        let hub = MetricsHub::new();
+        hub.record_invocation(false);
+        hub.record_billing(Duration::from_millis(300));
+        let r = JobReport::success("WUKONG", Duration::from_secs(2), &hub);
+        assert!(r.is_ok());
+        assert_eq!(r.lambdas_invoked, 1);
+        assert_eq!(r.billed, Duration::from_millis(300));
+        assert_eq!(r.seconds(), 2.0);
+        assert!(r.row().contains("WUKONG"));
+    }
+
+    #[test]
+    fn failed_report() {
+        let hub = MetricsHub::new();
+        let r = JobReport::failure(
+            "Dask (Laptop)",
+            Duration::from_secs(1),
+            &hub,
+            EngineError::OutOfMemory {
+                worker: "w0".into(),
+                needed_bytes: 10,
+                limit_bytes: 5,
+            },
+        );
+        assert!(!r.is_ok());
+        assert!(r.seconds().is_nan());
+        assert!(r.row().contains("FAILED"));
+    }
+}

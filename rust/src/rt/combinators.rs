@@ -1,0 +1,172 @@
+//! Small future combinators (replacing the `futures` crate).
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+
+/// Polls a set of futures to completion, returning their outputs in order.
+pub struct JoinAll<F: Future> {
+    futs: Vec<Option<Pin<Box<F>>>>,
+    outs: Vec<Option<F::Output>>,
+}
+
+// JoinAll never pins its contents in place — each future is separately
+// heap-pinned — so it is Unpin regardless of F or F::Output.
+impl<F: Future> Unpin for JoinAll<F> {}
+
+impl<F: Future> Future for JoinAll<F> {
+    type Output = Vec<F::Output>;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        // JoinAll is Unpin: futures are individually boxed.
+        let this = self.get_mut();
+        let mut all_done = true;
+        for i in 0..this.futs.len() {
+            if let Some(f) = &mut this.futs[i] {
+                match f.as_mut().poll(cx) {
+                    Poll::Ready(v) => {
+                        this.outs[i] = Some(v);
+                        this.futs[i] = None;
+                    }
+                    Poll::Pending => all_done = false,
+                }
+            }
+        }
+        if all_done {
+            Poll::Ready(this.outs.iter_mut().map(|o| o.take().unwrap()).collect())
+        } else {
+            Poll::Pending
+        }
+    }
+}
+
+/// Awaits all futures concurrently (single-threaded interleaving).
+pub fn join_all<I>(iter: I) -> JoinAll<I::Item>
+where
+    I: IntoIterator,
+    I::Item: Future,
+{
+    let futs: Vec<_> = iter.into_iter().map(|f| Some(Box::pin(f))).collect();
+    let n = futs.len();
+    JoinAll {
+        futs,
+        outs: (0..n).map(|_| None).collect(),
+    }
+}
+
+/// Yields once, letting other ready tasks run.
+pub async fn yield_now() {
+    struct Yield(bool);
+    impl Future for Yield {
+        type Output = ();
+        fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+            if self.0 {
+                Poll::Ready(())
+            } else {
+                self.0 = true;
+                cx.waker().wake_by_ref();
+                Poll::Pending
+            }
+        }
+    }
+    Yield(false).await
+}
+
+/// Minimal thread-blocking executor for futures that are completed by
+/// other OS threads (no timers). Used by `PjrtRuntime::execute_blocking`
+/// outside any runtime.
+pub fn block_on_simple<F: Future>(mut fut: F) -> F::Output {
+    struct ThreadWaker {
+        woken: Mutex<bool>,
+        condvar: Condvar,
+    }
+    impl Wake for ThreadWaker {
+        fn wake(self: Arc<Self>) {
+            *self.woken.lock().unwrap() = true;
+            self.condvar.notify_one();
+        }
+    }
+    let tw = Arc::new(ThreadWaker {
+        woken: Mutex::new(false),
+        condvar: Condvar::new(),
+    });
+    let waker = Waker::from(tw.clone());
+    let mut cx = Context::from_waker(&waker);
+    // Safety: fut never moves after this pin (it lives on this stack frame).
+    let mut fut = unsafe { Pin::new_unchecked(&mut fut) };
+    loop {
+        if let Poll::Ready(v) = fut.as_mut().poll(&mut cx) {
+            return v;
+        }
+        let mut woken = tw.woken.lock().unwrap();
+        while !*woken {
+            woken = tw.condvar.wait(woken).unwrap();
+        }
+        *woken = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{self, sleep, Mode};
+    use std::time::Duration;
+
+    #[test]
+    fn join_all_preserves_order() {
+        let out = rt::block_on(
+            async {
+                join_all((0..5).map(|i| async move {
+                    // Later entries sleep less — results must stay ordered.
+                    sleep(Duration::from_millis((5 - i) as u64)).await;
+                    i
+                }))
+                .await
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn join_all_runs_concurrently() {
+        let elapsed = rt::block_on(
+            async {
+                let t0 = rt::now();
+                join_all((0..10).map(|_| sleep(Duration::from_millis(100)))).await;
+                rt::now() - t0
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(elapsed, Duration::from_millis(100), "must overlap");
+    }
+
+    #[test]
+    fn join_all_empty() {
+        let out: Vec<u32> = rt::block_on(
+            async { join_all(std::iter::empty::<std::future::Ready<u32>>()).await },
+            Mode::Virtual,
+        );
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn yield_now_allows_interleaving() {
+        rt::block_on(
+            async {
+                yield_now().await;
+            },
+            Mode::Virtual,
+        );
+    }
+
+    #[test]
+    fn block_on_simple_with_thread() {
+        let (tx, rx) = crate::rt::sync::oneshot::channel::<u32>();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            let _ = tx.send(3);
+        });
+        assert_eq!(block_on_simple(rx).unwrap(), 3);
+    }
+}

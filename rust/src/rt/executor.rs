@@ -1,0 +1,599 @@
+//! The single-threaded executor with a virtual (or wall) clock.
+//!
+//! ## Design
+//!
+//! Tasks live in a slab on the executor thread. Wakers are `Arc`-backed
+//! and thread-safe: they push the task id onto a mutex-protected wake
+//! queue and notify a condvar, so OS threads (the PJRT actor) can wake
+//! tasks. The scheduling loop:
+//!
+//! 1. drain the wake queue into the ready list, poll everything ready;
+//! 2. if the root future finished → return;
+//! 3. otherwise advance time: **virtual** mode jumps the clock to the
+//!    earliest timer deadline; **real** mode sleeps on the condvar until
+//!    that deadline or an external wakeup;
+//! 4. if there are no timers and no ready tasks, wait for an external
+//!    wakeup if any [`ExternalGuard`] is alive — otherwise every task is
+//!    blocked forever: deadlock, which panics loudly (a scheduler bug in
+//!    this codebase, never a user error).
+
+use std::cell::RefCell;
+use std::collections::BinaryHeap;
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+use std::time::Duration;
+
+use crate::rt::sync::oneshot;
+use crate::rt::time::SimInstant;
+
+/// Clock mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Deterministic discrete-event time: the clock jumps to the next
+    /// timer deadline whenever the executor is idle.
+    Virtual,
+    /// Wall-clock time.
+    Real,
+}
+
+type TaskId = usize;
+
+/// Thread-safe part of the executor shared with wakers and other threads.
+pub(crate) struct Shared {
+    wake_queue: Mutex<Vec<TaskId>>,
+    condvar: Condvar,
+    /// Number of live [`ExternalGuard`]s — operations running on other
+    /// threads that will eventually wake a task.
+    external: AtomicI64,
+    /// True only while the executor thread is parked on the condvar;
+    /// lets the hot wake path skip the notify syscall entirely.
+    sleeping: std::sync::atomic::AtomicBool,
+}
+
+impl Shared {
+    fn notify(&self) {
+        if self.sleeping.load(Ordering::SeqCst) {
+            self.condvar.notify_one();
+        }
+    }
+
+    fn push_wake(&self, id: TaskId) {
+        self.wake_queue.lock().unwrap().push(id);
+        self.notify();
+    }
+
+    /// Parks on the condvar for up to `dur` unless the queue is non-empty.
+    fn park(&self, dur: Duration) {
+        let q = self.wake_queue.lock().unwrap();
+        if q.is_empty() {
+            self.sleeping.store(true, Ordering::SeqCst);
+            let _ = self.condvar.wait_timeout(q, dur).unwrap();
+            self.sleeping.store(false, Ordering::SeqCst);
+        }
+    }
+}
+
+struct TaskWaker {
+    id: TaskId,
+    shared: Arc<Shared>,
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.shared.push_wake(self.id);
+    }
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.shared.push_wake(self.id);
+    }
+}
+
+/// One registered timer.
+struct Timer {
+    deadline_ns: u128,
+    seq: u64,
+    waker: Waker,
+}
+
+impl PartialEq for Timer {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline_ns == other.deadline_ns && self.seq == other.seq
+    }
+}
+impl Eq for Timer {}
+impl PartialOrd for Timer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest deadline
+        // on top. Ties break by registration order for determinism.
+        other
+            .deadline_ns
+            .cmp(&self.deadline_ns)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Executor-thread state.
+pub(crate) struct Core {
+    mode: Mode,
+    /// Virtual nanoseconds since simulation start (virtual mode), or the
+    /// wall-clock start instant (real mode).
+    now_ns: RefCell<u128>,
+    start: std::time::Instant,
+    tasks: RefCell<Vec<Option<Pin<Box<dyn Future<Output = ()>>>>>>,
+    /// Cached wakers, one per task slot (allocating a fresh Arc waker on
+    /// every poll dominated the hot path before this cache).
+    wakers: RefCell<Vec<Option<Waker>>>,
+    /// Tasks spawned while the executor is mid-poll.
+    pending_spawn: RefCell<Vec<(TaskId, Pin<Box<dyn Future<Output = ()>>>)>>,
+    next_task: RefCell<TaskId>,
+    timers: RefCell<BinaryHeap<Timer>>,
+    timer_seq: AtomicU64,
+    shared: Arc<Shared>,
+    /// Tasks aborted via JoinHandle::abort, dropped before the next poll.
+    aborted: Arc<Mutex<Vec<TaskId>>>,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Rc<Core>>> = const { RefCell::new(None) };
+}
+
+/// Panics with a helpful message if called outside `block_on`.
+pub(crate) fn with_core<R>(f: impl FnOnce(&Rc<Core>) -> R) -> R {
+    CURRENT.with(|c| {
+        let b = c.borrow();
+        let core = b
+            .as_ref()
+            .expect("not inside a wukong::rt runtime (wrap the call in rt::run_virtual / rt::run_real)");
+        f(core)
+    })
+}
+
+impl Core {
+    pub(crate) fn now(&self) -> SimInstant {
+        match self.mode {
+            Mode::Virtual => SimInstant::from_nanos(*self.now_ns.borrow()),
+            Mode::Real => SimInstant::from_nanos(self.start.elapsed().as_nanos()),
+        }
+    }
+
+    pub(crate) fn register_timer(&self, deadline: SimInstant, waker: Waker) {
+        let seq = self.timer_seq.fetch_add(1, Ordering::Relaxed);
+        self.timers.borrow_mut().push(Timer {
+            deadline_ns: deadline.as_nanos(),
+            seq,
+            waker,
+        });
+    }
+
+    fn spawn_task(&self, fut: Pin<Box<dyn Future<Output = ()>>>) -> TaskId {
+        let mut next = self.next_task.borrow_mut();
+        let id = *next;
+        *next += 1;
+        self.pending_spawn.borrow_mut().push((id, fut));
+        // Newly spawned tasks are immediately ready.
+        self.shared.push_wake(id);
+        id
+    }
+
+    /// Moves pending spawns into the slab.
+    fn flush_spawns(&self) {
+        let mut pending = self.pending_spawn.borrow_mut();
+        if pending.is_empty() {
+            return;
+        }
+        let mut tasks = self.tasks.borrow_mut();
+        for (id, fut) in pending.drain(..) {
+            if tasks.len() <= id {
+                tasks.resize_with(id + 1, || None);
+            }
+            tasks[id] = Some(fut);
+        }
+    }
+
+    fn drop_aborted(&self) {
+        let ids: Vec<TaskId> = std::mem::take(&mut *self.aborted.lock().unwrap());
+        if ids.is_empty() {
+            return;
+        }
+        self.flush_spawns();
+        let mut tasks = self.tasks.borrow_mut();
+        for id in ids {
+            if id < tasks.len() {
+                tasks[id] = None;
+            }
+        }
+    }
+
+    /// Polls one task (temporarily moving it out of the slab so the task
+    /// itself may spawn/abort others re-entrantly).
+    fn poll_task(self: &Rc<Self>, id: TaskId) {
+        self.flush_spawns();
+        let fut = {
+            let mut tasks = self.tasks.borrow_mut();
+            match tasks.get_mut(id) {
+                Some(slot) => slot.take(),
+                None => None,
+            }
+        };
+        let Some(mut fut) = fut else {
+            return; // finished or aborted
+        };
+        let waker = {
+            let mut wakers = self.wakers.borrow_mut();
+            if wakers.len() <= id {
+                wakers.resize_with(id + 1, || None);
+            }
+            wakers[id]
+                .get_or_insert_with(|| {
+                    Waker::from(Arc::new(TaskWaker {
+                        id,
+                        shared: self.shared.clone(),
+                    }))
+                })
+                .clone()
+        };
+        let mut cx = Context::from_waker(&waker);
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(()) => { /* task slot stays empty */ }
+            Poll::Pending => {
+                self.flush_spawns();
+                let mut tasks = self.tasks.borrow_mut();
+                if tasks.len() <= id {
+                    tasks.resize_with(id + 1, || None);
+                }
+                tasks[id] = Some(fut);
+            }
+        }
+    }
+
+    pub(crate) fn shared(&self) -> Arc<Shared> {
+        self.shared.clone()
+    }
+}
+
+/// Handle to a spawned task. Awaiting it yields the task's output;
+/// `abort()` drops the task at the next scheduling point.
+pub struct JoinHandle<T> {
+    rx: oneshot::Receiver<T>,
+    task: TaskId,
+    aborted: Arc<Mutex<Vec<TaskId>>>,
+    shared: Arc<Shared>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Cancels the task. The task's future is dropped before its next
+    /// poll; awaiting an aborted handle panics (don't do both).
+    pub fn abort(&self) {
+        self.aborted.lock().unwrap().push(self.task);
+        self.shared.notify();
+    }
+}
+
+impl<T> Future for JoinHandle<T> {
+    type Output = T;
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        match Pin::new(&mut self.rx).poll(cx) {
+            Poll::Ready(Ok(v)) => Poll::Ready(v),
+            Poll::Ready(Err(_)) => panic!("awaited task was aborted or panicked"),
+            Poll::Pending => Poll::Pending,
+        }
+    }
+}
+
+/// Spawns a task onto the current executor.
+pub fn spawn<F>(fut: F) -> JoinHandle<F::Output>
+where
+    F: Future + 'static,
+    F::Output: 'static,
+{
+    with_core(|core| {
+        let (tx, rx) = oneshot::channel();
+        let wrapped = Box::pin(async move {
+            let out = fut.await;
+            let _ = tx.send(out);
+        });
+        let task = core.spawn_task(wrapped);
+        JoinHandle {
+            rx,
+            task,
+            aborted: core.aborted.clone(),
+            shared: core.shared.clone(),
+        }
+    })
+}
+
+/// Guard signalling that an off-thread operation will wake a task later;
+/// while any guard is alive an otherwise-idle executor waits instead of
+/// declaring deadlock. Used by the PJRT actor bridge.
+pub struct ExternalGuard {
+    shared: Arc<Shared>,
+}
+
+impl ExternalGuard {
+    /// Registers an external operation on the current executor.
+    pub fn register() -> Self {
+        let shared = with_core(|core| core.shared());
+        shared.external.fetch_add(1, Ordering::SeqCst);
+        ExternalGuard { shared }
+    }
+}
+
+impl Drop for ExternalGuard {
+    fn drop(&mut self) {
+        self.shared.external.fetch_sub(1, Ordering::SeqCst);
+        self.shared.notify();
+    }
+}
+
+/// Runs `fut` to completion on a fresh executor with the given clock mode.
+pub fn block_on<F: Future + 'static>(fut: F, mode: Mode) -> F::Output
+where
+    F::Output: 'static,
+{
+    let core = Rc::new(Core {
+        mode,
+        now_ns: RefCell::new(0),
+        start: std::time::Instant::now(),
+        tasks: RefCell::new(Vec::new()),
+        wakers: RefCell::new(Vec::new()),
+        pending_spawn: RefCell::new(Vec::new()),
+        next_task: RefCell::new(0),
+        timers: RefCell::new(BinaryHeap::new()),
+        timer_seq: AtomicU64::new(0),
+        shared: Arc::new(Shared {
+            wake_queue: Mutex::new(Vec::new()),
+            condvar: Condvar::new(),
+            external: AtomicI64::new(0),
+            sleeping: std::sync::atomic::AtomicBool::new(false),
+        }),
+        aborted: Arc::new(Mutex::new(Vec::new())),
+    });
+
+    CURRENT.with(|c| {
+        assert!(
+            c.borrow().is_none(),
+            "rt::block_on may not be nested inside a running executor"
+        );
+        *c.borrow_mut() = Some(core.clone());
+    });
+    // Ensure the TLS slot is cleared even on panic.
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            CURRENT.with(|c| *c.borrow_mut() = None);
+        }
+    }
+    let _reset = Reset;
+
+    // Install the root future as task 0 with a result slot.
+    let result: Rc<RefCell<Option<F::Output>>> = Rc::new(RefCell::new(None));
+    let result2 = result.clone();
+    let root = Box::pin(async move {
+        let out = fut.await;
+        *result2.borrow_mut() = Some(out);
+    });
+    let root_id = core.spawn_task(root);
+
+    loop {
+        core.drop_aborted();
+        // Drain the wake queue and poll.
+        let ready: Vec<TaskId> = {
+            let mut q = core.shared.wake_queue.lock().unwrap();
+            std::mem::take(&mut *q)
+        };
+        if !ready.is_empty() {
+            for id in ready {
+                core.poll_task(id);
+                if result.borrow().is_some() {
+                    return result.borrow_mut().take().unwrap();
+                }
+            }
+            continue;
+        }
+        let _ = root_id;
+
+        // Idle: advance time.
+        let next_deadline = {
+            let timers = core.timers.borrow();
+            timers.peek().map(|t| t.deadline_ns)
+        };
+        match (mode, next_deadline) {
+            (Mode::Virtual, Some(deadline)) => {
+                // While an external (off-thread) operation is pending, the
+                // virtual clock must NOT advance: real compute takes zero
+                // virtual time by design. Wait for the external wake.
+                if core.shared.external.load(Ordering::SeqCst) > 0 {
+                    core.shared.park(Duration::from_millis(50));
+                    continue;
+                }
+                // Check for races: an external thread may have queued a
+                // wake between the drain above and now.
+                let q = core.shared.wake_queue.lock().unwrap();
+                if !q.is_empty() {
+                    continue;
+                }
+                drop(q);
+                {
+                    let mut now = core.now_ns.borrow_mut();
+                    *now = (*now).max(deadline);
+                }
+                // Fire every timer due at the (new) current time.
+                let now = *core.now_ns.borrow();
+                let mut timers = core.timers.borrow_mut();
+                while let Some(t) = timers.peek() {
+                    if t.deadline_ns <= now {
+                        timers.pop().unwrap().waker.wake();
+                    } else {
+                        break;
+                    }
+                }
+            }
+            (Mode::Real, Some(deadline)) => {
+                let now = core.start.elapsed().as_nanos();
+                if now >= deadline {
+                    let mut timers = core.timers.borrow_mut();
+                    while let Some(t) = timers.peek() {
+                        if t.deadline_ns <= now {
+                            timers.pop().unwrap().waker.wake();
+                        } else {
+                            break;
+                        }
+                    }
+                } else {
+                    let wait = Duration::from_nanos((deadline - now).min(u64::MAX as u128) as u64);
+                    core.shared.park(wait);
+                }
+            }
+            (_, None) => {
+                // No timers. Wait for external activity if any is pending.
+                if core.shared.external.load(Ordering::SeqCst) > 0 {
+                    core.shared.park(Duration::from_millis(100));
+                } else {
+                    // Give racing cross-thread wakes one more chance.
+                    let q = core.shared.wake_queue.lock().unwrap();
+                    if q.is_empty() {
+                        panic!(
+                            "executor deadlock: all tasks blocked, no timers, \
+                             no external operations pending"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::time::{now, sleep};
+
+    #[test]
+    fn block_on_returns_value() {
+        assert_eq!(block_on(async { 41 + 1 }, Mode::Virtual), 42);
+    }
+
+    #[test]
+    fn virtual_time_advances_instantly() {
+        let wall = std::time::Instant::now();
+        let elapsed = block_on(
+            async {
+                let t0 = now();
+                sleep(Duration::from_secs(3600)).await;
+                now() - t0
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(elapsed, Duration::from_secs(3600));
+        assert!(wall.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn spawned_tasks_run_and_join() {
+        let v = block_on(
+            async {
+                let h1 = spawn(async {
+                    sleep(Duration::from_millis(10)).await;
+                    1
+                });
+                let h2 = spawn(async {
+                    sleep(Duration::from_millis(5)).await;
+                    2
+                });
+                h1.await + h2.await
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(v, 3);
+    }
+
+    #[test]
+    fn timers_fire_in_order() {
+        let order = block_on(
+            async {
+                let log = std::rc::Rc::new(RefCell::new(Vec::new()));
+                let mut handles = Vec::new();
+                for (i, ms) in [(0, 30u64), (1, 10), (2, 20)] {
+                    let log = log.clone();
+                    handles.push(spawn(async move {
+                        sleep(Duration::from_millis(ms)).await;
+                        log.borrow_mut().push(i);
+                    }));
+                }
+                for h in handles {
+                    h.await;
+                }
+                let out = log.borrow().clone();
+                out
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn abort_cancels_task() {
+        block_on(
+            async {
+                let h = spawn(async {
+                    sleep(Duration::from_secs(10_000)).await;
+                    panic!("should never run");
+                });
+                sleep(Duration::from_millis(1)).await;
+                h.abort();
+                sleep(Duration::from_secs(20_000)).await; // passes the deadline
+            },
+            Mode::Virtual,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn deadlock_detected() {
+        block_on(
+            async {
+                // A future that is never woken.
+                std::future::pending::<()>().await;
+            },
+            Mode::Virtual,
+        );
+    }
+
+    #[test]
+    fn real_mode_sleeps_wall_clock() {
+        let wall = std::time::Instant::now();
+        block_on(
+            async {
+                sleep(Duration::from_millis(30)).await;
+            },
+            Mode::Real,
+        );
+        assert!(wall.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn cross_thread_wake() {
+        // An external thread completes a oneshot while the executor idles.
+        let v = block_on(
+            async {
+                let (tx, rx) = crate::rt::sync::oneshot::channel::<u32>();
+                let _guard = ExternalGuard::register();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(20));
+                    let _ = tx.send(7);
+                });
+                rx.await.unwrap()
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(v, 7);
+    }
+}

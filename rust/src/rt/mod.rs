@@ -1,0 +1,46 @@
+//! A minimal, dependency-free async runtime purpose-built for this engine.
+//!
+//! The public crates normally used for this (tokio, futures) are not
+//! available in the build environment, and a discrete-event simulator
+//! wants tighter control over time than a general-purpose runtime gives
+//! anyway. This module provides:
+//!
+//! * a **single-threaded executor** ([`block_on`], [`spawn`],
+//!   [`JoinHandle`]) with cross-thread wakeups (needed by the PJRT actor
+//!   thread),
+//! * a **virtual clock**: in [`Mode::Virtual`] the clock jumps straight to
+//!   the next timer deadline whenever all tasks are blocked — ordinary
+//!   `async` code becomes a deterministic discrete-event simulation,
+//! * [`Mode::Real`] wall-clock execution of the *same* code (used by the
+//!   real-compute examples),
+//! * async **sync primitives** with FIFO fairness ([`sync::Mutex`],
+//!   [`sync::Semaphore`], [`sync::mpsc`], [`sync::oneshot`]) — fairness
+//!   matters because NICs are modeled as FIFO queueing servers,
+//! * small future combinators ([`join_all`], [`timeout`], [`yield_now`]).
+//!
+//! Everything is `std`-only.
+
+pub mod combinators;
+pub mod executor;
+pub mod sync;
+pub mod time;
+
+pub use combinators::{block_on_simple, join_all, yield_now};
+pub use executor::{block_on, spawn, ExternalGuard, JoinHandle, Mode};
+pub use time::{now, sleep, timeout, Elapsed, SimInstant};
+
+/// Runs a future to completion on a fresh executor in **virtual time**.
+pub fn run_virtual<F: std::future::Future + 'static>(fut: F) -> F::Output
+where
+    F::Output: 'static,
+{
+    block_on(fut, Mode::Virtual)
+}
+
+/// Runs a future to completion on a fresh executor in **wall-clock time**.
+pub fn run_real<F: std::future::Future + 'static>(fut: F) -> F::Output
+where
+    F::Output: 'static,
+{
+    block_on(fut, Mode::Real)
+}

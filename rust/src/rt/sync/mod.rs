@@ -1,0 +1,9 @@
+//! Async synchronization primitives (FIFO-fair) and channels.
+
+pub mod mpsc;
+pub mod mutex;
+pub mod oneshot;
+pub mod semaphore;
+
+pub use mutex::{Mutex, MutexGuard};
+pub use semaphore::{OwnedPermit, Semaphore};

@@ -1,0 +1,223 @@
+//! Unbounded multi-producer single-consumer channel, usable across
+//! threads (the PJRT actor thread blocks on `blocking_recv`).
+
+use std::collections::VecDeque;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Waker};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    waker: Option<Waker>,
+    senders: usize,
+    receiver_alive: bool,
+}
+
+struct Chan<T> {
+    state: Mutex<State<T>>,
+    condvar: Condvar,
+}
+
+/// Sending half (cloneable, thread-safe).
+pub struct Sender<T> {
+    chan: Arc<Chan<T>>,
+}
+
+/// Receiving half.
+pub struct Receiver<T> {
+    chan: Arc<Chan<T>>,
+}
+
+/// Error: the receiver was dropped.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Creates an unbounded channel.
+pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
+    let chan = Arc::new(Chan {
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            waker: None,
+            senders: 1,
+            receiver_alive: true,
+        }),
+        condvar: Condvar::new(),
+    });
+    (
+        Sender { chan: chan.clone() },
+        Receiver { chan },
+    )
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.chan.state.lock().unwrap().senders += 1;
+        Sender {
+            chan: self.chan.clone(),
+        }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut s = self.chan.state.lock().unwrap();
+        s.senders -= 1;
+        if s.senders == 0 {
+            if let Some(w) = s.waker.take() {
+                w.wake();
+            }
+            self.chan.condvar.notify_all();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Sends a value; fails if the receiver is gone.
+    pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut s = self.chan.state.lock().unwrap();
+        if !s.receiver_alive {
+            return Err(SendError(v));
+        }
+        s.queue.push_back(v);
+        if let Some(w) = s.waker.take() {
+            w.wake();
+        }
+        self.chan.condvar.notify_one();
+        Ok(())
+    }
+}
+
+/// Future returned by [`Receiver::recv`].
+pub struct Recv<'a, T> {
+    rx: &'a mut Receiver<T>,
+}
+
+impl<T> Future for Recv<'_, T> {
+    type Output = Option<T>;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Option<T>> {
+        let mut s = self.rx.chan.state.lock().unwrap();
+        if let Some(v) = s.queue.pop_front() {
+            return Poll::Ready(Some(v));
+        }
+        if s.senders == 0 {
+            return Poll::Ready(None);
+        }
+        s.waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+/// Error for [`Receiver::try_recv`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    Empty,
+    Disconnected,
+}
+
+impl<T> Receiver<T> {
+    /// Awaits the next value (None when all senders dropped).
+    pub fn recv(&mut self) -> Recv<'_, T> {
+        Recv { rx: self }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&mut self) -> Result<T, TryRecvError> {
+        let mut s = self.chan.state.lock().unwrap();
+        match s.queue.pop_front() {
+            Some(v) => Ok(v),
+            None if s.senders == 0 => Err(TryRecvError::Disconnected),
+            None => Err(TryRecvError::Empty),
+        }
+    }
+
+    /// Blocking receive for plain OS threads (the PJRT actor loop).
+    pub fn blocking_recv(&mut self) -> Option<T> {
+        let mut s = self.chan.state.lock().unwrap();
+        loop {
+            if let Some(v) = s.queue.pop_front() {
+                return Some(v);
+            }
+            if s.senders == 0 {
+                return None;
+            }
+            s = self.chan.condvar.wait(s).unwrap();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        self.chan.state.lock().unwrap().receiver_alive = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{self, Mode};
+
+    #[test]
+    fn send_recv_in_order() {
+        let out = rt::block_on(
+            async {
+                let (tx, mut rx) = unbounded();
+                tx.send(1).unwrap();
+                tx.send(2).unwrap();
+                tx.send(3).unwrap();
+                drop(tx);
+                let mut v = Vec::new();
+                while let Some(x) = rx.recv().await {
+                    v.push(x);
+                }
+                v
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn recv_wakes_on_late_send() {
+        let v = rt::block_on(
+            async {
+                let (tx, mut rx) = unbounded::<u32>();
+                let h = rt::spawn(async move {
+                    crate::rt::sleep(std::time::Duration::from_millis(5)).await;
+                    tx.send(9).unwrap();
+                });
+                let v = rx.recv().await.unwrap();
+                h.await;
+                v
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(v, 9);
+    }
+
+    #[test]
+    fn send_after_receiver_drop_errors() {
+        let (tx, rx) = unbounded::<u32>();
+        drop(rx);
+        assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn blocking_recv_cross_thread() {
+        let (tx, mut rx) = unbounded::<u32>();
+        let t = std::thread::spawn(move || rx.blocking_recv());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        tx.send(5).unwrap();
+        assert_eq!(t.join().unwrap(), Some(5));
+    }
+
+    #[test]
+    fn try_recv_states() {
+        let (tx, mut rx) = unbounded::<u32>();
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        tx.send(1).unwrap();
+        assert_eq!(rx.try_recv(), Ok(1));
+        drop(tx);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+}

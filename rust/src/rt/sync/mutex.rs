@@ -1,0 +1,221 @@
+//! A FIFO-fair async mutex.
+//!
+//! Fairness is load-bearing: NICs are modeled as FIFO queueing servers
+//! (`kvstore::Nic`), so transfer order — and therefore every queueing
+//! delay in the simulation — must follow arrival order deterministically.
+//!
+//! Implementation: ticket lock. Each `lock()` call takes a ticket on its
+//! first poll; the holder's guard advances `serving` on release and wakes
+//! the next live ticket. Cancelled waiters (dropped lock futures — e.g.
+//! a function timeout firing mid-transfer) mark their ticket dead so the
+//! queue skips them.
+
+use std::collections::HashMap;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex as StdMutex};
+use std::task::{Context, Poll, Waker};
+
+struct State {
+    locked: bool,
+    next_ticket: u64,
+    serving: u64,
+    wakers: HashMap<u64, Waker>,
+    dead: std::collections::HashSet<u64>,
+}
+
+impl State {
+    /// Advances `serving` past dead tickets and wakes the next waiter.
+    fn advance(&mut self) {
+        while self.serving < self.next_ticket && self.dead.remove(&self.serving) {
+            self.wakers.remove(&self.serving);
+            self.serving += 1;
+        }
+        if let Some(w) = self.wakers.remove(&self.serving) {
+            w.wake();
+        }
+    }
+}
+
+/// FIFO async mutex guarding `T`.
+pub struct Mutex<T> {
+    state: StdMutex<State>,
+    value: std::cell::UnsafeCell<T>,
+}
+
+// Safety: access to `value` is serialized by the ticket protocol.
+unsafe impl<T: Send> Send for Mutex<T> {}
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+/// RAII guard; releases on drop.
+pub struct MutexGuard<'a, T> {
+    mutex: &'a Mutex<T>,
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        unsafe { &*self.mutex.value.get() }
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        unsafe { &mut *self.mutex.value.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        let mut s = self.mutex.state.lock().unwrap();
+        s.locked = false;
+        s.serving += 1;
+        s.advance();
+    }
+}
+
+/// Future returned by [`Mutex::lock`].
+pub struct Lock<'a, T> {
+    mutex: &'a Mutex<T>,
+    ticket: Option<u64>,
+}
+
+impl<'a, T> Future for Lock<'a, T> {
+    type Output = MutexGuard<'a, T>;
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut s = self.mutex.state.lock().unwrap();
+        let ticket = *self.ticket.get_or_insert_with(|| {
+            let t = s.next_ticket;
+            s.next_ticket += 1;
+            t
+        });
+        if !s.locked && s.serving == ticket {
+            s.locked = true;
+            s.wakers.remove(&ticket);
+            drop(s);
+            self.ticket = None; // consumed
+            Poll::Ready(MutexGuard { mutex: self.mutex })
+        } else {
+            s.wakers.insert(ticket, cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+impl<T> Drop for Lock<'_, T> {
+    fn drop(&mut self) {
+        if let Some(t) = self.ticket {
+            // Cancelled while queued: mark dead and let the queue skip us.
+            let mut s = self.mutex.state.lock().unwrap();
+            s.dead.insert(t);
+            if s.serving == t && !s.locked {
+                s.advance();
+            }
+        }
+    }
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Mutex {
+            state: StdMutex::new(State {
+                locked: false,
+                next_ticket: 0,
+                serving: 0,
+                wakers: HashMap::new(),
+                dead: std::collections::HashSet::new(),
+            }),
+            value: std::cell::UnsafeCell::new(value),
+        }
+    }
+
+    /// Acquires the mutex in FIFO order.
+    pub fn lock(&self) -> Lock<'_, T> {
+        Lock {
+            mutex: self,
+            ticket: None,
+        }
+    }
+}
+
+/// Arc-friendly alias used across the engine.
+pub type SharedMutex<T> = Arc<Mutex<T>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{self, sleep, spawn, Mode};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+    use std::time::Duration;
+
+    #[test]
+    fn mutual_exclusion_and_fifo_order() {
+        let order = rt::block_on(
+            async {
+                let m = Arc::new(Mutex::new(()));
+                let log = Rc::new(RefCell::new(Vec::new()));
+                let mut handles = Vec::new();
+                for i in 0..5 {
+                    let m = m.clone();
+                    let log = log.clone();
+                    handles.push(spawn(async move {
+                        // Stagger arrival: task i arrives at t = i ms.
+                        sleep(Duration::from_millis(i as u64)).await;
+                        let _g = m.lock().await;
+                        sleep(Duration::from_millis(10)).await;
+                        log.borrow_mut().push(i);
+                    }));
+                }
+                for h in handles {
+                    h.await;
+                }
+                let out = log.borrow().clone();
+                out
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(order, vec![0, 1, 2, 3, 4], "FIFO order violated");
+    }
+
+    #[test]
+    fn guard_gives_mut_access() {
+        let v = rt::block_on(
+            async {
+                let m = Mutex::new(10);
+                {
+                    let mut g = m.lock().await;
+                    *g += 5;
+                }
+                let v = *m.lock().await;
+                v
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(v, 15);
+    }
+
+    #[test]
+    fn cancelled_waiter_does_not_block_queue() {
+        rt::block_on(
+            async {
+                let m = Arc::new(Mutex::new(()));
+                let g = m.lock().await;
+                // A waiter that gets cancelled by a timeout.
+                let m2 = m.clone();
+                let h = spawn(async move {
+                    let _ =
+                        rt::timeout(Duration::from_millis(5), async { m2.lock().await }).await;
+                });
+                sleep(Duration::from_millis(10)).await;
+                h.await; // waiter timed out, its ticket is dead
+                drop(g);
+                // The mutex must still be acquirable.
+                let _g2 = rt::timeout(Duration::from_millis(5), async { m.lock().await })
+                    .await
+                    .expect("mutex wedged by cancelled waiter");
+            },
+            Mode::Virtual,
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! One-shot channel: a single value, sendable from any thread.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+
+struct State<T> {
+    value: Option<T>,
+    waker: Option<Waker>,
+    sender_dropped: bool,
+}
+
+/// Sending half. Consumed by `send`.
+pub struct Sender<T> {
+    state: Arc<Mutex<State<T>>>,
+}
+
+/// Receiving half: a future resolving to `Result<T, RecvError>`.
+pub struct Receiver<T> {
+    state: Arc<Mutex<State<T>>>,
+}
+
+/// The sender was dropped without sending.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "oneshot sender dropped")
+    }
+}
+impl std::error::Error for RecvError {}
+
+/// Creates a oneshot channel.
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let state = Arc::new(Mutex::new(State {
+        value: None,
+        waker: None,
+        sender_dropped: false,
+    }));
+    (
+        Sender {
+            state: state.clone(),
+        },
+        Receiver { state },
+    )
+}
+
+impl<T> Sender<T> {
+    /// Sends the value; errors (returning it) if the receiver is gone.
+    pub fn send(self, v: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        if Arc::strong_count(&self.state) == 1 {
+            return Err(v); // receiver dropped
+        }
+        s.value = Some(v);
+        if let Some(w) = s.waker.take() {
+            w.wake();
+        }
+        // Skip the Drop bookkeeping (value delivered).
+        s.sender_dropped = true;
+        drop(s);
+        std::mem::forget(self);
+        Ok(())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut s = self.state.lock().unwrap();
+        s.sender_dropped = true;
+        if let Some(w) = s.waker.take() {
+            w.wake();
+        }
+    }
+}
+
+impl<T> Future for Receiver<T> {
+    type Output = Result<T, RecvError>;
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(v) = s.value.take() {
+            return Poll::Ready(Ok(v));
+        }
+        if s.sender_dropped {
+            return Poll::Ready(Err(RecvError));
+        }
+        s.waker = Some(cx.waker().clone());
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{self, Mode};
+
+    #[test]
+    fn send_and_receive() {
+        let v = rt::block_on(
+            async {
+                let (tx, rx) = channel();
+                tx.send(42u32).unwrap();
+                rx.await.unwrap()
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn dropped_sender_errors() {
+        let r = rt::block_on(
+            async {
+                let (tx, rx) = channel::<u32>();
+                drop(tx);
+                rx.await
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(r, Err(RecvError));
+    }
+
+    #[test]
+    fn send_to_dropped_receiver_fails() {
+        let (tx, rx) = channel::<u32>();
+        drop(rx);
+        assert_eq!(tx.send(1), Err(1));
+    }
+}

@@ -1,0 +1,218 @@
+//! FIFO-fair async counting semaphore with owned permits.
+
+use std::collections::VecDeque;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Waker};
+
+struct Waiter {
+    granted: bool,
+    cancelled: bool,
+    waker: Option<Waker>,
+}
+
+struct State {
+    permits: usize,
+    queue: VecDeque<Arc<Mutex<Waiter>>>,
+}
+
+impl State {
+    /// Grants available permits to the front of the queue.
+    fn grant(&mut self) {
+        while self.permits > 0 {
+            let Some(front) = self.queue.front().cloned() else {
+                break;
+            };
+            let mut w = front.lock().unwrap();
+            if w.cancelled {
+                drop(w);
+                self.queue.pop_front();
+                continue;
+            }
+            self.permits -= 1;
+            w.granted = true;
+            if let Some(wk) = w.waker.take() {
+                wk.wake();
+            }
+            drop(w);
+            self.queue.pop_front();
+        }
+    }
+}
+
+/// Counting semaphore.
+pub struct Semaphore {
+    state: Mutex<State>,
+}
+
+/// A permit tied to the semaphore's lifetime; released on drop.
+pub struct OwnedPermit {
+    sem: Arc<Semaphore>,
+}
+
+impl Drop for OwnedPermit {
+    fn drop(&mut self) {
+        let mut s = self.sem.state.lock().unwrap();
+        s.permits += 1;
+        s.grant();
+    }
+}
+
+/// Future returned by [`Semaphore::acquire_owned`].
+pub struct Acquire {
+    sem: Arc<Semaphore>,
+    waiter: Option<Arc<Mutex<Waiter>>>,
+}
+
+impl Future for Acquire {
+    type Output = OwnedPermit;
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<OwnedPermit> {
+        // Fast path / enqueue on first poll.
+        if self.waiter.is_none() {
+            let mut s = self.sem.state.lock().unwrap();
+            if s.permits > 0 && s.queue.is_empty() {
+                s.permits -= 1;
+                drop(s);
+                return Poll::Ready(OwnedPermit {
+                    sem: self.sem.clone(),
+                });
+            }
+            let w = Arc::new(Mutex::new(Waiter {
+                granted: false,
+                cancelled: false,
+                waker: Some(cx.waker().clone()),
+            }));
+            s.queue.push_back(w.clone());
+            drop(s);
+            self.waiter = Some(w);
+            return Poll::Pending;
+        }
+        let waiter = self.waiter.as_ref().unwrap().clone();
+        let mut w = waiter.lock().unwrap();
+        if w.granted {
+            drop(w);
+            self.waiter = None; // permit taken; Drop must not cancel
+            Poll::Ready(OwnedPermit {
+                sem: self.sem.clone(),
+            })
+        } else {
+            w.waker = Some(cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+impl Drop for Acquire {
+    fn drop(&mut self) {
+        if let Some(w) = &self.waiter {
+            let mut w = w.lock().unwrap();
+            if w.granted {
+                // Granted but never polled to completion: return permit.
+                drop(w);
+                let mut s = self.sem.state.lock().unwrap();
+                s.permits += 1;
+                s.grant();
+            } else {
+                w.cancelled = true;
+            }
+        }
+    }
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Arc<Self> {
+        Arc::new(Semaphore {
+            state: Mutex::new(State {
+                permits,
+                queue: VecDeque::new(),
+            }),
+        })
+    }
+
+    /// Acquires one permit in FIFO order.
+    pub fn acquire_owned(self: &Arc<Self>) -> Acquire {
+        Acquire {
+            sem: self.clone(),
+            waiter: None,
+        }
+    }
+
+    /// Currently available permits (observability).
+    pub fn available(&self) -> usize {
+        self.state.lock().unwrap().permits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{self, sleep, spawn, Mode};
+    use std::cell::Cell;
+    use std::rc::Rc;
+    use std::time::Duration;
+
+    #[test]
+    fn limits_concurrency() {
+        let max_seen = rt::block_on(
+            async {
+                let sem = Semaphore::new(2);
+                let active = Rc::new(Cell::new(0usize));
+                let peak = Rc::new(Cell::new(0usize));
+                let mut handles = Vec::new();
+                for _ in 0..8 {
+                    let sem = sem.clone();
+                    let active = active.clone();
+                    let peak = peak.clone();
+                    handles.push(spawn(async move {
+                        let _p = sem.acquire_owned().await;
+                        active.set(active.get() + 1);
+                        peak.set(peak.get().max(active.get()));
+                        sleep(Duration::from_millis(10)).await;
+                        active.set(active.get() - 1);
+                    }));
+                }
+                for h in handles {
+                    h.await;
+                }
+                peak.get()
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(max_seen, 2);
+    }
+
+    #[test]
+    fn permits_released_on_drop() {
+        rt::block_on(
+            async {
+                let sem = Semaphore::new(1);
+                {
+                    let _p = sem.acquire_owned().await;
+                    assert_eq!(sem.available(), 0);
+                }
+                assert_eq!(sem.available(), 1);
+            },
+            Mode::Virtual,
+        );
+    }
+
+    #[test]
+    fn cancelled_acquire_does_not_leak() {
+        rt::block_on(
+            async {
+                let sem = Semaphore::new(1);
+                let p = sem.acquire_owned().await;
+                let sem2 = sem.clone();
+                let h = spawn(async move {
+                    let _ = rt::timeout(Duration::from_millis(5), sem2.acquire_owned()).await;
+                });
+                sleep(Duration::from_millis(10)).await;
+                h.await;
+                drop(p);
+                assert_eq!(sem.available(), 1);
+            },
+            Mode::Virtual,
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! Timers and the simulation-timeline instant type.
+
+use crate::rt::executor::with_core;
+use std::future::Future;
+use std::pin::Pin;
+use std::task::{Context, Poll};
+use std::time::Duration;
+
+/// An instant on the executor's timeline (virtual or wall). Internally
+/// nanoseconds since executor start.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug, Default)]
+pub struct SimInstant(u128);
+
+impl SimInstant {
+    pub(crate) fn from_nanos(ns: u128) -> Self {
+        SimInstant(ns)
+    }
+
+    pub(crate) fn as_nanos(self) -> u128 {
+        self.0
+    }
+
+    /// Duration since an earlier instant (zero if `earlier` is later).
+    pub fn duration_since(self, earlier: SimInstant) -> Duration {
+        Duration::from_nanos(self.0.saturating_sub(earlier.0).min(u64::MAX as u128) as u64)
+    }
+
+    /// Seconds since the start of the timeline.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 * 1e-9
+    }
+}
+
+impl std::ops::Sub for SimInstant {
+    type Output = Duration;
+    fn sub(self, rhs: SimInstant) -> Duration {
+        self.duration_since(rhs)
+    }
+}
+
+impl std::ops::Add<Duration> for SimInstant {
+    type Output = SimInstant;
+    fn add(self, rhs: Duration) -> SimInstant {
+        SimInstant(self.0 + rhs.as_nanos())
+    }
+}
+
+/// Current time on the executor's timeline.
+pub fn now() -> SimInstant {
+    with_core(|core| core.now())
+}
+
+/// Future that completes at `deadline`.
+pub struct Sleep {
+    deadline: SimInstant,
+}
+
+impl Future for Sleep {
+    type Output = ();
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        with_core(|core| {
+            if core.now() >= self.deadline {
+                Poll::Ready(())
+            } else {
+                // (Re-)register; duplicate registrations only cause a
+                // harmless spurious wake.
+                core.register_timer(self.deadline, cx.waker().clone());
+                Poll::Pending
+            }
+        })
+    }
+}
+
+/// Sleeps for `d` on the executor timeline. Zero-duration sleeps complete
+/// immediately without yielding.
+pub fn sleep(d: Duration) -> Sleep {
+    let deadline = if d.is_zero() {
+        SimInstant::default() // already passed
+    } else {
+        now() + d
+    };
+    Sleep { deadline }
+}
+
+/// Error returned by [`timeout`] when the deadline fires first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Elapsed;
+
+impl std::fmt::Display for Elapsed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "deadline elapsed")
+    }
+}
+
+impl std::error::Error for Elapsed {}
+
+/// Future returned by [`timeout`].
+pub struct Timeout<F> {
+    fut: Pin<Box<F>>,
+    sleep: Sleep,
+}
+
+impl<F: Future> Future for Timeout<F> {
+    type Output = Result<F::Output, Elapsed>;
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        if let Poll::Ready(v) = self.fut.as_mut().poll(cx) {
+            return Poll::Ready(Ok(v));
+        }
+        match Pin::new(&mut self.sleep).poll(cx) {
+            Poll::Ready(()) => Poll::Ready(Err(Elapsed)),
+            Poll::Pending => Poll::Pending,
+        }
+    }
+}
+
+/// Runs `fut` with a deadline; the inner future is dropped if it fires.
+pub fn timeout<F: Future>(d: Duration, fut: F) -> Timeout<F> {
+    Timeout {
+        fut: Box::pin(fut),
+        sleep: sleep(d),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt::{self, Mode};
+
+    #[test]
+    fn instant_arithmetic() {
+        let a = SimInstant::from_nanos(1_000);
+        let b = a + Duration::from_nanos(500);
+        assert_eq!(b - a, Duration::from_nanos(500));
+        assert_eq!(a - b, Duration::ZERO); // saturating
+    }
+
+    #[test]
+    fn timeout_completes_in_time() {
+        let r = rt::block_on(
+            async {
+                timeout(Duration::from_secs(1), async {
+                    sleep(Duration::from_millis(10)).await;
+                    5
+                })
+                .await
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(r, Ok(5));
+    }
+
+    #[test]
+    fn timeout_fires() {
+        let r = rt::block_on(
+            async {
+                timeout(Duration::from_millis(10), async {
+                    sleep(Duration::from_secs(100)).await;
+                    5
+                })
+                .await
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(r, Err(Elapsed));
+    }
+
+    #[test]
+    fn sequential_sleeps_accumulate() {
+        let total = rt::block_on(
+            async {
+                let t0 = now();
+                sleep(Duration::from_millis(100)).await;
+                sleep(Duration::from_millis(200)).await;
+                now() - t0
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(total, Duration::from_millis(300));
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime bridge (real-compute mode).
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt`, HLO **text** — see DESIGN.md and
+//! /opt/xla-example/README.md for why text, not serialized protos), compiles
+//! them once on a PJRT CPU client, and executes them from the engine's hot
+//! path.
+//!
+//! The `xla` crate's client types are `Rc`-based (not `Send`), while the
+//! engine spawns executors onto a tokio runtime. The runtime therefore runs
+//! as an **actor on a dedicated OS thread** owning the client and the
+//! compiled-executable cache; the [`PjrtRuntime`] handle is Send + Sync and
+//! cheap to clone into every executor.
+
+pub mod pjrt;
+
+pub use pjrt::PjrtRuntime;

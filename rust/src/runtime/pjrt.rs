@@ -1,0 +1,211 @@
+//! The PJRT actor: one OS thread owning a `PjRtClient` and the compiled
+//! executable cache, serving execute requests over a channel.
+
+use crate::compute::Tensor;
+use crate::core::{EngineError, EngineResult};
+use crate::rt::sync::{mpsc, oneshot};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<Arc<Tensor>>,
+        reply: oneshot::Sender<EngineResult<Tensor>>,
+    },
+    /// Preload (compile) an artifact without executing it.
+    Warm {
+        artifact: String,
+        reply: oneshot::Sender<EngineResult<()>>,
+    },
+}
+
+/// Send + Sync handle to the PJRT actor thread.
+#[derive(Clone)]
+pub struct PjrtRuntime {
+    tx: mpsc::Sender<Request>,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PjrtRuntime")
+    }
+}
+
+impl PjrtRuntime {
+    /// Starts the actor thread with artifacts from `dir`
+    /// (`<dir>/<name>.hlo.txt`).
+    pub fn new(dir: impl Into<PathBuf>) -> EngineResult<Self> {
+        let dir = dir.into();
+        let (tx, rx) = mpsc::unbounded();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+        std::thread::Builder::new()
+            .name("pjrt-actor".into())
+            .spawn(move || actor_main(dir, rx, ready_tx))
+            .map_err(|e| EngineError::Runtime(format!("spawn pjrt thread: {e}")))?;
+        // Propagate client-construction errors synchronously.
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(PjrtRuntime { tx }),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(EngineError::Runtime("pjrt actor died at startup".into())),
+        }
+    }
+
+    /// Default artifacts directory: `$WUKONG_ARTIFACTS` or `./artifacts`.
+    pub fn artifacts_dir() -> PathBuf {
+        std::env::var("WUKONG_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Executes `artifact` over `inputs`, returning the output tensor.
+    /// Must be awaited inside an rt executor; the completion arrives from
+    /// the actor thread (registered as an external operation so an idle
+    /// virtual-time executor waits instead of declaring deadlock).
+    pub async fn execute(
+        &self,
+        artifact: &str,
+        inputs: Vec<Arc<Tensor>>,
+    ) -> EngineResult<Tensor> {
+        let (reply, rx) = oneshot::channel();
+        let _guard = crate::rt::ExternalGuard::register();
+        self.tx
+            .send(Request::Execute {
+                artifact: artifact.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| EngineError::Runtime("pjrt actor gone".into()))?;
+        rx.await
+            .map_err(|_| EngineError::Runtime("pjrt actor dropped reply".into()))?
+    }
+
+    /// Compiles `artifact` ahead of time (dedup'd by the cache).
+    pub async fn warm(&self, artifact: &str) -> EngineResult<()> {
+        let (reply, rx) = oneshot::channel();
+        let _guard = crate::rt::ExternalGuard::register();
+        self.tx
+            .send(Request::Warm {
+                artifact: artifact.to_string(),
+                reply,
+            })
+            .map_err(|_| EngineError::Runtime("pjrt actor gone".into()))?;
+        rx.await
+            .map_err(|_| EngineError::Runtime("pjrt actor dropped reply".into()))?
+    }
+
+    /// Blocking variant for non-async contexts (examples, tests).
+    pub fn execute_blocking(
+        &self,
+        artifact: &str,
+        inputs: Vec<Arc<Tensor>>,
+    ) -> EngineResult<Tensor> {
+        let (reply, rx) = oneshot::channel();
+        self.tx
+            .send(Request::Execute {
+                artifact: artifact.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| EngineError::Runtime("pjrt actor gone".into()))?;
+        crate::rt::block_on_simple(rx)
+            .map_err(|_| EngineError::Runtime("pjrt actor dropped reply".into()))?
+    }
+}
+
+fn actor_main(
+    dir: PathBuf,
+    mut rx: mpsc::Receiver<Request>,
+    ready: std::sync::mpsc::Sender<EngineResult<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(EngineError::Runtime(format!(
+                "PjRtClient::cpu failed: {e}"
+            ))));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Some(req) = rx.blocking_recv() {
+        match req {
+            Request::Execute {
+                artifact,
+                inputs,
+                reply,
+            } => {
+                let r = get_exe(&client, &mut cache, &dir, &artifact)
+                    .and_then(|exe| run(exe, &inputs));
+                let _ = reply.send(r);
+            }
+            Request::Warm { artifact, reply } => {
+                let r = get_exe(&client, &mut cache, &dir, &artifact).map(|_| ());
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn get_exe<'a>(
+    client: &xla::PjRtClient,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: &Path,
+    artifact: &str,
+) -> EngineResult<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(artifact) {
+        let path = dir.join(format!("{artifact}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| EngineError::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| EngineError::Runtime(format!("load {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| EngineError::Runtime(format!("compile {artifact}: {e}")))?;
+        cache.insert(artifact.to_string(), exe);
+    }
+    Ok(cache.get(artifact).unwrap())
+}
+
+fn run(exe: &xla::PjRtLoadedExecutable, inputs: &[Arc<Tensor>]) -> EngineResult<Tensor> {
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| tensor_to_literal(t))
+        .collect::<EngineResult<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| EngineError::Runtime(format!("execute: {e}")))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| EngineError::Runtime(format!("to_literal: {e}")))?;
+    // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+    let out = lit
+        .to_tuple1()
+        .map_err(|e| EngineError::Runtime(format!("to_tuple1: {e}")))?;
+    literal_to_tensor(&out)
+}
+
+fn tensor_to_literal(t: &Tensor) -> EngineResult<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| EngineError::Runtime(format!("reshape{:?}: {e}", t.shape)))
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> EngineResult<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| EngineError::Runtime(format!("shape: {e}")))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| EngineError::Runtime(format!("to_vec: {e}")))?;
+    Ok(Tensor::new(dims, data))
+}

@@ -1,0 +1,196 @@
+//! The static Schedule Generator (paper §IV-B): "A static schedule for
+//! leaf node L contains all of the task nodes that are reachable from L
+//! and all of the edges into and out of these nodes. ... The schedule for
+//! L is easily computed using a depth-first search (DFS) that starts at L."
+
+use crate::core::TaskId;
+use crate::dag::Dag;
+use crate::schedule::ops::{ScheduleOp, StaticSchedule};
+
+/// All static schedules of a DAG, indexable by leaf.
+#[derive(Clone, Debug)]
+pub struct ScheduleSet {
+    schedules: Vec<StaticSchedule>,
+    /// Map task-id -> index of the schedule whose leaf it is (dense; only
+    /// valid for leaves).
+    by_leaf: std::collections::HashMap<TaskId, usize>,
+}
+
+impl ScheduleSet {
+    pub fn len(&self) -> usize {
+        self.schedules.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.schedules.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &StaticSchedule> {
+        self.schedules.iter()
+    }
+
+    pub fn for_leaf(&self, leaf: TaskId) -> &StaticSchedule {
+        &self.schedules[self.by_leaf[&leaf]]
+    }
+
+    /// Total bytes shipped to the initial executors (reporting).
+    pub fn total_payload_bytes(&self) -> u64 {
+        self.schedules.iter().map(|s| s.payload_bytes).sum()
+    }
+}
+
+/// Generates one static schedule per DAG leaf.
+pub fn generate(dag: &Dag) -> ScheduleSet {
+    let leaves = dag.leaves();
+    let mut schedules = Vec::with_capacity(leaves.len());
+    let mut by_leaf = std::collections::HashMap::with_capacity(leaves.len());
+    for &leaf in &leaves {
+        by_leaf.insert(leaf, schedules.len());
+        schedules.push(schedule_for(dag, leaf));
+    }
+    ScheduleSet { schedules, by_leaf }
+}
+
+/// DFS from `leaf`, collecting reachable nodes in discovery order and
+/// emitting the paper's three op types.
+fn schedule_for(dag: &Dag, leaf: TaskId) -> StaticSchedule {
+    let mut visited = vec![false; dag.len()];
+    let mut nodes = Vec::new();
+    let mut stack = vec![leaf];
+    while let Some(t) = stack.pop() {
+        if visited[t.index()] {
+            continue;
+        }
+        visited[t.index()] = true;
+        nodes.push(t);
+        // Push children in reverse so the first out-edge is explored first
+        // (stable DFS order, matters only for reproducibility).
+        for &c in dag.children(t).iter().rev() {
+            if !visited[c.index()] {
+                stack.push(c);
+            }
+        }
+    }
+
+    let mut ops = Vec::with_capacity(nodes.len() * 2);
+    let mut payload_bytes = 0u64;
+    for &t in &nodes {
+        let indeg = dag.in_degree(t);
+        if indeg > 1 {
+            ops.push(ScheduleOp::FanIn {
+                task: t,
+                in_degree: indeg,
+            });
+        }
+        ops.push(ScheduleOp::Exec(t));
+        // Fan-out op after every task (trivial fan-outs included).
+        ops.push(ScheduleOp::FanOut {
+            task: t,
+            out: dag.children(t).to_vec(),
+        });
+        // Rough serialized size: task code + key strings for every edge.
+        payload_bytes += 256 + 32 * (indeg as u64 + dag.out_degree(t) as u64);
+    }
+
+    StaticSchedule {
+        leaf,
+        nodes,
+        ops,
+        payload_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+
+    /// The paper's Figure 6 example: two leaves T1, T2; T4 and T6 shared.
+    ///
+    /// ```text
+    ///        T6           (sink, fan-in of T4 & T5)
+    ///       /  \
+    ///     T4    T5
+    ///    /  \     \
+    ///  T3    \     |
+    ///   |     +-- T2      (T4 depends on T3 and T2)
+    ///  T1          |
+    /// ```
+    fn figure6() -> (Dag, TaskId, TaskId) {
+        let mut b = DagBuilder::new();
+        let t1 = b.add_task("T1", Payload::Noop, 8, &[]);
+        let t2 = b.add_task("T2", Payload::Noop, 8, &[]);
+        let t3 = b.add_task("T3", Payload::Noop, 8, &[t1]);
+        let t4 = b.add_task("T4", Payload::Noop, 8, &[t3, t2]);
+        let t5 = b.add_task("T5", Payload::Noop, 8, &[t2]);
+        let _t6 = b.add_task("T6", Payload::Noop, 8, &[t4, t5]);
+        (b.build().unwrap(), t1, t2)
+    }
+
+    #[test]
+    fn one_schedule_per_leaf() {
+        let (dag, _t1, _t2) = figure6();
+        let set = generate(&dag);
+        assert_eq!(set.len(), 2, "n leaves -> n schedules");
+    }
+
+    #[test]
+    fn schedule_is_reachable_set() {
+        let (dag, t1, t2) = figure6();
+        let set = generate(&dag);
+        let s1 = set.for_leaf(t1);
+        // From T1: T1, T3, T4, T6.
+        assert_eq!(s1.task_count(), 4);
+        assert!(s1.contains(TaskId(0)) && s1.contains(TaskId(2)));
+        assert!(s1.contains(TaskId(3)) && s1.contains(TaskId(5)));
+        assert!(!s1.contains(TaskId(1)) && !s1.contains(TaskId(4)));
+        // From T2: T2, T4, T5, T6.
+        let s2 = set.for_leaf(t2);
+        assert_eq!(s2.task_count(), 4);
+        assert!(!s2.contains(TaskId(0)) && !s2.contains(TaskId(2)));
+    }
+
+    #[test]
+    fn overlapping_tasks_appear_in_multiple_schedules() {
+        // Paper: "tasks T4 and T6 are both in Schedule 1 and Schedule 2".
+        let (dag, t1, t2) = figure6();
+        let set = generate(&dag);
+        let (s1, s2) = (set.for_leaf(t1), set.for_leaf(t2));
+        assert!(s1.contains(TaskId(3)) && s2.contains(TaskId(3))); // T4
+        assert!(s1.contains(TaskId(5)) && s2.contains(TaskId(5))); // T6
+    }
+
+    #[test]
+    fn union_of_schedules_covers_dag() {
+        let (dag, _, _) = figure6();
+        let set = generate(&dag);
+        let mut covered = vec![false; dag.len()];
+        for s in set.iter() {
+            for &t in &s.nodes {
+                covered[t.index()] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn fan_in_ops_emitted_for_shared_nodes() {
+        let (dag, t1, _) = figure6();
+        let set = generate(&dag);
+        // From T1 the path hits fan-ins at T4 and T6.
+        assert_eq!(set.for_leaf(t1).fan_in_count(), 2);
+    }
+
+    #[test]
+    fn trivial_fanout_materialized() {
+        // T1 -> T3 is a trivial fan-out (one out edge).
+        let (dag, t1, _) = figure6();
+        let set = generate(&dag);
+        let s = set.for_leaf(t1);
+        assert!(s.ops.iter().any(|op| matches!(
+            op,
+            ScheduleOp::FanOut { task: TaskId(0), out } if out.len() == 1
+        )));
+    }
+}

@@ -1,0 +1,13 @@
+//! Static scheduling (paper §IV-B).
+//!
+//! The Schedule Generator partitions the DAG into one static schedule per
+//! leaf node. A schedule contains every node reachable from its leaf, the
+//! edges into/out of those nodes, the task payload ("task code") and the
+//! KV keys of task inputs — everything an executor might need, so that it
+//! never has to fetch task code from the KV store at runtime.
+
+pub mod generator;
+pub mod ops;
+
+pub use generator::{generate, ScheduleSet};
+pub use ops::{ScheduleOp, StaticSchedule};

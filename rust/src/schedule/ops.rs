@@ -1,0 +1,93 @@
+//! Static-schedule operations.
+//!
+//! A static schedule is a linearization of the sub-graph reachable from
+//! one leaf, expressed as the paper's three operation types: task
+//! execution, fan-out, and fan-in. Trivial fan-outs (a single out-edge)
+//! are materialized explicitly, matching §IV-B: "when task T1 is followed
+//! immediately by task T2 ... we add a trivial fan-out operation".
+
+use crate::core::TaskId;
+
+/// One operation in a static schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScheduleOp {
+    /// Execute the task's payload.
+    Exec(TaskId),
+    /// Fan-out after `task` with the given out-edges. `out.len() == 1` is
+    /// the trivial fan-out (executor just continues); `out.len() > 1`
+    /// means: become one edge, invoke executors for the rest (or delegate
+    /// to the proxy above the fan-out threshold). `out.is_empty()` marks a
+    /// sink.
+    FanOut { task: TaskId, out: Vec<TaskId> },
+    /// Fan-in before `task` with `in_degree` input dependencies; resolved
+    /// dynamically via the KV-store dependency counter.
+    FanIn { task: TaskId, in_degree: usize },
+}
+
+/// The static schedule assigned to one leaf's Task Executor.
+#[derive(Clone, Debug)]
+pub struct StaticSchedule {
+    /// The leaf this schedule starts from.
+    pub leaf: TaskId,
+    /// Every node reachable from `leaf`, in DFS discovery order.
+    pub nodes: Vec<TaskId>,
+    /// Linearized operations (Exec/FanIn/FanOut per node in `nodes` order).
+    pub ops: Vec<ScheduleOp>,
+    /// Approximate serialized size of the schedule (bytes) — what the
+    /// scheduler ships to the Lambda at invocation time.
+    pub payload_bytes: u64,
+}
+
+impl StaticSchedule {
+    /// Number of task-execution operations.
+    pub fn task_count(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, ScheduleOp::Exec(_)))
+            .count()
+    }
+
+    /// True if `t` is contained in this schedule.
+    pub fn contains(&self, t: TaskId) -> bool {
+        self.nodes.contains(&t)
+    }
+
+    /// Count of fan-in operations (potential scheduling conflicts with
+    /// other executors' overlapping schedules).
+    pub fn fan_in_count(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, ScheduleOp::FanIn { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_helpers() {
+        let s = StaticSchedule {
+            leaf: TaskId(0),
+            nodes: vec![TaskId(0), TaskId(1)],
+            ops: vec![
+                ScheduleOp::Exec(TaskId(0)),
+                ScheduleOp::FanOut {
+                    task: TaskId(0),
+                    out: vec![TaskId(1)],
+                },
+                ScheduleOp::FanIn {
+                    task: TaskId(1),
+                    in_degree: 2,
+                },
+                ScheduleOp::Exec(TaskId(1)),
+            ],
+            payload_bytes: 128,
+        };
+        assert_eq!(s.task_count(), 2);
+        assert_eq!(s.fan_in_count(), 1);
+        assert!(s.contains(TaskId(1)));
+        assert!(!s.contains(TaskId(7)));
+    }
+}

@@ -1,0 +1,50 @@
+//! Storage Manager façade (paper §IV-D, Fig. 5).
+//!
+//! At the start of workflow processing the Storage Manager receives the
+//! workflow DAG and the static schedules from the Scheduler; it then hosts
+//! the KV Store Proxy (large fan-out invocations), and its Subscriber
+//! relays final results to the Scheduler/Client.
+
+use crate::compute::DataObj;
+use crate::core::{EngineResult, ObjectKey, TaskId};
+use crate::executor::ctx::WukongCtx;
+use crate::kvstore::Subscription;
+use crate::storage::proxy::spawn_proxy;
+use std::sync::Arc;
+use crate::rt::JoinHandle;
+
+/// The running storage-manager services of one job.
+pub struct StorageManager {
+    ctx: Arc<WukongCtx>,
+    proxy: JoinHandle<()>,
+}
+
+impl StorageManager {
+    /// Hands the DAG + static schedules (inside `ctx`) to the storage
+    /// manager and starts its services.
+    pub fn start(ctx: Arc<WukongCtx>) -> Self {
+        let proxy = spawn_proxy(Arc::clone(&ctx));
+        StorageManager { ctx, proxy }
+    }
+
+    /// Subscribes to the final-result channel (the Subscriber process that
+    /// relays results to the client).
+    pub fn subscribe_finals(&self) -> Subscription {
+        self.ctx
+            .kv
+            .subscribe(crate::executor::ctx::FINAL_CHANNEL)
+    }
+
+    /// Fetches a sink task's final output on behalf of the client.
+    pub async fn fetch_final(&self, task: TaskId) -> EngineResult<DataObj> {
+        self.ctx
+            .kv
+            .get(&ObjectKey::output(task), self.ctx.cfg.net.worker_bandwidth_bps)
+            .await
+    }
+
+    /// Stops the proxy (job complete).
+    pub fn shutdown(self) {
+        self.proxy.abort();
+    }
+}

@@ -1,0 +1,10 @@
+//! The Storage Manager (paper §IV-D): performs storage operations on
+//! behalf of Task Executors and the Scheduler, relays final results to the
+//! client's subscriber, and — through its Proxy and Fan-out Invokers —
+//! parallelizes Task Executor invocations for large fan-outs.
+
+pub mod manager;
+pub mod proxy;
+
+pub use manager::StorageManager;
+pub use proxy::spawn_proxy;

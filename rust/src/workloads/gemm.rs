@@ -1,0 +1,138 @@
+//! General Matrix Multiplication (GEMM) — Fig. 8.
+//!
+//! Blocked dense C = A·B exactly as Dask's `da.matmul` decomposes it:
+//! generate the input blocks, one multiply task per (i, j, k) block
+//! triple, and a pairwise-sum tree over k for every output block. The
+//! paper evaluates 10k×10k and 25k×25k (and shows both Dask setups OOM at
+//! 50k×50k).
+
+use crate::compute::{CostModel, Payload};
+use crate::core::SimConfig;
+use crate::dag::{Dag, DagBuilder};
+
+/// Default block edge used by the paper-scale runs (Dask "auto" chunking
+/// picks ~2500 for these shapes).
+pub const DEFAULT_BLOCK: usize = 2500;
+
+/// Builds the blocked GEMM DAG for an n×n · n×n multiply with `block`-edge
+/// square blocks (n must be a multiple of block).
+pub fn gemm_blocked(n: usize, block: usize, cfg: &SimConfig) -> Dag {
+    assert!(n % block == 0 && block > 0, "n must be a multiple of block");
+    let p = n / block;
+    let cost = CostModel::new(cfg.compute.clone());
+    let block_bytes = cost.matrix_bytes(block as u64, block as u64);
+    let gen_flops = 10.0 * CostModel::elementwise_flops((block * block) as u64);
+    let mul_flops = CostModel::gemm_flops(block as u64, block as u64, block as u64);
+    let add_flops = CostModel::elementwise_flops((block * block) as u64);
+
+    let mut b = DagBuilder::new();
+    // Input-block generation leaves (Dask materializes these as tasks too).
+    let a_blocks: Vec<Vec<_>> = (0..p)
+        .map(|i| {
+            (0..p)
+                .map(|k| {
+                    b.add_task(
+                        format!("A[{i},{k}]"),
+                        Payload::Model { flops: gen_flops },
+                        block_bytes,
+                        &[],
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let b_blocks: Vec<Vec<_>> = (0..p)
+        .map(|k| {
+            (0..p)
+                .map(|j| {
+                    b.add_task(
+                        format!("B[{k},{j}]"),
+                        Payload::Model { flops: gen_flops },
+                        block_bytes,
+                        &[],
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    // C[i,j] = sum_k A[i,k] · B[k,j]
+    for i in 0..p {
+        for j in 0..p {
+            let partials: Vec<_> = (0..p)
+                .map(|k| {
+                    b.add_task(
+                        format!("mul[{i},{j},{k}]"),
+                        Payload::Model { flops: mul_flops },
+                        block_bytes,
+                        &[a_blocks[i][k], b_blocks[k][j]],
+                    )
+                })
+                .collect();
+            // One wide sum over all k partials — exactly `da.matmul`'s
+            // blockwise-then-sum graph. All p partial blocks of a C block
+            // must coexist in memory, which is the mechanism behind the
+            // paper's Dask OOMs at 50k (Fig. 8).
+            if p == 1 {
+                continue; // the single partial IS the C block
+            }
+            b.add_task(
+                format!("sum[{i},{j}]"),
+                Payload::Model {
+                    flops: (p - 1) as f64 * add_flops,
+                },
+                block_bytes,
+                &partials,
+            );
+        }
+    }
+    b.build().expect("GEMM DAG")
+}
+
+/// Paper-parameter GEMM: n×n with the default block size.
+pub fn gemm(n: usize, cfg: &SimConfig) -> Dag {
+    // Keep the block grid at or below 10x10 for the huge sizes, like
+    // Dask's auto-chunking which grows chunks with the array.
+    let block = if n % DEFAULT_BLOCK == 0 && n / DEFAULT_BLOCK <= 10 {
+        DEFAULT_BLOCK
+    } else {
+        n / 10
+    };
+    gemm_blocked(n, block, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_grid_shape() {
+        let cfg = SimConfig::test();
+        let dag = gemm_blocked(4 * 100, 100, &cfg); // p = 4
+        // leaves: 2 * 16 gen tasks; muls: 64; one wide sum per C block.
+        assert_eq!(dag.leaves().len(), 32);
+        assert_eq!(dag.len(), 32 + 64 + 16);
+        // sinks: one reduced C block per (i,j).
+        assert_eq!(dag.sinks().len(), 16);
+    }
+
+    #[test]
+    fn paper_sizes_buildable() {
+        let cfg = SimConfig::test();
+        let d10k = gemm(10_000, &cfg);
+        assert_eq!(d10k.leaves().len(), 2 * 16);
+        let d25k = gemm(25_000, &cfg);
+        assert_eq!(d25k.leaves().len(), 2 * 100);
+        let d50k = gemm(50_000, &cfg);
+        assert_eq!(d50k.leaves().len(), 2 * 100);
+    }
+
+    #[test]
+    fn total_flops_scale_as_n_cubed() {
+        let cfg = SimConfig::test();
+        let f10 = gemm(10_000, &cfg).total_flops();
+        let f25 = gemm(25_000, &cfg).total_flops();
+        let ratio = f25 / f10;
+        assert!((ratio / 15.6).abs() > 0.5 && ratio > 10.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,85 @@
+//! The paper's evaluation workloads (§V), as DAG builders.
+//!
+//! Each builder produces the same task-graph *shape* the Python/Dask
+//! implementation would generate, with calibrated cost-model payloads at
+//! paper scale (benchmarks) — and, for the real-compute variants in
+//! [`real`], actual PJRT payloads at block scale.
+
+pub mod gemm;
+pub mod real;
+pub mod svc;
+pub mod svd;
+pub mod tree_reduction;
+
+pub use gemm::{gemm, gemm_blocked};
+pub use svc::{svc, svc_chunked};
+pub use svd::{svd1, svd1_blocked, svd2, svd2_blocked};
+pub use tree_reduction::tree_reduction;
+
+use crate::compute::Payload;
+use crate::core::TaskId;
+use crate::dag::DagBuilder;
+
+/// Builds a pairwise (binary-tree) reduction over `items`, returning the
+/// root. `make` is called with (level, index_within_level) and returns the
+/// (name, payload, output_bytes) of each combine node.
+pub(crate) fn pairwise_reduce(
+    b: &mut DagBuilder,
+    mut items: Vec<TaskId>,
+    mut make: impl FnMut(usize, usize) -> (String, Payload, u64),
+) -> TaskId {
+    assert!(!items.is_empty());
+    let mut level = 0;
+    while items.len() > 1 {
+        level += 1;
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        for (i, pair) in items.chunks(2).enumerate() {
+            if pair.len() == 2 {
+                let (name, payload, bytes) = make(level, i);
+                next.push(b.add_task(name, payload, bytes, pair));
+            } else {
+                // Odd element passes through to the next level.
+                next.push(pair[0]);
+            }
+        }
+        items = next;
+    }
+    items[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+
+    #[test]
+    fn pairwise_reduce_shape() {
+        let mut b = DagBuilder::new();
+        let leaves: Vec<_> = (0..8)
+            .map(|i| b.add_task(format!("l{i}"), Payload::Noop, 8, &[]))
+            .collect();
+        let root = pairwise_reduce(&mut b, leaves, |lvl, i| {
+            (format!("c{lvl}.{i}"), Payload::Noop, 8)
+        });
+        let dag = b.build().unwrap();
+        // 8 leaves + 4 + 2 + 1 combines.
+        assert_eq!(dag.len(), 15);
+        assert_eq!(dag.sinks(), vec![root]);
+        assert_eq!(dag.critical_path_len(), 4);
+    }
+
+    #[test]
+    fn pairwise_reduce_odd_count() {
+        let mut b = DagBuilder::new();
+        let leaves: Vec<_> = (0..5)
+            .map(|i| b.add_task(format!("l{i}"), Payload::Noop, 8, &[]))
+            .collect();
+        let _root = pairwise_reduce(&mut b, leaves, |lvl, i| {
+            (format!("c{lvl}.{i}"), Payload::Noop, 8)
+        });
+        let dag = b.build().unwrap();
+        // 5 leaves -> 2 combines (+1 passthrough) -> 1 combine (+pass) -> 1
+        assert_eq!(dag.sinks().len(), 1);
+        assert_eq!(dag.len(), 5 + 2 + 1 + 1);
+    }
+}

@@ -1,0 +1,185 @@
+//! Real-compute workload variants: the same DAG shapes, but every payload
+//! is an AOT-compiled JAX/Pallas kernel executed through the PJRT runtime
+//! (`artifacts/*.hlo.txt`). Used by the end-to-end examples and the
+//! integration tests that prove all three layers compose.
+//!
+//! Artifact names (see `python/compile/aot.py`):
+//! * `add128`      — elementwise f32[128] + f32[128] (Pallas kernel)
+//! * `sum128`      — reduce-sum f32[128] -> f32[] (L2 jnp)
+//! * `matmul128`   — f32[128,128] @ f32[128,128] (Pallas tiled kernel)
+//! * `addmat128`   — elementwise f32[128,128] add (Pallas kernel)
+
+use crate::compute::{Payload, Tensor};
+use crate::core::{SplitMix64, TaskId};
+use crate::dag::{Dag, DagBuilder};
+use crate::workloads::pairwise_reduce;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Edge of the fixed block shape all artifacts are compiled for.
+pub const BLOCK: usize = 128;
+
+/// Builds a real-compute tree reduction over `chunks` chunks of 128
+/// floats. Returns the DAG and the expected scalar sum.
+pub fn tr_real(chunks: usize, seed: u64) -> (Dag, f32) {
+    assert!(chunks >= 2 && chunks.is_power_of_two());
+    let mut rng = SplitMix64::new(seed);
+    let mut b = DagBuilder::new();
+    let mut expected = 0.0f32;
+    let leaves: Vec<_> = (0..chunks)
+        .map(|i| {
+            let data = rng.fill_f32(BLOCK);
+            expected += data.iter().sum::<f32>();
+            let t = Tensor::vec1(data);
+            b.add_task(
+                format!("chunk[{i}]"),
+                Payload::Const(Arc::new(t)),
+                (BLOCK * 4) as u64,
+                &[],
+            )
+        })
+        .collect();
+    let root = pairwise_reduce(&mut b, leaves, |lvl, i| {
+        (
+            format!("add[{lvl}.{i}]"),
+            Payload::Pjrt {
+                artifact: "add128".into(),
+            },
+            (BLOCK * 4) as u64,
+        )
+    });
+    b.add_task(
+        "sum",
+        Payload::Pjrt {
+            artifact: "sum128".into(),
+        },
+        4,
+        &[root],
+    );
+    (b.build().expect("TR real DAG"), expected)
+}
+
+/// Builds a real-compute blocked GEMM: C = A·B with n = `grid`·128.
+/// Returns the DAG, a map sink-task -> (i, j) output block coordinate, and
+/// the full expected C (computed with the naive rust reference matmul).
+pub fn gemm_real(grid: usize, seed: u64) -> (Dag, HashMap<TaskId, (usize, usize)>, Tensor) {
+    assert!(grid >= 1);
+    let n = grid * BLOCK;
+    let mut rng = SplitMix64::new(seed);
+    let a = Tensor::new(vec![n, n], rng.fill_f32(n * n));
+    let bm = Tensor::new(vec![n, n], rng.fill_f32(n * n));
+    let expected = a.matmul(&bm);
+
+    let mut b = DagBuilder::new();
+    let block_bytes = (BLOCK * BLOCK * 4) as u64;
+    let a_blocks: Vec<Vec<TaskId>> = (0..grid)
+        .map(|i| {
+            (0..grid)
+                .map(|k| {
+                    b.add_task(
+                        format!("A[{i},{k}]"),
+                        Payload::Const(Arc::new(extract_block(&a, i, k))),
+                        block_bytes,
+                        &[],
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let b_blocks: Vec<Vec<TaskId>> = (0..grid)
+        .map(|k| {
+            (0..grid)
+                .map(|j| {
+                    b.add_task(
+                        format!("B[{k},{j}]"),
+                        Payload::Const(Arc::new(extract_block(&bm, k, j))),
+                        block_bytes,
+                        &[],
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut sinks = HashMap::new();
+    for i in 0..grid {
+        for j in 0..grid {
+            let partials: Vec<_> = (0..grid)
+                .map(|k| {
+                    b.add_task(
+                        format!("mul[{i},{j},{k}]"),
+                        Payload::Pjrt {
+                            artifact: "matmul128".into(),
+                        },
+                        block_bytes,
+                        &[a_blocks[i][k], b_blocks[k][j]],
+                    )
+                })
+                .collect();
+            let c = pairwise_reduce(&mut b, partials, |lvl, x| {
+                (
+                    format!("sum[{i},{j}]({lvl}.{x})"),
+                    Payload::Pjrt {
+                        artifact: "addmat128".into(),
+                    },
+                    block_bytes,
+                )
+            });
+            sinks.insert(c, (i, j));
+        }
+    }
+    (b.build().expect("GEMM real DAG"), sinks, expected)
+}
+
+/// Extracts 128×128 block (bi, bj) from a row-major square tensor.
+pub fn extract_block(m: &Tensor, bi: usize, bj: usize) -> Tensor {
+    let n = m.shape[1];
+    let mut out = Vec::with_capacity(BLOCK * BLOCK);
+    for r in 0..BLOCK {
+        let row = bi * BLOCK + r;
+        let start = row * n + bj * BLOCK;
+        out.extend_from_slice(&m.data[start..start + BLOCK]);
+    }
+    Tensor::new(vec![BLOCK, BLOCK], out)
+}
+
+/// Checks a computed block of C against the reference full matrix.
+pub fn check_block(expected: &Tensor, got: &Tensor, bi: usize, bj: usize, tol: f32) -> bool {
+    extract_block(expected, bi, bj).allclose(got, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tr_real_shape_and_expected() {
+        let (dag, expected) = tr_real(8, 42);
+        assert_eq!(dag.leaves().len(), 8);
+        assert_eq!(dag.len(), 8 + 7 + 1);
+        assert!(expected.is_finite());
+        // Leaves are Const, inner nodes Pjrt.
+        assert!(matches!(dag.task(TaskId(0)).payload, Payload::Const(_)));
+    }
+
+    #[test]
+    fn gemm_real_block_extraction() {
+        let (dag, sinks, expected) = gemm_real(2, 7);
+        assert_eq!(expected.shape, vec![256, 256]);
+        assert_eq!(sinks.len(), 4);
+        assert_eq!(dag.leaves().len(), 8);
+        // Extracted block matches manual slice.
+        let blk = extract_block(&expected, 1, 0);
+        assert_eq!(blk.shape, vec![128, 128]);
+        assert_eq!(blk.data[0], expected.data[128 * 256]);
+    }
+
+    #[test]
+    fn check_block_detects_mismatch() {
+        let m = Tensor::new(vec![128, 128], vec![1.0; 128 * 128]);
+        let good = m.clone();
+        assert!(check_block(&m, &good, 0, 0, 1e-6));
+        let bad = Tensor::new(vec![128, 128], vec![2.0; 128 * 128]);
+        assert!(!check_block(&m, &bad, 0, 0, 1e-6));
+    }
+}

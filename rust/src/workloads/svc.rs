@@ -1,0 +1,132 @@
+//! Support Vector Classification (SVC) — Fig. 11.
+//!
+//! Mirrors the Dask-ML benchmark the paper used [5]: the sample set is
+//! split into chunks, a sub-estimator is fitted per chunk (kernel-matrix
+//! construction makes this quadratic in the chunk size), the sub-models
+//! are combined in a reduction tree, and a scoring pass broadcasts the
+//! combined model back over the chunks and reduces the accuracies.
+
+use crate::compute::{CostModel, Payload};
+use crate::core::SimConfig;
+use crate::dag::{Dag, DagBuilder};
+use crate::workloads::pairwise_reduce;
+
+/// Feature count of the synthetic classification dataset.
+pub const SVC_FEATURES: usize = 20;
+/// Samples per chunk (Dask-ML partitions the sample axis).
+pub const SVC_CHUNK: usize = 25_000;
+
+/// Builds the SVC DAG for `samples` samples (Fig. 11 sizes: 100k, 200k,
+/// 400k, 800k).
+pub fn svc(samples: usize, cfg: &SimConfig) -> Dag {
+    svc_chunked(samples, SVC_CHUNK, SVC_FEATURES, cfg)
+}
+
+/// SVC with explicit chunking.
+pub fn svc_chunked(samples: usize, chunk: usize, features: usize, cfg: &SimConfig) -> Dag {
+    assert!(samples >= chunk, "need at least one chunk");
+    let nb = samples / chunk;
+    let cost = CostModel::new(cfg.compute.clone());
+    let (s, f) = (chunk as u64, features as u64);
+    let chunk_bytes = cost.matrix_bytes(s, f + 1); // X + y
+    let model_bytes = cost.matrix_bytes(f + 1, 8); // coefficients etc.
+
+    let mut b = DagBuilder::new();
+    // Chunk-generation leaves.
+    let chunks: Vec<_> = (0..nb)
+        .map(|i| {
+            b.add_task(
+                format!("data[{i}]"),
+                Payload::Model {
+                    flops: 10.0 * CostModel::elementwise_flops(s * f),
+                },
+                chunk_bytes,
+                &[],
+            )
+        })
+        .collect();
+    // Fit one sub-estimator per chunk (quadratic kernel-matrix cost).
+    let fits: Vec<_> = chunks
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| {
+            b.add_task(
+                format!("fit[{i}]"),
+                Payload::Model {
+                    flops: CostModel::svc_fit_flops(s, f),
+                },
+                model_bytes,
+                &[c],
+            )
+        })
+        .collect();
+    // Combine sub-models.
+    let combined = pairwise_reduce(&mut b, fits, |lvl, i| {
+        (
+            format!("combine[{lvl}.{i}]"),
+            Payload::Model {
+                flops: CostModel::elementwise_flops(f * 8),
+            },
+            model_bytes,
+        )
+    });
+    // Scoring pass: broadcast the combined model over the chunks...
+    let scores: Vec<_> = chunks
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| {
+            b.add_task(
+                format!("score[{i}]"),
+                Payload::Model {
+                    // prediction: one kernel evaluation pass per sample
+                    flops: CostModel::gemm_flops(s, f, 8),
+                },
+                8,
+                &[combined, c],
+            )
+        })
+        .collect();
+    // ...and reduce the partial accuracies.
+    pairwise_reduce(&mut b, scores, |lvl, i| {
+        (
+            format!("acc[{lvl}.{i}]"),
+            Payload::Model { flops: 8.0 },
+            8,
+        )
+    });
+    b.build().expect("SVC DAG")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_100k() {
+        let cfg = SimConfig::test();
+        let dag = svc(100_000, &cfg); // 4 chunks
+        // 4 data + 4 fit + 3 combine + 4 score + 3 acc.
+        assert_eq!(dag.len(), 18);
+        assert_eq!(dag.leaves().len(), 4);
+        assert_eq!(dag.sinks().len(), 1);
+    }
+
+    #[test]
+    fn fit_dominates_cost() {
+        let cfg = SimConfig::test();
+        let dag = svc(200_000, &cfg);
+        let fit_flops: f64 = dag
+            .task_ids()
+            .filter(|&t| dag.task(t).name.starts_with("fit"))
+            .map(|t| dag.task(t).payload.flops())
+            .sum();
+        assert!(fit_flops / dag.total_flops() > 0.9);
+    }
+
+    #[test]
+    fn chunk_count_scales() {
+        let cfg = SimConfig::test();
+        assert_eq!(svc(100_000, &cfg).leaves().len(), 4);
+        assert_eq!(svc(800_000, &cfg).leaves().len(), 32);
+    }
+}

@@ -1,0 +1,356 @@
+//! Singular Value Decomposition workloads — Figs. 9, 10, 13.
+//!
+//! * **SVD1**: SVD of a tall-and-skinny matrix via TSQR (the algorithm
+//!   Dask uses for `da.linalg.svd` on tall matrices): blockwise QR, a
+//!   binary reduction tree over the R factors, a small SVD at the root,
+//!   and a broadcast fan-out to form the U blocks.
+//! * **SVD2**: rank-5 SVD of a general n×n matrix with the randomized
+//!   approximation algorithm of Halko, Martinsson & Tropp [18]:
+//!   Y = A·Ω → TSQR(Y) → B = Qᵀ·A → SVD(B). The blocked sketch and
+//!   projection phases produce the large intermediate objects whose KV
+//!   transfers dominate the paper's Fig. 13 breakdown.
+
+use crate::compute::{CostModel, Payload};
+use crate::core::{SimConfig, TaskId};
+use crate::dag::{Dag, DagBuilder};
+use crate::workloads::pairwise_reduce;
+
+/// Column count of the paper's tall-and-skinny matrices.
+pub const SVD1_COLS: usize = 100;
+/// Rows per block for SVD1 (Dask auto-chunks tall matrices by rows
+/// into ~4 MB blocks).
+pub const SVD1_BLOCK_ROWS: usize = 5_000;
+/// Sketch width for the rank-5 randomized SVD (rank 5 + oversampling).
+pub const SVD2_SKETCH: usize = 10;
+
+/// SVD of a tall-and-skinny `rows`×100 matrix (Fig. 9 sizes: 200k, 400k,
+/// 800k, 1000k rows).
+pub fn svd1(rows: usize, cfg: &SimConfig) -> Dag {
+    svd1_blocked(rows, SVD1_COLS, SVD1_BLOCK_ROWS, cfg)
+}
+
+/// TSQR-based SVD with explicit blocking.
+pub fn svd1_blocked(rows: usize, cols: usize, block_rows: usize, cfg: &SimConfig) -> Dag {
+    assert!(rows % block_rows == 0, "rows must be a multiple of block");
+    let nb = rows / block_rows;
+    assert!(nb >= 1);
+    let cost = CostModel::new(cfg.compute.clone());
+    let (r, k) = (block_rows as u64, cols as u64);
+    let block_bytes = cost.matrix_bytes(r, k);
+    let r_bytes = cost.matrix_bytes(k, k);
+
+    let mut b = DagBuilder::new();
+    // Generate the row blocks.
+    let blocks: Vec<_> = (0..nb)
+        .map(|i| {
+            b.add_task(
+                format!("X[{i}]"),
+                Payload::Model {
+                    flops: 10.0 * CostModel::elementwise_flops(r * k),
+                },
+                block_bytes,
+                &[],
+            )
+        })
+        .collect();
+    // Blockwise QR: each emits its Q block (kept for the U-formation
+    // pass) and — via a separate graph key, exactly like Dask's tsqr —
+    // its small R factor that feeds the reduction tree.
+    let qr: Vec<_> = blocks
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            b.add_task(
+                format!("qr[{i}]"),
+                Payload::Model {
+                    flops: CostModel::qr_flops(r, k),
+                },
+                block_bytes, // the stored Q block
+                &[x],
+            )
+        })
+        .collect();
+    let r_factors: Vec<_> = qr
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| {
+            b.add_task(
+                format!("R[{i}]"),
+                Payload::Model {
+                    flops: CostModel::elementwise_flops(k * k),
+                },
+                r_bytes,
+                &[q],
+            )
+        })
+        .collect();
+    // Binary reduction over R factors: stack two k×k R's, QR the 2k×k.
+    let root_r = pairwise_reduce(&mut b, r_factors, |lvl, i| {
+        (
+            format!("rtree[{lvl}.{i}]"),
+            Payload::Model {
+                flops: CostModel::qr_flops(2 * k, k),
+            },
+            r_bytes,
+        )
+    });
+    // Small SVD of the root R factor.
+    let small_svd = b.add_task(
+        "svd(R)",
+        Payload::Model {
+            flops: CostModel::svd_flops(k, k),
+        },
+        r_bytes,
+        &[root_r],
+    );
+    // Broadcast fan-out: form each U block = Q_i · U_small. This is the
+    // large fan-out that WUKONG delegates to the storage-manager proxy.
+    for (i, &q) in qr.iter().enumerate() {
+        b.add_task(
+            format!("U[{i}]"),
+            Payload::Model {
+                flops: CostModel::gemm_flops(r, k, k),
+            },
+            block_bytes,
+            &[small_svd, q],
+        );
+    }
+    b.build().expect("SVD1 DAG")
+}
+
+/// Block-grid width used for each paper size of SVD2 — chosen to mirror
+/// the paper's input-partitioning strategy, which used *fewer* blocks for
+/// 50k than for 25k ("The 50k×50k workload used less Lambdas than the
+/// 25k×25k workload due to the strategy used to partition the initial
+/// input data").
+pub fn svd2_grid(n: usize) -> usize {
+    match n {
+        n if n <= 10_000 => 4,
+        n if n <= 25_000 => 10,
+        n if n <= 50_000 => 7,
+        _ => 14,
+    }
+}
+
+/// Rank-5 randomized SVD of an n×n matrix (Fig. 10 sizes: 25k, 50k, 100k).
+pub fn svd2(n: usize, cfg: &SimConfig) -> Dag {
+    let nb = svd2_grid(n);
+    // Round n down to a multiple of the grid (negligible at paper scale).
+    svd2_blocked(n - (n % nb), nb, cfg)
+}
+
+/// Randomized SVD with an explicit nb×nb block grid over A.
+pub fn svd2_blocked(n: usize, nb: usize, cfg: &SimConfig) -> Dag {
+    assert!(nb >= 1 && n % nb == 0, "n must divide into nb blocks");
+    let bsz = (n / nb) as u64; // block edge
+    let l = SVD2_SKETCH as u64;
+    let cost = CostModel::new(cfg.compute.clone());
+    let a_bytes = cost.matrix_bytes(bsz, bsz);
+    let y_bytes = cost.matrix_bytes(bsz, l);
+    let bt_bytes = cost.matrix_bytes(l, bsz);
+    let small = cost.matrix_bytes(l, l);
+
+    let mut b = DagBuilder::new();
+    // A blocks (nb x nb) and Omega row-blocks (nb).
+    let a: Vec<Vec<TaskId>> = (0..nb)
+        .map(|i| {
+            (0..nb)
+                .map(|j| {
+                    b.add_task(
+                        format!("A[{i},{j}]"),
+                        Payload::Model {
+                            flops: 10.0 * CostModel::elementwise_flops(bsz * bsz),
+                        },
+                        a_bytes,
+                        &[],
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let omega: Vec<TaskId> = (0..nb)
+        .map(|kb| {
+            b.add_task(
+                format!("Omega[{kb}]"),
+                Payload::Model {
+                    flops: 10.0 * CostModel::elementwise_flops(bsz * l),
+                },
+                y_bytes,
+                &[],
+            )
+        })
+        .collect();
+
+    // Sketch: Y_i = sum_k A[i,k] · Omega[k].
+    let y: Vec<TaskId> = (0..nb)
+        .map(|i| {
+            let partials: Vec<_> = (0..nb)
+                .map(|kb| {
+                    b.add_task(
+                        format!("Ymul[{i},{kb}]"),
+                        Payload::Model {
+                            flops: CostModel::gemm_flops(bsz, bsz, l),
+                        },
+                        y_bytes,
+                        &[a[i][kb], omega[kb]],
+                    )
+                })
+                .collect();
+            pairwise_reduce(&mut b, partials, |lvl, x| {
+                (
+                    format!("Yadd[{i}]({lvl}.{x})"),
+                    Payload::Model {
+                        flops: CostModel::elementwise_flops(bsz * l),
+                    },
+                    y_bytes,
+                )
+            })
+        })
+        .collect();
+
+    // TSQR over the Y row-blocks -> Q blocks + separate small R keys.
+    let qr: Vec<TaskId> = y
+        .iter()
+        .enumerate()
+        .map(|(i, &yi)| {
+            b.add_task(
+                format!("qr[{i}]"),
+                Payload::Model {
+                    flops: CostModel::qr_flops(bsz, l),
+                },
+                y_bytes,
+                &[yi],
+            )
+        })
+        .collect();
+    let r_factors: Vec<TaskId> = qr
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| {
+            b.add_task(
+                format!("R[{i}]"),
+                Payload::Model {
+                    flops: CostModel::elementwise_flops(l * l),
+                },
+                small,
+                &[q],
+            )
+        })
+        .collect();
+    let root_r = pairwise_reduce(&mut b, r_factors, |lvl, i| {
+        (
+            format!("rtree[{lvl}.{i}]"),
+            Payload::Model {
+                flops: CostModel::qr_flops(2 * l, l),
+            },
+            small,
+        )
+    });
+    let q: Vec<TaskId> = qr
+        .iter()
+        .enumerate()
+        .map(|(i, &qi)| {
+            b.add_task(
+                format!("Q[{i}]"),
+                Payload::Model {
+                    flops: CostModel::gemm_flops(bsz, l, l),
+                },
+                y_bytes,
+                &[root_r, qi],
+            )
+        })
+        .collect();
+
+    // Projection: B_j = sum_i Q_i^T · A[i,j]  (l × bsz pieces).
+    let b_cols: Vec<TaskId> = (0..nb)
+        .map(|j| {
+            let partials: Vec<_> = (0..nb)
+                .map(|i| {
+                    b.add_task(
+                        format!("Bmul[{i},{j}]"),
+                        Payload::Model {
+                            flops: CostModel::gemm_flops(l, bsz, bsz),
+                        },
+                        bt_bytes,
+                        &[q[i], a[i][j]],
+                    )
+                })
+                .collect();
+            pairwise_reduce(&mut b, partials, |lvl, x| {
+                (
+                    format!("Badd[{j}]({lvl}.{x})"),
+                    Payload::Model {
+                        flops: CostModel::elementwise_flops(l * bsz),
+                    },
+                    bt_bytes,
+                )
+            })
+        })
+        .collect();
+
+    // Final small SVD over the assembled l×n B (fan-in of all B columns).
+    b.add_task(
+        "svd(B)",
+        Payload::Model {
+            flops: CostModel::svd_flops(n as u64, l),
+        },
+        small,
+        &b_cols,
+    );
+    b.build().expect("SVD2 DAG")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn svd1_shape() {
+        let cfg = SimConfig::test();
+        let dag = svd1(200_000, &cfg); // 40 blocks at 5000 rows each
+        assert_eq!(dag.leaves().len(), 40);
+        // 40 gen + 40 qr + 40 R-extract + 39 rtree + 1 svd + 40 U.
+        assert_eq!(dag.len(), 40 + 40 + 40 + 39 + 1 + 40);
+        // U blocks are the sinks.
+        assert_eq!(dag.sinks().len(), 40);
+        // svd(R) fans out to all 40 U tasks.
+        assert!(dag.fan_out_count() >= 1);
+    }
+
+    #[test]
+    fn svd1_paper_sizes() {
+        let cfg = SimConfig::test();
+        for rows in [200_000, 400_000, 800_000, 1_000_000] {
+            let dag = svd1(rows, &cfg);
+            assert_eq!(dag.leaves().len(), rows / SVD1_BLOCK_ROWS);
+        }
+    }
+
+    #[test]
+    fn svd2_shape_small() {
+        let cfg = SimConfig::test();
+        let dag = svd2_blocked(1000, 2, &cfg);
+        // Gen: 4 A + 2 Omega; sketch: 4 mul + 2 add; tsqr: 2 qr + 2 R +
+        // 1 rtree; Q: 2; projection: 4 mul + 2 add; svd: 1.
+        assert_eq!(dag.len(), 6 + 6 + 5 + 2 + 6 + 1);
+        assert_eq!(dag.sinks().len(), 1);
+    }
+
+    #[test]
+    fn svd2_grid_matches_paper_partitioning() {
+        // 50k uses fewer blocks than 25k (paper §V-A).
+        assert!(svd2_grid(50_000) < svd2_grid(25_000));
+        assert!(svd2_grid(100_000) > svd2_grid(50_000));
+    }
+
+    #[test]
+    fn svd2_paper_sizes_buildable() {
+        let cfg = SimConfig::test();
+        for n in [10_000, 25_000, 50_000, 100_000] {
+            let nb = svd2_grid(n);
+            let dag = svd2_blocked(n - (n % nb), nb, &cfg);
+            assert!(dag.sinks().len() == 1);
+            assert!(dag.len() > 3 * nb);
+        }
+    }
+}

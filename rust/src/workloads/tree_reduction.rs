@@ -1,0 +1,74 @@
+//! Tree Reduction (TR) — the paper's microbenchmark (Figs. 4 and 7).
+//!
+//! "TR sums the elements of an array. TR repeatedly adds adjacent elements
+//! until only a single element remains." For an input of `n` numbers the
+//! algorithm generates n/2 leaf tasks (each adds one adjacent pair) and a
+//! binary combine tree above them — 1023 tasks for the paper's n = 1024.
+//! A sleep-based delay is added to every task to simulate a compute task
+//! with controllable duration (§III-C).
+
+use crate::compute::Payload;
+use crate::core::SimConfig;
+use crate::dag::{Dag, DagBuilder};
+use crate::workloads::pairwise_reduce;
+
+/// Builds the TR DAG over `n` elements (must be a power of two ≥ 2) with a
+/// per-task sleep of `sleep_ms` milliseconds.
+pub fn tree_reduction(n: usize, sleep_ms: f64, cfg: &SimConfig) -> Dag {
+    assert!(n >= 2 && n.is_power_of_two(), "TR needs a power-of-two n");
+    let elem = cfg.compute.element_bytes;
+    let mut b = DagBuilder::new();
+    let payload = |ms: f64| {
+        if ms > 0.0 {
+            Payload::Sleep { ms }
+        } else {
+            // A single add is sub-microsecond; model as free.
+            Payload::Noop
+        }
+    };
+    // n/2 leaf tasks, each adding one adjacent pair of array elements
+    // (the pair is passed as invocation arguments, not via the KV store).
+    let leaves: Vec<_> = (0..n / 2)
+        .map(|i| b.add_task(format!("tr-leaf[{i}]"), payload(sleep_ms), elem, &[]))
+        .collect();
+    pairwise_reduce(&mut b, leaves, |lvl, i| {
+        (format!("tr-add[{lvl}.{i}]"), payload(sleep_ms), elem)
+    });
+    b.build().expect("TR DAG")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape_1024() {
+        let cfg = SimConfig::test();
+        let dag = tree_reduction(1024, 0.0, &cfg);
+        // "the TR algorithm generates n/2 leaf tasks"
+        assert_eq!(dag.leaves().len(), 512);
+        assert_eq!(dag.len(), 1023);
+        assert_eq!(dag.sinks().len(), 1);
+        assert_eq!(dag.critical_path_len(), 10);
+        // Every non-leaf is a 2-way fan-in.
+        assert_eq!(dag.fan_in_count(), 511);
+    }
+
+    #[test]
+    fn sleep_payloads_applied() {
+        let cfg = SimConfig::test();
+        let dag = tree_reduction(8, 100.0, &cfg);
+        for t in dag.task_ids() {
+            assert!(matches!(
+                dag.task(t).payload,
+                Payload::Sleep { ms } if ms == 100.0
+            ));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_power_of_two() {
+        tree_reduction(1000, 0.0, &SimConfig::test());
+    }
+}

@@ -1,0 +1,163 @@
+//! Integration: the PJRT runtime loads the AOT artifacts produced by
+//! `make artifacts` and produces numerically correct results — proving
+//! the L1 (Pallas) -> L2 (JAX) -> L3 (Rust) stack composes.
+//!
+//! These tests are skipped (with a loud message) if `artifacts/` has not
+//! been built; run `make artifacts` first. `cargo test` via `make test`
+//! always builds them.
+
+use std::sync::Arc;
+use wukong::compute::Tensor;
+use wukong::core::SplitMix64;
+use wukong::runtime::PjrtRuntime;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = PjrtRuntime::artifacts_dir();
+    if !dir.join("matmul128.hlo.txt").exists() {
+        eprintln!(
+            "SKIP: artifacts not built at {dir:?}; run `make artifacts` first"
+        );
+        return None;
+    }
+    Some(PjrtRuntime::new(dir).expect("pjrt runtime"))
+}
+
+#[test]
+fn add128_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(1);
+    let x = Tensor::vec1(rng.fill_f32(128));
+    let y = Tensor::vec1(rng.fill_f32(128));
+    let want = x.add(&y);
+    let got = rt
+        .execute_blocking("add128", vec![Arc::new(x), Arc::new(y)])
+        .unwrap();
+    assert!(got.allclose(&want, 1e-6), "max diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn sum128_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(2);
+    let x = Tensor::vec1(rng.fill_f32(128));
+    let want = x.sum();
+    let got = rt.execute_blocking("sum128", vec![Arc::new(x)]).unwrap();
+    assert_eq!(got.shape, Vec::<usize>::new());
+    assert!((got.data[0] - want).abs() < 1e-3, "{} vs {want}", got.data[0]);
+}
+
+#[test]
+fn matmul128_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(3);
+    let a = Tensor::new(vec![128, 128], rng.fill_f32(128 * 128));
+    let b = Tensor::new(vec![128, 128], rng.fill_f32(128 * 128));
+    let want = a.matmul(&b);
+    let got = rt
+        .execute_blocking("matmul128", vec![Arc::new(a), Arc::new(b)])
+        .unwrap();
+    assert_eq!(got.shape, vec![128, 128]);
+    assert!(
+        got.allclose(&want, 1e-3),
+        "max diff {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn matmul256_grid_kernel_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(4);
+    let a = Tensor::new(vec![256, 256], rng.fill_f32(256 * 256));
+    let b = Tensor::new(vec![256, 256], rng.fill_f32(256 * 256));
+    let want = a.matmul(&b);
+    let got = rt
+        .execute_blocking("matmul256", vec![Arc::new(a), Arc::new(b)])
+        .unwrap();
+    assert!(
+        got.allclose(&want, 1e-2),
+        "max diff {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn executables_are_cached_across_calls() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(5);
+    // First call compiles, subsequent calls hit the cache; all must agree.
+    let x = Tensor::vec1(rng.fill_f32(128));
+    let y = Tensor::vec1(rng.fill_f32(128));
+    let first = rt
+        .execute_blocking("add128", vec![Arc::new(x.clone()), Arc::new(y.clone())])
+        .unwrap();
+    for _ in 0..3 {
+        let again = rt
+            .execute_blocking("add128", vec![Arc::new(x.clone()), Arc::new(y.clone())])
+            .unwrap();
+        assert_eq!(again.data, first.data);
+    }
+}
+
+#[test]
+fn missing_artifact_errors_cleanly() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute_blocking("does_not_exist", vec![]).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("does_not_exist"), "{msg}");
+}
+
+#[test]
+fn svc_step_runs_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SplitMix64::new(6);
+    // Separable data: y = sign(x . w_true)
+    let true_w = Tensor::new(vec![16, 1], rng.fill_f32(16));
+    let x = Tensor::new(vec![256, 16], rng.fill_f32(256 * 16));
+    let margins = x.matmul(&true_w);
+    let y = Tensor::new(
+        vec![256, 1],
+        margins.data.iter().map(|v| v.signum()).collect(),
+    );
+    let loss = |w: &Tensor| -> f32 {
+        let m = x.matmul(w);
+        m.data
+            .iter()
+            .zip(&y.data)
+            .map(|(p, yy)| (1.0 - yy * p).max(0.0).powi(2))
+            .sum::<f32>()
+            / 256.0
+    };
+    let mut w = Tensor::zeros(vec![16, 1]);
+    let l0 = loss(&w);
+    for _ in 0..10 {
+        w = rt
+            .execute_blocking(
+                "svc_step",
+                vec![Arc::new(w.clone()), Arc::new(x.clone()), Arc::new(y.clone())],
+            )
+            .unwrap();
+    }
+    let l1 = loss(&w);
+    assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+}
+
+#[test]
+fn pjrt_payloads_execute_inside_virtual_time_engine() {
+    // The full composition: a WUKONG job whose payloads are real PJRT
+    // kernels, run by the virtual-time engine.
+    let Some(rt) = runtime() else { return };
+    let (dag, expected) = wukong::workloads::real::tr_real(8, 42);
+    let cfg = wukong::core::SimConfig::test();
+    let engine = wukong::engine::WukongEngine::new(cfg).with_runtime(rt);
+    let (report, outputs) =
+        wukong::engine::run_sim(async move { engine.run_with_outputs(&dag).await });
+    assert!(report.is_ok(), "{report:?}");
+    assert_eq!(outputs.len(), 1);
+    let out = outputs.values().next().unwrap();
+    let got = out.expect_tensor().data[0];
+    assert!(
+        (got - expected).abs() < 1e-2,
+        "tree reduction: got {got}, expected {expected}"
+    );
+}

@@ -1,0 +1,194 @@
+//! Cross-scheduler integration: the five engines run the same DAG shapes
+//! and the paper's qualitative relationships hold in simulation.
+
+use std::time::Duration;
+use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
+use wukong::compute::Payload;
+use wukong::core::{EngineError, SimConfig};
+use wukong::dag::{Dag, DagBuilder};
+use wukong::engine::{run_sim, WukongEngine};
+use wukong::workloads;
+
+fn run_wukong(dag: &Dag, cfg: &SimConfig) -> wukong::metrics::JobReport {
+    let (dag, cfg) = (dag.clone(), cfg.clone());
+    run_sim(async move { WukongEngine::new(cfg).run(&dag).await })
+}
+
+fn run_design(dag: &Dag, cfg: &SimConfig, d: DesignIteration) -> wukong::metrics::JobReport {
+    let (dag, cfg) = (dag.clone(), cfg.clone());
+    run_sim(async move { CentralizedEngine::new(cfg, d).run(&dag).await })
+}
+
+#[test]
+fn all_engines_complete_tree_reduction() {
+    let cfg = SimConfig::test();
+    let dag = workloads::tree_reduction(64, 1.0, &cfg);
+    let n = dag.len() as u64;
+    for report in [
+        run_wukong(&dag, &cfg),
+        run_design(&dag, &cfg, DesignIteration::Strawman),
+        run_design(&dag, &cfg, DesignIteration::PubSub),
+        run_design(&dag, &cfg, DesignIteration::ParallelInvoker),
+        {
+            let (dag, cfg) = (dag.clone(), cfg.clone());
+            run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await })
+        },
+    ] {
+        assert!(report.is_ok(), "{report:?}");
+        assert_eq!(report.tasks_executed, n, "{}", report.platform);
+    }
+}
+
+#[test]
+fn design_iteration_ordering_on_tr() {
+    // Paper Fig. 4: parallel-invoker < pub/sub <= strawman.
+    let cfg = SimConfig::test();
+    let dag = workloads::tree_reduction(256, 50.0, &cfg);
+    let strawman = run_design(&dag, &cfg, DesignIteration::Strawman);
+    let pubsub = run_design(&dag, &cfg, DesignIteration::PubSub);
+    let parallel = run_design(&dag, &cfg, DesignIteration::ParallelInvoker);
+    assert!(parallel.makespan < pubsub.makespan, "parallel !< pubsub");
+    assert!(pubsub.makespan <= strawman.makespan, "pubsub !<= strawman");
+}
+
+#[test]
+fn wukong_beats_every_centralized_design() {
+    // Paper Fig. 7: "WUKONG greatly outperforms all previous versions of
+    // the framework".
+    let cfg = SimConfig::test();
+    let dag = workloads::tree_reduction(256, 100.0, &cfg);
+    let wukong = run_wukong(&dag, &cfg);
+    for d in [
+        DesignIteration::Strawman,
+        DesignIteration::PubSub,
+        DesignIteration::ParallelInvoker,
+    ] {
+        let r = run_design(&dag, &cfg, d);
+        assert!(
+            wukong.makespan < r.makespan,
+            "WUKONG {:?} !< {} {:?}",
+            wukong.makespan,
+            r.platform,
+            r.makespan
+        );
+    }
+}
+
+#[test]
+fn wukong_beats_serverful_dask_on_long_tasks() {
+    // Paper: "WUKONG executes 2.5x faster than Dask (EC2) in the case of
+    // 500ms delays."
+    let cfg = SimConfig::test();
+    let dag = workloads::tree_reduction(1024, 500.0, &cfg);
+    let wukong = run_wukong(&dag, &cfg);
+    let dask = {
+        let (dag, cfg) = (dag.clone(), cfg.clone());
+        run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await })
+    };
+    let speedup = dask.makespan.as_secs_f64() / wukong.makespan.as_secs_f64();
+    assert!(speedup > 2.0, "expected >2x, got {speedup:.2}x");
+}
+
+#[test]
+fn dask_beats_wukong_on_trivial_tasks() {
+    // Paper: "WUKONG achieves lower performance than Dask (EC2)" for TR
+    // with 0 ms delays.
+    let cfg = SimConfig::test();
+    let dag = workloads::tree_reduction(1024, 0.0, &cfg);
+    let wukong = run_wukong(&dag, &cfg);
+    let dask = {
+        let (dag, cfg) = (dag.clone(), cfg.clone());
+        run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await })
+    };
+    assert!(
+        dask.makespan < wukong.makespan,
+        "dask {:?} !< wukong {:?}",
+        dask.makespan,
+        wukong.makespan
+    );
+}
+
+#[test]
+fn wukong_uses_fewer_lambdas_than_tasks() {
+    // Executors run whole paths of their static schedules, so the Lambda
+    // count must be strictly below the task count (chains collapse).
+    let cfg = SimConfig::test();
+    let dag = workloads::svd2_blocked(5000, 5, &cfg);
+    let report = run_wukong(&dag, &cfg);
+    assert!(report.is_ok());
+    assert!(
+        report.lambdas_invoked < report.tasks_executed,
+        "{} lambdas !< {} tasks",
+        report.lambdas_invoked,
+        report.tasks_executed
+    );
+}
+
+#[test]
+fn centralized_uses_one_lambda_per_task() {
+    let cfg = SimConfig::test();
+    let dag = workloads::tree_reduction(64, 0.0, &cfg);
+    let r = run_design(&dag, &cfg, DesignIteration::ParallelInvoker);
+    assert_eq!(r.lambdas_invoked, r.tasks_executed);
+}
+
+#[test]
+fn billing_accumulates_and_rounds_up() {
+    let cfg = SimConfig::test();
+    let mut b = DagBuilder::new();
+    b.add_task("only", Payload::Sleep { ms: 123.0 }, 8, &[]);
+    let dag = b.build().unwrap();
+    let report = run_wukong(&dag, &cfg);
+    // One executor, 123 ms execution -> billed 200 ms (100 ms rounding).
+    assert_eq!(report.billed, Duration::from_millis(200));
+}
+
+#[test]
+fn dask_oom_reported_not_hung() {
+    let cfg = SimConfig::test();
+    let mut b = DagBuilder::new();
+    let huge = b.add_task("huge", Payload::Noop, 8 << 30, &[]);
+    b.add_task("next", Payload::Noop, 8, &[huge]);
+    let dag = b.build().unwrap();
+    let report = run_sim(async move { DaskCluster::laptop(cfg).run(&dag).await });
+    assert!(matches!(
+        report.error,
+        Some(EngineError::OutOfMemory { .. })
+    ));
+}
+
+#[test]
+fn warm_pool_exhaustion_causes_cold_starts() {
+    let mut cfg = SimConfig::test();
+    cfg.faas.warm_pool = 4;
+    // 32 concurrent leaves, only 4 warm containers.
+    let mut b = DagBuilder::new();
+    let leaves: Vec<_> = (0..32)
+        .map(|i| b.add_task(format!("l{i}"), Payload::Sleep { ms: 500.0 }, 8, &[]))
+        .collect();
+    b.add_task("sink", Payload::Noop, 8, &leaves);
+    let dag = b.build().unwrap();
+    let report = run_wukong(&dag, &cfg);
+    assert!(report.is_ok());
+    assert!(report.cold_starts > 0, "expected cold starts");
+}
+
+#[test]
+fn shared_vm_shards_slower_than_shard_per_vm() {
+    // Fig. 12's "+shard per VM" factor, end to end.
+    let mk = |shared: bool| {
+        let mut cfg = SimConfig::test();
+        cfg.net.kv_shared_vm = shared;
+        let dag = workloads::svd2_blocked(10_000, 5, &cfg);
+        run_wukong(&dag, &cfg)
+    };
+    let shared = mk(true);
+    let split = mk(false);
+    assert!(shared.is_ok() && split.is_ok());
+    assert!(
+        split.makespan < shared.makespan,
+        "split {:?} !< shared {:?}",
+        split.makespan,
+        shared.makespan
+    );
+}

@@ -1,0 +1,180 @@
+//! Workload-level integration: every paper workload builds at its paper
+//! sizes, runs end-to-end on WUKONG, and shows the paper's headline
+//! relationships (crossovers, OOMs, factor analysis ordering).
+
+use wukong::baselines::DaskCluster;
+use wukong::core::SimConfig;
+use wukong::dag::Dag;
+use wukong::engine::{run_sim, WukongEngine};
+use wukong::metrics::JobReport;
+use wukong::workloads;
+
+fn wukong_run(dag: &Dag, cfg: &SimConfig) -> JobReport {
+    let (dag, cfg) = (dag.clone(), cfg.clone());
+    run_sim(async move { WukongEngine::new(cfg).run(&dag).await })
+}
+
+fn ec2_run(dag: &Dag, cfg: &SimConfig) -> JobReport {
+    let (dag, cfg) = (dag.clone(), cfg.clone());
+    run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await })
+}
+
+fn laptop_run(dag: &Dag, cfg: &SimConfig) -> JobReport {
+    let (dag, cfg) = (dag.clone(), cfg.clone());
+    run_sim(async move { DaskCluster::laptop(cfg).run(&dag).await })
+}
+
+#[test]
+fn every_workload_completes_on_wukong_at_paper_scale() {
+    let cfg = SimConfig::test();
+    let dags = [
+        ("tr", workloads::tree_reduction(1024, 100.0, &cfg)),
+        ("gemm-10k", workloads::gemm(10_000, &cfg)),
+        ("svd1-400k", workloads::svd1(400_000, &cfg)),
+        ("svd2-50k", workloads::svd2(50_000, &cfg)),
+        ("svc-400k", workloads::svc(400_000, &cfg)),
+    ];
+    for (name, dag) in dags {
+        let report = wukong_run(&dag, &cfg);
+        assert!(report.is_ok(), "{name}: {report:?}");
+        assert_eq!(report.tasks_executed, dag.len() as u64, "{name}");
+    }
+}
+
+#[test]
+fn gemm_50k_ooms_on_both_dask_setups_but_not_wukong() {
+    // Paper Fig. 8 / §V-A.
+    let cfg = SimConfig::test();
+    let dag = workloads::gemm(50_000, &cfg);
+    assert!(!ec2_run(&dag, &cfg).is_ok(), "EC2 should OOM at 50k");
+    assert!(!laptop_run(&dag, &cfg).is_ok(), "laptop should OOM at 50k");
+    assert!(wukong_run(&dag, &cfg).is_ok(), "WUKONG must complete 50k");
+}
+
+#[test]
+fn gemm_10k_wukong_at_least_2x_ec2() {
+    // Paper: "WUKONG executed the workload more than twice as fast as
+    // Dask (EC2)".
+    let cfg = SimConfig::test();
+    let dag = workloads::gemm(10_000, &cfg);
+    let w = wukong_run(&dag, &cfg);
+    let d = ec2_run(&dag, &cfg);
+    assert!(w.is_ok() && d.is_ok());
+    let speedup = d.makespan.as_secs_f64() / w.makespan.as_secs_f64();
+    assert!(speedup > 1.5, "expected ~2x+, got {speedup:.2}x");
+}
+
+#[test]
+fn svd1_crossover_with_problem_size() {
+    // Paper Fig. 9: Dask (EC2) wins at small sizes; WUKONG catches up as
+    // rows grow.
+    let cfg = SimConfig::test();
+    let small_ratio = {
+        let dag = workloads::svd1(200_000, &cfg);
+        ec2_run(&dag, &cfg).makespan.as_secs_f64()
+            / wukong_run(&dag, &cfg).makespan.as_secs_f64()
+    };
+    let large_ratio = {
+        let dag = workloads::svd1(1_000_000, &cfg);
+        ec2_run(&dag, &cfg).makespan.as_secs_f64()
+            / wukong_run(&dag, &cfg).makespan.as_secs_f64()
+    };
+    assert!(small_ratio < 1.0, "EC2 must win at 200k ({small_ratio:.2})");
+    assert!(
+        large_ratio > small_ratio,
+        "WUKONG must gain with size: {small_ratio:.2} -> {large_ratio:.2}"
+    );
+    assert!(large_ratio > 1.0, "WUKONG must win at 1000k ({large_ratio:.2})");
+}
+
+#[test]
+fn svd2_100k_wukong_wins_big_and_laptop_ooms_at_50k() {
+    // Paper Fig. 10: "WUKONG executed the 100k x 100k workload 3.1x
+    // faster than Dask (EC2)"; laptop OOMs at 50k.
+    let cfg = SimConfig::test();
+    let dag = workloads::svd2(100_000, &cfg);
+    let w = wukong_run(&dag, &cfg);
+    let d = ec2_run(&dag, &cfg);
+    assert!(w.is_ok() && d.is_ok());
+    let speedup = d.makespan.as_secs_f64() / w.makespan.as_secs_f64();
+    assert!(
+        speedup > 1.8,
+        "expected ~3x (paper 3.1x), got {speedup:.2}x"
+    );
+
+    let dag50 = workloads::svd2(50_000, &cfg);
+    assert!(!laptop_run(&dag50, &cfg).is_ok(), "laptop should OOM at 50k");
+    // ...and EC2 wins at 50k (the paper's communication-overhead point).
+    let w50 = wukong_run(&dag50, &cfg);
+    let d50 = ec2_run(&dag50, &cfg);
+    assert!(d50.makespan < w50.makespan, "EC2 should win at 50k");
+}
+
+#[test]
+fn svd2_ideal_storage_beats_real_storage() {
+    // Paper §V-C: ideal intermediate storage flips the 50k result.
+    let cfg = SimConfig::test();
+    let dag = workloads::svd2(50_000, &cfg);
+    let real = wukong_run(&dag, &cfg);
+    let ideal = {
+        let (dag, cfg) = (dag.clone(), cfg.clone());
+        run_sim(async move {
+            WukongEngine::new(cfg.with_ideal_storage()).run(&dag).await
+        })
+    };
+    assert!(real.is_ok() && ideal.is_ok());
+    assert!(ideal.makespan < real.makespan);
+    let d = ec2_run(&dag, &cfg);
+    assert!(
+        ideal.makespan < d.makespan,
+        "ideal-storage WUKONG must beat EC2 at 50k (paper: 1.67x)"
+    );
+}
+
+#[test]
+fn svd2_lambda_counts_follow_partitioning() {
+    // Paper §V-A: 50k uses fewer Lambdas than 25k.
+    let cfg = SimConfig::test();
+    let r25 = wukong_run(&workloads::svd2(25_000, &cfg), &cfg);
+    let r50 = wukong_run(&workloads::svd2(50_000, &cfg), &cfg);
+    let r100 = wukong_run(&workloads::svd2(100_000, &cfg), &cfg);
+    assert!(
+        r50.lambdas_invoked < r25.lambdas_invoked,
+        "50k ({}) must use fewer lambdas than 25k ({})",
+        r50.lambdas_invoked,
+        r25.lambdas_invoked
+    );
+    assert!(r100.lambdas_invoked > r25.lambdas_invoked);
+}
+
+#[test]
+fn svc_crossover_with_problem_size() {
+    // Paper Fig. 11: Dask (EC2) slightly faster at 100k samples; WUKONG
+    // ~2x at 800k.
+    let cfg = SimConfig::test();
+    let small = workloads::svc(100_000, &cfg);
+    let large = workloads::svc(800_000, &cfg);
+    let (w_s, d_s) = (wukong_run(&small, &cfg), ec2_run(&small, &cfg));
+    let (w_l, d_l) = (wukong_run(&large, &cfg), ec2_run(&large, &cfg));
+    assert!(d_s.makespan < w_s.makespan, "EC2 should win at 100k");
+    assert!(w_l.makespan < d_l.makespan, "WUKONG should win at 800k");
+}
+
+#[test]
+fn tr_real_mode_builders_are_consistent() {
+    let (dag, expected) = workloads::real::tr_real(8, 1);
+    assert_eq!(dag.leaves().len(), 8);
+    assert!(expected.is_finite());
+    let (dag, sinks, full) = workloads::real::gemm_real(2, 1);
+    assert_eq!(sinks.len(), 4);
+    assert_eq!(full.shape, vec![256, 256]);
+    assert_eq!(dag.sinks().len(), 4);
+}
+
+#[test]
+fn bigger_problems_take_longer_on_wukong() {
+    let cfg = SimConfig::test();
+    let small = wukong_run(&workloads::svd2(25_000, &cfg), &cfg);
+    let large = wukong_run(&workloads::svd2(100_000, &cfg), &cfg);
+    assert!(small.makespan < large.makespan);
+}

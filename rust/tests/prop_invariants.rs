@@ -1,0 +1,226 @@
+//! Property-based tests over randomly generated DAGs (hand-rolled
+//! generator + seeded sweep; the proptest crate is unavailable offline,
+//! so shrinking is replaced by printing the failing seed).
+//!
+//! Invariants checked for every random DAG, on every scheduler
+//! (DESIGN.md §6):
+//! * every task executes exactly once (reported count == DAG size; the
+//!   engines' internal exactly-once guards fail the run otherwise);
+//! * the job completes (no deadlock at fan-ins/fan-outs);
+//! * static schedules: one per leaf, each is exactly the reachable set of
+//!   its leaf, their union covers the DAG;
+//! * fan-in dependency counters end exactly at each task's in-degree.
+
+use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
+use wukong::compute::Payload;
+use wukong::core::{SimConfig, SplitMix64, TaskId};
+use wukong::dag::{Dag, DagBuilder};
+use wukong::engine::{run_sim, WukongEngine};
+
+/// Random layered DAG: up to `max_tasks` tasks; each non-leaf picks 1-3
+/// parents among earlier tasks, guaranteeing acyclicity. Mix of payload
+/// durations and output sizes exercises fan-in races and network paths.
+fn random_dag(seed: u64, max_tasks: usize) -> Dag {
+    let mut rng = SplitMix64::new(seed);
+    let n = 2 + (rng.below((max_tasks - 2) as u64) as usize);
+    let mut b = DagBuilder::new();
+    let mut ids: Vec<TaskId> = Vec::with_capacity(n);
+    for i in 0..n {
+        // ~30% of early tasks are leaves; later tasks mostly have parents.
+        let make_leaf = i == 0 || rng.next_f64() < 0.25_f64.powf(1.0 + i as f64 / n as f64);
+        let deps: Vec<TaskId> = if make_leaf {
+            vec![]
+        } else {
+            let k = 1 + rng.below(3.min(i as u64)) as usize;
+            // distinct parents
+            let mut ps = std::collections::BTreeSet::new();
+            for _ in 0..k {
+                ps.insert(ids[rng.below(i as u64) as usize]);
+            }
+            ps.into_iter().collect()
+        };
+        let payload = match rng.below(3) {
+            0 => Payload::Noop,
+            1 => Payload::Sleep {
+                ms: rng.next_f64() * 20.0,
+            },
+            _ => Payload::Model {
+                flops: rng.next_f64() * 5e8,
+            },
+        };
+        let bytes = match rng.below(3) {
+            0 => 64,
+            1 => 1 << 20,
+            _ => 32 << 20,
+        };
+        ids.push(b.add_task(format!("t{i}"), payload, bytes, &deps));
+    }
+    b.build().expect("random DAG valid")
+}
+
+const SEEDS: u64 = 60;
+
+#[test]
+fn wukong_executes_every_task_exactly_once() {
+    for seed in 0..SEEDS {
+        let dag = random_dag(seed, 40);
+        let n = dag.len() as u64;
+        let report = run_sim(async move {
+            WukongEngine::new(SimConfig::test()).run(&dag).await
+        });
+        assert!(report.is_ok(), "seed {seed}: {report:?}");
+        assert_eq!(report.tasks_executed, n, "seed {seed}");
+    }
+}
+
+#[test]
+fn wukong_ideal_storage_and_no_cache_variants_hold_invariants() {
+    for seed in 0..SEEDS / 2 {
+        let dag = random_dag(seed, 30);
+        let n = dag.len() as u64;
+        // ideal storage
+        let d2 = dag.clone();
+        let report = run_sim(async move {
+            WukongEngine::new(SimConfig::test().with_ideal_storage())
+                .run(&d2)
+                .await
+        });
+        assert!(report.is_ok(), "ideal seed {seed}: {report:?}");
+        assert_eq!(report.tasks_executed, n, "ideal seed {seed}");
+        // local cache disabled (Fig. 12 ablation)
+        let mut cfg = SimConfig::test();
+        cfg.wukong.local_cache = false;
+        let report = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+        assert!(report.is_ok(), "nocache seed {seed}: {report:?}");
+        assert_eq!(report.tasks_executed, n, "nocache seed {seed}");
+    }
+}
+
+#[test]
+fn wukong_tiny_fanout_threshold_routes_through_proxy() {
+    // Forcing every fan-out through the storage-manager proxy must not
+    // change the exactly-once/completion invariants.
+    for seed in 0..SEEDS / 2 {
+        let dag = random_dag(seed, 30);
+        let n = dag.len() as u64;
+        let mut cfg = SimConfig::test();
+        cfg.wukong.max_task_fanout = 2; // everything large-fan-out
+        let report = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+        assert!(report.is_ok(), "seed {seed}: {report:?}");
+        assert_eq!(report.tasks_executed, n, "seed {seed}");
+    }
+}
+
+#[test]
+fn centralized_designs_execute_every_task_exactly_once() {
+    for seed in 0..SEEDS / 3 {
+        for design in [
+            DesignIteration::Strawman,
+            DesignIteration::PubSub,
+            DesignIteration::ParallelInvoker,
+        ] {
+            let dag = random_dag(seed, 25);
+            let n = dag.len() as u64;
+            let report = run_sim(async move {
+                CentralizedEngine::new(SimConfig::test(), design)
+                    .run(&dag)
+                    .await
+            });
+            assert!(report.is_ok(), "{design:?} seed {seed}: {report:?}");
+            assert_eq!(report.tasks_executed, n, "{design:?} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn dask_executes_every_task_exactly_once_or_ooms_cleanly() {
+    for seed in 0..SEEDS / 2 {
+        let dag = random_dag(seed, 30);
+        let n = dag.len() as u64;
+        let report =
+            run_sim(async move { DaskCluster::ec2(SimConfig::test()).run(&dag).await });
+        match &report.error {
+            None => assert_eq!(report.tasks_executed, n, "seed {seed}"),
+            Some(wukong::core::EngineError::OutOfMemory { .. }) => {}
+            Some(e) => panic!("seed {seed}: unexpected failure {e}"),
+        }
+    }
+}
+
+#[test]
+fn static_schedules_are_reachable_sets_and_cover_dag() {
+    for seed in 0..SEEDS {
+        let dag = random_dag(seed, 40);
+        let schedules = wukong::schedule::generate(&dag);
+        assert_eq!(schedules.len(), dag.leaves().len(), "seed {seed}");
+
+        let mut covered = vec![false; dag.len()];
+        for leaf in dag.leaves() {
+            let s = schedules.for_leaf(leaf);
+            // Reachability via BFS from the leaf.
+            let mut reach = vec![false; dag.len()];
+            let mut q = vec![leaf];
+            while let Some(t) = q.pop() {
+                if std::mem::replace(&mut reach[t.index()], true) {
+                    continue;
+                }
+                q.extend_from_slice(dag.children(t));
+            }
+            let set: std::collections::HashSet<_> = s.nodes.iter().copied().collect();
+            assert_eq!(set.len(), s.nodes.len(), "seed {seed}: duplicate nodes");
+            for t in dag.task_ids() {
+                assert_eq!(
+                    reach[t.index()],
+                    set.contains(&t),
+                    "seed {seed}: schedule for {leaf} mismatch at {t}"
+                );
+            }
+            for &t in &s.nodes {
+                covered[t.index()] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "seed {seed}: union gap");
+    }
+}
+
+#[test]
+fn fan_in_counters_end_exactly_at_in_degree() {
+    // Run WUKONG with the KV store inspectable and check every counter.
+    for seed in 0..SEEDS / 3 {
+        let dag = random_dag(seed, 30);
+        let cfg = SimConfig::test();
+        let metrics = std::sync::Arc::new(wukong::metrics::MetricsHub::new());
+        let dag2 = dag.clone();
+        let (report, incrs) = run_sim(async move {
+            let engine = WukongEngine::new(cfg);
+            let (report, m) = engine.run_detailed(&dag2).await;
+            (report, m.kv_incrs())
+        });
+        assert!(report.is_ok(), "seed {seed}");
+        // Total INCR operations == sum of in-degrees over fan-in nodes.
+        let expected: u64 = dag
+            .task_ids()
+            .filter(|&t| dag.in_degree(t) > 1)
+            .map(|t| dag.in_degree(t) as u64)
+            .sum();
+        assert_eq!(incrs, expected, "seed {seed}");
+        drop(metrics);
+    }
+}
+
+#[test]
+fn deterministic_across_identical_runs() {
+    for seed in [3u64, 17, 29] {
+        let mk = |s| {
+            let dag = random_dag(s, 35);
+            run_sim(async move {
+                WukongEngine::new(SimConfig::default()).run(&dag).await
+            })
+        };
+        let a = mk(seed);
+        let b = mk(seed);
+        assert_eq!(a.makespan, b.makespan, "seed {seed}: nondeterministic");
+        assert_eq!(a.lambdas_invoked, b.lambdas_invoked, "seed {seed}");
+        assert_eq!(a.kv, b.kv, "seed {seed}");
+    }
+}
