@@ -2,7 +2,9 @@
 //!
 //! Targets (DESIGN.md §7): the scheduler hot path must sustain >= 100k
 //! simulated task events/s so paper-scale sweeps complete in seconds.
-//! Tracked before/after in EXPERIMENTS.md §Perf.
+//! Tracked before/after in EXPERIMENTS.md §Perf, and emitted as
+//! `BENCH_hotpath.json` (override the path with `BENCH_JSON`) for the
+//! perf trajectory.
 
 use std::time::Instant;
 use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
@@ -10,7 +12,19 @@ use wukong::core::SimConfig;
 use wukong::engine::{run_sim, WukongEngine};
 use wukong::workloads;
 
-fn bench_case(name: &str, tasks: usize, iters: usize, mut run: impl FnMut()) -> f64 {
+struct Row {
+    name: String,
+    secs_per_run: f64,
+    tasks_per_sec: f64,
+}
+
+fn bench_case(
+    rows: &mut Vec<Row>,
+    name: &str,
+    tasks: usize,
+    iters: usize,
+    mut run: impl FnMut(),
+) -> f64 {
     // Warm-up.
     run();
     let t0 = Instant::now();
@@ -24,16 +38,55 @@ fn bench_case(name: &str, tasks: usize, iters: usize, mut run: impl FnMut()) -> 
         "{name:<42} {per_iter:>9.4}s/run {:>12.0} tasks/s",
         tasks_per_sec
     );
+    rows.push(Row {
+        name: name.to_string(),
+        secs_per_run: per_iter,
+        tasks_per_sec,
+    });
     tasks_per_sec
+}
+
+/// Scales an iteration count via `WUKONG_BENCH_ITERS` (CI sets 1 to keep
+/// the job short; unset means the full default count).
+fn iters(default: usize) -> usize {
+    std::env::var("WUKONG_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+fn write_json(rows: &[Row]) {
+    // Anchor the default to the crate directory so the output lands at
+    // rust/BENCH_hotpath.json regardless of the cargo invocation's CWD
+    // (a repo-root invocation must not clobber the committed
+    // expected-improvement record at /BENCH_hotpath.json).
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json").to_string()
+    });
+    let mut json = String::from("{\n  \"bench\": \"perf_hotpath\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"secs_per_run\": {:.6}, \"tasks_per_sec\": {:.1}}}{}\n",
+            r.name, r.secs_per_run, r.tasks_per_sec, comma
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }
 
 fn main() {
     println!("=== perf: simulator hot-path throughput (wall clock) ===");
     let cfg = SimConfig::test();
+    let mut rows = Vec::new();
 
     let tr = workloads::tree_reduction(1024, 0.0, &cfg);
     let n_tr = tr.len();
-    bench_case("wukong/TR-1024 (1023 tasks)", n_tr, 5, || {
+    bench_case(&mut rows, "wukong/TR-1024 (1023 tasks)", n_tr, iters(5), || {
         let (cfg, dag) = (cfg.clone(), tr.clone());
         let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
         assert!(r.is_ok());
@@ -41,7 +94,7 @@ fn main() {
 
     let tr8k = workloads::tree_reduction(8192, 0.0, &cfg);
     let n8k = tr8k.len();
-    bench_case("wukong/TR-8192 (8191 tasks)", n8k, 3, || {
+    bench_case(&mut rows, "wukong/TR-8192 (8191 tasks)", n8k, iters(3), || {
         let (cfg, dag) = (cfg.clone(), tr8k.clone());
         let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
         assert!(r.is_ok());
@@ -50,9 +103,10 @@ fn main() {
     let gemm = workloads::gemm(25_000, &cfg);
     let n_gemm = gemm.len();
     bench_case(
+        &mut rows,
         &format!("wukong/GEMM-25k ({n_gemm} tasks)"),
         n_gemm,
-        3,
+        iters(3),
         || {
             let (cfg, dag) = (cfg.clone(), gemm.clone());
             let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
@@ -63,9 +117,10 @@ fn main() {
     let svd2 = workloads::svd2(100_000, &cfg);
     let n_svd = svd2.len();
     bench_case(
+        &mut rows,
         &format!("wukong/SVD2-100k ({n_svd} tasks)"),
         n_svd,
-        3,
+        iters(3),
         || {
             let (cfg, dag) = (cfg.clone(), svd2.clone());
             let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
@@ -73,7 +128,7 @@ fn main() {
         },
     );
 
-    bench_case("parallel-invoker/TR-1024", n_tr, 3, || {
+    bench_case(&mut rows, "parallel-invoker/TR-1024", n_tr, iters(3), || {
         let (cfg, dag) = (cfg.clone(), tr.clone());
         let r = run_sim(async move {
             CentralizedEngine::new(cfg, DesignIteration::ParallelInvoker)
@@ -83,7 +138,7 @@ fn main() {
         assert!(r.is_ok());
     });
 
-    bench_case("dask-ec2/GEMM-25k", n_gemm, 3, || {
+    bench_case(&mut rows, "dask-ec2/GEMM-25k", n_gemm, iters(3), || {
         let (cfg, dag) = (cfg.clone(), gemm.clone());
         let r = run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await });
         assert!(r.is_ok());
@@ -115,4 +170,11 @@ fn main() {
         dt,
         n as f64 / dt
     );
+    rows.push(Row {
+        name: "rt/spawn+sleep microbench (200k tasks)".to_string(),
+        secs_per_run: dt,
+        tasks_per_sec: n as f64 / dt,
+    });
+
+    write_json(&rows);
 }

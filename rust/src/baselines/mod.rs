@@ -1,4 +1,5 @@
-//! Baseline schedulers.
+//! Baseline schedulers — compatibility wrappers over the policy-driven
+//! engine core.
 //!
 //! * The three centralized design iterations of the paper's motivational
 //!   study (§III): **strawman** (Fig. 1), **pub/sub** (Fig. 2), and
@@ -8,6 +9,11 @@
 //!   pool with a centralized locality-aware scheduler and direct
 //!   worker-to-worker transfers, including the memory accounting that
 //!   reproduces the paper's OOM failures.
+//!
+//! Both are thin facades: the designs are
+//! [`SchedulingPolicy`](crate::engine::SchedulingPolicy) implementations
+//! in [`crate::engine::policies`], executed by the shared
+//! [`EngineDriver`](crate::engine::EngineDriver).
 
 pub mod centralized;
 pub mod dask;

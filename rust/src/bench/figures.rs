@@ -7,11 +7,13 @@
 //! factors, crossover points). Used by `rust/benches/figNN_*.rs` and
 //! `examples/paper_figures.rs`.
 
-use crate::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
 use crate::bench::{print_table, run_cell, Cell};
 use crate::core::SimConfig;
 use crate::dag::Dag;
-use crate::engine::{run_sim, WukongEngine};
+use crate::engine::policies::{
+    ParallelInvokerPolicy, PubSubPolicy, ServerfulDaskPolicy, StrawmanPolicy, WukongPolicy,
+};
+use crate::engine::{run_sim, EngineDriver, WukongEngine};
 use crate::metrics::{Cdf, JobReport};
 use crate::workloads;
 
@@ -55,41 +57,25 @@ impl Platform {
         }
     }
 
+    /// Builds the policy-driven engine for this platform — every figure
+    /// row runs through the one shared [`EngineDriver`].
+    pub fn driver(self, cfg: SimConfig) -> EngineDriver {
+        match self {
+            Platform::Strawman => EngineDriver::new(cfg, StrawmanPolicy),
+            Platform::PubSub => EngineDriver::new(cfg, PubSubPolicy),
+            Platform::ParallelInvoker => EngineDriver::new(cfg, ParallelInvokerPolicy),
+            Platform::Wukong => EngineDriver::new(cfg, WukongPolicy),
+            Platform::WukongIdeal => EngineDriver::new(cfg.with_ideal_storage(), WukongPolicy)
+                .with_label("WUKONG (ideal storage)"),
+            Platform::DaskEc2 => EngineDriver::new(cfg, ServerfulDaskPolicy::ec2()),
+            Platform::DaskLaptop => EngineDriver::new(cfg, ServerfulDaskPolicy::laptop()),
+        }
+    }
+
     pub fn run(self, dag: &Dag, cfg: &SimConfig) -> JobReport {
         let dag = dag.clone();
-        let cfg = cfg.clone();
-        match self {
-            Platform::Strawman => run_sim(async move {
-                CentralizedEngine::new(cfg, DesignIteration::Strawman)
-                    .run(&dag)
-                    .await
-            }),
-            Platform::PubSub => run_sim(async move {
-                CentralizedEngine::new(cfg, DesignIteration::PubSub)
-                    .run(&dag)
-                    .await
-            }),
-            Platform::ParallelInvoker => run_sim(async move {
-                CentralizedEngine::new(cfg, DesignIteration::ParallelInvoker)
-                    .run(&dag)
-                    .await
-            }),
-            Platform::Wukong => {
-                run_sim(async move { WukongEngine::new(cfg).run(&dag).await })
-            }
-            Platform::WukongIdeal => run_sim(async move {
-                WukongEngine::new(cfg.with_ideal_storage())
-                    .with_label("WUKONG (ideal storage)")
-                    .run(&dag)
-                    .await
-            }),
-            Platform::DaskEc2 => {
-                run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await })
-            }
-            Platform::DaskLaptop => {
-                run_sim(async move { DaskCluster::laptop(cfg).run(&dag).await })
-            }
-        }
+        let driver = self.driver(cfg.clone());
+        run_sim(async move { driver.run(&dag).await })
     }
 }
 

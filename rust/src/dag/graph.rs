@@ -1,4 +1,10 @@
-//! The task graph.
+//! The task graph, stored in compressed-sparse-row (CSR) form.
+//!
+//! Forward and reverse adjacency each live in one flat arena
+//! (`Vec<TaskId>`) plus an offsets table (`Vec<u32>`, length `n + 1`), so
+//! `children(t)` / `parents(t)` are contiguous-slice lookups with no
+//! nested-`Vec` indirection, and in/out-degrees are offset subtractions.
+//! This is the layout every scheduler hot loop walks.
 
 use crate::compute::Payload;
 use crate::core::TaskId;
@@ -16,13 +22,52 @@ pub struct TaskSpec {
     pub output_bytes: u64,
 }
 
-/// An immutable directed acyclic task graph with forward and reverse
+/// One direction of adjacency in CSR form: a flat edge arena plus an
+/// offsets table (`offsets.len() == n + 1`; node `i` owns
+/// `arena[offsets[i]..offsets[i + 1]]`).
+#[derive(Clone, Debug)]
+struct Csr {
+    arena: Vec<TaskId>,
+    offsets: Vec<u32>,
+}
+
+impl Csr {
+    fn from_lists(lists: &[Vec<TaskId>]) -> Self {
+        let total: usize = lists.iter().map(|l| l.len()).sum();
+        assert!(
+            total <= u32::MAX as usize,
+            "edge count {total} overflows the CSR offset table"
+        );
+        let mut arena = Vec::with_capacity(total);
+        let mut offsets = Vec::with_capacity(lists.len() + 1);
+        offsets.push(0u32);
+        for l in lists {
+            arena.extend_from_slice(l);
+            offsets.push(arena.len() as u32);
+        }
+        Csr { arena, offsets }
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[TaskId] {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        &self.arena[lo..hi]
+    }
+
+    #[inline]
+    fn degree(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+}
+
+/// An immutable directed acyclic task graph with forward and reverse CSR
 /// adjacency. Construct via [`crate::dag::DagBuilder`].
 #[derive(Clone, Debug)]
 pub struct Dag {
     tasks: Vec<TaskSpec>,
-    children: Vec<Vec<TaskId>>,
-    parents: Vec<Vec<TaskId>>,
+    children: Csr,
+    parents: Csr,
 }
 
 impl Dag {
@@ -31,10 +76,24 @@ impl Dag {
         children: Vec<Vec<TaskId>>,
         parents: Vec<Vec<TaskId>>,
     ) -> Self {
+        // Always-on: a short adjacency list would otherwise surface as an
+        // out-of-bounds offset-table index deep inside `validate` in
+        // release builds. This is a crate-internal construction contract,
+        // not a graph-shape question (those return `InvalidDag`).
+        assert_eq!(
+            tasks.len(),
+            children.len(),
+            "from_parts: children list does not cover every task"
+        );
+        assert_eq!(
+            tasks.len(),
+            parents.len(),
+            "from_parts: parents list does not cover every task"
+        );
         Dag {
+            children: Csr::from_lists(&children),
+            parents: Csr::from_lists(&parents),
             tasks,
-            children,
-            parents,
         }
     }
 
@@ -47,6 +106,11 @@ impl Dag {
         self.tasks.is_empty()
     }
 
+    /// Number of edges.
+    pub fn edge_count(&self) -> usize {
+        self.children.arena.len()
+    }
+
     /// All task ids in insertion order.
     pub fn task_ids(&self) -> impl Iterator<Item = TaskId> + '_ {
         (0..self.tasks.len() as u32).map(TaskId)
@@ -56,22 +120,30 @@ impl Dag {
         &self.tasks[id.index()]
     }
 
+    /// Out-edges of `id` as a contiguous slice of the CSR arena.
+    #[inline]
     pub fn children(&self, id: TaskId) -> &[TaskId] {
-        &self.children[id.index()]
+        self.children.row(id.index())
     }
 
+    /// In-edges of `id` as a contiguous slice of the CSR arena (parent
+    /// order is preserved from construction: it is the input order for
+    /// real-compute payloads).
+    #[inline]
     pub fn parents(&self, id: TaskId) -> &[TaskId] {
-        &self.parents[id.index()]
+        self.parents.row(id.index())
     }
 
     /// In-degree of a node (number of input dependencies).
+    #[inline]
     pub fn in_degree(&self, id: TaskId) -> usize {
-        self.parents[id.index()].len()
+        self.parents.degree(id.index())
     }
 
     /// Out-degree of a node (fan-out width).
+    #[inline]
     pub fn out_degree(&self, id: TaskId) -> usize {
-        self.children[id.index()].len()
+        self.children.degree(id.index())
     }
 
     /// Leaf nodes: tasks with no input dependencies. These are the roots of
@@ -92,7 +164,7 @@ impl Dag {
     /// time, so this always covers every node.
     pub fn topo_order(&self) -> Vec<TaskId> {
         let n = self.len();
-        let mut indeg: Vec<usize> = (0..n).map(|i| self.parents[i].len()).collect();
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.parents.degree(i)).collect();
         let mut queue: std::collections::VecDeque<TaskId> = self
             .task_ids()
             .filter(|t| indeg[t.index()] == 0)
@@ -192,5 +264,19 @@ mod tests {
     fn critical_path() {
         let d = diamond();
         assert_eq!(d.critical_path_len(), 3);
+    }
+
+    #[test]
+    fn csr_slices_are_contiguous_and_ordered() {
+        let d = diamond();
+        assert_eq!(d.edge_count(), 4);
+        assert_eq!(d.children(TaskId(0)), &[TaskId(1), TaskId(2)]);
+        assert_eq!(d.parents(TaskId(3)), &[TaskId(1), TaskId(2)]);
+        // Adjacent rows are adjacent in the arena: slice end of row 0's
+        // children equals slice start of row 1's.
+        let c0 = d.children(TaskId(0)).as_ptr();
+        let c1 = d.children(TaskId(1)).as_ptr();
+        // Row 0 holds 2 edges; row 1 starts right after them.
+        assert_eq!(c0.wrapping_add(2), c1);
     }
 }

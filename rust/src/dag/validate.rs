@@ -1,6 +1,9 @@
-//! DAG validation: acyclicity, edge symmetry, at least one leaf and sink.
+//! DAG validation: bounds (dangling edges), edge symmetry, duplicate
+//! edges, acyclicity (iterative three-color DFS), at least one leaf and
+//! sink. Every failure is reported as [`EngineError::InvalidDag`] — the
+//! engine never panics on a malformed graph.
 
-use crate::core::{EngineError, EngineResult};
+use crate::core::{EngineError, EngineResult, TaskId};
 use crate::dag::graph::Dag;
 
 /// Validates structural invariants. The builder's API makes cycles
@@ -12,14 +15,29 @@ pub fn validate(dag: &Dag) -> EngineResult<()> {
         return Err(EngineError::InvalidDag("empty DAG".into()));
     }
 
-    // Edge symmetry: every child edge has a matching parent edge.
+    // Bounds first: every edge endpoint must name a real task. Doing this
+    // before any other pass means no later check can index out of range.
     for t in dag.task_ids() {
         for &c in dag.children(t) {
             if c.index() >= n {
                 return Err(EngineError::InvalidDag(format!(
-                    "edge {t} -> {c} points outside the graph"
+                    "dangling child edge {t} -> {c} points outside the graph"
                 )));
             }
+        }
+        for &p in dag.parents(t) {
+            if p.index() >= n {
+                return Err(EngineError::InvalidDag(format!(
+                    "dangling parent edge {p} -> {t} points outside the graph"
+                )));
+            }
+        }
+    }
+
+    // Edge symmetry: every child edge has a matching parent edge and vice
+    // versa.
+    for t in dag.task_ids() {
+        for &c in dag.children(t) {
             if !dag.parents(c).contains(&t) {
                 return Err(EngineError::InvalidDag(format!(
                     "asymmetric edge {t} -> {c}"
@@ -35,9 +53,71 @@ pub fn validate(dag: &Dag) -> EngineResult<()> {
         }
     }
 
-    // Acyclicity: Kahn must consume every node.
-    if dag.topo_order().len() != n {
-        return Err(EngineError::InvalidDag("cycle detected".into()));
+    // No duplicate edges in either direction. A duplicate parent edge
+    // would corrupt the fan-in dependency counters; a duplicate child
+    // edge (even one whose reverse side is deduplicated) would make the
+    // scheduler loops decrement a child's in-degree twice and underflow.
+    for t in dag.task_ids() {
+        let mut seen = std::collections::HashSet::new();
+        for p in dag.parents(t) {
+            if !seen.insert(p) {
+                return Err(EngineError::InvalidDag(format!(
+                    "duplicate edge {p} -> {t}"
+                )));
+            }
+        }
+        let mut seen = std::collections::HashSet::new();
+        for c in dag.children(t) {
+            if !seen.insert(c) {
+                return Err(EngineError::InvalidDag(format!(
+                    "duplicate edge {t} -> {c}"
+                )));
+            }
+        }
+    }
+
+    // Acyclicity: iterative three-color DFS (white = unvisited, gray = on
+    // the current DFS path, black = finished). A child that is gray closes
+    // a cycle. Rooting the search at every white node covers graphs with
+    // no leaves at all (e.g. a pure cycle).
+    const WHITE: u8 = 0;
+    const GRAY: u8 = 1;
+    const BLACK: u8 = 2;
+    let mut color = vec![WHITE; n];
+    let mut stack: Vec<(TaskId, usize)> = Vec::new();
+    for root in dag.task_ids() {
+        if color[root.index()] != WHITE {
+            continue;
+        }
+        color[root.index()] = GRAY;
+        stack.push((root, 0));
+        while !stack.is_empty() {
+            let (t, i) = {
+                let frame = stack.last_mut().expect("non-empty stack");
+                let out = (frame.0, frame.1);
+                frame.1 += 1;
+                out
+            };
+            let kids = dag.children(t);
+            if i < kids.len() {
+                let c = kids[i];
+                match color[c.index()] {
+                    WHITE => {
+                        color[c.index()] = GRAY;
+                        stack.push((c, 0));
+                    }
+                    GRAY => {
+                        return Err(EngineError::InvalidDag(format!(
+                            "cycle detected through {c}"
+                        )));
+                    }
+                    _ => {}
+                }
+            } else {
+                color[t.index()] = BLACK;
+                stack.pop();
+            }
+        }
     }
 
     if dag.leaves().is_empty() {
@@ -47,20 +127,6 @@ pub fn validate(dag: &Dag) -> EngineResult<()> {
         return Err(EngineError::InvalidDag("no sink nodes".into()));
     }
 
-    // No duplicate parent edges (a task may not depend on the same task
-    // twice: it would corrupt the fan-in dependency counters).
-    for t in dag.task_ids() {
-        let ps = dag.parents(t);
-        let mut seen = std::collections::HashSet::new();
-        for p in ps {
-            if !seen.insert(p) {
-                return Err(EngineError::InvalidDag(format!(
-                    "duplicate edge {p} -> {t}"
-                )));
-            }
-        }
-    }
-
     Ok(())
 }
 
@@ -68,6 +134,7 @@ pub fn validate(dag: &Dag) -> EngineResult<()> {
 mod tests {
     use super::*;
     use crate::compute::Payload;
+    use crate::dag::graph::TaskSpec;
     use crate::dag::DagBuilder;
 
     #[test]
@@ -85,5 +152,100 @@ mod tests {
         b.add_task("b", Payload::Noop, 1, &[a, a]);
         let err = b.build().unwrap_err();
         assert!(matches!(err, EngineError::InvalidDag(_)));
+    }
+
+    /// Hand-assembles a (possibly malformed) graph, bypassing the builder.
+    fn raw(
+        n: usize,
+        children: Vec<Vec<TaskId>>,
+        parents: Vec<Vec<TaskId>>,
+    ) -> Dag {
+        let tasks = (0..n)
+            .map(|i| TaskSpec {
+                id: TaskId(i as u32),
+                name: format!("t{i}"),
+                payload: Payload::Noop,
+                output_bytes: 1,
+            })
+            .collect();
+        Dag::from_parts(tasks, children, parents)
+    }
+
+    #[test]
+    fn two_cycle_detected_not_panicked() {
+        // t0 <-> t1: symmetric edges, no leaves — the three-color DFS must
+        // report a cycle (not "no leaf nodes", and never a panic).
+        let dag = raw(
+            2,
+            vec![vec![TaskId(1)], vec![TaskId(0)]],
+            vec![vec![TaskId(1)], vec![TaskId(0)]],
+        );
+        let err = validate(&dag).unwrap_err();
+        match err {
+            EngineError::InvalidDag(msg) => assert!(msg.contains("cycle"), "{msg}"),
+            e => panic!("unexpected error {e}"),
+        }
+    }
+
+    #[test]
+    fn cycle_with_leaf_attached_detected() {
+        // t0 (leaf) -> t1 -> t2 -> t1: a cycle reachable from a leaf.
+        let dag = raw(
+            3,
+            vec![vec![TaskId(1)], vec![TaskId(2)], vec![TaskId(1)]],
+            vec![vec![], vec![TaskId(0), TaskId(2)], vec![TaskId(1)]],
+        );
+        let err = validate(&dag).unwrap_err();
+        match err {
+            EngineError::InvalidDag(msg) => assert!(msg.contains("cycle"), "{msg}"),
+            e => panic!("unexpected error {e}"),
+        }
+    }
+
+    #[test]
+    fn dangling_child_edge_rejected() {
+        let dag = raw(2, vec![vec![TaskId(7)], vec![]], vec![vec![], vec![]]);
+        let err = validate(&dag).unwrap_err();
+        match err {
+            EngineError::InvalidDag(msg) => assert!(msg.contains("dangling"), "{msg}"),
+            e => panic!("unexpected error {e}"),
+        }
+    }
+
+    #[test]
+    fn dangling_parent_edge_rejected() {
+        let dag = raw(2, vec![vec![], vec![]], vec![vec![], vec![TaskId(9)]]);
+        let err = validate(&dag).unwrap_err();
+        match err {
+            EngineError::InvalidDag(msg) => assert!(msg.contains("dangling"), "{msg}"),
+            e => panic!("unexpected error {e}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_child_edge_rejected_even_when_parents_deduped() {
+        // children(0) = [1, 1] but parents(1) = [0]: symmetry passes
+        // (contains-based), so the duplicate-children check must catch it
+        // before a scheduler underflows the child's in-degree.
+        let dag = raw(
+            2,
+            vec![vec![TaskId(1), TaskId(1)], vec![]],
+            vec![vec![], vec![TaskId(0)]],
+        );
+        let err = validate(&dag).unwrap_err();
+        match err {
+            EngineError::InvalidDag(msg) => assert!(msg.contains("duplicate"), "{msg}"),
+            e => panic!("unexpected error {e}"),
+        }
+    }
+
+    #[test]
+    fn asymmetric_edge_rejected() {
+        let dag = raw(2, vec![vec![TaskId(1)], vec![]], vec![vec![], vec![]]);
+        let err = validate(&dag).unwrap_err();
+        match err {
+            EngineError::InvalidDag(msg) => assert!(msg.contains("asymmetric"), "{msg}"),
+            e => panic!("unexpected error {e}"),
+        }
     }
 }

@@ -1,0 +1,325 @@
+//! Centralized execution (paper §III, Figs. 1–3), run by the shared
+//! [`EngineDriver`](crate::engine::EngineDriver) for any policy whose mode
+//! is [`ExecutionMode::Centralized`](crate::engine::ExecutionMode).
+//!
+//! One skeleton serves all three design iterations — a centralized
+//! scheduler tracks dependency counts, invokes one Lambda per ready task,
+//! and Lambdas read inputs from / write outputs to the KV store (no
+//! locality: this is the pre-WUKONG world). The
+//! [`CentralizedSpec`](crate::engine::CentralizedSpec) captures the two
+//! dimensions the paper studied:
+//!
+//! * **completion notification** — strawman: each Lambda opens a TCP
+//!   connection to the scheduler whose handling serializes on the
+//!   scheduler's accept loop (the "IRQ flood"); pub/sub and
+//!   parallel-invoker: a cheap Redis-PubSub message.
+//! * **invocation throughput** — strawman and pub/sub: a single invoker
+//!   process (a bounded pipeline of async API calls); parallel-invoker:
+//!   `invoker_processes` dedicated invoker processes with offloaded
+//!   dispatch.
+
+use crate::compute::{CostModel, DataObj};
+use crate::core::{clock, EngineError, EngineResult, ObjectKey, SimConfig, TaskId};
+use crate::dag::Dag;
+use crate::engine::policy::{CentralizedSpec, Notification};
+use crate::executor::{jitter_for, run_payload};
+use crate::faas::Faas;
+use crate::kvstore::{KvStore, Message};
+use crate::metrics::{JobReport, MetricsHub};
+use crate::rt::sync::{mpsc, Semaphore};
+use crate::runtime::PjrtRuntime;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Shared state of one centralized run.
+struct SchedState {
+    cfg: SimConfig,
+    metrics: Arc<MetricsHub>,
+    faas: Arc<Faas>,
+    kv: Arc<KvStore>,
+    cost: CostModel,
+    runtime: Option<PjrtRuntime>,
+    /// The scheduler machine's single-threaded message-processing loop.
+    sched_cpu: crate::rt::sync::Mutex<()>,
+    executed: Mutex<Vec<bool>>,
+    executed_count: AtomicU64,
+}
+
+impl SchedState {
+    fn mark_executed(&self, task: TaskId) -> EngineResult<()> {
+        let mut v = self.executed.lock().unwrap();
+        if v[task.index()] {
+            return Err(EngineError::Job(format!("task {task} executed twice")));
+        }
+        v[task.index()] = true;
+        self.executed_count.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// Runs `dag` under a centralized scheduler parameterized by `spec`.
+/// With `collect`, additionally fetches every sink's output from the KV
+/// store after completion (every task output is stored there in the
+/// centralized designs).
+pub(crate) async fn run(
+    cfg: &SimConfig,
+    spec: &CentralizedSpec,
+    runtime: Option<PjrtRuntime>,
+    metrics: Arc<MetricsHub>,
+    dag: &Dag,
+    collect: bool,
+    label: String,
+) -> (JobReport, std::collections::HashMap<TaskId, DataObj>) {
+    let faas = Faas::new(cfg.faas.clone(), metrics.clone());
+    let kv = KvStore::new(cfg.net.clone(), metrics.clone());
+    let state = Arc::new(SchedState {
+        cfg: cfg.clone(),
+        metrics: metrics.clone(),
+        faas,
+        kv: kv.clone(),
+        cost: CostModel::new(cfg.compute.clone()),
+        runtime,
+        sched_cpu: crate::rt::sync::Mutex::new(()),
+        executed: Mutex::new(vec![false; dag.len()]),
+        executed_count: AtomicU64::new(0),
+    });
+
+    // Invocation capacity: one pipelined invoker process, or
+    // `invoker_processes` of them for the parallel-invoker design.
+    let invoker_processes = spec.invoker_processes.max(1);
+    let invoke_slots = Semaphore::new(invoker_processes * cfg.net.invoke_pipeline.max(1));
+    let uses_pubsub = spec.notification == Notification::PubSub;
+
+    // Completion notifications: either a direct channel fed by the
+    // Lambdas' TCP connections (strawman) or a pub/sub subscription
+    // relayed into the same scheduler inbox.
+    let (tcp_tx, mut tcp_rx) = mpsc::unbounded::<Result<TaskId, EngineError>>();
+    let mut pubsub_rx = kv.subscribe("sched:done");
+    let relay = if uses_pubsub {
+        // The scheduler's subscriber thread: applies the (cheap)
+        // per-message pub/sub handling cost, serialized on the
+        // scheduler CPU, then feeds the scheduler loop.
+        let tx = tcp_tx.clone();
+        let state = Arc::clone(&state);
+        let pubsub_cpu_us = cfg.net.sched_msg_cpu_pubsub_us;
+        Some(crate::rt::spawn(async move {
+            while let Some(msg) = pubsub_rx.recv().await {
+                if let Message::TaskDone { task, .. } = msg {
+                    {
+                        let _cpu = state.sched_cpu.lock().await;
+                        clock::sleep(Duration::from_secs_f64(pubsub_cpu_us * 1e-6)).await;
+                    }
+                    if tx.send(Ok(task)).is_err() {
+                        break;
+                    }
+                }
+            }
+        }))
+    } else {
+        None
+    };
+
+    let t0 = clock::now();
+    let dag = Arc::new(dag.clone());
+
+    // --- scheduler bookkeeping ----------------------------------------
+    let mut indeg: Vec<usize> = dag.task_ids().map(|t| dag.in_degree(t)).collect();
+    let mut remaining = dag.len();
+    let mut failure: Option<EngineError> = None;
+
+    // Seed: every leaf is immediately ready.
+    let mut ready: Vec<TaskId> = dag.leaves();
+
+    let parallel_invokers = spec.offload_invocation;
+    while remaining > 0 {
+        // Dispatch all currently-ready tasks.
+        //
+        // Strawman / pub-sub: the scheduler's own event loop performs
+        // every Boto3 invoke — each call blocks the loop for the full
+        // invocation latency (paper §III-C: "the framework struggled
+        // to launch Lambda functions quickly enough").
+        //
+        // Parallel-invoker: invocation is offloaded to the dedicated
+        // invoker processes, but the scheduler still serializes the
+        // task closure and ships it over IPC (sched_dispatch_us per
+        // task) before an invoker picks it up.
+        for task in ready.drain(..) {
+            if parallel_invokers {
+                // Serialize + ship the task closure to an invoker
+                // process — scheduler CPU, contending with completion
+                // handling.
+                let _cpu = state.sched_cpu.lock().await;
+                clock::sleep(Duration::from_secs_f64(cfg.net.sched_dispatch_us * 1e-6)).await;
+            }
+            let sched = Arc::clone(&state);
+            let state = Arc::clone(&state);
+            let dag = Arc::clone(&dag);
+            let slots = Arc::clone(&invoke_slots);
+            let tcp_tx = tcp_tx.clone();
+            let dispatch = async move {
+                // Wait for an invoker slot (this is the §III-C
+                // bottleneck: limited invocation throughput).
+                let permit = slots.acquire_owned().await;
+                let body_state = Arc::clone(&state);
+                state
+                    .faas
+                    .invoke(move |_exec| {
+                        let state = Arc::clone(&body_state);
+                        let dag = Arc::clone(&dag);
+                        let tcp_tx = tcp_tx.clone();
+                        async move {
+                            let r = execute_single_task(&state, &dag, task).await;
+                            // Notify the scheduler of completion.
+                            match (uses_pubsub, r) {
+                                (_, Err(e)) => {
+                                    let _ = tcp_tx.send(Err(e));
+                                }
+                                (false, Ok(())) => {
+                                    // Strawman: TCP connection set-up +
+                                    // serialized scheduler-side handling.
+                                    clock::sleep(Duration::from_secs_f64(
+                                        state.cfg.net.tcp_conn_us * 1e-6,
+                                    ))
+                                    .await;
+                                    let _cpu = state.sched_cpu.lock().await;
+                                    clock::sleep(Duration::from_secs_f64(
+                                        state.cfg.net.sched_msg_cpu_us * 1e-6,
+                                    ))
+                                    .await;
+                                    let _ = tcp_tx.send(Ok(task));
+                                }
+                                (true, Ok(())) => {
+                                    state
+                                        .kv
+                                        .publish(
+                                            "sched:done",
+                                            Message::TaskDone {
+                                                task,
+                                                executor: crate::core::ExecutorId(0),
+                                            },
+                                        )
+                                        .await;
+                                }
+                            }
+                            Ok(())
+                        }
+                    })
+                    .await;
+                drop(permit);
+            };
+            if parallel_invokers {
+                // Invoker processes run concurrently with the loop.
+                crate::rt::spawn(dispatch);
+            } else {
+                // The single-process scheduler blocks on its own
+                // invocation API calls — holding the scheduler CPU,
+                // so completion handling (the strawman's TCP "IRQ
+                // flood") contends with invocation throughput.
+                let _cpu = sched.sched_cpu.lock().await;
+                dispatch.await;
+            }
+        }
+
+        // Await one completion from the scheduler inbox (successes
+        // and failures both land here; pub/sub successes arrive via
+        // the relay above).
+        let completed: Result<TaskId, EngineError> = match tcp_rx.recv().await {
+            Some(r) => r,
+            None => Err(EngineError::Job("scheduler inbox closed".into())),
+        };
+
+        match completed {
+            Ok(task) => {
+                remaining -= 1;
+                for &c in dag.children(task) {
+                    indeg[c.index()] -= 1;
+                    if indeg[c.index()] == 0 {
+                        ready.push(c);
+                    }
+                }
+            }
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+        }
+    }
+
+    let makespan = clock::now() - t0;
+    if let Some(r) = relay {
+        r.abort();
+    }
+    if failure.is_none() && state.executed_count.load(Ordering::Relaxed) != dag.len() as u64 {
+        failure = Some(EngineError::Job("not all tasks executed".into()));
+    }
+
+    // Result collection (real-compute mode): every output sits in the KV
+    // store, so the client fetches the sinks directly.
+    let mut outputs = std::collections::HashMap::new();
+    if collect && failure.is_none() {
+        for s in dag.sinks() {
+            match kv
+                .get(&ObjectKey::output(s), cfg.net.worker_bandwidth_bps)
+                .await
+            {
+                Ok(obj) => {
+                    outputs.insert(s, obj);
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+    }
+
+    let report = match failure {
+        None => JobReport::success(label, makespan, &metrics),
+        Some(e) => JobReport::failure(label, makespan, &metrics, e),
+    };
+    (report, outputs)
+}
+
+/// The single-task Lambda body common to all §III designs: fetch every
+/// input from the KV store, execute, store the output, (caller notifies).
+async fn execute_single_task(
+    state: &Arc<SchedState>,
+    dag: &Arc<Dag>,
+    task: TaskId,
+) -> EngineResult<()> {
+    let lambda_bps = state.cfg.net.lambda_bandwidth_bps;
+    let t_fetch = clock::now();
+    let mut inputs: Vec<DataObj> = Vec::with_capacity(dag.in_degree(task));
+    for &p in dag.parents(task) {
+        inputs.push(state.kv.get(&ObjectKey::output(p), lambda_bps).await?);
+    }
+    let fetch = clock::now() - t_fetch;
+    let spec = dag.task(task);
+    let t_exec = clock::now();
+    let out = run_payload(
+        &spec.payload,
+        spec.output_bytes,
+        &inputs,
+        state.faas.config().gflops,
+        jitter_for(&state.cfg, task),
+        &state.cost,
+        state.runtime.as_ref(),
+    )
+    .await?;
+    let compute = clock::now() - t_exec;
+    state.mark_executed(task)?;
+    // Store output and wait for the ACK (modeled inside put).
+    let t_store = clock::now();
+    state.kv.put(&ObjectKey::output(task), out, lambda_bps).await;
+    let store = clock::now() - t_store;
+    state.metrics.record_task(crate::metrics::TaskSpan {
+        task,
+        executor: crate::core::ExecutorId(0),
+        fetch,
+        compute,
+        store,
+        total: fetch + compute + store,
+    });
+    Ok(())
+}

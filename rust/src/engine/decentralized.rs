@@ -1,0 +1,145 @@
+//! Decentralized execution (paper §IV): static scheduling, initial Task
+//! Executor invocation, and client-side completion tracking — the WUKONG
+//! design, run by the shared [`EngineDriver`](crate::engine::EngineDriver)
+//! for any policy whose mode is
+//! [`ExecutionMode::Decentralized`](crate::engine::ExecutionMode).
+
+use crate::compute::DataObj;
+use crate::core::{clock, EngineError, SimConfig, TaskId};
+use crate::dag::Dag;
+use crate::engine::policy::{DecentralizedSpec, SchedulingPolicy};
+use crate::executor::ctx::WukongCtx;
+use crate::executor::task_executor::invoke_executor;
+use crate::faas::Faas;
+use crate::kvstore::{KvStore, Message};
+use crate::metrics::{JobReport, MetricsHub};
+use crate::runtime::PjrtRuntime;
+use crate::schedule::{self, LoweredOps};
+use crate::storage::StorageManager;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+/// Runs `dag` decentralized: generate static schedules, lower them through
+/// the policy's fan-out rule, launch the initial executors, track sink
+/// completions. Returns the report and (if `collect`) every sink output.
+#[allow(clippy::too_many_arguments)]
+pub(crate) async fn run(
+    cfg: &SimConfig,
+    spec: &DecentralizedSpec,
+    policy: &dyn SchedulingPolicy,
+    runtime: Option<PjrtRuntime>,
+    metrics: Arc<MetricsHub>,
+    dag: &Dag,
+    collect: bool,
+    label: String,
+) -> (JobReport, HashMap<TaskId, DataObj>) {
+    let dag = Arc::new(dag.clone());
+    let faas = Faas::new(cfg.faas.clone(), metrics.clone());
+    let kv = KvStore::with_ideal(cfg.net.clone(), metrics.clone(), cfg.wukong.ideal_storage);
+
+    // --- static scheduling (the Schedule Generator, §IV-B) -----------
+    let t0 = clock::now();
+    let schedules = Arc::new(schedule::generate(&dag));
+    // Lower the schedules into the dense per-task tables the executor hot
+    // loop walks, with the policy deciding each fan-out's invoker.
+    let lowered = LoweredOps::lower_with(&dag, |width| policy.fan_out(width, cfg));
+    let ctx = WukongCtx::with_lowered(
+        Arc::clone(&dag),
+        cfg.clone(),
+        faas,
+        kv.clone(),
+        metrics.clone(),
+        schedules,
+        runtime,
+        lowered,
+    );
+
+    // Storage manager receives DAG + schedules, starts the proxy, and
+    // the client subscribes to final results *before* any executor can
+    // publish one.
+    let manager = StorageManager::start(Arc::clone(&ctx));
+    let mut finals = manager.subscribe_finals();
+
+    // --- initial Task Executor invokers (§IV-C) -----------------------
+    // The scheduler's invoker processes split the leaves round-robin
+    // and each issues its invocations sequentially (each API call costs
+    // ~50 ms — this is exactly the effect parallel invokers exist for).
+    let leaves = dag.leaves();
+    let n_invokers = spec.num_invokers.max(1);
+    let mut invoker_handles = Vec::with_capacity(n_invokers.min(leaves.len()));
+    for inv in 0..n_invokers.min(leaves.len()) {
+        let my_leaves: Vec<TaskId> = leaves
+            .iter()
+            .copied()
+            .skip(inv)
+            .step_by(n_invokers)
+            .collect();
+        let ctx = Arc::clone(&ctx);
+        invoker_handles.push(crate::rt::spawn(async move {
+            for leaf in my_leaves {
+                invoke_executor(Arc::clone(&ctx), leaf, None).await;
+            }
+        }));
+    }
+
+    // --- completion tracking ------------------------------------------
+    let sinks: HashSet<TaskId> = dag.sinks().into_iter().collect();
+    let mut done: HashSet<TaskId> = HashSet::with_capacity(sinks.len());
+    let mut failure: Option<EngineError> = None;
+    while done.len() < sinks.len() {
+        match finals.recv().await {
+            Some(Message::FinalResult { task }) => {
+                done.insert(task);
+            }
+            Some(Message::JobFailed { reason }) => {
+                failure = Some(EngineError::Job(reason));
+                break;
+            }
+            Some(_) => {}
+            None => {
+                failure = Some(EngineError::Job(
+                    "final-result channel closed prematurely".into(),
+                ));
+                break;
+            }
+        }
+    }
+    let makespan = clock::now() - t0;
+
+    for h in invoker_handles {
+        h.await;
+    }
+
+    // --- result collection (real-compute mode) ------------------------
+    let mut outputs = HashMap::new();
+    if collect && failure.is_none() {
+        for &s in &sinks {
+            match manager.fetch_final(s).await {
+                Ok(obj) => {
+                    outputs.insert(s, obj);
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+    }
+    manager.shutdown();
+
+    // Exactly-once sanity: a successful run must have executed every
+    // task exactly once.
+    if failure.is_none() && !ctx.all_executed() {
+        failure = Some(EngineError::Job(format!(
+            "only {}/{} tasks executed",
+            ctx.executed_count(),
+            dag.len()
+        )));
+    }
+
+    let report = match failure {
+        None => JobReport::success(label, makespan, &metrics),
+        Some(e) => JobReport::failure(label, makespan, &metrics, e),
+    };
+    (report, outputs)
+}

@@ -1,0 +1,224 @@
+//! The shared engine driver: one generic front end that executes any
+//! [`SchedulingPolicy`] — centralized, decentralized, or serverful — over
+//! the common substrate (virtual-time runtime, FaaS platform, KV store,
+//! metrics, reporting).
+//!
+//! The driver owns everything the per-design engines used to duplicate:
+//! metrics-hub setup and sampling, report labelling, the run /
+//! run-with-outputs / run-detailed entry points, and the dispatch into the
+//! mode-specific execution loop. A new scheduling variant is a new policy
+//! file (see `rust/src/engine/README.md`), not a new engine.
+
+use crate::compute::DataObj;
+use crate::core::{SimConfig, TaskId};
+use crate::dag::Dag;
+use crate::engine::policy::{ExecutionMode, SchedulingPolicy};
+use crate::engine::{centralized, decentralized, serverful};
+use crate::metrics::{JobReport, MetricsHub};
+use crate::runtime::PjrtRuntime;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// The policy-driven engine. Construct with a policy, optionally attach a
+/// PJRT runtime / sampling / a label override, then `run` DAGs.
+pub struct EngineDriver {
+    cfg: SimConfig,
+    policy: Arc<dyn SchedulingPolicy>,
+    runtime: Option<PjrtRuntime>,
+    sampling: bool,
+    label: Option<String>,
+}
+
+impl EngineDriver {
+    /// Builds a driver for `policy`.
+    pub fn new(cfg: SimConfig, policy: impl SchedulingPolicy) -> Self {
+        Self::with_policy(cfg, Arc::new(policy))
+    }
+
+    /// Builds a driver for an already-shared policy object.
+    pub fn with_policy(cfg: SimConfig, policy: Arc<dyn SchedulingPolicy>) -> Self {
+        EngineDriver {
+            cfg,
+            policy,
+            runtime: None,
+            sampling: false,
+            label: None,
+        }
+    }
+
+    /// Attaches the PJRT runtime (real-compute payloads).
+    pub fn with_runtime(mut self, rt: PjrtRuntime) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Enables detailed per-task span sampling.
+    pub fn with_sampling(mut self) -> Self {
+        self.sampling = true;
+        self
+    }
+
+    /// Overrides the report label (e.g. "WUKONG (ideal storage)").
+    pub fn with_label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// The active policy's report label (or the override).
+    pub fn label(&self) -> String {
+        self.label.clone().unwrap_or_else(|| self.policy.label())
+    }
+
+    /// Runs `dag` to completion, returning the job report.
+    pub async fn run(&self, dag: &Dag) -> JobReport {
+        self.run_inner(dag, false).await.0
+    }
+
+    /// Runs `dag` and additionally fetches every sink's final output
+    /// (real-compute mode: the numeric results), whatever the policy's
+    /// mode: decentralized jobs fetch through the storage manager,
+    /// centralized jobs read the KV store, serverful jobs read resident
+    /// worker memory.
+    pub async fn run_with_outputs(&self, dag: &Dag) -> (JobReport, HashMap<TaskId, DataObj>) {
+        self.run_inner(dag, true).await
+    }
+
+    /// Also exposes the metrics hub for detailed analysis (Fig. 13).
+    pub async fn run_detailed(&self, dag: &Dag) -> (JobReport, Arc<MetricsHub>) {
+        let metrics = Arc::new(MetricsHub::new());
+        if self.sampling {
+            metrics.enable_sampling();
+        }
+        let report = self.run_with_metrics(dag, metrics.clone(), false).await.0;
+        (report, metrics)
+    }
+
+    async fn run_inner(&self, dag: &Dag, collect: bool) -> (JobReport, HashMap<TaskId, DataObj>) {
+        let metrics = Arc::new(MetricsHub::new());
+        if self.sampling {
+            metrics.enable_sampling();
+        }
+        self.run_with_metrics(dag, metrics, collect).await
+    }
+
+    async fn run_with_metrics(
+        &self,
+        dag: &Dag,
+        metrics: Arc<MetricsHub>,
+        collect: bool,
+    ) -> (JobReport, HashMap<TaskId, DataObj>) {
+        let label = self.label();
+        match self.policy.mode(&self.cfg) {
+            ExecutionMode::Decentralized(spec) => {
+                decentralized::run(
+                    &self.cfg,
+                    &spec,
+                    self.policy.as_ref(),
+                    self.runtime.clone(),
+                    metrics,
+                    dag,
+                    collect,
+                    label,
+                )
+                .await
+            }
+            ExecutionMode::Centralized(spec) => {
+                centralized::run(
+                    &self.cfg,
+                    &spec,
+                    self.runtime.clone(),
+                    metrics,
+                    dag,
+                    collect,
+                    label,
+                )
+                .await
+            }
+            ExecutionMode::Serverful(profile) => {
+                serverful::run(
+                    &self.cfg,
+                    &profile,
+                    self.runtime.clone(),
+                    metrics,
+                    dag,
+                    collect,
+                    label,
+                )
+                .await
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+    use crate::engine::policies::{
+        FanOutThresholdPolicy, ParallelInvokerPolicy, PubSubPolicy, ServerfulDaskPolicy,
+        StrawmanPolicy, WukongPolicy,
+    };
+    use crate::engine::run_sim;
+
+    fn diamond() -> Dag {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 64, &[]);
+        let x = b.add_task("b", Payload::Noop, 64, &[a]);
+        let y = b.add_task("c", Payload::Noop, 64, &[a]);
+        b.add_task("d", Payload::Noop, 64, &[x, y]);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn every_policy_runs_the_shared_driver() {
+        let drivers: Vec<EngineDriver> = vec![
+            EngineDriver::new(SimConfig::test(), WukongPolicy),
+            EngineDriver::new(SimConfig::test(), StrawmanPolicy),
+            EngineDriver::new(SimConfig::test(), PubSubPolicy),
+            EngineDriver::new(SimConfig::test(), ParallelInvokerPolicy),
+            EngineDriver::new(SimConfig::test(), ServerfulDaskPolicy::ec2()),
+            EngineDriver::new(SimConfig::test(), FanOutThresholdPolicy { threshold: 2 }),
+        ];
+        for driver in drivers {
+            let label = driver.label();
+            let report = run_sim(async move {
+                let dag = diamond();
+                driver.run(&dag).await
+            });
+            assert!(report.is_ok(), "{label}: {report:?}");
+            assert_eq!(report.tasks_executed, 4, "{label}");
+            assert_eq!(report.platform, label);
+        }
+    }
+
+    #[test]
+    fn run_with_outputs_collects_sinks_in_every_mode() {
+        let drivers: Vec<EngineDriver> = vec![
+            EngineDriver::new(SimConfig::test(), WukongPolicy),
+            EngineDriver::new(SimConfig::test(), PubSubPolicy),
+            EngineDriver::new(SimConfig::test(), ServerfulDaskPolicy::ec2()),
+        ];
+        for driver in drivers {
+            let label = driver.label();
+            let (report, outputs) = run_sim(async move {
+                let dag = diamond();
+                driver.run_with_outputs(&dag).await
+            });
+            assert!(report.is_ok(), "{label}: {report:?}");
+            assert_eq!(outputs.len(), 1, "{label}: one sink output");
+            assert_eq!(outputs.values().next().unwrap().bytes, 64, "{label}");
+        }
+    }
+
+    #[test]
+    fn label_override_applies() {
+        let driver =
+            EngineDriver::new(SimConfig::test(), WukongPolicy).with_label("WUKONG (custom)");
+        let report = run_sim(async move {
+            let dag = diamond();
+            driver.run(&dag).await
+        });
+        assert_eq!(report.platform, "WUKONG (custom)");
+    }
+}

@@ -1,11 +1,28 @@
-//! The WUKONG engine front end: DAG submission, the static scheduler's
-//! initial Task-Executor invokers, the client subscriber, and the
-//! simulation/real runtime entry points.
+//! The policy-driven engine front end.
+//!
+//! One shared [`EngineDriver`] executes every scheduling design in this
+//! crate; the designs themselves are [`SchedulingPolicy`] implementations
+//! in [`policies`] (see `rust/src/engine/README.md` for the architecture
+//! and how to add a new policy). The mode-specific execution loops live in
+//! the private `centralized` / `decentralized` / `serverful` modules;
+//! [`WukongEngine`] remains as the WUKONG-policy convenience wrapper used
+//! by the client facade and the real-compute examples.
 
 pub mod client;
+pub mod driver;
+pub mod policies;
+pub mod policy;
 pub mod wukong;
 
+pub(crate) mod centralized;
+pub(crate) mod decentralized;
+pub(crate) mod serverful;
+
 pub use client::{Client, JobResult};
+pub use driver::EngineDriver;
+pub use policy::{
+    CentralizedSpec, DecentralizedSpec, ExecutionMode, Notification, SchedulingPolicy,
+};
 pub use wukong::WukongEngine;
 
 /// Runs a future to completion in deterministic **virtual time**

@@ -1,0 +1,186 @@
+//! The paper's engines, re-expressed as scheduling policies.
+//!
+//! Each design iteration is now a handful of lines deciding mode and
+//! fan-out behaviour; the heavy machinery (invocation, KV traffic,
+//! completion tracking, metrics, reporting) lives once in the shared
+//! [`EngineDriver`](crate::engine::EngineDriver).
+
+use crate::core::{ClusterProfile, SimConfig};
+use crate::engine::policy::{
+    CentralizedSpec, DecentralizedSpec, ExecutionMode, Notification, SchedulingPolicy,
+};
+use crate::schedule::FanOutAction;
+
+/// Paper §III-A (Fig. 1): centralized scheduler, TCP completion
+/// notifications, a single invoker sharing the scheduler's event loop.
+pub struct StrawmanPolicy;
+
+impl SchedulingPolicy for StrawmanPolicy {
+    fn label(&self) -> String {
+        "Strawman".into()
+    }
+    fn mode(&self, _cfg: &SimConfig) -> ExecutionMode {
+        ExecutionMode::Centralized(CentralizedSpec {
+            notification: Notification::Tcp,
+            invoker_processes: 1,
+            offload_invocation: false,
+        })
+    }
+}
+
+/// Paper §III-B (Fig. 2): completion notifications move to pub/sub
+/// channels; invocation still blocks the scheduler loop.
+pub struct PubSubPolicy;
+
+impl SchedulingPolicy for PubSubPolicy {
+    fn label(&self) -> String {
+        "Pub/Sub".into()
+    }
+    fn mode(&self, _cfg: &SimConfig) -> ExecutionMode {
+        ExecutionMode::Centralized(CentralizedSpec {
+            notification: Notification::PubSub,
+            invoker_processes: 1,
+            offload_invocation: false,
+        })
+    }
+}
+
+/// Paper §III-C (Fig. 3): pub/sub notifications plus dedicated parallel
+/// invoker processes that lift invocation off the scheduler loop.
+pub struct ParallelInvokerPolicy;
+
+impl SchedulingPolicy for ParallelInvokerPolicy {
+    fn label(&self) -> String {
+        "Parallel-Invoker".into()
+    }
+    fn mode(&self, cfg: &SimConfig) -> ExecutionMode {
+        ExecutionMode::Centralized(CentralizedSpec {
+            notification: Notification::PubSub,
+            invoker_processes: cfg.wukong.num_invokers.max(1),
+            offload_invocation: true,
+        })
+    }
+}
+
+/// Paper §IV: WUKONG — static schedules per leaf, decentralized executors
+/// resolving fan-ins through KV counters, fan-outs above
+/// `cfg.wukong.max_task_fanout` delegated to the storage-manager proxy
+/// (the trait's default `fan_out` rule).
+pub struct WukongPolicy;
+
+impl SchedulingPolicy for WukongPolicy {
+    fn label(&self) -> String {
+        "WUKONG".into()
+    }
+    fn mode(&self, cfg: &SimConfig) -> ExecutionMode {
+        ExecutionMode::Decentralized(DecentralizedSpec {
+            num_invokers: cfg.wukong.num_invokers.max(1),
+        })
+    }
+}
+
+/// A WUKONG variant with an explicit fan-out delegation threshold,
+/// independent of the config — the knob for fan-out sweeps (Wukong
+/// follow-on paper, Carver et al. 2020). `usize::MAX` disables the proxy
+/// entirely; `2` routes every real fan-out through it.
+pub struct FanOutThresholdPolicy {
+    pub threshold: usize,
+}
+
+impl SchedulingPolicy for FanOutThresholdPolicy {
+    fn label(&self) -> String {
+        format!("WUKONG (fanout>={})", self.threshold)
+    }
+    fn mode(&self, cfg: &SimConfig) -> ExecutionMode {
+        ExecutionMode::Decentralized(DecentralizedSpec {
+            num_invokers: cfg.wukong.num_invokers.max(1),
+        })
+    }
+    fn fan_out(&self, width: usize, _cfg: &SimConfig) -> FanOutAction {
+        FanOutAction::threshold_rule(width, self.threshold)
+    }
+}
+
+/// Paper §V: the serverful Dask-distributed baseline on a fixed cluster.
+pub struct ServerfulDaskPolicy {
+    pub profile: ClusterProfile,
+}
+
+impl ServerfulDaskPolicy {
+    /// The paper's 5-node EC2 cluster.
+    pub fn ec2() -> Self {
+        ServerfulDaskPolicy {
+            profile: ClusterProfile::ec2(),
+        }
+    }
+
+    /// The paper's laptop.
+    pub fn laptop() -> Self {
+        ServerfulDaskPolicy {
+            profile: ClusterProfile::laptop(),
+        }
+    }
+}
+
+impl SchedulingPolicy for ServerfulDaskPolicy {
+    fn label(&self) -> String {
+        self.profile.name.clone()
+    }
+    fn mode(&self, _cfg: &SimConfig) -> ExecutionMode {
+        ExecutionMode::Serverful(self.profile.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes_match_paper_designs() {
+        let cfg = SimConfig::test();
+        assert!(matches!(
+            StrawmanPolicy.mode(&cfg),
+            ExecutionMode::Centralized(CentralizedSpec {
+                notification: Notification::Tcp,
+                invoker_processes: 1,
+                offload_invocation: false,
+            })
+        ));
+        assert!(matches!(
+            PubSubPolicy.mode(&cfg),
+            ExecutionMode::Centralized(CentralizedSpec {
+                notification: Notification::PubSub,
+                invoker_processes: 1,
+                offload_invocation: false,
+            })
+        ));
+        match ParallelInvokerPolicy.mode(&cfg) {
+            ExecutionMode::Centralized(s) => {
+                assert_eq!(s.notification, Notification::PubSub);
+                assert_eq!(s.invoker_processes, cfg.wukong.num_invokers);
+                assert!(s.offload_invocation);
+            }
+            m => panic!("unexpected mode {m:?}"),
+        }
+        assert!(matches!(
+            WukongPolicy.mode(&cfg),
+            ExecutionMode::Decentralized(_)
+        ));
+        assert!(matches!(
+            ServerfulDaskPolicy::ec2().mode(&cfg),
+            ExecutionMode::Serverful(_)
+        ));
+    }
+
+    #[test]
+    fn threshold_policy_overrides_fan_out() {
+        let cfg = SimConfig::test();
+        let always = FanOutThresholdPolicy { threshold: 2 };
+        assert_eq!(always.fan_out(2, &cfg), FanOutAction::Delegate);
+        let never = FanOutThresholdPolicy {
+            threshold: usize::MAX,
+        };
+        assert_eq!(never.fan_out(1 << 20, &cfg), FanOutAction::Invoke);
+        assert!(always.label().contains("fanout"));
+    }
+}

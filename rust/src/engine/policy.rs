@@ -1,0 +1,118 @@
+//! The scheduling-policy seam: every engine in this crate — the paper's
+//! centralized design iterations (§III), WUKONG's decentralized design
+//! (§IV), and the serverful Dask baseline (§V) — is a small
+//! [`SchedulingPolicy`] implementation executed by the one shared
+//! [`EngineDriver`](crate::engine::EngineDriver).
+//!
+//! A policy decides exactly three things:
+//!
+//! 1. **mode** — whether scheduling is centralized (one scheduler process
+//!    tracks dependencies and invokes a Lambda per ready task),
+//!    decentralized (static schedules + dynamic fan-in resolution on the
+//!    executors), or serverful (a fixed worker pool);
+//! 2. **who invokes executors at fan-outs** (decentralized mode) — the
+//!    executor itself or the storage-manager proxy, per fan-out width;
+//! 3. **how fan-ins resolve** — implied by the mode: centralized and
+//!    serverful modes resolve them in the scheduler's in-degree
+//!    bookkeeping, decentralized mode through atomic KV-store dependency
+//!    counters (last writer continues).
+
+use crate::core::{ClusterProfile, SimConfig};
+use crate::schedule::FanOutAction;
+
+/// How completion notifications reach a centralized scheduler
+/// (paper §III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Notification {
+    /// Each Lambda opens a short-lived TCP connection whose handling
+    /// serializes on the scheduler's accept loop (the strawman's "IRQ
+    /// flood").
+    Tcp,
+    /// A cheap Redis-PubSub message relayed into the scheduler inbox.
+    PubSub,
+}
+
+/// Parameters of a centralized run (paper §III, Figs. 1–3).
+#[derive(Clone, Debug)]
+pub struct CentralizedSpec {
+    /// Completion-notification transport.
+    pub notification: Notification,
+    /// Dedicated invoker processes; the invocation pipeline depth is
+    /// `invoker_processes * cfg.net.invoke_pipeline`.
+    pub invoker_processes: usize,
+    /// True when invocation is offloaded to the invoker pool and the
+    /// scheduler only pays per-task dispatch (parallel-invoker, Fig. 3);
+    /// false when the scheduler's own event loop performs every
+    /// invocation API call (strawman, pub/sub).
+    pub offload_invocation: bool,
+}
+
+/// Parameters of a decentralized run (paper §IV).
+#[derive(Clone, Debug)]
+pub struct DecentralizedSpec {
+    /// Leaf Task-Invoker processes in the static scheduler (§IV-C).
+    pub num_invokers: usize,
+}
+
+/// How the shared driver executes a job under a given policy.
+#[derive(Clone, Debug)]
+pub enum ExecutionMode {
+    /// One central scheduler process tracks dependency counts and invokes
+    /// one Lambda per ready task (paper §III).
+    Centralized(CentralizedSpec),
+    /// Static schedules per leaf + decentralized executors that schedule
+    /// their own sub-graphs (paper §IV — WUKONG).
+    Decentralized(DecentralizedSpec),
+    /// Fixed worker pool with a centralized locality-aware scheduler and
+    /// direct worker-to-worker transfers (paper §V — serverful Dask).
+    Serverful(ClusterProfile),
+}
+
+/// A scheduling policy: the per-design decisions layered over the shared
+/// driver. Implementations are tiny — see [`crate::engine::policies`] for
+/// the five paper designs and `rust/src/engine/README.md` for how to add
+/// a new one.
+pub trait SchedulingPolicy: 'static {
+    /// Report label ("WUKONG", "Strawman", ...). The driver's
+    /// `with_label` overrides it.
+    fn label(&self) -> String;
+
+    /// Static/dynamic/centralized: how the driver runs the job.
+    fn mode(&self, cfg: &SimConfig) -> ExecutionMode;
+
+    /// Decentralized mode only: the action at a fan-out with `width`
+    /// out-edges (`width >= 2`; sinks and trivial fan-outs never reach the
+    /// policy). Baked into the lowered schedule tables at job start, so
+    /// the executor hot loop never performs dynamic policy dispatch.
+    ///
+    /// Default: WUKONG's threshold rule — delegate to the storage-manager
+    /// proxy at or above `cfg.wukong.max_task_fanout`.
+    fn fan_out(&self, width: usize, cfg: &SimConfig) -> FanOutAction {
+        FanOutAction::threshold_rule(width, cfg.wukong.max_task_fanout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct DefaultFanOut;
+    impl SchedulingPolicy for DefaultFanOut {
+        fn label(&self) -> String {
+            "test".into()
+        }
+        fn mode(&self, _cfg: &SimConfig) -> ExecutionMode {
+            ExecutionMode::Decentralized(DecentralizedSpec { num_invokers: 1 })
+        }
+    }
+
+    #[test]
+    fn default_fan_out_rule_uses_threshold() {
+        let cfg = SimConfig::test(); // max_task_fanout = 10
+        let p = DefaultFanOut;
+        assert_eq!(p.fan_out(2, &cfg), FanOutAction::Invoke);
+        assert_eq!(p.fan_out(9, &cfg), FanOutAction::Invoke);
+        assert_eq!(p.fan_out(10, &cfg), FanOutAction::Delegate);
+        assert_eq!(p.fan_out(1000, &cfg), FanOutAction::Delegate);
+    }
+}

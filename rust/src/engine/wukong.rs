@@ -1,203 +1,63 @@
-//! The WUKONG engine: static scheduling + initial executor invocation +
-//! client-side completion tracking (paper §IV, Fig. 5).
+//! The WUKONG engine (paper §IV, Fig. 5) — a thin convenience wrapper
+//! binding the shared [`EngineDriver`] to the
+//! [`WukongPolicy`](crate::engine::policies::WukongPolicy). Static
+//! scheduling, executor invocation, fan-in resolution and completion
+//! tracking all run in the driver's decentralized mode.
 
 use crate::compute::DataObj;
-use crate::core::{clock, EngineError, SimConfig, TaskId};
+use crate::core::{SimConfig, TaskId};
 use crate::dag::Dag;
-use crate::executor::ctx::WukongCtx;
-use crate::executor::task_executor::invoke_executor;
-use crate::faas::Faas;
-use crate::kvstore::{KvStore, Message};
+use crate::engine::driver::EngineDriver;
+use crate::engine::policies::WukongPolicy;
 use crate::metrics::{JobReport, MetricsHub};
 use crate::runtime::PjrtRuntime;
-use crate::schedule;
-use crate::storage::StorageManager;
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// The serverless DAG engine under study.
 pub struct WukongEngine {
-    cfg: SimConfig,
-    runtime: Option<PjrtRuntime>,
-    /// Enable per-task/per-op sampling (Fig. 13 runs).
-    sampling: bool,
-    /// Platform label in reports.
-    label: String,
+    driver: EngineDriver,
 }
 
 impl WukongEngine {
     pub fn new(cfg: SimConfig) -> Self {
         WukongEngine {
-            cfg,
-            runtime: None,
-            sampling: false,
-            label: "WUKONG".into(),
+            driver: EngineDriver::new(cfg, WukongPolicy),
         }
     }
 
     /// Attaches the PJRT runtime (real-compute payloads).
     pub fn with_runtime(mut self, rt: PjrtRuntime) -> Self {
-        self.runtime = Some(rt);
+        self.driver = self.driver.with_runtime(rt);
         self
     }
 
     /// Enables detailed per-task span sampling.
     pub fn with_sampling(mut self) -> Self {
-        self.sampling = true;
+        self.driver = self.driver.with_sampling();
         self
     }
 
     /// Overrides the report label (e.g. "WUKONG (ideal storage)").
     pub fn with_label(mut self, label: impl Into<String>) -> Self {
-        self.label = label.into();
+        self.driver = self.driver.with_label(label);
         self
     }
 
     /// Runs `dag` to completion, returning the job report.
     pub async fn run(&self, dag: &Dag) -> JobReport {
-        self.run_inner(dag, false).await.0
+        self.driver.run(dag).await
     }
 
     /// Runs `dag` and additionally fetches every sink's final output
     /// (real-compute mode: the numeric results).
     pub async fn run_with_outputs(&self, dag: &Dag) -> (JobReport, HashMap<TaskId, DataObj>) {
-        let (report, outputs) = self.run_inner(dag, true).await;
-        (report, outputs)
+        self.driver.run_with_outputs(dag).await
     }
 
     /// Also exposes the metrics hub for detailed analysis (Fig. 13).
     pub async fn run_detailed(&self, dag: &Dag) -> (JobReport, Arc<MetricsHub>) {
-        let metrics = Arc::new(MetricsHub::new());
-        if self.sampling {
-            metrics.enable_sampling();
-        }
-        let report = self.run_with_metrics(dag, metrics.clone(), false).await.0;
-        (report, metrics)
-    }
-
-    async fn run_inner(&self, dag: &Dag, collect: bool) -> (JobReport, HashMap<TaskId, DataObj>) {
-        let metrics = Arc::new(MetricsHub::new());
-        if self.sampling {
-            metrics.enable_sampling();
-        }
-        self.run_with_metrics(dag, metrics, collect).await
-    }
-
-    async fn run_with_metrics(
-        &self,
-        dag: &Dag,
-        metrics: Arc<MetricsHub>,
-        collect: bool,
-    ) -> (JobReport, HashMap<TaskId, DataObj>) {
-        let dag = Arc::new(dag.clone());
-        let faas = Faas::new(self.cfg.faas.clone(), metrics.clone());
-        let kv = KvStore::with_ideal(
-            self.cfg.net.clone(),
-            metrics.clone(),
-            self.cfg.wukong.ideal_storage,
-        );
-
-        // --- static scheduling (the Schedule Generator, §IV-B) -----------
-        let t0 = clock::now();
-        let schedules = Arc::new(schedule::generate(&dag));
-        let ctx = WukongCtx::new(
-            Arc::clone(&dag),
-            self.cfg.clone(),
-            faas,
-            kv.clone(),
-            metrics.clone(),
-            schedules,
-            self.runtime.clone(),
-        );
-
-        // Storage manager receives DAG + schedules, starts the proxy, and
-        // the client subscribes to final results *before* any executor can
-        // publish one.
-        let manager = StorageManager::start(Arc::clone(&ctx));
-        let mut finals = manager.subscribe_finals();
-
-        // --- initial Task Executor invokers (§IV-C) -----------------------
-        // The scheduler's invoker processes split the leaves round-robin
-        // and each issues its invocations sequentially (each API call costs
-        // ~50 ms — this is exactly the effect parallel invokers exist for).
-        let leaves = dag.leaves();
-        let n_invokers = self.cfg.wukong.num_invokers.max(1);
-        let mut invoker_handles = Vec::with_capacity(n_invokers.min(leaves.len()));
-        for inv in 0..n_invokers.min(leaves.len()) {
-            let my_leaves: Vec<TaskId> = leaves
-                .iter()
-                .copied()
-                .skip(inv)
-                .step_by(n_invokers)
-                .collect();
-            let ctx = Arc::clone(&ctx);
-            invoker_handles.push(crate::rt::spawn(async move {
-                for leaf in my_leaves {
-                    invoke_executor(Arc::clone(&ctx), leaf, None).await;
-                }
-            }));
-        }
-
-        // --- completion tracking ------------------------------------------
-        let sinks: HashSet<TaskId> = dag.sinks().into_iter().collect();
-        let mut done: HashSet<TaskId> = HashSet::with_capacity(sinks.len());
-        let mut failure: Option<EngineError> = None;
-        while done.len() < sinks.len() {
-            match finals.recv().await {
-                Some(Message::FinalResult { task }) => {
-                    done.insert(task);
-                }
-                Some(Message::JobFailed { reason }) => {
-                    failure = Some(EngineError::Job(reason));
-                    break;
-                }
-                Some(_) => {}
-                None => {
-                    failure = Some(EngineError::Job(
-                        "final-result channel closed prematurely".into(),
-                    ));
-                    break;
-                }
-            }
-        }
-        let makespan = clock::now() - t0;
-
-        for h in invoker_handles {
-            h.await;
-        }
-
-        // --- result collection (real-compute mode) ------------------------
-        let mut outputs = HashMap::new();
-        if collect && failure.is_none() {
-            for &s in &sinks {
-                match manager.fetch_final(s).await {
-                    Ok(obj) => {
-                        outputs.insert(s, obj);
-                    }
-                    Err(e) => {
-                        failure = Some(e);
-                        break;
-                    }
-                }
-            }
-        }
-        manager.shutdown();
-
-        // Exactly-once sanity: a successful run must have executed every
-        // task exactly once.
-        if failure.is_none() && !ctx.all_executed() {
-            failure = Some(EngineError::Job(format!(
-                "only {}/{} tasks executed",
-                ctx.executed_count(),
-                dag.len()
-            )));
-        }
-
-        let report = match failure {
-            None => JobReport::success(self.label.clone(), makespan, &metrics),
-            Some(e) => JobReport::failure(self.label.clone(), makespan, &metrics, e),
-        };
-        (report, outputs)
+        self.driver.run_detailed(dag).await
     }
 }
 

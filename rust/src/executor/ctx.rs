@@ -7,7 +7,7 @@ use crate::faas::Faas;
 use crate::kvstore::KvStore;
 use crate::metrics::MetricsHub;
 use crate::runtime::PjrtRuntime;
-use crate::schedule::ScheduleSet;
+use crate::schedule::{LoweredOps, ScheduleSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -25,6 +25,9 @@ pub struct WukongCtx {
     pub metrics: Arc<MetricsHub>,
     pub cost: CostModel,
     pub schedules: Arc<ScheduleSet>,
+    /// Dense per-task lowering of the schedules (in-degree table +
+    /// precomputed fan-out actions) — the arrays the hot loop walks.
+    pub lowered: LoweredOps,
     pub runtime: Option<PjrtRuntime>,
     /// Exactly-once execution guard (simulation invariant check; in the
     /// real system this property is guaranteed by the fan-in counters).
@@ -33,6 +36,9 @@ pub struct WukongCtx {
 }
 
 impl WukongCtx {
+    /// Builds a context with the default fan-out lowering derived from
+    /// `cfg.wukong.max_task_fanout`.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         dag: Arc<Dag>,
         cfg: SimConfig,
@@ -42,7 +48,25 @@ impl WukongCtx {
         schedules: Arc<ScheduleSet>,
         runtime: Option<PjrtRuntime>,
     ) -> Arc<Self> {
+        let lowered = LoweredOps::lower(&dag, cfg.wukong.max_task_fanout);
+        Self::with_lowered(dag, cfg, faas, kv, metrics, schedules, runtime, lowered)
+    }
+
+    /// Builds a context with an explicit lowering (the engine driver lowers
+    /// through the active [`SchedulingPolicy`](crate::engine::SchedulingPolicy)).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_lowered(
+        dag: Arc<Dag>,
+        cfg: SimConfig,
+        faas: Arc<Faas>,
+        kv: Arc<KvStore>,
+        metrics: Arc<MetricsHub>,
+        schedules: Arc<ScheduleSet>,
+        runtime: Option<PjrtRuntime>,
+        lowered: LoweredOps,
+    ) -> Arc<Self> {
         let n = dag.len();
+        assert_eq!(lowered.len(), n, "lowering does not cover the DAG");
         Arc::new(WukongCtx {
             dag,
             cost: CostModel::new(cfg.compute.clone()),
@@ -51,6 +75,7 @@ impl WukongCtx {
             kv,
             metrics,
             schedules,
+            lowered,
             runtime,
             executed: Mutex::new(vec![false; n]),
             executed_count: AtomicU64::new(0),
@@ -59,11 +84,7 @@ impl WukongCtx {
 
     /// Deterministic per-task duration jitter derived from the seed.
     pub fn jitter_for(&self, task: TaskId) -> f64 {
-        if self.cfg.compute.jitter <= 0.0 {
-            return 1.0;
-        }
-        let mut rng = SplitMix64::new(self.cfg.seed ^ (task.0 as u64).wrapping_mul(0x9E37));
-        rng.jitter(self.cfg.compute.jitter)
+        jitter_for(&self.cfg, task)
     }
 
     /// Marks `task` executed; errors if it was already executed (the
@@ -92,6 +113,17 @@ impl WukongCtx {
     pub fn lambda_bps(&self) -> f64 {
         self.cfg.net.lambda_bandwidth_bps
     }
+}
+
+/// Deterministic per-task duration jitter derived from the simulation
+/// seed — shared by every scheduling mode so identical (cfg, task) pairs
+/// always jitter identically across engines.
+pub fn jitter_for(cfg: &SimConfig, task: TaskId) -> f64 {
+    if cfg.compute.jitter <= 0.0 {
+        return 1.0;
+    }
+    let mut rng = SplitMix64::new(cfg.seed ^ (task.0 as u64).wrapping_mul(0x9E37));
+    rng.jitter(cfg.compute.jitter)
 }
 
 #[cfg(test)]
@@ -129,5 +161,12 @@ mod tests {
     fn jitter_deterministic_and_unit_when_disabled() {
         let c = ctx();
         assert_eq!(c.jitter_for(TaskId(0)), 1.0); // test config: jitter off
+    }
+
+    #[test]
+    fn default_lowering_covers_dag() {
+        let c = ctx();
+        assert_eq!(c.lowered.len(), c.dag.len());
+        assert_eq!(c.lowered.in_degree(TaskId(1)), 1);
     }
 }

@@ -3,8 +3,11 @@
 //! Each executor receives a static schedule, executes the tasks along a
 //! single path through it, caches intermediate outputs in local memory
 //! (data locality), resolves fan-in conflicts through KV-store dependency
-//! counters, and invokes new executors at fan-outs (directly for small
-//! fan-outs, via the storage-manager proxy for large ones).
+//! counters, and invokes new executors at fan-outs. Its hot loop consumes
+//! the **lowered** schedule tables (flat per-task arrays, see
+//! [`crate::schedule::LoweredOps`]) rather than nested structures; the
+//! fan-out invoker choice (direct vs storage-manager proxy) is baked into
+//! those tables by the active scheduling policy.
 
 pub mod cache;
 pub mod ctx;
@@ -12,6 +15,6 @@ pub mod exec;
 pub mod task_executor;
 
 pub use cache::LocalCache;
-pub use ctx::WukongCtx;
+pub use ctx::{jitter_for, WukongCtx};
 pub use exec::run_payload;
 pub use task_executor::run_executor;

@@ -2,7 +2,9 @@
 //!
 //! An executor starts at one node of its static schedule (a leaf for the
 //! initial executors; a fan-out out-edge for dynamically invoked ones) and
-//! walks a single path:
+//! walks a single path, driven entirely by the **lowered** schedule
+//! tables ([`crate::schedule::LoweredOps`]: flat in-degree and fan-out
+//! action arrays) and the CSR adjacency slices of the DAG:
 //!
 //! * **fan-in** (in-degree > 1): publish my in-edge output, atomically
 //!   increment the dependency counter; continue only if mine was the last
@@ -10,11 +12,12 @@
 //!   wait time).
 //! * **execute**: gather inputs (local cache first — data locality — then
 //!   KV store), run the payload, cache the output.
-//! * **fan-out**: trivial (1 out-edge) → continue; n > 1 → store output
-//!   once, *become* the executor of the first out-edge and invoke
-//!   executors for the rest (delegating to the storage-manager proxy when
-//!   the fan-out exceeds `max_task_fanout`); 0 out-edges → sink: store the
-//!   final result and announce it.
+//! * **fan-out**: the action is precomputed at lowering time —
+//!   `Continue` (1 out-edge) → walk on; `Invoke` → store output once,
+//!   *become* the executor of the first out-edge and invoke executors for
+//!   the rest; `Delegate` → one pub/sub message hands the invocations to
+//!   the storage-manager proxy; `Sink` → store the final result and
+//!   announce it.
 
 use crate::compute::DataObj;
 use crate::core::{clock, EngineResult, ExecutorId, ObjectKey, TaskId};
@@ -23,6 +26,7 @@ use crate::executor::ctx::{WukongCtx, FANOUT_CHANNEL, FINAL_CHANNEL};
 use crate::executor::exec::run_payload;
 use crate::kvstore::Message;
 use crate::metrics::TaskSpan;
+use crate::schedule::FanOutAction;
 use std::sync::Arc;
 
 /// Runs one Task Executor starting at `start`. `arrived_from` is the
@@ -39,7 +43,7 @@ pub async fn run_executor(
     let mut from = arrived_from;
 
     loop {
-        let indeg = ctx.dag.in_degree(current);
+        let indeg = ctx.lowered.in_degree(current);
 
         // ---- fan-in resolution -----------------------------------------
         if indeg > 1 {
@@ -107,11 +111,13 @@ pub async fn run_executor(
         }
 
         // ---- fan-out ------------------------------------------------------
+        // The action was resolved at lowering time; `children` is a
+        // contiguous CSR slice.
         let children: &[TaskId] = ctx.dag.children(current);
         let t_store = clock::now();
-        match children.len() {
+        match ctx.lowered.fan_out_action(current) {
             // Sink: persist the final result and announce it.
-            0 => {
+            FanOutAction::Sink => {
                 store_once(&ctx, &mut cache, current).await;
                 ctx.kv
                     .publish(FINAL_CHANNEL, Message::FinalResult { task: current })
@@ -129,7 +135,7 @@ pub async fn run_executor(
             }
             // Trivial fan-out: continue along the single out-edge. No
             // network I/O at all — this is WUKONG's data-locality win.
-            1 => {
+            FanOutAction::Continue => {
                 ctx.metrics.record_task(TaskSpan {
                     task: current,
                     executor: exec_id,
@@ -142,12 +148,13 @@ pub async fn run_executor(
                 current = children[0];
             }
             // Real fan-out: store the output once (the invoked executors
-            // read it from the KV store), invoke executors for all but the
-            // first out-edge, and become the executor of the first.
-            n => {
+            // read it from the KV store), hand the non-continued out-edges
+            // to whoever the policy chose as the invoker, and become the
+            // executor of the first out-edge.
+            action @ (FanOutAction::Invoke | FanOutAction::Delegate) => {
                 store_once(&ctx, &mut cache, current).await;
                 let invoke: Vec<TaskId> = children[1..].to_vec();
-                if n >= ctx.cfg.wukong.max_task_fanout {
+                if action == FanOutAction::Delegate {
                     // Large fan-out: delegate invocation to the storage
                     // manager's proxy (paper §IV-D) with a single pub/sub
                     // message carrying the fan-out's DAG location.

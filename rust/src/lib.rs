@@ -8,15 +8,48 @@
 //! store with pub/sub, network cost models, and a purpose-built async
 //! runtime with a virtual clock), all executing in deterministic virtual
 //! time — plus a real-compute mode in which task payloads run AOT-compiled
-//! JAX/Pallas kernels through the PJRT runtime.
+//! JAX/Pallas kernels through the PJRT runtime (feature `xla`).
 //!
 //! ## Layering
+//!
+//! Across repositories:
 //! * **L3 (this crate)** — the coordination system under study.
 //! * **L2 (python/compile/model.py)** — JAX task payloads, AOT-lowered to
 //!   HLO text at build time (`make artifacts`).
 //! * **L1 (python/compile/kernels/)** — Pallas kernels called by L2.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! Within this crate, the scheduling core is **policy-driven** and flows
+//! bottom-up through five layers:
+//!
+//! 1. [`core`] + [`dag`] — substrate types and the task graph. [`dag::Dag`]
+//!    stores adjacency in **CSR form**: one flat edge arena per direction
+//!    plus offset tables, so `children(t)` / `parents(t)` are contiguous
+//!    slices and degrees are offset subtractions. [`dag::DagBuilder`]
+//!    validates graphs up front (three-color-DFS cycle detection, dangling
+//!    and duplicate edges) and returns [`core::EngineError`] instead of
+//!    panicking.
+//! 2. [`schedule`] — the static Schedule Generator (one schedule per leaf,
+//!    paper §IV-B) and its **lowering** ([`schedule::LoweredOps`]): the
+//!    per-leaf op vectors collapse into dense per-task arrays (in-degree
+//!    table + precomputed [`schedule::FanOutAction`]s) that encode the
+//!    active policy's fan-out decisions.
+//! 3. [`executor`] — the Task Executor hot loop (paper §IV-C) consuming
+//!    the lowered tables and CSR slices: fan-in resolution through
+//!    KV-store dependency counters, local-cache data locality, fan-out
+//!    invocation (direct or via the storage-manager proxy).
+//! 4. [`engine`] — the **[`engine::SchedulingPolicy`] trait** and the one
+//!    shared **[`engine::EngineDriver`]** that executes any policy in one
+//!    of three modes: centralized (paper §III), decentralized (§IV), or
+//!    serverful (§V). All five paper designs are ~tens-of-lines policies
+//!    in [`engine::policies`]; see `rust/src/engine/README.md` for how to
+//!    add a new one.
+//! 5. [`baselines`] — compatibility wrappers ([`baselines::CentralizedEngine`],
+//!    [`baselines::DaskCluster`]) binding the driver to the baseline
+//!    policies, kept for the original engine-per-design API.
+//!
+//! Around the core: [`faas`], [`kvstore`], [`storage`], [`compute`],
+//! [`metrics`], [`rt`] (virtual-time runtime), [`runtime`] (PJRT bridge),
+//! [`workloads`] and [`bench`] (the paper's evaluation).
 //!
 //! ## Quick start
 //! ```no_run
@@ -27,6 +60,18 @@
 //! let report = engine::run_sim(async move {
 //!     WukongEngine::new(cfg).run(&dag).await
 //! });
+//! println!("{}", report.row());
+//! ```
+//!
+//! Any scheduling variant runs through the same driver:
+//! ```no_run
+//! use wukong::prelude::*;
+//! use wukong::engine::policies::FanOutThresholdPolicy;
+//!
+//! let cfg = SimConfig::default();
+//! let dag = workloads::tree_reduction(1024, 100.0, &cfg);
+//! let driver = EngineDriver::new(cfg, FanOutThresholdPolicy { threshold: 4 });
+//! let report = engine::run_sim(async move { driver.run(&dag).await });
 //! println!("{}", report.row());
 //! ```
 
@@ -52,7 +97,7 @@ pub mod prelude {
     pub use crate::compute::{DataObj, Payload, Tensor};
     pub use crate::core::{ClusterProfile, EngineError, EngineResult, SimConfig, TaskId};
     pub use crate::dag::{Dag, DagBuilder};
-    pub use crate::engine::{self, Client, WukongEngine};
+    pub use crate::engine::{self, Client, EngineDriver, SchedulingPolicy, WukongEngine};
     pub use crate::metrics::{Cdf, JobReport};
     pub use crate::runtime::PjrtRuntime;
     pub use crate::workloads;

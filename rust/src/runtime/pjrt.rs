@@ -4,8 +4,11 @@
 use crate::compute::Tensor;
 use crate::core::{EngineError, EngineResult};
 use crate::rt::sync::{mpsc, oneshot};
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla")]
+use std::path::Path;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 enum Request {
@@ -36,6 +39,7 @@ impl std::fmt::Debug for PjrtRuntime {
 impl PjrtRuntime {
     /// Starts the actor thread with artifacts from `dir`
     /// (`<dir>/<name>.hlo.txt`).
+    #[cfg(feature = "xla")]
     pub fn new(dir: impl Into<PathBuf>) -> EngineResult<Self> {
         let dir = dir.into();
         let (tx, rx) = mpsc::unbounded();
@@ -50,6 +54,19 @@ impl PjrtRuntime {
             Ok(Err(e)) => Err(e),
             Err(_) => Err(EngineError::Runtime("pjrt actor died at startup".into())),
         }
+    }
+
+    /// Stub for builds without the `xla` feature (the offline build image
+    /// does not vendor the `xla` crate): constructing the runtime reports
+    /// a clear error, and every simulation-mode payload keeps working.
+    #[cfg(not(feature = "xla"))]
+    pub fn new(dir: impl Into<PathBuf>) -> EngineResult<Self> {
+        let _ = dir.into();
+        Err(EngineError::Runtime(
+            "wukong was built without the `xla` feature: the PJRT real-compute \
+             backend is unavailable (simulation-mode payloads run everywhere)"
+                .into(),
+        ))
     }
 
     /// Default artifacts directory: `$WUKONG_ARTIFACTS` or `./artifacts`.
@@ -114,6 +131,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "xla")]
 fn actor_main(
     dir: PathBuf,
     mut rx: mpsc::Receiver<Request>,
@@ -152,6 +170,7 @@ fn actor_main(
     }
 }
 
+#[cfg(feature = "xla")]
 fn get_exe<'a>(
     client: &xla::PjRtClient,
     cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
@@ -174,6 +193,7 @@ fn get_exe<'a>(
     Ok(cache.get(artifact).unwrap())
 }
 
+#[cfg(feature = "xla")]
 fn run(exe: &xla::PjRtLoadedExecutable, inputs: &[Arc<Tensor>]) -> EngineResult<Tensor> {
     let literals: Vec<xla::Literal> = inputs
         .iter()
@@ -192,6 +212,7 @@ fn run(exe: &xla::PjRtLoadedExecutable, inputs: &[Arc<Tensor>]) -> EngineResult<
     literal_to_tensor(&out)
 }
 
+#[cfg(feature = "xla")]
 fn tensor_to_literal(t: &Tensor) -> EngineResult<xla::Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
     xla::Literal::vec1(&t.data)
@@ -199,6 +220,7 @@ fn tensor_to_literal(t: &Tensor) -> EngineResult<xla::Literal> {
         .map_err(|e| EngineError::Runtime(format!("reshape{:?}: {e}", t.shape)))
 }
 
+#[cfg(feature = "xla")]
 fn literal_to_tensor(lit: &xla::Literal) -> EngineResult<Tensor> {
     let shape = lit
         .array_shape()

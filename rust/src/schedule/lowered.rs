@@ -1,0 +1,170 @@
+//! Lowering of static schedules into dense per-task arrays.
+//!
+//! The per-leaf [`crate::schedule::StaticSchedule`]s express the paper's
+//! three op types (`FanIn` / `Exec` / `FanOut`) as nested structures —
+//! good for inspection and reporting, bad for the executor hot loop. All
+//! leaf schedules agree on the ops of every shared task (they are derived
+//! purely from the task's in/out-edges), so the whole schedule set lowers
+//! to two flat arrays indexed by `TaskId::index()`:
+//!
+//! * `indeg[t]` — the fan-in dependency-counter target (`FanIn` op when
+//!   `> 1`);
+//! * `fanout[t]` — the resolved [`FanOutAction`], with the scheduling
+//!   policy's fan-out decision (invoke directly vs delegate to the
+//!   storage-manager proxy) baked in at lowering time, so the hot loop
+//!   never consults the policy dynamically.
+//!
+//! Executors walk these flat slices; the nested op vectors never appear on
+//! the execution path.
+
+use crate::core::TaskId;
+use crate::dag::Dag;
+
+/// The executor's precomputed decision at a task's fan-out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FanOutAction {
+    /// No out-edges: store the final result and announce it.
+    Sink,
+    /// Exactly one out-edge (the paper's trivial fan-out): keep the output
+    /// in local memory and continue on this executor — the data-locality
+    /// win.
+    Continue,
+    /// Multiple out-edges, small fan-out: become the executor of the first
+    /// out-edge and invoke executors for the rest directly.
+    Invoke,
+    /// Multiple out-edges, large fan-out: publish one message delegating
+    /// the invocations to the storage-manager proxy (paper §IV-D).
+    Delegate,
+}
+
+impl FanOutAction {
+    /// The single source of truth for WUKONG's threshold rule
+    /// (paper §IV-D): delegate a real fan-out (`width >= 2`) to the proxy
+    /// at or above `threshold`, invoke directly below it. Shared by the
+    /// default lowering and every threshold-based policy.
+    pub fn threshold_rule(width: usize, threshold: usize) -> FanOutAction {
+        if width >= threshold {
+            FanOutAction::Delegate
+        } else {
+            FanOutAction::Invoke
+        }
+    }
+}
+
+/// Dense per-task lowering of a DAG's static schedules. One row per task,
+/// flat storage, no hashing and no nested indirection on the hot path.
+#[derive(Clone, Debug)]
+pub struct LoweredOps {
+    indeg: Vec<u32>,
+    fanout: Vec<FanOutAction>,
+}
+
+impl LoweredOps {
+    /// Lowers `dag` with an arbitrary fan-out rule: `decide(width)` is
+    /// called once per real fan-out (width >= 2) — this is where a
+    /// [`SchedulingPolicy`](crate::engine::SchedulingPolicy) plugs in.
+    pub fn lower_with(dag: &Dag, mut decide: impl FnMut(usize) -> FanOutAction) -> Self {
+        let n = dag.len();
+        let mut indeg = Vec::with_capacity(n);
+        let mut fanout = Vec::with_capacity(n);
+        for t in dag.task_ids() {
+            indeg.push(dag.in_degree(t) as u32);
+            fanout.push(match dag.out_degree(t) {
+                0 => FanOutAction::Sink,
+                1 => FanOutAction::Continue,
+                w => decide(w),
+            });
+        }
+        LoweredOps { indeg, fanout }
+    }
+
+    /// Default lowering: delegate fan-outs with at least `max_task_fanout`
+    /// out-edges to the proxy, invoke smaller ones directly (the WUKONG
+    /// rule, paper §IV-D).
+    pub fn lower(dag: &Dag, max_task_fanout: usize) -> Self {
+        Self::lower_with(dag, |w| FanOutAction::threshold_rule(w, max_task_fanout))
+    }
+
+    /// In-degree of `t` (the fan-in counter target when > 1).
+    #[inline]
+    pub fn in_degree(&self, t: TaskId) -> usize {
+        self.indeg[t.index()] as usize
+    }
+
+    /// The precomputed fan-out action of `t`.
+    #[inline]
+    pub fn fan_out_action(&self, t: TaskId) -> FanOutAction {
+        self.fanout[t.index()]
+    }
+
+    /// Number of tasks covered.
+    pub fn len(&self) -> usize {
+        self.indeg.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indeg.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+
+    /// root fans out to 4, which fan in to one sink; plus a chain node.
+    fn fixture() -> Dag {
+        let mut b = DagBuilder::new();
+        let root = b.add_task("root", Payload::Noop, 8, &[]);
+        let mids: Vec<_> = (0..4)
+            .map(|i| b.add_task(format!("m{i}"), Payload::Noop, 8, &[root]))
+            .collect();
+        let join = b.add_task("join", Payload::Noop, 8, &mids);
+        b.add_task("tail", Payload::Noop, 8, &[join]);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn degrees_match_dag() {
+        let dag = fixture();
+        let low = LoweredOps::lower(&dag, 10);
+        assert_eq!(low.len(), dag.len());
+        for t in dag.task_ids() {
+            assert_eq!(low.in_degree(t), dag.in_degree(t));
+        }
+    }
+
+    #[test]
+    fn threshold_splits_invoke_and_delegate() {
+        let dag = fixture();
+        let root = TaskId(0);
+        // Threshold above the fan-out width: direct invocation.
+        let low = LoweredOps::lower(&dag, 10);
+        assert_eq!(low.fan_out_action(root), FanOutAction::Invoke);
+        // Threshold at the width: delegate to the proxy.
+        let low = LoweredOps::lower(&dag, 4);
+        assert_eq!(low.fan_out_action(root), FanOutAction::Delegate);
+    }
+
+    #[test]
+    fn sinks_and_chains_lower_structurally() {
+        let dag = fixture();
+        let low = LoweredOps::lower(&dag, 10);
+        let join = TaskId(5);
+        let tail = TaskId(6);
+        assert_eq!(low.fan_out_action(join), FanOutAction::Continue);
+        assert_eq!(low.fan_out_action(tail), FanOutAction::Sink);
+        assert_eq!(low.in_degree(join), 4);
+    }
+
+    #[test]
+    fn custom_rule_via_lower_with() {
+        let dag = fixture();
+        // A policy that always delegates, regardless of width.
+        let low = LoweredOps::lower_with(&dag, |_| FanOutAction::Delegate);
+        assert_eq!(low.fan_out_action(TaskId(0)), FanOutAction::Delegate);
+        // Trivial fan-outs still continue — the rule only sees width >= 2.
+        assert_eq!(low.fan_out_action(TaskId(5)), FanOutAction::Continue);
+    }
+}

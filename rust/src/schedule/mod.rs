@@ -1,13 +1,20 @@
-//! Static scheduling (paper §IV-B).
+//! Static scheduling (paper §IV-B) and its lowering.
 //!
 //! The Schedule Generator partitions the DAG into one static schedule per
 //! leaf node. A schedule contains every node reachable from its leaf, the
 //! edges into/out of those nodes, the task payload ("task code") and the
 //! KV keys of task inputs — everything an executor might need, so that it
 //! never has to fetch task code from the KV store at runtime.
+//!
+//! Before execution the schedule set is **lowered** ([`LoweredOps`]) into
+//! dense per-task arrays — in-degree table plus precomputed
+//! [`FanOutAction`]s — which is what the task-executor hot loop actually
+//! walks. The per-leaf op vectors remain the inspectable/reportable form.
 
 pub mod generator;
+pub mod lowered;
 pub mod ops;
 
 pub use generator::{generate, ScheduleSet};
+pub use lowered::{FanOutAction, LoweredOps};
 pub use ops::{ScheduleOp, StaticSchedule};

@@ -1,0 +1,193 @@
+//! Policy-level semantics of the shared engine driver (DESIGN goals of
+//! the policy refactor):
+//!
+//! * fan-in dependency counters: last-writer-continues, and the counter
+//!   never exceeds the fan-in's in-degree — checked through more than one
+//!   scheduling policy;
+//! * proxy delegation above the fan-out threshold: the same DAG completes
+//!   whether fan-outs are invoked directly or delegated, with the
+//!   delegation visible as exactly one extra pub/sub message;
+//! * every paper design runs the one shared driver and upholds the
+//!   exactly-once invariant.
+
+use std::sync::Arc;
+use std::time::Duration;
+use wukong::compute::Payload;
+use wukong::core::{ObjectKey, SimConfig, TaskId};
+use wukong::dag::{Dag, DagBuilder};
+use wukong::engine::policies::{
+    FanOutThresholdPolicy, ParallelInvokerPolicy, PubSubPolicy, ServerfulDaskPolicy,
+    StrawmanPolicy, WukongPolicy,
+};
+use wukong::engine::{run_sim, EngineDriver};
+use wukong::executor::ctx::{WukongCtx, FINAL_CHANNEL};
+use wukong::executor::task_executor::invoke_executor;
+use wukong::faas::Faas;
+use wukong::kvstore::{KvStore, Message};
+use wukong::metrics::MetricsHub;
+use wukong::schedule;
+use wukong::storage::spawn_proxy;
+
+/// Two leaves fan in to a join which continues to a sink — the smallest
+/// DAG with a real scheduling conflict.
+fn fan_in_dag() -> (Dag, TaskId) {
+    let mut b = DagBuilder::new();
+    let l1 = b.add_task("l1", Payload::Sleep { ms: 5.0 }, 64, &[]);
+    let l2 = b.add_task("l2", Payload::Sleep { ms: 9.0 }, 64, &[]);
+    let join = b.add_task("join", Payload::Noop, 64, &[l1, l2]);
+    b.add_task("sink", Payload::Noop, 64, &[join]);
+    (b.build().unwrap(), join)
+}
+
+/// 1 -> N -> 1: a single large fan-out plus its fan-in.
+fn wide_dag(width: usize) -> Dag {
+    let mut b = DagBuilder::new();
+    let root = b.add_task("root", Payload::Noop, 8, &[]);
+    let mids: Vec<_> = (0..width)
+        .map(|i| b.add_task(format!("m{i}"), Payload::Noop, 8, &[root]))
+        .collect();
+    b.add_task("sink", Payload::Noop, 8, &mids);
+    b.build().unwrap()
+}
+
+fn ctx_for(dag: Dag, cfg: SimConfig) -> Arc<WukongCtx> {
+    let dag = Arc::new(dag);
+    let metrics = Arc::new(MetricsHub::new());
+    let faas = Faas::new(cfg.faas.clone(), metrics.clone());
+    let kv = KvStore::new(cfg.net.clone(), metrics.clone());
+    let schedules = Arc::new(schedule::generate(&dag));
+    WukongCtx::new(dag, cfg, faas, kv, metrics, schedules, None)
+}
+
+#[test]
+fn fan_in_counter_ends_at_in_degree_and_last_writer_continues() {
+    wukong::rt::run_virtual(async {
+        let (dag, join) = fan_in_dag();
+        let n = dag.len() as u64;
+        let ctx = ctx_for(dag, SimConfig::test());
+        let proxy = spawn_proxy(Arc::clone(&ctx));
+        let mut finals = ctx.kv.subscribe(FINAL_CHANNEL);
+
+        // Launch both leaf executors; they race to the join.
+        let leaves = ctx.dag.leaves();
+        let handles: Vec<_> = leaves
+            .iter()
+            .map(|&l| invoke_executor(Arc::clone(&ctx), l, None))
+            .collect();
+        wukong::rt::join_all(handles).await;
+
+        let msg = wukong::rt::timeout(Duration::from_secs(600), finals.recv())
+            .await
+            .expect("job did not finish in simulated 10 min")
+            .expect("channel closed");
+        assert!(matches!(msg, Message::FinalResult { .. }));
+
+        // Exactly-once: both leaves + join + sink, no double execution
+        // (mark_executed would have failed the run otherwise).
+        assert!(ctx.all_executed());
+        assert_eq!(ctx.executed_count(), n);
+        // The dependency counter ended exactly at the join's in-degree —
+        // one INCR per in-edge, never more (the executor that saw the
+        // final count continued; the other stopped).
+        assert_eq!(ctx.kv.counter_value(&ObjectKey::counter(join)), 2);
+        assert_eq!(ctx.lowered.in_degree(join), 2);
+        proxy.abort();
+    });
+}
+
+#[test]
+fn fan_in_semantics_hold_across_policies() {
+    // The same conflicted DAG, through three different policies over the
+    // shared driver: decentralized (KV counters), decentralized with
+    // forced proxy delegation, and centralized pub/sub (scheduler-side
+    // resolution). All must complete every task exactly once.
+    let drivers: Vec<EngineDriver> = vec![
+        EngineDriver::new(SimConfig::test(), WukongPolicy),
+        EngineDriver::new(SimConfig::test(), FanOutThresholdPolicy { threshold: 2 }),
+        EngineDriver::new(SimConfig::test(), PubSubPolicy),
+    ];
+    for driver in drivers {
+        let label = driver.label();
+        let report = run_sim(async move {
+            let (dag, _) = fan_in_dag();
+            driver.run(&dag).await
+        });
+        assert!(report.is_ok(), "{label}: {report:?}");
+        assert_eq!(report.tasks_executed, 4, "{label}");
+    }
+}
+
+#[test]
+fn large_fan_out_delegates_to_proxy_small_does_not() {
+    // Width 32 with the default threshold (10): the fan-out executor
+    // publishes ONE FanOutRequest instead of issuing 31 invocation calls.
+    // With the threshold disabled, the executor invokes directly.
+    let delegated = run_sim(async move {
+        let dag = wide_dag(32);
+        EngineDriver::new(SimConfig::test(), WukongPolicy)
+            .run(&dag)
+            .await
+    });
+    let direct = run_sim(async move {
+        let dag = wide_dag(32);
+        EngineDriver::new(
+            SimConfig::test(),
+            FanOutThresholdPolicy {
+                threshold: usize::MAX,
+            },
+        )
+        .run(&dag)
+        .await
+    });
+    assert!(delegated.is_ok(), "{delegated:?}");
+    assert!(direct.is_ok(), "{direct:?}");
+    // Both execute all 34 tasks on 32 lambdas (root's executor continues
+    // into m0 and the sink's fan-in winner continues into the sink).
+    for r in [&delegated, &direct] {
+        assert_eq!(r.tasks_executed, 34, "{}", r.platform);
+        assert_eq!(r.lambdas_invoked, 32, "{}", r.platform);
+    }
+    // The delegated run carries exactly one extra pub/sub message: the
+    // FanOutRequest handed to the storage-manager proxy.
+    assert_eq!(direct.kv.publishes, 1, "direct: final-result only");
+    assert_eq!(
+        delegated.kv.publishes,
+        2,
+        "delegated: final result + proxy fan-out request"
+    );
+}
+
+#[test]
+fn forced_delegation_still_exactly_once() {
+    // Threshold 2 pushes EVERY real fan-out through the proxy; the
+    // counters and exactly-once guard must hold regardless.
+    let report = run_sim(async move {
+        let dag = wide_dag(8);
+        EngineDriver::new(SimConfig::test(), FanOutThresholdPolicy { threshold: 2 })
+            .run(&dag)
+            .await
+    });
+    assert!(report.is_ok(), "{report:?}");
+    assert_eq!(report.tasks_executed, 10);
+}
+
+#[test]
+fn every_paper_design_runs_the_shared_driver() {
+    let (dag, _) = fan_in_dag();
+    let n = dag.len() as u64;
+    let drivers: Vec<EngineDriver> = vec![
+        EngineDriver::new(SimConfig::test(), StrawmanPolicy),
+        EngineDriver::new(SimConfig::test(), PubSubPolicy),
+        EngineDriver::new(SimConfig::test(), ParallelInvokerPolicy),
+        EngineDriver::new(SimConfig::test(), WukongPolicy),
+        EngineDriver::new(SimConfig::test(), ServerfulDaskPolicy::ec2()),
+    ];
+    for driver in drivers {
+        let label = driver.label();
+        let dag = dag.clone();
+        let report = run_sim(async move { driver.run(&dag).await });
+        assert!(report.is_ok(), "{label}: {report:?}");
+        assert_eq!(report.tasks_executed, n, "{label}");
+        assert_eq!(report.platform, label);
+    }
+}
