@@ -23,6 +23,13 @@ pub enum Payload {
     /// via the PJRT runtime (`rust/src/runtime`). Inputs are the parent
     /// outputs in parent order.
     Pjrt { artifact: String },
+    /// Deterministic in-simulator compute over real tensor values, no PJRT
+    /// needed: the output tensor is a fixed function of `salt` and the
+    /// input tensors *in parent order*, while `flops` still drives the
+    /// modeled duration. Used by the differential oracle (`crate::sim`):
+    /// two engines produce byte-identical sink outputs iff they executed
+    /// every task exactly once and routed the right parent outputs to it.
+    Mix { salt: u64, flops: f64 },
 }
 
 impl Payload {
@@ -30,7 +37,7 @@ impl Payload {
     /// their cost is actual wall time).
     pub fn flops(&self) -> f64 {
         match self {
-            Payload::Model { flops } => *flops,
+            Payload::Model { flops } | Payload::Mix { flops, .. } => *flops,
             _ => 0.0,
         }
     }

@@ -241,6 +241,81 @@ impl Default for WukongConfig {
     }
 }
 
+/// Fault-injection knobs for the deterministic simulation harness
+/// (`crate::sim`). All fault draws derive from `seed` (mixed with
+/// `SimConfig::seed`), so an entire adversarial run — cold-start spikes,
+/// container crashes, stragglers, KV latency tails — replays exactly from
+/// one `u64`. The default is fully benign: every probability is zero and
+/// every spread is neutral, so existing simulations are bit-identical to
+/// the pre-fault-injection engine.
+///
+/// Injected container crashes are **transient by construction**: the FaaS
+/// platform never crashes the final allowed attempt of an invocation, so
+/// AWS Lambda's automatic retries (paper §IV-C "fault tolerance") always
+/// mask them. Faults perturb *when and where* tasks run, never *what they
+/// compute* — which is exactly the property the differential oracle
+/// (`crate::sim::oracle`) checks across scheduling policies.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Fault-stream seed, mixed with `SimConfig::seed`.
+    pub seed: u64,
+    /// Extra multiplicative spread on cold-start delay: a cold start takes
+    /// `cold_start_ms * (1 + spread * u)` with `u` uniform in [0, 1).
+    pub cold_start_spread: f64,
+    /// Per-attempt probability that a container crashes right after
+    /// start-up, before the function body runs (the platform retries).
+    pub crash_prob: f64,
+    /// Probability that a task is a straggler (applied per task,
+    /// consistently across every scheduling mode).
+    pub straggler_prob: f64,
+    /// Duration multiplier for straggler tasks (>= 1).
+    pub straggler_slowdown: f64,
+    /// Probability that one KV-store operation hits the heavy latency
+    /// tail (the Fig. 13 upper-tail effect, made explicit).
+    pub kv_tail_prob: f64,
+    /// Latency multiplier for tail-hit KV operations (>= 1).
+    pub kv_tail_factor: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            cold_start_spread: 0.0,
+            crash_prob: 0.0,
+            straggler_prob: 0.0,
+            straggler_slowdown: 1.0,
+            kv_tail_prob: 0.0,
+            kv_tail_factor: 1.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// An adversarial-but-survivable profile used by the differential
+    /// oracle: visible cold-start variance, frequent transient crashes,
+    /// a straggler minority, and a heavy KV latency tail.
+    pub fn chaos(seed: u64) -> Self {
+        FaultConfig {
+            seed,
+            cold_start_spread: 2.0,
+            crash_prob: 0.08,
+            straggler_prob: 0.15,
+            straggler_slowdown: 6.0,
+            kv_tail_prob: 0.05,
+            kv_tail_factor: 25.0,
+        }
+    }
+
+    /// True if any fault class is active.
+    pub fn enabled(&self) -> bool {
+        self.cold_start_spread > 0.0
+            || self.crash_prob > 0.0
+            || (self.straggler_prob > 0.0 && self.straggler_slowdown > 1.0)
+            || (self.kv_tail_prob > 0.0 && self.kv_tail_factor > 1.0)
+    }
+}
+
 /// Compute-model parameters shared by all platforms.
 #[derive(Clone, Debug)]
 pub struct ComputeConfig {
@@ -268,6 +343,8 @@ pub struct SimConfig {
     pub net: NetConfig,
     pub wukong: WukongConfig,
     pub compute: ComputeConfig,
+    /// Fault-injection profile (benign by default).
+    pub faults: FaultConfig,
     /// Seed for all simulation randomness.
     pub seed: u64,
 }
@@ -285,6 +362,12 @@ impl SimConfig {
         self.wukong.ideal_storage = true;
         self
     }
+
+    /// Attaches a fault-injection profile.
+    pub fn with_faults(mut self, faults: FaultConfig) -> Self {
+        self.faults = faults;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +383,16 @@ mod tests {
         assert_eq!(c.net.kv_shards, 10);
         assert_eq!(c.wukong.max_task_fanout, 10);
         assert_eq!(c.wukong.num_invokers, 20);
+    }
+
+    #[test]
+    fn default_faults_are_benign() {
+        let c = SimConfig::default();
+        assert!(!c.faults.enabled());
+        assert!(FaultConfig::chaos(7).enabled());
+        let c = SimConfig::test().with_faults(FaultConfig::chaos(7));
+        assert!(c.faults.enabled());
+        assert_eq!(c.faults.seed, 7);
     }
 
     #[test]

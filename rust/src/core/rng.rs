@@ -1,5 +1,44 @@
-//! Deterministic, dependency-free RNG (SplitMix64) used everywhere the
-//! simulation needs randomness so that runs are reproducible from a seed.
+//! Deterministic, dependency-free RNG (SplitMix64) and hashing (FNV-1a)
+//! used everywhere the simulation needs randomness or stable hashes so
+//! that runs are reproducible from a seed.
+
+/// Incremental FNV-1a 64-bit hasher — stable across platforms and
+/// processes (unlike `std`'s randomized `DefaultHasher`). Shared by the
+/// KV store's key-to-shard mapping and the sim harness's sink-output
+/// fingerprints.
+#[derive(Clone, Debug)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Folds `bytes` into the hash state.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+
+    /// One-shot convenience.
+    pub fn hash(bytes: &[u8]) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write(bytes);
+        h.finish()
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// SplitMix64 PRNG — tiny, fast, and statistically good enough for jitter
 /// and synthetic-data generation. Not cryptographic.
@@ -57,6 +96,18 @@ impl SplitMix64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(Fnv1a::hash(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(Fnv1a::hash(b"a"), 0xaf63_dc4c_8601_ec8c);
+        // Incremental writes equal one-shot hashing.
+        let mut h = Fnv1a::new();
+        h.write(b"foo");
+        h.write(b"bar");
+        assert_eq!(h.finish(), Fnv1a::hash(b"foobar"));
+    }
 
     #[test]
     fn deterministic_for_seed() {

@@ -70,9 +70,13 @@ pub(crate) async fn run(
     dag: &Dag,
     collect: bool,
     label: String,
-) -> (JobReport, std::collections::HashMap<TaskId, DataObj>) {
-    let faas = Faas::new(cfg.faas.clone(), metrics.clone());
-    let kv = KvStore::new(cfg.net.clone(), metrics.clone());
+) -> (
+    JobReport,
+    std::collections::HashMap<TaskId, DataObj>,
+    Option<Arc<KvStore>>,
+) {
+    let faas = Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), metrics.clone());
+    let kv = KvStore::with_faults(cfg.net.clone(), cfg.faults.clone(), metrics.clone(), false);
     let state = Arc::new(SchedState {
         cfg: cfg.clone(),
         metrics: metrics.clone(),
@@ -278,7 +282,7 @@ pub(crate) async fn run(
         None => JobReport::success(label, makespan, &metrics),
         Some(e) => JobReport::failure(label, makespan, &metrics, e),
     };
-    (report, outputs)
+    (report, outputs, Some(kv))
 }
 
 /// The single-task Lambda body common to all §III designs: fetch every

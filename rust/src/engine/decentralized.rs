@@ -21,7 +21,8 @@ use std::sync::Arc;
 
 /// Runs `dag` decentralized: generate static schedules, lower them through
 /// the policy's fan-out rule, launch the initial executors, track sink
-/// completions. Returns the report and (if `collect`) every sink output.
+/// completions. Returns the report, (if `collect`) every sink output, and
+/// the KV store handle for post-run forensic inspection.
 #[allow(clippy::too_many_arguments)]
 pub(crate) async fn run(
     cfg: &SimConfig,
@@ -32,10 +33,15 @@ pub(crate) async fn run(
     dag: &Dag,
     collect: bool,
     label: String,
-) -> (JobReport, HashMap<TaskId, DataObj>) {
+) -> (JobReport, HashMap<TaskId, DataObj>, Option<Arc<KvStore>>) {
     let dag = Arc::new(dag.clone());
-    let faas = Faas::new(cfg.faas.clone(), metrics.clone());
-    let kv = KvStore::with_ideal(cfg.net.clone(), metrics.clone(), cfg.wukong.ideal_storage);
+    let faas = Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), metrics.clone());
+    let kv = KvStore::with_faults(
+        cfg.net.clone(),
+        cfg.faults.clone(),
+        metrics.clone(),
+        cfg.wukong.ideal_storage,
+    );
 
     // --- static scheduling (the Schedule Generator, §IV-B) -----------
     let t0 = clock::now();
@@ -141,5 +147,5 @@ pub(crate) async fn run(
         None => JobReport::success(label, makespan, &metrics),
         Some(e) => JobReport::failure(label, makespan, &metrics, e),
     };
-    (report, outputs)
+    (report, outputs, Some(kv))
 }

@@ -14,10 +14,25 @@ use crate::core::{SimConfig, TaskId};
 use crate::dag::Dag;
 use crate::engine::policy::{ExecutionMode, SchedulingPolicy};
 use crate::engine::{centralized, decentralized, serverful};
+use crate::kvstore::KvStore;
 use crate::metrics::{JobReport, MetricsHub};
 use crate::runtime::PjrtRuntime;
 use std::collections::HashMap;
 use std::sync::Arc;
+
+/// Everything a post-mortem needs from one job execution: the report, the
+/// collected sink outputs, the metrics hub (with per-task spans when
+/// sampling is on), and — for modes that use one — the KV store, so tests
+/// and the differential oracle (`crate::sim`) can inspect dependency
+/// counters and look for orphaned intermediates after completion.
+pub struct ForensicRun {
+    pub report: JobReport,
+    pub outputs: HashMap<TaskId, DataObj>,
+    pub metrics: Arc<MetricsHub>,
+    /// `Some` for centralized and decentralized modes; `None` for the
+    /// serverful baseline (workers transfer directly, no KV store).
+    pub kv: Option<Arc<KvStore>>,
+}
 
 /// The policy-driven engine. Construct with a policy, optionally attach a
 /// PJRT runtime / sampling / a label override, then `run` DAGs.
@@ -71,7 +86,7 @@ impl EngineDriver {
 
     /// Runs `dag` to completion, returning the job report.
     pub async fn run(&self, dag: &Dag) -> JobReport {
-        self.run_inner(dag, false).await.0
+        self.run_inner(dag, false).await.report
     }
 
     /// Runs `dag` and additionally fetches every sink's final output
@@ -80,20 +95,24 @@ impl EngineDriver {
     /// centralized jobs read the KV store, serverful jobs read resident
     /// worker memory.
     pub async fn run_with_outputs(&self, dag: &Dag) -> (JobReport, HashMap<TaskId, DataObj>) {
-        self.run_inner(dag, true).await
+        let r = self.run_inner(dag, true).await;
+        (r.report, r.outputs)
     }
 
     /// Also exposes the metrics hub for detailed analysis (Fig. 13).
     pub async fn run_detailed(&self, dag: &Dag) -> (JobReport, Arc<MetricsHub>) {
-        let metrics = Arc::new(MetricsHub::new());
-        if self.sampling {
-            metrics.enable_sampling();
-        }
-        let report = self.run_with_metrics(dag, metrics.clone(), false).await.0;
-        (report, metrics)
+        let r = self.run_inner(dag, false).await;
+        (r.report, r.metrics)
     }
 
-    async fn run_inner(&self, dag: &Dag, collect: bool) -> (JobReport, HashMap<TaskId, DataObj>) {
+    /// Runs `dag`, collecting sink outputs *and* keeping the substrate
+    /// handles for post-run inspection — the entry point of the
+    /// simulation harness and the differential oracle.
+    pub async fn run_forensic(&self, dag: &Dag) -> ForensicRun {
+        self.run_inner(dag, true).await
+    }
+
+    async fn run_inner(&self, dag: &Dag, collect: bool) -> ForensicRun {
         let metrics = Arc::new(MetricsHub::new());
         if self.sampling {
             metrics.enable_sampling();
@@ -106,16 +125,16 @@ impl EngineDriver {
         dag: &Dag,
         metrics: Arc<MetricsHub>,
         collect: bool,
-    ) -> (JobReport, HashMap<TaskId, DataObj>) {
+    ) -> ForensicRun {
         let label = self.label();
-        match self.policy.mode(&self.cfg) {
+        let (report, outputs, kv) = match self.policy.mode(&self.cfg) {
             ExecutionMode::Decentralized(spec) => {
                 decentralized::run(
                     &self.cfg,
                     &spec,
                     self.policy.as_ref(),
                     self.runtime.clone(),
-                    metrics,
+                    metrics.clone(),
                     dag,
                     collect,
                     label,
@@ -127,7 +146,7 @@ impl EngineDriver {
                     &self.cfg,
                     &spec,
                     self.runtime.clone(),
-                    metrics,
+                    metrics.clone(),
                     dag,
                     collect,
                     label,
@@ -139,13 +158,19 @@ impl EngineDriver {
                     &self.cfg,
                     &profile,
                     self.runtime.clone(),
-                    metrics,
+                    metrics.clone(),
                     dag,
                     collect,
                     label,
                 )
                 .await
             }
+        };
+        ForensicRun {
+            report,
+            outputs,
+            metrics,
+            kv,
         }
     }
 }
@@ -208,6 +233,32 @@ mod tests {
             assert!(report.is_ok(), "{label}: {report:?}");
             assert_eq!(outputs.len(), 1, "{label}: one sink output");
             assert_eq!(outputs.values().next().unwrap().bytes, 64, "{label}");
+        }
+    }
+
+    #[test]
+    fn run_forensic_exposes_substrate_handles() {
+        // Decentralized and centralized runs return their KV store; the
+        // serverful baseline has none.
+        type P = Arc<dyn crate::engine::SchedulingPolicy>;
+        for (policy, has_kv) in [
+            (Arc::new(WukongPolicy) as P, true),
+            (Arc::new(StrawmanPolicy) as P, true),
+            (Arc::new(ServerfulDaskPolicy::ec2()) as P, false),
+        ] {
+            let driver = EngineDriver::with_policy(SimConfig::test(), policy);
+            let label = driver.label();
+            let run = run_sim(async move {
+                let dag = diamond();
+                driver.run_forensic(&dag).await
+            });
+            assert!(run.report.is_ok(), "{label}: {:?}", run.report);
+            assert_eq!(run.outputs.len(), 1, "{label}");
+            assert_eq!(run.kv.is_some(), has_kv, "{label}");
+            if let Some(kv) = &run.kv {
+                // Diamond sink is t3; its output must be persisted.
+                assert!(kv.contains(&crate::core::ObjectKey::output(TaskId(3))), "{label}");
+            }
         }
     }
 

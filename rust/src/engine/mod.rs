@@ -19,7 +19,7 @@ pub(crate) mod decentralized;
 pub(crate) mod serverful;
 
 pub use client::{Client, JobResult};
-pub use driver::EngineDriver;
+pub use driver::{EngineDriver, ForensicRun};
 pub use policy::{
     CentralizedSpec, DecentralizedSpec, ExecutionMode, Notification, SchedulingPolicy,
 };

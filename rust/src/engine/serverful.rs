@@ -125,7 +125,11 @@ pub(crate) async fn run(
     dag: &Dag,
     collect: bool,
     label: String,
-) -> (JobReport, std::collections::HashMap<TaskId, DataObj>) {
+) -> (
+    JobReport,
+    std::collections::HashMap<TaskId, DataObj>,
+    Option<Arc<crate::kvstore::KvStore>>,
+) {
     let n_workers = profile.total_workers();
     let state = Arc::new(ClusterState {
         node_nics: (0..profile.nodes)
@@ -277,7 +281,8 @@ pub(crate) async fn run(
         None => JobReport::success(label, makespan, &metrics),
         Some(e) => JobReport::failure(label, makespan, &metrics, e),
     };
-    (report, outputs)
+    // No KV store in the serverful baseline: workers transfer directly.
+    (report, outputs, None)
 }
 
 /// Executes one task on a worker: fetch missing inputs from peer workers

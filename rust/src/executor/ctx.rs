@@ -118,12 +118,32 @@ impl WukongCtx {
 /// Deterministic per-task duration jitter derived from the simulation
 /// seed — shared by every scheduling mode so identical (cfg, task) pairs
 /// always jitter identically across engines.
+///
+/// Straggler injection composes here: a fault profile with
+/// `straggler_prob > 0` selects a seeded per-task subset and multiplies
+/// their durations by `straggler_slowdown`. Because the draw is keyed on
+/// `(seed, fault seed, task)` — not on execution order — the *same* tasks
+/// straggle under every scheduling policy, which is what lets the
+/// differential oracle compare policies under identical adversity.
 pub fn jitter_for(cfg: &SimConfig, task: TaskId) -> f64 {
-    if cfg.compute.jitter <= 0.0 {
-        return 1.0;
+    let mut j = if cfg.compute.jitter <= 0.0 {
+        1.0
+    } else {
+        let mut rng = SplitMix64::new(cfg.seed ^ (task.0 as u64).wrapping_mul(0x9E37));
+        rng.jitter(cfg.compute.jitter)
+    };
+    let f = &cfg.faults;
+    if f.straggler_prob > 0.0 && f.straggler_slowdown > 1.0 {
+        let mut rng = SplitMix64::new(
+            f.seed
+                ^ cfg.seed.rotate_left(17)
+                ^ (task.0 as u64).wrapping_mul(0xA24B_AED4_963E_E407),
+        );
+        if rng.next_f64() < f.straggler_prob {
+            j *= f.straggler_slowdown;
+        }
     }
-    let mut rng = SplitMix64::new(cfg.seed ^ (task.0 as u64).wrapping_mul(0x9E37));
-    rng.jitter(cfg.compute.jitter)
+    j
 }
 
 #[cfg(test)]
@@ -161,6 +181,25 @@ mod tests {
     fn jitter_deterministic_and_unit_when_disabled() {
         let c = ctx();
         assert_eq!(c.jitter_for(TaskId(0)), 1.0); // test config: jitter off
+    }
+
+    #[test]
+    fn straggler_selection_is_per_task_and_deterministic() {
+        let mut cfg = SimConfig::test();
+        cfg.faults = crate::core::FaultConfig {
+            straggler_prob: 0.3,
+            straggler_slowdown: 8.0,
+            seed: 5,
+            ..crate::core::FaultConfig::default()
+        };
+        let sample: Vec<f64> = (0..200).map(|i| jitter_for(&cfg, TaskId(i))).collect();
+        // Deterministic: same (cfg, task) -> same factor.
+        for (i, &v) in sample.iter().enumerate() {
+            assert_eq!(v, jitter_for(&cfg, TaskId(i as u32)));
+            assert!(v == 1.0 || v == 8.0, "task {i}: {v}");
+        }
+        let stragglers = sample.iter().filter(|&&v| v > 1.0).count();
+        assert!((20..120).contains(&stragglers), "~30%, got {stragglers}");
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub async fn run_payload(
             Ok(DataObj::synthetic(output_bytes))
         }
         Payload::Const(t) => Ok(DataObj::tensor_arc(Arc::clone(t))),
+        Payload::Mix { salt, flops } => {
+            clock::sleep(cost.duration(*flops, gflops, jitter)).await;
+            Ok(DataObj::tensor(mix_tensors(*salt, inputs)?))
+        }
         Payload::Pjrt { artifact } => {
             let rt = runtime.ok_or_else(|| {
                 EngineError::Runtime(format!(
@@ -55,6 +59,41 @@ pub async fn run_payload(
             Ok(DataObj::tensor(out))
         }
     }
+}
+
+/// The deterministic combine behind [`Payload::Mix`]: a seeded base vector
+/// folded with every input tensor in parent order. Pure f32 arithmetic in
+/// a fixed evaluation order, so any two engines that hand the same parent
+/// outputs to the same task produce bit-identical results — and any
+/// routing or duplication bug changes the bits.
+fn mix_tensors(salt: u64, inputs: &[DataObj]) -> EngineResult<Tensor> {
+    let mut rng = crate::core::SplitMix64::new(salt);
+    let len = inputs
+        .iter()
+        .filter_map(|o| o.tensor.as_ref())
+        .map(|t| t.numel())
+        .max()
+        .unwrap_or(4)
+        .max(1);
+    let mut acc: Vec<f32> = (0..len).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+    for (k, obj) in inputs.iter().enumerate() {
+        let t = obj.tensor.as_ref().ok_or_else(|| {
+            EngineError::Job(format!(
+                "Mix payload input {k} carries no tensor — a synthetic object \
+                 leaked into the value-carrying data plane"
+            ))
+        })?;
+        if t.numel() == 0 {
+            return Err(EngineError::Job(format!(
+                "Mix payload input {k} is an empty tensor"
+            )));
+        }
+        let w = 0.25 + 0.125 * (k as f32 + 1.0);
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a = 0.5 * *a + w * t.data[i % t.numel()];
+        }
+    }
+    Ok(Tensor::vec1(acc))
 }
 
 #[cfg(test)]
@@ -113,6 +152,74 @@ mod tests {
             .unwrap();
             assert_eq!(out.expect_tensor().data, vec![1.0, 2.0]);
             assert_eq!(out.bytes, 8);
+        });
+    }
+
+    #[test]
+    fn mix_is_deterministic_and_order_sensitive() {
+        crate::rt::run_virtual(async {
+            let cm = CostModel::default();
+            let a = DataObj::tensor(Tensor::vec1(vec![1.0, 2.0, 3.0]));
+            let b = DataObj::tensor(Tensor::vec1(vec![-1.0, 0.5]));
+            let cm = &cm;
+            let run = |inputs: Vec<DataObj>| async move {
+                run_payload(
+                    &Payload::Mix { salt: 11, flops: 0.0 },
+                    0,
+                    &inputs,
+                    10.0,
+                    1.0,
+                    cm,
+                    None,
+                )
+                .await
+                .unwrap()
+            };
+            let o1 = run(vec![a.clone(), b.clone()]).await;
+            let o2 = run(vec![a.clone(), b.clone()]).await;
+            assert_eq!(o1.expect_tensor().data, o2.expect_tensor().data);
+            // Swapping parent order must change the bits.
+            let o3 = run(vec![b, a]).await;
+            assert_ne!(o1.expect_tensor().data, o3.expect_tensor().data);
+        });
+    }
+
+    #[test]
+    fn mix_rejects_synthetic_inputs() {
+        crate::rt::run_virtual(async {
+            let cm = CostModel::default();
+            let err = run_payload(
+                &Payload::Mix { salt: 1, flops: 0.0 },
+                0,
+                &[DataObj::synthetic(64)],
+                10.0,
+                1.0,
+                &cm,
+                None,
+            )
+            .await
+            .unwrap_err();
+            assert!(matches!(err, EngineError::Job(_)));
+        });
+    }
+
+    #[test]
+    fn mix_costs_modeled_duration() {
+        crate::rt::run_virtual(async {
+            let cm = CostModel::default();
+            let t0 = now();
+            run_payload(
+                &Payload::Mix { salt: 2, flops: 1e9 },
+                0,
+                &[],
+                10.0,
+                1.0,
+                &cm,
+                None,
+            )
+            .await
+            .unwrap();
+            assert_eq!(now() - t0, Duration::from_millis(100));
         });
     }
 

@@ -1,7 +1,7 @@
 //! The FaaS platform: function invocation, container lifecycle, timeouts,
 //! retries, concurrency cap, billing.
 
-use crate::core::{clock, EngineError, EngineResult, ExecutorId, FaasConfig};
+use crate::core::{clock, EngineError, EngineResult, ExecutorId, FaasConfig, FaultConfig, SplitMix64};
 use crate::faas::billing::Billing;
 use crate::metrics::MetricsHub;
 use std::future::Future;
@@ -20,6 +20,12 @@ pub struct Faas {
     warm: Mutex<usize>,
     /// Platform-wide concurrent execution cap.
     concurrency: Arc<Semaphore>,
+    /// Fault-injection profile (benign by default) and its seeded draw
+    /// stream. Draws happen in executor scheduling order, which the
+    /// virtual-time runtime makes deterministic, so identical runs inject
+    /// identical faults.
+    faults: FaultConfig,
+    fault_rng: Mutex<SplitMix64>,
     next_executor: AtomicU64,
     active: AtomicU64,
     peak_active: AtomicU64,
@@ -28,17 +34,35 @@ pub struct Faas {
 
 impl Faas {
     pub fn new(cfg: FaasConfig, metrics: Arc<MetricsHub>) -> Arc<Self> {
+        Self::with_faults(cfg, FaultConfig::default(), metrics)
+    }
+
+    /// Full constructor with a fault-injection profile: seeded cold-start
+    /// inflation and transient container crashes (always masked by the
+    /// platform's automatic retries — the final allowed attempt of an
+    /// invocation is never crashed, so injected faults perturb timing and
+    /// placement without ever failing a job).
+    pub fn with_faults(
+        cfg: FaasConfig,
+        faults: FaultConfig,
+        metrics: Arc<MetricsHub>,
+    ) -> Arc<Self> {
         let billing = Billing {
             granularity: Duration::from_millis(cfg.billing_granularity_ms),
             memory_gb: cfg.memory_bytes as f64 / (1u64 << 30) as f64,
             ..Billing::default()
         };
+        let fault_rng = Mutex::new(SplitMix64::new(
+            faults.seed ^ 0x6661_6173u64.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        ));
         Arc::new(Faas {
             warm: Mutex::new(cfg.warm_pool),
             concurrency: Semaphore::new(cfg.max_concurrency),
             cfg,
             billing,
             metrics,
+            faults,
+            fault_rng,
             next_executor: AtomicU64::new(0),
             active: AtomicU64::new(0),
             peak_active: AtomicU64::new(0),
@@ -80,7 +104,10 @@ impl Faas {
             loop {
                 attempts += 1;
                 let id = ExecutorId(platform.next_executor.fetch_add(1, Ordering::Relaxed));
-                let result = platform.run_container(id, make_body(id)).await;
+                // Injected crashes stay transient: never crash the final
+                // allowed attempt, so the retry loop always masks them.
+                let may_crash = attempts <= platform.cfg.max_retries;
+                let result = platform.run_container(id, make_body(id), may_crash).await;
                 match result {
                     Ok(()) => return Ok(()),
                     Err(e) if attempts <= platform.cfg.max_retries => {
@@ -105,6 +132,7 @@ impl Faas {
         self: &Arc<Self>,
         _id: ExecutorId,
         body: impl Future<Output = EngineResult<()>>,
+        may_crash: bool,
     ) -> EngineResult<()> {
         // Concurrency admission (throttled invocations queue).
         let permit = self.concurrency.acquire_owned().await;
@@ -119,13 +147,30 @@ impl Faas {
                 true
             }
         };
-        let start_delay = if cold {
+        let mut start_delay = if cold {
             self.cfg.cold_start_ms
         } else {
             self.cfg.warm_start_ms
         };
+        if cold && self.faults.cold_start_spread > 0.0 {
+            let u = self.fault_rng.lock().unwrap().next_f64();
+            start_delay *= 1.0 + self.faults.cold_start_spread * u;
+        }
         clock::sleep(Duration::from_secs_f64(start_delay * 1e-3)).await;
         self.metrics.record_invocation(cold);
+
+        // Injected transient crash: the container dies right after
+        // start-up, before the function body runs — the body future is
+        // dropped unpolled, so no partial execution can ever leak (the
+        // exactly-once guards stay intact across retries).
+        if may_crash && self.faults.crash_prob > 0.0 {
+            let crash = self.fault_rng.lock().unwrap().next_f64() < self.faults.crash_prob;
+            if crash {
+                *self.warm.lock().unwrap() += 1;
+                drop(permit);
+                return Err(EngineError::Job("injected container crash".into()));
+            }
+        }
 
         let n = self.active.fetch_add(1, Ordering::Relaxed) + 1;
         self.peak_active.fetch_max(n, Ordering::Relaxed);
@@ -257,6 +302,60 @@ mod tests {
                 .await;
             assert!(h.await.is_ok());
         });
+    }
+
+    #[test]
+    fn injected_crashes_always_masked_by_retries() {
+        crate::rt::run_virtual(async {
+            let m = Arc::new(MetricsHub::new());
+            let faas = Faas::with_faults(
+                FaasConfig::default(),
+                crate::core::FaultConfig {
+                    crash_prob: 0.9, // aggressive: most attempts crash
+                    seed: 1,
+                    ..crate::core::FaultConfig::default()
+                },
+                m.clone(),
+            );
+            // Every invocation must still succeed: the final allowed
+            // attempt is never crashed.
+            for _ in 0..50 {
+                let h = faas.invoke(|_| async { Ok(()) }).await;
+                h.await.unwrap();
+            }
+            // Retries visibly happened.
+            assert!(m.lambdas_invoked() > 50, "crashed attempts also invoke");
+        });
+    }
+
+    #[test]
+    fn cold_start_spread_inflates_cold_starts_deterministically() {
+        let run = || {
+            crate::rt::run_virtual(async {
+                let m = Arc::new(MetricsHub::new());
+                let faas = Faas::with_faults(
+                    FaasConfig {
+                        warm_pool: 0,
+                        ..FaasConfig::default()
+                    },
+                    crate::core::FaultConfig {
+                        cold_start_spread: 2.0,
+                        seed: 9,
+                        ..crate::core::FaultConfig::default()
+                    },
+                    m,
+                );
+                let t0 = clock::now();
+                let h = faas.invoke(|_| async { Ok(()) }).await;
+                h.await.unwrap();
+                clock::now() - t0
+            })
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "same fault seed must inject the same delay");
+        // API latency (50ms) + inflated cold start (>= base 250ms).
+        assert!(a >= Duration::from_millis(300), "got {a:?}");
+        assert!(a <= Duration::from_millis(50 + 750 + 1), "got {a:?}");
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod netmodel;
 pub mod pubsub;
 pub mod store;
 
-pub use netmodel::Nic;
+pub use netmodel::{Nic, TailLatency};
 pub use pubsub::{Message, PubSub, Subscription};
 pub use store::KvStore;

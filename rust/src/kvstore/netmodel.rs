@@ -8,9 +8,55 @@
 //! once) and the resource-contention effect of co-locating all shards on
 //! one VM (Fig. 12's "shard per VM" factor).
 
-use crate::core::clock;
-use std::sync::Arc;
+use crate::core::{clock, FaultConfig, SplitMix64};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Seeded heavy-tail latency model: each sampled operation independently
+/// hits the tail with probability `prob`, multiplying its base latency by
+/// `factor`. Draws come from one `SplitMix64` stream, so — on the
+/// deterministic single-threaded runtime — identical runs sample identical
+/// tails. This is the fault-injection form of the latency upper tail the
+/// paper observed when hundreds of Lambdas hit the KV shards at once
+/// (Fig. 13).
+pub struct TailLatency {
+    prob: f64,
+    factor: f64,
+    rng: Mutex<SplitMix64>,
+}
+
+impl std::fmt::Debug for TailLatency {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TailLatency(p={}, x{})", self.prob, self.factor)
+    }
+}
+
+impl TailLatency {
+    /// Builds the KV tail model of a fault profile. A benign profile
+    /// yields a pass-through model (every sample returns the base).
+    pub fn from_faults(faults: &FaultConfig, stream_salt: u64) -> Self {
+        TailLatency {
+            prob: faults.kv_tail_prob,
+            factor: faults.kv_tail_factor.max(1.0),
+            rng: Mutex::new(SplitMix64::new(
+                faults.seed ^ stream_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            )),
+        }
+    }
+
+    /// Samples the latency of one operation with base latency `base`.
+    pub fn sample(&self, base: Duration) -> Duration {
+        if self.prob <= 0.0 || self.factor <= 1.0 || base.is_zero() {
+            return base;
+        }
+        let hit = self.rng.lock().unwrap().next_f64() < self.prob;
+        if hit {
+            base.mul_f64(self.factor)
+        } else {
+            base
+        }
+    }
+}
 
 /// A FIFO bandwidth server (one NIC / one network direction).
 pub struct Nic {
@@ -111,6 +157,42 @@ mod tests {
             nic.transfer_capped(1000, 1000.0).await; // remote is 10x slower
             assert_eq!(now() - t0, Duration::from_secs(1));
         });
+    }
+
+    #[test]
+    fn tail_latency_benign_passthrough() {
+        let t = TailLatency::from_faults(&FaultConfig::default(), 1);
+        let base = Duration::from_micros(300);
+        for _ in 0..100 {
+            assert_eq!(t.sample(base), base);
+        }
+    }
+
+    #[test]
+    fn tail_latency_deterministic_and_bounded() {
+        let mk = || {
+            TailLatency::from_faults(
+                &FaultConfig {
+                    kv_tail_prob: 0.2,
+                    kv_tail_factor: 10.0,
+                    seed: 42,
+                    ..FaultConfig::default()
+                },
+                3,
+            )
+        };
+        let (a, b) = (mk(), mk());
+        let base = Duration::from_micros(300);
+        let mut tails = 0;
+        for _ in 0..1000 {
+            let (sa, sb) = (a.sample(base), b.sample(base));
+            assert_eq!(sa, sb, "same seed must sample identically");
+            assert!(sa == base || sa == base.mul_f64(10.0));
+            if sa > base {
+                tails += 1;
+            }
+        }
+        assert!((100..400).contains(&tails), "tail rate ~20%, got {tails}");
     }
 
     #[test]

@@ -2,8 +2,8 @@
 //! (fan-in dependency counters, paper §IV-C), and the pub/sub front end.
 
 use crate::compute::DataObj;
-use crate::core::{clock, EngineError, EngineResult, NetConfig, ObjectKey};
-use crate::kvstore::netmodel::Nic;
+use crate::core::{clock, EngineError, EngineResult, FaultConfig, NetConfig, ObjectKey};
+use crate::kvstore::netmodel::{Nic, TailLatency};
 use crate::kvstore::pubsub::{Message, PubSub, Subscription};
 use crate::metrics::{KvOpKind, MetricsHub};
 use std::collections::HashMap;
@@ -22,6 +22,8 @@ pub struct KvStore {
     pubsub: PubSub,
     cfg: NetConfig,
     metrics: Arc<MetricsHub>,
+    /// Seeded heavy-tail latency injection (pass-through when benign).
+    tail: TailLatency,
     /// "Ideal storage" mode (Fig. 10 yellow bars): data still flows so
     /// real-compute jobs stay correct, but every transfer is free.
     ideal: bool,
@@ -33,6 +35,18 @@ impl KvStore {
     }
 
     pub fn with_ideal(cfg: NetConfig, metrics: Arc<MetricsHub>, ideal: bool) -> Arc<Self> {
+        Self::with_faults(cfg, FaultConfig::default(), metrics, ideal)
+    }
+
+    /// Full constructor: network config, fault-injection profile, ideal
+    /// mode. Fault draws are seeded, so identical runs sample identical
+    /// latency tails.
+    pub fn with_faults(
+        cfg: NetConfig,
+        faults: FaultConfig,
+        metrics: Arc<MetricsHub>,
+        ideal: bool,
+    ) -> Arc<Self> {
         assert!(cfg.kv_shards > 0);
         // Shard-per-VM: each shard gets its own NIC. Shared-VM mode (the
         // pre-optimization configuration of Fig. 12): one NIC serves all
@@ -56,17 +70,14 @@ impl KvStore {
             pubsub: PubSub::new(),
             cfg,
             metrics,
+            tail: TailLatency::from_faults(&faults, 0x6b76),
             ideal,
         })
     }
 
     fn shard_of(&self, key: &str) -> &Shard {
         // FNV-1a — stable, dependency-free key hashing.
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in key.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
+        let h = crate::core::Fnv1a::hash(key.as_bytes());
         &self.shards[(h % self.shards.len() as u64) as usize]
     }
 
@@ -80,7 +91,7 @@ impl KvStore {
         let bytes = obj.bytes;
         let shard = self.shard_of(key.as_str());
         if !self.ideal {
-            clock::sleep(self.latency()).await;
+            clock::sleep(self.tail.sample(self.latency())).await;
             shard.nic.transfer_capped(bytes, client_bps).await;
         }
         shard
@@ -106,7 +117,7 @@ impl KvStore {
                 key: key.as_str().to_string(),
             })?;
         if !self.ideal {
-            clock::sleep(self.latency()).await;
+            clock::sleep(self.tail.sample(self.latency())).await;
             shard.nic.transfer_capped(obj.bytes, client_bps).await;
         }
         self.metrics
@@ -129,7 +140,7 @@ impl KvStore {
     pub async fn incr(&self, key: &ObjectKey) -> u64 {
         let t0 = clock::now();
         if !self.ideal {
-            clock::sleep(self.latency() * 2).await; // request + reply
+            clock::sleep(self.tail.sample(self.latency() * 2)).await; // request + reply
         }
         let shard = self.shard_of(key.as_str());
         let v = {
@@ -158,7 +169,11 @@ impl KvStore {
     pub async fn publish(&self, channel: &str, msg: Message) -> usize {
         let t0 = clock::now();
         if !self.ideal {
-            clock::sleep(Duration::from_secs_f64(self.cfg.pubsub_latency_us * 1e-6)).await;
+            clock::sleep(
+                self.tail
+                    .sample(Duration::from_secs_f64(self.cfg.pubsub_latency_us * 1e-6)),
+            )
+            .await;
         }
         let n = self.pubsub.publish(channel, msg);
         self.metrics
@@ -178,6 +193,38 @@ impl KvStore {
             .iter()
             .map(|s| s.objects.lock().unwrap().len())
             .sum()
+    }
+
+    /// Every stored object key across all shards, sorted (forensic
+    /// inspection: the differential oracle checks for orphaned
+    /// intermediates after a job completes).
+    pub fn object_keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.objects.lock().unwrap().keys().cloned().collect::<Vec<_>>())
+            .collect();
+        keys.sort();
+        keys
+    }
+
+    /// Every counter and its final value, sorted by key (forensic
+    /// inspection: fan-in counters must end exactly at in-degree).
+    pub fn counter_entries(&self) -> Vec<(String, u64)> {
+        let mut entries: Vec<(String, u64)> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                s.counters
+                    .lock()
+                    .unwrap()
+                    .iter()
+                    .map(|(k, v)| (k.clone(), *v))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        entries.sort();
+        entries
     }
 
     /// Total stored bytes across all shards.

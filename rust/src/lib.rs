@@ -49,7 +49,11 @@
 //!
 //! Around the core: [`faas`], [`kvstore`], [`storage`], [`compute`],
 //! [`metrics`], [`rt`] (virtual-time runtime), [`runtime`] (PJRT bridge),
-//! [`workloads`] and [`bench`] (the paper's evaluation).
+//! [`workloads`] and [`bench`] (the paper's evaluation), and [`sim`] —
+//! the deterministic simulation harness: seeded fault injection
+//! ([`core::FaultConfig`]), canonical event traces, and the cross-policy
+//! differential oracle that proves all five designs compute identical
+//! results under adversarial timing.
 //!
 //! ## Quick start
 //! ```no_run
@@ -88,6 +92,7 @@ pub mod metrics;
 pub mod rt;
 pub mod runtime;
 pub mod schedule;
+pub mod sim;
 pub mod storage;
 pub mod workloads;
 
@@ -95,10 +100,11 @@ pub mod workloads;
 pub mod prelude {
     pub use crate::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
     pub use crate::compute::{DataObj, Payload, Tensor};
-    pub use crate::core::{ClusterProfile, EngineError, EngineResult, SimConfig, TaskId};
+    pub use crate::core::{ClusterProfile, EngineError, EngineResult, FaultConfig, SimConfig, TaskId};
     pub use crate::dag::{Dag, DagBuilder};
     pub use crate::engine::{self, Client, EngineDriver, SchedulingPolicy, WukongEngine};
     pub use crate::metrics::{Cdf, JobReport};
     pub use crate::runtime::PjrtRuntime;
+    pub use crate::sim::{self, SimHarness};
     pub use crate::workloads;
 }

@@ -159,6 +159,64 @@ mod tests {
     }
 
     #[test]
+    fn zero_task_dag_lowers_to_empty_tables() {
+        // The builder rejects empty DAGs, but lowering must still be
+        // total over a zero-task graph (crate-internal construction):
+        // empty tables, no panic, no spurious fan-out decisions.
+        let dag = crate::dag::Dag::from_parts(vec![], vec![], vec![]);
+        let mut decisions = 0;
+        let low = LoweredOps::lower_with(&dag, |_| {
+            decisions += 1;
+            FanOutAction::Invoke
+        });
+        assert_eq!(low.len(), 0);
+        assert!(low.is_empty());
+        assert_eq!(decisions, 0, "no fan-out rule calls on an empty DAG");
+    }
+
+    #[test]
+    fn single_source_to_sink_chain() {
+        let mut b = DagBuilder::new();
+        let src = b.add_task("src", Payload::Noop, 8, &[]);
+        b.add_task("sink", Payload::Noop, 8, &[src]);
+        let dag = b.build().unwrap();
+        let mut decisions = 0;
+        let low = LoweredOps::lower_with(&dag, |_| {
+            decisions += 1;
+            FanOutAction::Delegate
+        });
+        // A pure chain never consults the policy: the source is a
+        // trivial fan-out and the sink has no out-edges.
+        assert_eq!(decisions, 0);
+        assert_eq!(low.fan_out_action(TaskId(0)), FanOutAction::Continue);
+        assert_eq!(low.fan_out_action(TaskId(1)), FanOutAction::Sink);
+        assert_eq!(low.in_degree(TaskId(0)), 0);
+        assert_eq!(low.in_degree(TaskId(1)), 1);
+    }
+
+    #[test]
+    fn fan_out_exactly_at_threshold_delegates() {
+        // Width == threshold is the delegation boundary (>= rule), one
+        // above stays delegated, one below is invoked directly — checked
+        // around the default proxy threshold of 10.
+        for width in [9usize, 10, 11] {
+            let mut b = DagBuilder::new();
+            let root = b.add_task("root", Payload::Noop, 8, &[]);
+            for i in 0..width {
+                b.add_task(format!("c{i}"), Payload::Noop, 8, &[root]);
+            }
+            let dag = b.build().unwrap();
+            let low = LoweredOps::lower(&dag, 10);
+            let expected = if width >= 10 {
+                FanOutAction::Delegate
+            } else {
+                FanOutAction::Invoke
+            };
+            assert_eq!(low.fan_out_action(root), expected, "width {width}");
+        }
+    }
+
+    #[test]
     fn custom_rule_via_lower_with() {
         let dag = fixture();
         // A policy that always delegates, regardless of width.

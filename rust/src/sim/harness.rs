@@ -1,0 +1,205 @@
+//! The seeded simulation harness: one entry point that runs any
+//! scheduling policy over a DAG in deterministic virtual time, with fault
+//! injection, and returns everything the oracle and the tests inspect —
+//! report, sink-output fingerprint, canonical event trace, and the KV
+//! store for forensic checks.
+
+use crate::compute::DataObj;
+use crate::core::{FaultConfig, SimConfig, TaskId};
+use crate::dag::Dag;
+use crate::engine::policies::{
+    ParallelInvokerPolicy, PubSubPolicy, ServerfulDaskPolicy, StrawmanPolicy, WukongPolicy,
+};
+use crate::engine::{EngineDriver, ExecutionMode, SchedulingPolicy};
+use crate::kvstore::KvStore;
+use crate::metrics::JobReport;
+use crate::sim::trace::render_trace;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Which execution skeleton a policy ran under — decides which substrate
+/// invariants apply to its [`PolicyRun`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModeKind {
+    Centralized,
+    Decentralized,
+    Serverful,
+}
+
+/// The outcome of running one policy under the harness.
+pub struct PolicyRun {
+    /// Report label of the policy ("WUKONG", "Strawman", ...).
+    pub label: String,
+    pub mode: ModeKind,
+    pub report: JobReport,
+    /// Sink outputs (value-carrying DAGs: the actual result tensors).
+    pub outputs: HashMap<TaskId, DataObj>,
+    /// Order-independent digest of the sink outputs: `(sink, fnv1a)` pairs
+    /// sorted by task id. Two engines agree iff these are equal.
+    pub fingerprint: Vec<(TaskId, u64)>,
+    /// Canonical event trace (see [`crate::sim::trace`]).
+    pub trace: String,
+    /// KV store handle (centralized/decentralized modes).
+    pub kv: Option<Arc<KvStore>>,
+}
+
+/// Seeded harness configuration. Build one per (seed, fault profile),
+/// then run as many policies as needed over the same DAG.
+#[derive(Clone, Debug)]
+pub struct SimHarness {
+    cfg: SimConfig,
+}
+
+impl SimHarness {
+    /// A deterministic test configuration (zero duration jitter, benign
+    /// faults) with the given simulation seed.
+    pub fn new(seed: u64) -> Self {
+        let mut cfg = SimConfig::test();
+        cfg.seed = seed;
+        SimHarness { cfg }
+    }
+
+    /// Uses an explicit base configuration.
+    pub fn with_cfg(cfg: SimConfig) -> Self {
+        SimHarness { cfg }
+    }
+
+    /// Attaches a fault profile.
+    pub fn with_faults(mut self, faults: FaultConfig) -> Self {
+        self.cfg.faults = faults;
+        self
+    }
+
+    /// Attaches the adversarial chaos profile derived from this harness's
+    /// seed (see [`FaultConfig::chaos`]). Also shrinks the pre-warmed
+    /// container pool: with the default 2048-container pool cold starts
+    /// never occur, which would leave the cold-start fault class inert.
+    pub fn with_chaos(mut self) -> Self {
+        self.cfg.faas.warm_pool = 4;
+        let seed = self.cfg.seed;
+        self.with_faults(FaultConfig::chaos(seed ^ 0xC4A0_5C0D_E5EE_D5u64))
+    }
+
+    pub fn cfg(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Runs `policy` over `dag` in deterministic virtual time and gathers
+    /// the forensic artifacts.
+    pub fn run(&self, policy: Arc<dyn SchedulingPolicy>, dag: &Dag) -> PolicyRun {
+        let mode = match policy.mode(&self.cfg) {
+            ExecutionMode::Centralized(_) => ModeKind::Centralized,
+            ExecutionMode::Decentralized(_) => ModeKind::Decentralized,
+            ExecutionMode::Serverful(_) => ModeKind::Serverful,
+        };
+        let cfg = self.cfg.clone();
+        let dag = dag.clone();
+        let run = crate::engine::run_sim(async move {
+            let driver = EngineDriver::with_policy(cfg, policy).with_sampling();
+            driver.run_forensic(&dag).await
+        });
+        let trace = render_trace(&run.report, &run.metrics.task_spans());
+        let fingerprint = fingerprint_outputs(&run.outputs);
+        PolicyRun {
+            label: run.report.platform.clone(),
+            mode,
+            report: run.report,
+            outputs: run.outputs,
+            fingerprint,
+            trace,
+            kv: run.kv,
+        }
+    }
+}
+
+/// The five paper designs, in presentation order (§III strawman, pub/sub,
+/// parallel-invoker; §IV WUKONG; §V serverful Dask).
+pub fn paper_policies() -> Vec<Arc<dyn SchedulingPolicy>> {
+    vec![
+        Arc::new(StrawmanPolicy),
+        Arc::new(PubSubPolicy),
+        Arc::new(ParallelInvokerPolicy),
+        Arc::new(WukongPolicy),
+        Arc::new(ServerfulDaskPolicy::ec2()),
+    ]
+}
+
+/// Order-independent digest of a sink-output map: FNV-1a over each
+/// object's size and (bit-exact) tensor contents, sorted by sink id.
+pub fn fingerprint_outputs(outputs: &HashMap<TaskId, DataObj>) -> Vec<(TaskId, u64)> {
+    let mut fp: Vec<(TaskId, u64)> = outputs
+        .iter()
+        .map(|(&t, obj)| {
+            let mut h = crate::core::Fnv1a::new();
+            h.write(&obj.bytes.to_le_bytes());
+            if let Some(tensor) = &obj.tensor {
+                for d in &tensor.shape {
+                    h.write(&(*d as u64).to_le_bytes());
+                }
+                for v in &tensor.data {
+                    h.write(&v.to_bits().to_le_bytes());
+                }
+            }
+            (t, h.finish())
+        })
+        .collect();
+    fp.sort_by_key(|&(t, _)| t);
+    fp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Tensor;
+
+    #[test]
+    fn paper_policies_are_the_five_designs() {
+        let cfg = SimConfig::test();
+        let modes: Vec<ModeKind> = paper_policies()
+            .into_iter()
+            .map(|p| match p.mode(&cfg) {
+                ExecutionMode::Centralized(_) => ModeKind::Centralized,
+                ExecutionMode::Decentralized(_) => ModeKind::Decentralized,
+                ExecutionMode::Serverful(_) => ModeKind::Serverful,
+            })
+            .collect();
+        assert_eq!(
+            modes,
+            vec![
+                ModeKind::Centralized,
+                ModeKind::Centralized,
+                ModeKind::Centralized,
+                ModeKind::Decentralized,
+                ModeKind::Serverful,
+            ]
+        );
+    }
+
+    #[test]
+    fn fingerprint_detects_value_differences() {
+        let mut a = HashMap::new();
+        a.insert(TaskId(1), DataObj::tensor(Tensor::vec1(vec![1.0, 2.0])));
+        let mut b = HashMap::new();
+        b.insert(TaskId(1), DataObj::tensor(Tensor::vec1(vec![1.0, 2.5])));
+        assert_ne!(fingerprint_outputs(&a), fingerprint_outputs(&b));
+        let a2: HashMap<_, _> = a.clone();
+        assert_eq!(fingerprint_outputs(&a), fingerprint_outputs(&a2));
+    }
+
+    #[test]
+    fn harness_runs_a_policy_end_to_end() {
+        use crate::compute::Payload;
+        use crate::dag::DagBuilder;
+        let mut bld = DagBuilder::new();
+        let l = bld.add_task("l", Payload::Const(Arc::new(Tensor::vec1(vec![1.0]))), 4, &[]);
+        bld.add_task("s", Payload::Mix { salt: 3, flops: 0.0 }, 4, &[l]);
+        let dag = bld.build().unwrap();
+        let h = SimHarness::new(1).with_chaos();
+        let run = h.run(Arc::new(WukongPolicy), &dag);
+        assert!(run.report.is_ok(), "{:?}", run.report);
+        assert_eq!(run.mode, ModeKind::Decentralized);
+        assert_eq!(run.fingerprint.len(), 1);
+        assert!(run.trace.starts_with("job platform=WUKONG"));
+        assert!(run.kv.is_some());
+    }
+}

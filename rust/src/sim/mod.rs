@@ -1,0 +1,31 @@
+//! Deterministic simulation harness: seeded fault injection, canonical
+//! event traces, and the cross-policy differential oracle.
+//!
+//! Everything in this module reproduces from a single `u64` seed:
+//!
+//! * the **DAG** under test ([`crate::workloads::random_dag`]);
+//! * the **fault schedule** ([`crate::core::FaultConfig`]): inflated cold
+//!   starts, transient container crashes masked by platform retries,
+//!   straggler tasks, and heavy-tailed KV latencies — injected through
+//!   the FaaS platform ([`crate::faas`]), the KV store network model
+//!   ([`crate::kvstore`]), and the shared per-task jitter
+//!   ([`crate::executor::jitter_for`]);
+//! * the **virtual-time schedule** itself ([`crate::rt`]).
+//!
+//! [`harness::SimHarness`] runs any
+//! [`SchedulingPolicy`](crate::engine::SchedulingPolicy) under that seed
+//! and returns the
+//! forensic artifacts; [`oracle::differential_check`] runs all five paper
+//! designs and proves them equivalent (byte-identical sink outputs plus
+//! substrate invariants); [`oracle::determinism_check`] proves each run
+//! replays to an identical [`trace`]. `rust/tests/sim_differential.rs`
+//! sweeps these over seed ranges in CI; see `rust/src/engine/README.md`
+//! for how to reproduce a failing seed from a CI log.
+
+pub mod harness;
+pub mod oracle;
+pub mod trace;
+
+pub use harness::{fingerprint_outputs, paper_policies, ModeKind, PolicyRun, SimHarness};
+pub use oracle::{determinism_check, differential_check, DifferentialReport};
+pub use trace::{first_divergence, render_trace};

@@ -1,0 +1,271 @@
+//! The cross-policy differential oracle.
+//!
+//! The paper's core claim is that its scheduling designs change *when and
+//! where* tasks run — never *what they compute*. The oracle turns that
+//! into an executable check: one seeded value-carrying random DAG, one
+//! seeded fault schedule (cold-start spikes, transient container crashes,
+//! stragglers, KV latency tails), all five designs run over both, and
+//! then:
+//!
+//! * every run completes with every task executed exactly once;
+//! * every run produces **byte-identical sink outputs** (the
+//!   [`fingerprint`](crate::sim::harness::fingerprint_outputs) digests
+//!   f32 bit patterns, so a single routing/ordering/duplication bug
+//!   anywhere in a scheduler flips it);
+//! * substrate invariants hold post-mortem: decentralized fan-in counters
+//!   end exactly at in-degree, stored intermediates are exactly the set
+//!   WUKONG's store-once rules imply (no orphans, no leaks), centralized
+//!   runs store every task output exactly once;
+//! * re-running any (seed, policy) pair yields a byte-identical event
+//!   trace ([`determinism_check`]).
+//!
+//! Any failing seed reproduces locally with
+//! `differential_check(seed)` — no other state is involved.
+
+use crate::core::TaskId;
+use crate::dag::Dag;
+use crate::sim::harness::{paper_policies, ModeKind, PolicyRun, SimHarness};
+use crate::sim::trace::first_divergence;
+use crate::workloads::random_dag::{random_dag, RandomDagSpec};
+use std::collections::BTreeMap;
+
+/// Summary of one passing differential check.
+#[derive(Clone, Debug)]
+pub struct DifferentialReport {
+    pub seed: u64,
+    pub tasks: usize,
+    pub edges: usize,
+    /// (policy label, virtual makespan seconds) per run.
+    pub makespans: Vec<(String, f64)>,
+}
+
+/// Runs all five paper designs over the seeded value-carrying random DAG
+/// with chaos-profile fault injection, checking completion, output
+/// equality, and substrate invariants. Returns a human-readable error
+/// naming the seed and the first violated invariant.
+pub fn differential_check(seed: u64) -> Result<DifferentialReport, String> {
+    let dag = random_dag(&RandomDagSpec::value(seed));
+    let harness = SimHarness::new(seed).with_chaos();
+
+    let runs: Vec<PolicyRun> = paper_policies()
+        .into_iter()
+        .map(|p| harness.run(p, &dag))
+        .collect();
+
+    for run in &runs {
+        if !run.report.is_ok() {
+            return Err(format!(
+                "seed {seed}: {} failed: {:?}",
+                run.label, run.report.error
+            ));
+        }
+        if run.report.tasks_executed != dag.len() as u64 {
+            return Err(format!(
+                "seed {seed}: {} executed {}/{} tasks",
+                run.label,
+                run.report.tasks_executed,
+                dag.len()
+            ));
+        }
+        if run.outputs.len() != dag.sinks().len() {
+            return Err(format!(
+                "seed {seed}: {} collected {}/{} sink outputs",
+                run.label,
+                run.outputs.len(),
+                dag.sinks().len()
+            ));
+        }
+        check_substrate(seed, run, &dag)?;
+    }
+
+    let reference = &runs[0];
+    for run in &runs[1..] {
+        if run.fingerprint != reference.fingerprint {
+            let diff: Vec<TaskId> = reference
+                .fingerprint
+                .iter()
+                .zip(&run.fingerprint)
+                .filter(|(a, b)| a != b)
+                .map(|(a, _)| a.0)
+                .collect();
+            return Err(format!(
+                "seed {seed}: sink outputs diverge between {} and {} at sinks {:?}",
+                reference.label, run.label, diff
+            ));
+        }
+    }
+
+    Ok(DifferentialReport {
+        seed,
+        tasks: dag.len(),
+        edges: dag.edge_count(),
+        makespans: runs
+            .iter()
+            .map(|r| (r.label.clone(), r.report.makespan.as_secs_f64()))
+            .collect(),
+    })
+}
+
+/// Runs every paper design twice under the same seed and fault schedule
+/// and requires byte-identical event traces.
+pub fn determinism_check(seed: u64) -> Result<(), String> {
+    let dag = random_dag(&RandomDagSpec::value(seed));
+    let harness = SimHarness::new(seed).with_chaos();
+    for policy in paper_policies() {
+        let a = harness.run(policy.clone(), &dag);
+        let b = harness.run(policy, &dag);
+        if a.trace != b.trace {
+            let (line, left, right) =
+                first_divergence(&a.trace, &b.trace).expect("traces differ");
+            return Err(format!(
+                "seed {seed}: {} is nondeterministic at trace line {line}:\n  run1: {left}\n  run2: {right}",
+                a.label
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Post-mortem substrate invariants per execution mode.
+fn check_substrate(seed: u64, run: &PolicyRun, dag: &Dag) -> Result<(), String> {
+    match run.mode {
+        ModeKind::Serverful => {
+            if run.kv.is_some() {
+                return Err(format!(
+                    "seed {seed}: {} is serverful but returned a KV store",
+                    run.label
+                ));
+            }
+        }
+        ModeKind::Centralized => {
+            let kv = run
+                .kv
+                .as_ref()
+                .ok_or_else(|| format!("seed {seed}: {} returned no KV store", run.label))?;
+            // Every task output stored exactly once; no counters used.
+            let expected: Vec<String> = {
+                let mut keys: Vec<String> =
+                    dag.task_ids().map(|t| format!("out:{}", t.0)).collect();
+                keys.sort();
+                keys
+            };
+            if kv.object_keys() != expected {
+                return Err(format!(
+                    "seed {seed}: {} stored objects {:?}, expected every task output",
+                    run.label,
+                    kv.object_keys()
+                ));
+            }
+            if !kv.counter_entries().is_empty() {
+                return Err(format!(
+                    "seed {seed}: {} used fan-in counters in centralized mode",
+                    run.label
+                ));
+            }
+        }
+        ModeKind::Decentralized => {
+            let kv = run
+                .kv
+                .as_ref()
+                .ok_or_else(|| format!("seed {seed}: {} returned no KV store", run.label))?;
+            // Fan-in dependency counters end exactly at in-degree, and
+            // exist only for fan-in tasks.
+            let expected_counters: BTreeMap<String, u64> = dag
+                .task_ids()
+                .filter(|&t| dag.in_degree(t) > 1)
+                .map(|t| (format!("ctr:{}", t.0), dag.in_degree(t) as u64))
+                .collect();
+            let actual_counters: BTreeMap<String, u64> =
+                kv.counter_entries().into_iter().collect();
+            if actual_counters != expected_counters {
+                return Err(format!(
+                    "seed {seed}: {} counters {:?} != in-degrees {:?}",
+                    run.label, actual_counters, expected_counters
+                ));
+            }
+            // Stored intermediates are exactly what the store-once rules
+            // imply: parents of fan-ins, real fan-outs, and sinks. Any
+            // extra key is an orphaned intermediate; any missing key is a
+            // lost output.
+            let mut expected: Vec<String> = expected_decentralized_outputs(dag)
+                .into_iter()
+                .map(|t| format!("out:{}", t.0))
+                .collect();
+            expected.sort();
+            if kv.object_keys() != expected {
+                return Err(format!(
+                    "seed {seed}: {} stored {:?}, store-once rules imply {:?}",
+                    run.label,
+                    kv.object_keys(),
+                    expected
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The exact set of task outputs a completed WUKONG run (local cache on,
+/// real storage) must have persisted: every parent of a fan-in task, every
+/// real fan-out (out-degree >= 2, stored before its children are invoked),
+/// and every sink.
+pub fn expected_decentralized_outputs(dag: &Dag) -> Vec<TaskId> {
+    let mut stored = vec![false; dag.len()];
+    for t in dag.task_ids() {
+        if dag.in_degree(t) > 1 {
+            for &p in dag.parents(t) {
+                stored[p.index()] = true;
+            }
+        }
+        if dag.out_degree(t) >= 2 {
+            stored[t.index()] = true;
+        }
+        if dag.out_degree(t) == 0 {
+            stored[t.index()] = true;
+        }
+    }
+    dag.task_ids().filter(|t| stored[t.index()]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+
+    #[test]
+    fn expected_outputs_diamond() {
+        // a -> {b, c} -> d: a is a fan-out, b and c are parents of the
+        // fan-in d, d is the sink — everything is stored in a diamond.
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 8, &[]);
+        let x = b.add_task("b", Payload::Noop, 8, &[a]);
+        let y = b.add_task("c", Payload::Noop, 8, &[a]);
+        b.add_task("d", Payload::Noop, 8, &[x, y]);
+        let dag = b.build().unwrap();
+        let exp = expected_decentralized_outputs(&dag);
+        assert_eq!(exp.len(), 4);
+    }
+
+    #[test]
+    fn expected_outputs_chain_is_sink_only() {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 8, &[]);
+        let c = b.add_task("b", Payload::Noop, 8, &[a]);
+        b.add_task("c", Payload::Noop, 8, &[c]);
+        let dag = b.build().unwrap();
+        assert_eq!(expected_decentralized_outputs(&dag), vec![TaskId(2)]);
+    }
+
+    #[test]
+    fn differential_oracle_passes_smoke_seeds() {
+        for seed in 0..3 {
+            differential_check(seed).unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn determinism_smoke_seed() {
+        determinism_check(0).unwrap_or_else(|e| panic!("{e}"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Deterministic event traces.
+//!
+//! A trace is a canonical text rendering of everything observable about
+//! one job execution: the job summary line and one line per task span in
+//! the order the spans were recorded. On the virtual-time runtime the
+//! record order is part of the deterministic schedule, so **two runs of
+//! the same (seed, policy, DAG, faults) must render byte-identical
+//! traces** — that equality is the harness's determinism check, and a
+//! trace diff is the debugging artifact a failing CI seed points at.
+
+use crate::metrics::{JobReport, TaskSpan};
+
+/// Renders the canonical trace of one run.
+pub fn render_trace(report: &JobReport, spans: &[TaskSpan]) -> String {
+    let mut out = String::with_capacity(64 + spans.len() * 48);
+    out.push_str(&format!(
+        "job platform={} makespan_ns={} tasks={} lambdas={} cold={} \
+         kv_r={} kv_w={} kv_i={} kv_p={} bytes_r={} bytes_w={} billed_ms={} ok={}\n",
+        report.platform,
+        report.makespan.as_nanos(),
+        report.tasks_executed,
+        report.lambdas_invoked,
+        report.cold_starts,
+        report.kv.reads,
+        report.kv.writes,
+        report.kv.incrs,
+        report.kv.publishes,
+        report.kv.bytes_read,
+        report.kv.bytes_written,
+        report.billed.as_millis(),
+        report.is_ok(),
+    ));
+    for s in spans {
+        out.push_str(&format!(
+            "task {} exec={} fetch_ns={} compute_ns={} store_ns={} total_ns={}\n",
+            s.task,
+            s.executor,
+            s.fetch.as_nanos(),
+            s.compute.as_nanos(),
+            s.store.as_nanos(),
+            s.total.as_nanos(),
+        ));
+    }
+    out
+}
+
+/// First differing line between two traces, for failure reports:
+/// `(line_number, left_line, right_line)`.
+pub fn first_divergence(a: &str, b: &str) -> Option<(usize, String, String)> {
+    let (mut la, mut lb) = (a.lines(), b.lines());
+    let mut n = 0;
+    loop {
+        n += 1;
+        match (la.next(), lb.next()) {
+            (None, None) => return None,
+            (x, y) if x == y => {}
+            (x, y) => {
+                return Some((
+                    n,
+                    x.unwrap_or("<eof>").to_string(),
+                    y.unwrap_or("<eof>").to_string(),
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{ExecutorId, TaskId};
+    use crate::metrics::MetricsHub;
+    use std::time::Duration;
+
+    fn span(task: u32) -> TaskSpan {
+        TaskSpan {
+            task: TaskId(task),
+            executor: ExecutorId(7),
+            fetch: Duration::from_millis(1),
+            compute: Duration::from_millis(2),
+            store: Duration::from_millis(3),
+            total: Duration::from_millis(6),
+        }
+    }
+
+    #[test]
+    fn trace_renders_summary_and_spans() {
+        let hub = MetricsHub::new();
+        let report = JobReport::success("WUKONG", Duration::from_secs(1), &hub);
+        let t = render_trace(&report, &[span(0), span(1)]);
+        assert!(t.starts_with("job platform=WUKONG "));
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains("task t1 exec=e7 "));
+    }
+
+    #[test]
+    fn divergence_found_and_none_for_equal() {
+        let hub = MetricsHub::new();
+        let report = JobReport::success("X", Duration::from_secs(1), &hub);
+        let a = render_trace(&report, &[span(0), span(1)]);
+        let b = render_trace(&report, &[span(0), span(2)]);
+        assert!(first_divergence(&a, &a).is_none());
+        let (line, left, right) = first_divergence(&a, &b).unwrap();
+        assert_eq!(line, 3);
+        assert!(left.contains("t1") && right.contains("t2"));
+    }
+}

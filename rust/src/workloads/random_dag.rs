@@ -1,0 +1,228 @@
+//! Seeded random layered DAGs — the adversarial counterpart of the
+//! paper's structured workloads (TR/GEMM/SVD), used by the simulation
+//! harness (`crate::sim`) and the property tests.
+//!
+//! A [`RandomDagSpec`] describes a family of layered graphs: layer widths
+//! up to `max_width`, `depth` internal layers, a power-law parent
+//! selection (`fan_in_skew`) that concentrates children on "hub" parents
+//! (producing the large fan-outs that exercise the proxy-delegation
+//! path), and optional cross-layer edges. Everything derives from one
+//! `u64` seed through [`SplitMix64`], so a DAG is reproducible from its
+//! seed alone — a failing CI seed replays locally with no further state.
+//!
+//! Two payload modes:
+//! * **timing mode** — `Noop` / `Sleep` / `Model` payloads with mixed
+//!   output sizes; exercises schedulers and the network model.
+//! * **value mode** — `Const` tensors at the leaves and deterministic
+//!   [`Payload::Mix`] combines above them; data *values* flow through the
+//!   engine, so sink outputs are byte-comparable across scheduling
+//!   policies (the differential oracle's equality check).
+
+use crate::compute::{Payload, Tensor};
+use crate::core::{SplitMix64, TaskId};
+use crate::dag::{Dag, DagBuilder};
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+/// Parameters of the random-DAG family.
+#[derive(Clone, Debug)]
+pub struct RandomDagSpec {
+    /// Seed for every structural and payload draw.
+    pub seed: u64,
+    /// Maximum tasks per layer (actual widths are drawn in `1..=max_width`).
+    pub max_width: usize,
+    /// Number of internal layers above the leaf layer.
+    pub depth: usize,
+    /// Power-law exponent for parent selection; larger values concentrate
+    /// edges on few hub parents (heavier fan-out skew). 1.0 is uniform.
+    pub fan_in_skew: f64,
+    /// Probability that a parent edge reaches past the previous layer to
+    /// an arbitrary earlier task (long-range dependency).
+    pub cross_layer_prob: f64,
+    /// Number of layers in which one parent is forcibly connected to the
+    /// *entire* next layer — guaranteed wide fan-outs at or above typical
+    /// proxy-delegation thresholds.
+    pub forced_hubs: usize,
+    /// Value mode (Const + Mix payloads) vs timing mode.
+    pub value_mode: bool,
+}
+
+impl RandomDagSpec {
+    /// Timing-mode family used by scheduler property tests.
+    pub fn timing(seed: u64) -> Self {
+        RandomDagSpec {
+            seed,
+            max_width: 12,
+            depth: 6,
+            fan_in_skew: 2.0,
+            cross_layer_prob: 0.2,
+            forced_hubs: 1,
+            value_mode: false,
+        }
+    }
+
+    /// Value-mode family used by the differential oracle.
+    pub fn value(seed: u64) -> Self {
+        RandomDagSpec {
+            value_mode: true,
+            ..Self::timing(seed)
+        }
+    }
+}
+
+/// Builds the DAG described by `spec`. Identical specs build identical
+/// graphs (shape, payloads, and sizes).
+pub fn random_dag(spec: &RandomDagSpec) -> Dag {
+    assert!(spec.max_width >= 1 && spec.depth >= 1, "degenerate spec");
+    let mut rng = SplitMix64::new(spec.seed);
+    let mut b = DagBuilder::new();
+
+    // Power-law pick over `len` candidates: u^skew concentrates on low
+    // indices, so early-created nodes become hub parents.
+    let pick = |rng: &mut SplitMix64, len: usize, skew: f64| -> usize {
+        let u = rng.next_f64();
+        ((len as f64 * u.powf(skew)) as usize).min(len - 1)
+    };
+
+    let leaf_payload = |rng: &mut SplitMix64| -> (Payload, u64) {
+        if spec.value_mode {
+            let n = 1 + rng.below(6) as usize;
+            let t = Tensor::vec1(rng.fill_f32(n));
+            let bytes = t.size_bytes();
+            (Payload::Const(Arc::new(t)), bytes)
+        } else {
+            (Payload::Noop, 64)
+        }
+    };
+    let inner_payload = |rng: &mut SplitMix64| -> (Payload, u64) {
+        if spec.value_mode {
+            (
+                Payload::Mix {
+                    salt: rng.next_u64(),
+                    flops: rng.next_f64() * 4e8,
+                },
+                64,
+            )
+        } else {
+            let payload = match rng.below(3) {
+                0 => Payload::Noop,
+                1 => Payload::Sleep {
+                    ms: rng.next_f64() * 20.0,
+                },
+                _ => Payload::Model {
+                    flops: rng.next_f64() * 5e8,
+                },
+            };
+            let bytes = match rng.below(3) {
+                0 => 64,
+                1 => 1 << 20,
+                _ => 32 << 20,
+            };
+            (payload, bytes)
+        }
+    };
+
+    // Leaf layer.
+    let w0 = 1 + rng.below(spec.max_width as u64) as usize;
+    let mut prev_layer: Vec<TaskId> = (0..w0)
+        .map(|i| {
+            let (p, bytes) = leaf_payload(&mut rng);
+            b.add_task(format!("leaf[{i}]"), p, bytes, &[])
+        })
+        .collect();
+    let mut all: Vec<TaskId> = prev_layer.clone();
+
+    // Which layers get a forced full-width hub parent.
+    let hub_layers: BTreeSet<usize> = (0..spec.forced_hubs)
+        .map(|_| 1 + rng.below(spec.depth as u64) as usize)
+        .collect();
+
+    for layer in 1..=spec.depth {
+        let w = 1 + rng.below(spec.max_width as u64) as usize;
+        let hub: Option<TaskId> = hub_layers
+            .contains(&layer)
+            .then(|| prev_layer[pick(&mut rng, prev_layer.len(), spec.fan_in_skew)]);
+        let mut this_layer = Vec::with_capacity(w);
+        for i in 0..w {
+            let mut parents: BTreeSet<TaskId> = BTreeSet::new();
+            if let Some(h) = hub {
+                parents.insert(h);
+            }
+            let k = 1 + rng.below(3) as usize;
+            for _ in 0..k {
+                let p = if rng.next_f64() < spec.cross_layer_prob {
+                    all[pick(&mut rng, all.len(), spec.fan_in_skew)]
+                } else {
+                    prev_layer[pick(&mut rng, prev_layer.len(), spec.fan_in_skew)]
+                };
+                parents.insert(p);
+            }
+            let deps: Vec<TaskId> = parents.into_iter().collect();
+            let (p, bytes) = inner_payload(&mut rng);
+            this_layer.push(b.add_task(format!("n[{layer}.{i}]"), p, bytes, &deps));
+        }
+        all.extend_from_slice(&this_layer);
+        prev_layer = this_layer;
+    }
+
+    b.build().expect("random layered DAG is valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_seed_builds_a_valid_dag() {
+        for seed in 0..100 {
+            let dag = random_dag(&RandomDagSpec::timing(seed));
+            assert!(!dag.leaves().is_empty(), "seed {seed}");
+            assert!(!dag.sinks().is_empty(), "seed {seed}");
+            assert!(dag.len() >= 2, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_graph() {
+        for seed in [0u64, 7, 1234] {
+            let a = random_dag(&RandomDagSpec::value(seed));
+            let b = random_dag(&RandomDagSpec::value(seed));
+            assert_eq!(a.len(), b.len());
+            assert_eq!(a.edge_count(), b.edge_count());
+            for t in a.task_ids() {
+                assert_eq!(a.children(t), b.children(t), "seed {seed} at {t}");
+                assert_eq!(a.parents(t), b.parents(t), "seed {seed} at {t}");
+                assert_eq!(a.task(t).output_bytes, b.task(t).output_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn value_mode_is_const_leaves_and_mix_interior() {
+        let dag = random_dag(&RandomDagSpec::value(3));
+        for t in dag.task_ids() {
+            match &dag.task(t).payload {
+                Payload::Const(_) => assert_eq!(dag.in_degree(t), 0, "{t}"),
+                Payload::Mix { .. } => assert!(dag.in_degree(t) >= 1, "{t}"),
+                p => panic!("unexpected payload {p:?} at {t}"),
+            }
+        }
+    }
+
+    #[test]
+    fn forced_hubs_produce_wide_fanouts() {
+        // Across a modest seed sweep, the forced hub must produce at least
+        // one fan-out spanning a whole layer (width can reach max_width).
+        let widest = (0..30)
+            .map(|seed| {
+                let dag = random_dag(&RandomDagSpec::timing(seed));
+                dag.task_ids()
+                    .map(|t| dag.out_degree(t))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .max()
+            .unwrap();
+        assert!(widest >= 10, "widest fan-out only {widest}");
+    }
+}

@@ -208,6 +208,95 @@ fn fan_in_counters_end_exactly_at_in_degree() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Properties of the parameterized random-DAG generator
+// (`workloads::random_dag`) — the family the differential oracle sweeps.
+// ---------------------------------------------------------------------
+
+use wukong::schedule::{FanOutAction, LoweredOps};
+use wukong::workloads::random_dag::{random_dag as gen_dag, RandomDagSpec};
+
+#[test]
+fn generated_dags_round_trip_csr_adjacency() {
+    for seed in 0..SEEDS {
+        let dag = gen_dag(&RandomDagSpec::timing(seed));
+        let mut forward_edges = 0usize;
+        let mut reverse_edges = 0usize;
+        for t in dag.task_ids() {
+            forward_edges += dag.out_degree(t);
+            reverse_edges += dag.in_degree(t);
+            assert_eq!(dag.children(t).len(), dag.out_degree(t), "seed {seed}");
+            assert_eq!(dag.parents(t).len(), dag.in_degree(t), "seed {seed}");
+            // Every forward edge has its reverse edge and vice versa.
+            for &c in dag.children(t) {
+                assert!(
+                    dag.parents(c).contains(&t),
+                    "seed {seed}: {t} -> {c} missing reverse edge"
+                );
+            }
+            for &p in dag.parents(t) {
+                assert!(
+                    dag.children(p).contains(&t),
+                    "seed {seed}: {p} -> {t} missing forward edge"
+                );
+            }
+        }
+        assert_eq!(forward_edges, dag.edge_count(), "seed {seed}");
+        assert_eq!(reverse_edges, dag.edge_count(), "seed {seed}");
+    }
+}
+
+#[test]
+fn validate_accepts_every_generated_dag() {
+    for seed in 0..SEEDS {
+        for spec in [RandomDagSpec::timing(seed), RandomDagSpec::value(seed)] {
+            let dag = gen_dag(&spec);
+            wukong::dag::validate::validate(&dag)
+                .unwrap_or_else(|e| panic!("seed {seed} ({spec:?}): {e}"));
+        }
+    }
+}
+
+#[test]
+fn lowering_matches_naive_reference_on_generated_dags() {
+    for seed in 0..SEEDS {
+        let dag = gen_dag(&RandomDagSpec::timing(seed));
+        for threshold in [2usize, 4, 10, usize::MAX] {
+            let low = LoweredOps::lower(&dag, threshold);
+            assert_eq!(low.len(), dag.len(), "seed {seed}");
+            for t in dag.task_ids() {
+                // Naive reference implementation, straight from the DAG.
+                let expected = match dag.out_degree(t) {
+                    0 => FanOutAction::Sink,
+                    1 => FanOutAction::Continue,
+                    w if w >= threshold => FanOutAction::Delegate,
+                    _ => FanOutAction::Invoke,
+                };
+                assert_eq!(
+                    low.fan_out_action(t),
+                    expected,
+                    "seed {seed}, threshold {threshold}, task {t}"
+                );
+                assert_eq!(low.in_degree(t), dag.in_degree(t), "seed {seed} {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wukong_holds_invariants_on_generated_dags_under_faults() {
+    for seed in 0..SEEDS / 3 {
+        let dag = gen_dag(&RandomDagSpec::timing(seed));
+        let n = dag.len() as u64;
+        let mut cfg = SimConfig::test();
+        cfg.seed = seed;
+        cfg.faults = wukong::core::FaultConfig::chaos(seed);
+        let report = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+        assert!(report.is_ok(), "seed {seed}: {report:?}");
+        assert_eq!(report.tasks_executed, n, "seed {seed}");
+    }
+}
+
 #[test]
 fn deterministic_across_identical_runs() {
     for seed in [3u64, 17, 29] {
