@@ -6,10 +6,16 @@
 //! `BENCH_hotpath.json` (override the path with `BENCH_JSON`) for the
 //! perf trajectory.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
-use wukong::core::SimConfig;
+use wukong::compute::{DataObj, Payload};
+use wukong::core::{Fnv1a, NetConfig, ObjectKey, SimConfig, TaskId};
+use wukong::dag::DagBuilder;
 use wukong::engine::{run_sim, WukongEngine};
+use wukong::kvstore::KvStore;
+use wukong::metrics::{KvOpKind, MetricsHub};
 use wukong::workloads;
 
 struct Row {
@@ -25,8 +31,21 @@ fn bench_case(
     iters: usize,
     mut run: impl FnMut(),
 ) -> f64 {
-    // Warm-up.
+    // Warm-up, then the timed runs.
     run();
+    bench_case_cold(rows, name, tasks, iters, run)
+}
+
+/// Like [`bench_case`] but without the warm-up run — for the large
+/// scaling cases where a duplicate cold run would double the bench time
+/// for little stability gain.
+fn bench_case_cold(
+    rows: &mut Vec<Row>,
+    name: &str,
+    tasks: usize,
+    iters: usize,
+    mut run: impl FnMut(),
+) -> f64 {
     let t0 = Instant::now();
     for _ in 0..iters {
         run();
@@ -76,6 +95,85 @@ fn write_json(rows: &[Row]) {
     match std::fs::write(&path, json) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+/// The pre-refactor KV key path, reconstructed for the before/after
+/// micro-comparison: `String` keys, FNV-1a byte hashing for shard
+/// routing, and `HashMap<String, _>` behind per-shard mutexes. Each op
+/// pays the same wrapper costs the real store pays in ideal mode — two
+/// `clock::now()` reads and one `MetricsHub::record_kv_op` — so the
+/// comparison against the packed-dense arm isolates the key/storage
+/// layout itself. Kept faithful to the old `kvstore::store` data layout —
+/// do not "optimize".
+struct LegacyKv {
+    shards: Vec<LegacyShard>,
+    metrics: Arc<MetricsHub>,
+}
+
+struct LegacyShard {
+    objects: Mutex<HashMap<String, DataObj>>,
+    counters: Mutex<HashMap<String, u64>>,
+}
+
+impl LegacyKv {
+    fn new(n_shards: usize) -> Self {
+        LegacyKv {
+            shards: (0..n_shards)
+                .map(|_| LegacyShard {
+                    objects: Mutex::new(HashMap::new()),
+                    counters: Mutex::new(HashMap::new()),
+                })
+                .collect(),
+            metrics: Arc::new(MetricsHub::new()),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &LegacyShard {
+        let h = Fnv1a::hash(key.as_bytes());
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    fn put(&self, key: &str, obj: DataObj) {
+        let t0 = wukong::core::clock::now();
+        let bytes = obj.bytes;
+        self.shard(key)
+            .objects
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), obj);
+        self.metrics
+            .record_kv_op(KvOpKind::Write, bytes, wukong::core::clock::now() - t0);
+    }
+
+    fn contains(&self, key: &str) -> bool {
+        let t0 = wukong::core::clock::now();
+        let hit = self.shard(key).objects.lock().unwrap().contains_key(key);
+        self.metrics
+            .record_kv_op(KvOpKind::Exists, 0, wukong::core::clock::now() - t0);
+        hit
+    }
+
+    fn get(&self, key: &str) -> Option<DataObj> {
+        let t0 = wukong::core::clock::now();
+        let obj = self.shard(key).objects.lock().unwrap().get(key).cloned();
+        let bytes = obj.as_ref().map_or(0, |o| o.bytes);
+        self.metrics
+            .record_kv_op(KvOpKind::Read, bytes, wukong::core::clock::now() - t0);
+        obj
+    }
+
+    fn incr(&self, key: &str) -> u64 {
+        let t0 = wukong::core::clock::now();
+        let v = {
+            let mut m = self.shard(key).counters.lock().unwrap();
+            let e = m.entry(key.to_string()).or_insert(0);
+            *e += 1;
+            *e
+        };
+        self.metrics
+            .record_kv_op(KvOpKind::Incr, 0, wukong::core::clock::now() - t0);
+        v
     }
 }
 
@@ -143,6 +241,99 @@ fn main() {
         let r = run_sim(async move { DaskCluster::ec2(cfg).run(&dag).await });
         assert!(r.is_ok());
     });
+
+    // --- scaling cases -----------------------------------------------
+    // Width-10k single fan-out (1 -> 10_000 -> 1): the proxy delegation
+    // path, the CSR FanOutRequest range, and a 10k-way fan-in counter —
+    // the shapes the packed-key / dense-slot layout exists for.
+    let wide = {
+        let mut b = DagBuilder::new();
+        let root = b.add_task("root", Payload::Noop, 8, &[]);
+        let mids: Vec<_> = (0..10_000)
+            .map(|i| b.add_task(format!("m{i}"), Payload::Noop, 8, &[root]))
+            .collect();
+        b.add_task("sink", Payload::Noop, 8, &mids);
+        b.build().expect("FO-10k DAG")
+    };
+    let n_wide = wide.len();
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/FO-10k ({n_wide} tasks)"),
+        n_wide,
+        iters(2),
+        || {
+            let (cfg, dag) = (cfg.clone(), wide.clone());
+            let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+            assert!(r.is_ok());
+        },
+    );
+
+    // 1M-task tree reduction: the full executor + KV hot path at the
+    // ROADMAP's million-scale target (2^20 elements -> 2^20 - 1 tasks).
+    let tr1m = workloads::tree_reduction(1 << 20, 0.0, &cfg);
+    let n1m = tr1m.len();
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/TR-1M ({n1m} tasks)"),
+        n1m,
+        iters(1),
+        || {
+            let (cfg, dag) = (cfg.clone(), tr1m.clone());
+            let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+            assert!(r.is_ok());
+        },
+    );
+
+    // --- kv-micro: the key/storage path itself, before vs after -------
+    // "packed-dense" is the shipped hot path: Copy u64 keys into dense
+    // per-task slots. "legacy-string-keys" reconstructs the pre-refactor
+    // path — `format!` String keys, FNV-1a byte hashing, HashMap behind a
+    // shard mutex — so a single binary measures both sides of the change.
+    // Ideal storage: no modeled latency, pure data-structure cost.
+    const KV_TASKS: usize = 250_000; // 4 ops each = 1M KV ops
+    bench_case_cold(
+        &mut rows,
+        "kv-micro/packed-dense (1M ops)",
+        4 * KV_TASKS,
+        iters(3),
+        || {
+            wukong::rt::run_virtual(async move {
+                let kv = KvStore::with_ideal(
+                    NetConfig::default(),
+                    Arc::new(MetricsHub::new()),
+                    true,
+                );
+                kv.ensure_task_capacity(KV_TASKS);
+                for i in 0..KV_TASKS as u32 {
+                    let t = TaskId(i);
+                    kv.put(ObjectKey::output(t), DataObj::synthetic(8), 1e9).await;
+                    assert!(kv.contains(ObjectKey::output(t)).await);
+                    let got = kv.get(ObjectKey::output(t), 1e9).await;
+                    assert!(got.is_ok());
+                    assert_eq!(kv.incr(ObjectKey::counter(t)).await, 1);
+                }
+            });
+        },
+    );
+    bench_case_cold(
+        &mut rows,
+        "kv-micro/legacy-string-keys (1M ops)",
+        4 * KV_TASKS,
+        iters(3),
+        || {
+            // Same runtime + per-op wrapper costs as the packed arm —
+            // only the key/storage layout differs.
+            wukong::rt::run_virtual(async move {
+                let kv = LegacyKv::new(NetConfig::default().kv_shards);
+                for i in 0..KV_TASKS as u32 {
+                    kv.put(&format!("out:{i}"), DataObj::synthetic(8));
+                    assert!(kv.contains(&format!("out:{i}")));
+                    assert!(kv.get(&format!("out:{i}")).is_some());
+                    assert_eq!(kv.incr(&format!("ctr:{i}")), 1);
+                }
+            });
+        },
+    );
 
     // Micro: raw executor event throughput (spawn+sleep+join).
     let t0 = Instant::now();

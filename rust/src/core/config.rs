@@ -66,6 +66,12 @@ pub struct NetConfig {
     /// If true, all shards contend for a single NIC (the pre-"shard per
     /// VM" configuration of paper §V-B).
     pub kv_shared_vm: bool,
+    /// If true (default), `KvStore::contains` is charged a full request +
+    /// reply round trip like `incr` — a Redis EXISTS is not free. The
+    /// escape hatch (`false`) keeps existence probes out of virtual time;
+    /// forensic post-mortem checks should instead use the always-free,
+    /// synchronous `KvStore::peek_contains`.
+    pub charge_exists: bool,
     /// Pub/sub message delivery latency, microseconds.
     pub pubsub_latency_us: f64,
     /// Cost of establishing + tearing down one TCP connection to the
@@ -115,6 +121,7 @@ impl Default for NetConfig {
             kv_latency_us: 300.0,
             kv_bandwidth_bps: 25e9 / 8.0,
             kv_shared_vm: false,
+            charge_exists: true,
             pubsub_latency_us: 200.0,
             tcp_conn_us: 3000.0,
             sched_msg_cpu_us: 1500.0,

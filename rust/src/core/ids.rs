@@ -51,36 +51,134 @@ impl fmt::Debug for JobId {
     }
 }
 
-/// Key of an object in the KV store. Task outputs are stored under
-/// `out:<task-id>`, fan-in dependency counters under `ctr:<task-id>`.
-#[derive(Clone, PartialEq, Eq, Hash)]
-pub struct ObjectKey(pub String);
+/// Which kind of KV entry an [`ObjectKey`] addresses.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KeyKind {
+    /// A task's published output (`out:<task>` in forensic renderings).
+    Output,
+    /// A task's fan-in dependency counter (`ctr:<task>`).
+    Counter,
+    /// A non-task key from the small namespaced range (pub/sub forensics,
+    /// tests) — carries an FNV-1a hash of the original name.
+    Named,
+}
+
+const KIND_SHIFT: u32 = 62;
+const PAYLOAD_MASK: u64 = (1u64 << KIND_SHIFT) - 1;
+const KIND_OUTPUT: u64 = 0;
+const KIND_COUNTER: u64 = 1;
+const KIND_NAMED: u64 = 2;
+
+/// Key of an object in the KV store, packed into a single `u64` so the KV
+/// hot path never allocates or byte-hashes a key:
+///
+/// ```text
+/// bits 63..62  kind: 00 = task output, 01 = fan-in counter, 10 = named
+/// bits 61..0   payload: the TaskId for task keys; an FNV-1a name hash
+///              for the namespaced non-task range
+/// ```
+///
+/// The key is `Copy` and `#[repr(transparent)]`; shard routing is an
+/// integer mix of the packed word ([`ObjectKey::shard_hash`]). The legacy
+/// string forms (`out:<task>`, `ctr:<task>`) exist only as the lazy
+/// [`fmt::Display`] rendering used by the forensic/introspection API
+/// (`KvStore::object_keys` / `counter_entries`), byte-identical to the
+/// strings the pre-packing implementation stored.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(transparent)]
+pub struct ObjectKey(u64);
 
 impl ObjectKey {
     /// Key under which the output of `task` is published.
-    pub fn output(task: TaskId) -> Self {
-        ObjectKey(format!("out:{}", task.0))
+    #[inline]
+    pub const fn output(task: TaskId) -> Self {
+        ObjectKey((KIND_OUTPUT << KIND_SHIFT) | task.0 as u64)
     }
 
     /// Key of the fan-in dependency counter of `task`.
-    pub fn counter(task: TaskId) -> Self {
-        ObjectKey(format!("ctr:{}", task.0))
+    #[inline]
+    pub const fn counter(task: TaskId) -> Self {
+        ObjectKey((KIND_COUNTER << KIND_SHIFT) | task.0 as u64)
     }
 
-    pub fn as_str(&self) -> &str {
-        &self.0
+    /// A key in the namespaced non-task range, derived from a name by
+    /// FNV-1a. The name itself is not retained — forensic renderings show
+    /// the hash (`key:<hex>`).
+    pub fn named(name: &str) -> Self {
+        let hash = super::rng::Fnv1a::hash(name.as_bytes());
+        ObjectKey((KIND_NAMED << KIND_SHIFT) | (hash & PAYLOAD_MASK))
+    }
+
+    /// Rebuilds a key from its packed representation ([`ObjectKey::raw`]).
+    #[inline]
+    pub const fn from_raw(raw: u64) -> Self {
+        ObjectKey(raw)
+    }
+
+    /// The packed representation.
+    #[inline]
+    pub const fn raw(self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    pub fn kind(self) -> KeyKind {
+        match self.0 >> KIND_SHIFT {
+            KIND_OUTPUT => KeyKind::Output,
+            KIND_COUNTER => KeyKind::Counter,
+            _ => KeyKind::Named,
+        }
+    }
+
+    /// The task this key addresses (None for the named range).
+    #[inline]
+    pub fn task(self) -> Option<TaskId> {
+        match self.kind() {
+            KeyKind::Named => None,
+            _ => Some(TaskId((self.0 & PAYLOAD_MASK) as u32)),
+        }
+    }
+
+    /// Dense object-slot index (task outputs only).
+    #[inline]
+    pub fn object_slot(self) -> Option<usize> {
+        match self.kind() {
+            KeyKind::Output => Some((self.0 & PAYLOAD_MASK) as usize),
+            _ => None,
+        }
+    }
+
+    /// Dense counter-slot index (fan-in counters only).
+    #[inline]
+    pub fn counter_slot(self) -> Option<usize> {
+        match self.kind() {
+            KeyKind::Counter => Some((self.0 & PAYLOAD_MASK) as usize),
+            _ => None,
+        }
+    }
+
+    /// Shard-routing hash: one integer mix of the packed word — no byte
+    /// hashing, no allocation.
+    #[inline]
+    pub fn shard_hash(self) -> u64 {
+        super::rng::mix64(self.0)
     }
 }
 
 impl fmt::Debug for ObjectKey {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}", self.0)
+        fmt::Display::fmt(self, f)
     }
 }
 
 impl fmt::Display for ObjectKey {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}", self.0)
+        let payload = self.0 & PAYLOAD_MASK;
+        match self.kind() {
+            KeyKind::Output => write!(f, "out:{payload}"),
+            KeyKind::Counter => write!(f, "ctr:{payload}"),
+            KeyKind::Named => write!(f, "key:{payload:016x}"),
+        }
     }
 }
 
@@ -92,8 +190,8 @@ mod tests {
     fn object_keys_are_disjoint() {
         let t = TaskId(42);
         assert_ne!(ObjectKey::output(t), ObjectKey::counter(t));
-        assert_eq!(ObjectKey::output(t).as_str(), "out:42");
-        assert_eq!(ObjectKey::counter(t).as_str(), "ctr:42");
+        assert_eq!(ObjectKey::output(t).to_string(), "out:42");
+        assert_eq!(ObjectKey::counter(t).to_string(), "ctr:42");
     }
 
     #[test]
@@ -101,5 +199,43 @@ mod tests {
         assert_eq!(TaskId(7).to_string(), "t7");
         assert_eq!(ExecutorId(3).to_string(), "e3");
         assert_eq!(format!("{:?}", JobId(1)), "job1");
+    }
+
+    #[test]
+    fn packed_key_is_copy_and_word_sized() {
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<ObjectKey>();
+        assert_eq!(std::mem::size_of::<ObjectKey>(), 8);
+        assert_eq!(std::mem::size_of::<Option<ObjectKey>>(), 16);
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        for id in [0u32, 1, 9, 10, 4096, u32::MAX] {
+            let t = TaskId(id);
+            let o = ObjectKey::output(t);
+            let c = ObjectKey::counter(t);
+            assert_eq!(o.kind(), KeyKind::Output);
+            assert_eq!(c.kind(), KeyKind::Counter);
+            assert_eq!(o.task(), Some(t));
+            assert_eq!(c.task(), Some(t));
+            assert_eq!(o.object_slot(), Some(id as usize));
+            assert_eq!(o.counter_slot(), None);
+            assert_eq!(c.counter_slot(), Some(id as usize));
+            assert_eq!(c.object_slot(), None);
+            assert_eq!(ObjectKey::from_raw(o.raw()), o);
+            assert_eq!(ObjectKey::from_raw(c.raw()), c);
+        }
+    }
+
+    #[test]
+    fn named_keys_are_their_own_namespace() {
+        let k = ObjectKey::named("wukong:final");
+        assert_eq!(k.kind(), KeyKind::Named);
+        assert_eq!(k.task(), None);
+        assert_eq!(k.object_slot(), None);
+        assert_eq!(k, ObjectKey::named("wukong:final"));
+        assert_ne!(k, ObjectKey::named("wukong:fanout"));
+        assert!(k.to_string().starts_with("key:"));
     }
 }

@@ -14,5 +14,5 @@ pub use config::{
     ClusterProfile, ComputeConfig, FaasConfig, FaultConfig, NetConfig, SimConfig, WukongConfig,
 };
 pub use error::{EngineError, EngineResult};
-pub use ids::{ExecutorId, JobId, ObjectKey, TaskId};
-pub use rng::{Fnv1a, SplitMix64};
+pub use ids::{ExecutorId, JobId, KeyKind, ObjectKey, TaskId};
+pub use rng::{mix64, Fnv1a, SplitMix64};

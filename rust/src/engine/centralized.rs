@@ -77,6 +77,9 @@ pub(crate) async fn run(
 ) {
     let faas = Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), metrics.clone());
     let kv = KvStore::with_faults(cfg.net.clone(), cfg.faults.clone(), metrics.clone(), false);
+    // Dense KV slots sized once up front — every Lambda's put/get after
+    // this is an index lookup.
+    kv.ensure_task_capacity(dag.len());
     let state = Arc::new(SchedState {
         cfg: cfg.clone(),
         metrics: metrics.clone(),
@@ -264,7 +267,7 @@ pub(crate) async fn run(
     if collect && failure.is_none() {
         for s in dag.sinks() {
             match kv
-                .get(&ObjectKey::output(s), cfg.net.worker_bandwidth_bps)
+                .get(ObjectKey::output(s), cfg.net.worker_bandwidth_bps)
                 .await
             {
                 Ok(obj) => {
@@ -296,7 +299,7 @@ async fn execute_single_task(
     let t_fetch = clock::now();
     let mut inputs: Vec<DataObj> = Vec::with_capacity(dag.in_degree(task));
     for &p in dag.parents(task) {
-        inputs.push(state.kv.get(&ObjectKey::output(p), lambda_bps).await?);
+        inputs.push(state.kv.get(ObjectKey::output(p), lambda_bps).await?);
     }
     let fetch = clock::now() - t_fetch;
     let spec = dag.task(task);
@@ -315,7 +318,7 @@ async fn execute_single_task(
     state.mark_executed(task)?;
     // Store output and wait for the ACK (modeled inside put).
     let t_store = clock::now();
-    state.kv.put(&ObjectKey::output(task), out, lambda_bps).await;
+    state.kv.put(ObjectKey::output(task), out, lambda_bps).await;
     let store = clock::now() - t_store;
     state.metrics.record_task(crate::metrics::TaskSpan {
         task,

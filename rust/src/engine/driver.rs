@@ -256,8 +256,13 @@ mod tests {
             assert_eq!(run.outputs.len(), 1, "{label}");
             assert_eq!(run.kv.is_some(), has_kv, "{label}");
             if let Some(kv) = &run.kv {
-                // Diamond sink is t3; its output must be persisted.
-                assert!(kv.contains(&crate::core::ObjectKey::output(TaskId(3))), "{label}");
+                // Diamond sink is t3; its output must be persisted. The
+                // post-mortem probe is the free sync one — the run is over,
+                // virtual time must not move.
+                assert!(
+                    kv.peek_contains(crate::core::ObjectKey::output(TaskId(3))),
+                    "{label}"
+                );
             }
         }
     }

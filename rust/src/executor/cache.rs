@@ -4,15 +4,20 @@
 
 use crate::compute::DataObj;
 use crate::core::TaskId;
-use std::collections::HashMap;
 
 /// Task outputs held in an executor's local memory.
+///
+/// An executor walks a single schedule path, so the cache holds only a
+/// handful of entries at any moment (the current output plus not-yet-
+/// evicted parents). Flat vectors with linear scans beat hash maps at
+/// that size and keep the executor hot loop free of byte hashing; the
+/// only allocations are the (amortized, tiny) vector growths.
 #[derive(Debug, Default)]
 pub struct LocalCache {
-    objects: HashMap<TaskId, DataObj>,
+    objects: Vec<(TaskId, DataObj)>,
     /// Tasks whose outputs this executor already wrote to the KV store
     /// (avoid double writes at fan-out followed by fan-in).
-    stored: std::collections::HashSet<TaskId>,
+    stored: Vec<TaskId>,
     /// Bytes currently cached (observability; Lambdas have 3 GB).
     bytes: u64,
     /// High-water mark.
@@ -27,22 +32,30 @@ impl LocalCache {
     pub fn insert(&mut self, task: TaskId, obj: DataObj) {
         self.bytes += obj.bytes;
         self.peak_bytes = self.peak_bytes.max(self.bytes);
-        if let Some(old) = self.objects.insert(task, obj) {
-            self.bytes -= old.bytes;
+        if let Some(slot) = self.objects.iter_mut().find(|(t, _)| *t == task) {
+            self.bytes -= slot.1.bytes;
+            slot.1 = obj;
+        } else {
+            self.objects.push((task, obj));
         }
     }
 
     pub fn get(&self, task: TaskId) -> Option<&DataObj> {
-        self.objects.get(&task)
+        self.objects
+            .iter()
+            .find(|(t, _)| *t == task)
+            .map(|(_, o)| o)
     }
 
     pub fn contains(&self, task: TaskId) -> bool {
-        self.objects.contains_key(&task)
+        self.objects.iter().any(|(t, _)| *t == task)
     }
 
     /// Marks `task`'s output as persisted to the KV store.
     pub fn mark_stored(&mut self, task: TaskId) {
-        self.stored.insert(task);
+        if !self.is_stored(task) {
+            self.stored.push(task);
+        }
     }
 
     /// True if this executor already wrote `task`'s output to the KV store.
@@ -52,7 +65,8 @@ impl LocalCache {
 
     /// Drops a cached object (memory management along long paths).
     pub fn evict(&mut self, task: TaskId) {
-        if let Some(o) = self.objects.remove(&task) {
+        if let Some(i) = self.objects.iter().position(|(t, _)| *t == task) {
+            let (_, o) = self.objects.swap_remove(i);
             self.bytes -= o.bytes;
         }
     }

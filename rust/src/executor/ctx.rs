@@ -67,6 +67,10 @@ impl WukongCtx {
     ) -> Arc<Self> {
         let n = dag.len();
         assert_eq!(lowered.len(), n, "lowering does not cover the DAG");
+        // The DAG size is known up front, so the KV store's dense
+        // task-output / fan-in-counter slots are sized here, once —
+        // every executor KV op after this is a pure index lookup.
+        kv.ensure_task_capacity(n);
         Arc::new(WukongCtx {
             dag,
             cost: CostModel::new(cfg.compute.clone()),

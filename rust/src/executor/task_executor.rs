@@ -53,7 +53,7 @@ pub async fn run_executor(
             if let Some(p) = from {
                 store_once(&ctx, &mut cache, p).await;
             }
-            let n = ctx.kv.incr(&ObjectKey::counter(current)).await;
+            let n = ctx.kv.incr(ObjectKey::counter(current)).await;
             debug_assert!(
                 n as usize <= indeg,
                 "dependency counter exceeded in-degree"
@@ -77,7 +77,7 @@ pub async fn run_executor(
                     continue;
                 }
             }
-            inputs.push(ctx.kv.get(&ObjectKey::output(p), ctx.lambda_bps()).await?);
+            inputs.push(ctx.kv.get(ObjectKey::output(p), ctx.lambda_bps()).await?);
         }
         let fetch = clock::now() - t_fetch;
 
@@ -153,25 +153,26 @@ pub async fn run_executor(
             // executor of the first out-edge.
             action @ (FanOutAction::Invoke | FanOutAction::Delegate) => {
                 store_once(&ctx, &mut cache, current).await;
-                let invoke: Vec<TaskId> = children[1..].to_vec();
                 if action == FanOutAction::Delegate {
                     // Large fan-out: delegate invocation to the storage
                     // manager's proxy (paper §IV-D) with a single pub/sub
-                    // message carrying the fan-out's DAG location.
+                    // message carrying the fan-out's CSR out-edge range —
+                    // no owned child list is built or copied.
                     ctx.kv
                         .publish(
                             FANOUT_CHANNEL,
                             Message::FanOutRequest {
                                 fan_out_task: current,
-                                invoke,
+                                from_edge: 1,
+                                to_edge: children.len() as u32,
                             },
                         )
                         .await;
                 } else {
                     // Small fan-out: invoke the executors ourselves, in
-                    // parallel (paper §IV-D).
+                    // parallel (paper §IV-D), straight off the CSR slice.
                     let parent = current;
-                    let handles: Vec<_> = invoke
+                    let handles: Vec<_> = children[1..]
                         .iter()
                         .map(|&c| invoke_executor(Arc::clone(&ctx), c, Some(parent)))
                         .collect();
@@ -196,14 +197,14 @@ pub async fn run_executor(
 /// Stores `task`'s cached output to the KV store if this executor has not
 /// already done so.
 async fn store_once(ctx: &Arc<WukongCtx>, cache: &mut LocalCache, task: TaskId) {
-    if cache.is_stored(task) || ctx.kv.contains(&ObjectKey::output(task)) {
+    if cache.is_stored(task) || ctx.kv.contains(ObjectKey::output(task)).await {
         cache.mark_stored(task);
         return;
     }
     if let Some(obj) = cache.get(task) {
         let obj = obj.clone();
         ctx.kv
-            .put(&ObjectKey::output(task), obj, ctx.lambda_bps())
+            .put(ObjectKey::output(task), obj, ctx.lambda_bps())
             .await;
         cache.mark_stored(task);
     }

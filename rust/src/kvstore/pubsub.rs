@@ -16,11 +16,18 @@ pub enum Message {
     TaskDone { task: TaskId, executor: ExecutorId },
     /// A large fan-out must be invoked by the proxy on behalf of an
     /// executor (paper §IV-D "Large Fan-out Task Invocations"). The payload
-    /// identifies the fan-out's location in the DAG.
+    /// identifies the fan-out's location in the DAG as a CSR out-edge
+    /// range — three words instead of an owned `Vec<TaskId>`, so a
+    /// width-10k fan-out publishes without copying its child list. The
+    /// receiver resolves the children from its own copy of the DAG
+    /// (which the storage manager received at job start).
     FanOutRequest {
         fan_out_task: TaskId,
-        /// Children the proxy must invoke (the executor keeps one edge).
-        invoke: Vec<TaskId>,
+        /// First index within `dag.children(fan_out_task)` to invoke
+        /// (the executor keeps edge 0 for itself).
+        from_edge: u32,
+        /// One past the last out-edge index to invoke.
+        to_edge: u32,
     },
     /// A final (sink) task's result key is available.
     FinalResult { task: TaskId },

@@ -1,5 +1,23 @@
 //! The sharded KV store itself: put/get of data objects, atomic counters
 //! (fan-in dependency counters, paper §IV-C), and the pub/sub front end.
+//!
+//! ## Hot-path memory layout
+//!
+//! Keys are packed `u64`s ([`ObjectKey`]) and the store is backed by
+//! **dense per-DAG slot storage**: task outputs live in a
+//! `Vec<Mutex<Option<DataObj>>>` and fan-in counters in a
+//! `Vec<AtomicU64>`, both indexed directly by `TaskId` and sized once at
+//! job start ([`KvStore::ensure_task_capacity`]). `get`/`put`/`contains`
+//! are slot lookups and `incr` is a single `fetch_add` — no `String`
+//! allocation, no byte hashing, and no map mutex anywhere on the
+//! task-output/counter path. Shards exist purely as network endpoints
+//! (NIC queues); routing is an integer mix of the packed key.
+//!
+//! Keys outside the task range ([`ObjectKey::named`]) go to a small
+//! hash-keyed side map, and the forensic/introspection API
+//! ([`KvStore::object_keys`] / [`KvStore::counter_entries`]) renders key
+//! strings lazily via `Display`, byte-identical to the strings the
+//! pre-packing implementation stored.
 
 use crate::compute::DataObj;
 use crate::core::{clock, EngineError, EngineResult, FaultConfig, NetConfig, ObjectKey};
@@ -7,18 +25,35 @@ use crate::kvstore::netmodel::{Nic, TailLatency};
 use crate::kvstore::pubsub::{Message, PubSub, Subscription};
 use crate::metrics::{KvOpKind, MetricsHub};
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
+/// One shard: a network endpoint. All data lives in the dense slot arrays
+/// of the store; the shard contributes only its NIC (latency/bandwidth
+/// queueing).
 struct Shard {
-    objects: Mutex<HashMap<String, DataObj>>,
-    counters: Mutex<HashMap<String, u64>>,
     nic: Arc<Nic>,
+}
+
+/// Dense per-DAG slot storage, indexed by `TaskId`. Sized once at job
+/// start; growth after that is a cold path taken only by tests that
+/// store ad-hoc keys.
+#[derive(Default)]
+struct TaskSlots {
+    objects: Vec<Mutex<Option<DataObj>>>,
+    counters: Vec<AtomicU64>,
 }
 
 /// The KV store cluster. Cloneable by `Arc`.
 pub struct KvStore {
     shards: Vec<Shard>,
+    /// Dense task-output / fan-in-counter slots (the hot path).
+    slots: RwLock<TaskSlots>,
+    /// Side maps for the namespaced non-task key range, keyed by the
+    /// packed key word.
+    named_objects: Mutex<HashMap<u64, DataObj>>,
+    named_counters: Mutex<HashMap<u64, u64>>,
     pubsub: PubSub,
     cfg: NetConfig,
     metrics: Arc<MetricsHub>,
@@ -58,8 +93,6 @@ impl KvStore {
         };
         let shards = (0..cfg.kv_shards)
             .map(|_| Shard {
-                objects: Mutex::new(HashMap::new()),
-                counters: Mutex::new(HashMap::new()),
                 nic: shared
                     .clone()
                     .unwrap_or_else(|| Nic::new(cfg.kv_bandwidth_bps)),
@@ -67,6 +100,9 @@ impl KvStore {
             .collect();
         Arc::new(KvStore {
             shards,
+            slots: RwLock::new(TaskSlots::default()),
+            named_objects: Mutex::new(HashMap::new()),
+            named_counters: Mutex::new(HashMap::new()),
             pubsub: PubSub::new(),
             cfg,
             metrics,
@@ -75,46 +111,91 @@ impl KvStore {
         })
     }
 
-    fn shard_of(&self, key: &str) -> &Shard {
-        // FNV-1a — stable, dependency-free key hashing.
-        let h = crate::core::Fnv1a::hash(key.as_bytes());
-        &self.shards[(h % self.shards.len() as u64) as usize]
+    /// Pre-sizes the dense slot storage for a DAG of `n` tasks. The
+    /// engines call this once at job start (the DAG size is always known
+    /// up front), so every subsequent task-key operation is a pure index
+    /// lookup with no growth check taken.
+    pub fn ensure_task_capacity(&self, n: usize) {
+        {
+            let r = self.slots.read().unwrap();
+            if r.objects.len() >= n && r.counters.len() >= n {
+                return;
+            }
+        }
+        let mut w = self.slots.write().unwrap();
+        while w.objects.len() < n {
+            w.objects.push(Mutex::new(None));
+        }
+        while w.counters.len() < n {
+            w.counters.push(AtomicU64::new(0));
+        }
+    }
+
+    fn shard_of(&self, key: ObjectKey) -> &Shard {
+        &self.shards[(key.shard_hash() % self.shards.len() as u64) as usize]
     }
 
     fn latency(&self) -> Duration {
         Duration::from_secs_f64(self.cfg.kv_latency_us * 1e-6)
     }
 
+    /// Writes `obj` into the slot / side map for `key` (no modeled cost).
+    fn store_obj(&self, key: ObjectKey, obj: DataObj) {
+        match key.object_slot() {
+            Some(i) => {
+                // `take()` keeps the value re-armable across the (at most
+                // one) growth retry without moving out of a loop.
+                let mut obj = Some(obj);
+                loop {
+                    {
+                        let slots = self.slots.read().unwrap();
+                        if let Some(slot) = slots.objects.get(i) {
+                            *slot.lock().unwrap() = obj.take();
+                            return;
+                        }
+                    }
+                    self.ensure_task_capacity(i + 1);
+                }
+            }
+            None => {
+                self.named_objects.lock().unwrap().insert(key.raw(), obj);
+            }
+        }
+    }
+
+    /// Reads the object for `key` (no modeled cost).
+    fn load_obj(&self, key: ObjectKey) -> Option<DataObj> {
+        match key.object_slot() {
+            Some(i) => {
+                let slots = self.slots.read().unwrap();
+                slots.objects.get(i)?.lock().unwrap().clone()
+            }
+            None => self.named_objects.lock().unwrap().get(&key.raw()).cloned(),
+        }
+    }
+
     /// Stores `obj` under `key`, charging latency + bandwidth.
-    pub async fn put(&self, key: &ObjectKey, obj: DataObj, client_bps: f64) {
+    pub async fn put(&self, key: ObjectKey, obj: DataObj, client_bps: f64) {
         let t0 = clock::now();
         let bytes = obj.bytes;
-        let shard = self.shard_of(key.as_str());
+        let shard = self.shard_of(key);
         if !self.ideal {
             clock::sleep(self.tail.sample(self.latency())).await;
             shard.nic.transfer_capped(bytes, client_bps).await;
         }
-        shard
-            .objects
-            .lock()
-            .unwrap()
-            .insert(key.as_str().to_string(), obj);
+        self.store_obj(key, obj);
         self.metrics
             .record_kv_op(KvOpKind::Write, bytes, clock::now() - t0);
     }
 
     /// Retrieves the object under `key`, charging latency + bandwidth.
-    pub async fn get(&self, key: &ObjectKey, client_bps: f64) -> EngineResult<DataObj> {
+    pub async fn get(&self, key: ObjectKey, client_bps: f64) -> EngineResult<DataObj> {
         let t0 = clock::now();
-        let shard = self.shard_of(key.as_str());
-        let obj = shard
-            .objects
-            .lock()
-            .unwrap()
-            .get(key.as_str())
-            .cloned()
+        let shard = self.shard_of(key);
+        let obj = self
+            .load_obj(key)
             .ok_or_else(|| EngineError::MissingObject {
-                key: key.as_str().to_string(),
+                key: key.to_string(),
             })?;
         if !self.ideal {
             clock::sleep(self.tail.sample(self.latency())).await;
@@ -125,29 +206,63 @@ impl KvStore {
         Ok(obj)
     }
 
-    /// Checks existence without transferring the value.
-    pub fn contains(&self, key: &ObjectKey) -> bool {
-        self.shard_of(key.as_str())
-            .objects
-            .lock()
-            .unwrap()
-            .contains_key(key.as_str())
+    /// Checks existence without transferring the value. An EXISTS is a
+    /// real round trip on a real Redis, so it is charged request + reply
+    /// latency like `incr` — unless the `NetConfig::charge_exists` escape
+    /// hatch is off (or the store is ideal).
+    pub async fn contains(&self, key: ObjectKey) -> bool {
+        let t0 = clock::now();
+        if !self.ideal && self.cfg.charge_exists {
+            clock::sleep(self.tail.sample(self.latency() * 2)).await; // request + reply
+        }
+        let hit = self.peek_contains(key);
+        self.metrics
+            .record_kv_op(KvOpKind::Exists, 0, clock::now() - t0);
+        hit
+    }
+
+    /// Free, synchronous existence probe for forensic/post-mortem checks
+    /// (the differential oracle, tests) — never touches virtual time and
+    /// records no metrics.
+    pub fn peek_contains(&self, key: ObjectKey) -> bool {
+        match key.object_slot() {
+            Some(i) => {
+                let slots = self.slots.read().unwrap();
+                slots
+                    .objects
+                    .get(i)
+                    .is_some_and(|slot| slot.lock().unwrap().is_some())
+            }
+            None => self.named_objects.lock().unwrap().contains_key(&key.raw()),
+        }
     }
 
     /// Atomically increments the counter at `key` and returns the new
     /// value (Redis INCR — the fan-in dependency counter of paper §IV-C).
-    /// Small fixed-size message: round-trip latency only.
-    pub async fn incr(&self, key: &ObjectKey) -> u64 {
+    /// Small fixed-size message: round-trip latency only. On the
+    /// task-counter path this is one `fetch_add` on a dense slot — no
+    /// mutex, no allocation.
+    pub async fn incr(&self, key: ObjectKey) -> u64 {
         let t0 = clock::now();
         if !self.ideal {
             clock::sleep(self.tail.sample(self.latency() * 2)).await; // request + reply
         }
-        let shard = self.shard_of(key.as_str());
-        let v = {
-            let mut counters = shard.counters.lock().unwrap();
-            let e = counters.entry(key.as_str().to_string()).or_insert(0);
-            *e += 1;
-            *e
+        let v = match key.counter_slot() {
+            Some(i) => loop {
+                {
+                    let slots = self.slots.read().unwrap();
+                    if let Some(c) = slots.counters.get(i) {
+                        break c.fetch_add(1, Ordering::Relaxed) + 1;
+                    }
+                }
+                self.ensure_task_capacity(i + 1);
+            },
+            None => {
+                let mut m = self.named_counters.lock().unwrap();
+                let e = m.entry(key.raw()).or_insert(0);
+                *e += 1;
+                *e
+            }
         };
         self.metrics
             .record_kv_op(KvOpKind::Incr, 0, clock::now() - t0);
@@ -155,14 +270,22 @@ impl KvStore {
     }
 
     /// Reads a counter without incrementing (tests / debugging).
-    pub fn counter_value(&self, key: &ObjectKey) -> u64 {
-        *self
-            .shard_of(key.as_str())
-            .counters
-            .lock()
-            .unwrap()
-            .get(key.as_str())
-            .unwrap_or(&0)
+    pub fn counter_value(&self, key: ObjectKey) -> u64 {
+        match key.counter_slot() {
+            Some(i) => {
+                let slots = self.slots.read().unwrap();
+                slots
+                    .counters
+                    .get(i)
+                    .map_or(0, |c| c.load(Ordering::Relaxed))
+            }
+            None => *self
+                .named_counters
+                .lock()
+                .unwrap()
+                .get(&key.raw())
+                .unwrap_or(&0),
+        }
     }
 
     /// Publishes `msg` on `channel` with pub/sub delivery latency.
@@ -187,59 +310,91 @@ impl KvStore {
         self.pubsub.subscribe(channel)
     }
 
-    /// Number of stored objects across all shards (tests / reports).
+    /// Number of stored objects (tests / reports).
     pub fn object_count(&self) -> usize {
-        self.shards
+        let slots = self.slots.read().unwrap();
+        let dense = slots
+            .objects
             .iter()
-            .map(|s| s.objects.lock().unwrap().len())
-            .sum()
+            .filter(|slot| slot.lock().unwrap().is_some())
+            .count();
+        dense + self.named_objects.lock().unwrap().len()
     }
 
-    /// Every stored object key across all shards, sorted (forensic
-    /// inspection: the differential oracle checks for orphaned
-    /// intermediates after a job completes).
+    /// Every stored object key, rendered and sorted (forensic inspection:
+    /// the differential oracle checks for orphaned intermediates after a
+    /// job completes). Rendering is lazy `Display` of the packed keys —
+    /// byte-identical to the strings the pre-packing store held.
     pub fn object_keys(&self) -> Vec<String> {
-        let mut keys: Vec<String> = self
-            .shards
-            .iter()
-            .flat_map(|s| s.objects.lock().unwrap().keys().cloned().collect::<Vec<_>>())
-            .collect();
+        let mut keys: Vec<String> = {
+            let slots = self.slots.read().unwrap();
+            slots
+                .objects
+                .iter()
+                .enumerate()
+                .filter(|(_, slot)| slot.lock().unwrap().is_some())
+                .map(|(i, _)| ObjectKey::output(crate::core::TaskId(i as u32)).to_string())
+                .collect()
+        };
+        keys.extend(
+            self.named_objects
+                .lock()
+                .unwrap()
+                .keys()
+                .map(|&raw| ObjectKey::from_raw(raw).to_string()),
+        );
         keys.sort();
         keys
     }
 
-    /// Every counter and its final value, sorted by key (forensic
-    /// inspection: fan-in counters must end exactly at in-degree).
+    /// Every counter and its final value, sorted by rendered key
+    /// (forensic inspection: fan-in counters must end exactly at
+    /// in-degree). Zero-valued dense slots are "absent" counters.
     pub fn counter_entries(&self) -> Vec<(String, u64)> {
-        let mut entries: Vec<(String, u64)> = self
-            .shards
-            .iter()
-            .flat_map(|s| {
-                s.counters
-                    .lock()
-                    .unwrap()
-                    .iter()
-                    .map(|(k, v)| (k.clone(), *v))
-                    .collect::<Vec<_>>()
-            })
-            .collect();
+        let mut entries: Vec<(String, u64)> = {
+            let slots = self.slots.read().unwrap();
+            slots
+                .counters
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| {
+                    let v = c.load(Ordering::Relaxed);
+                    (v > 0).then(|| {
+                        (
+                            ObjectKey::counter(crate::core::TaskId(i as u32)).to_string(),
+                            v,
+                        )
+                    })
+                })
+                .collect()
+        };
+        entries.extend(
+            self.named_counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(&raw, &v)| (ObjectKey::from_raw(raw).to_string(), v)),
+        );
         entries.sort();
         entries
     }
 
-    /// Total stored bytes across all shards.
+    /// Total stored bytes across all slots.
     pub fn stored_bytes(&self) -> u64 {
-        self.shards
+        let slots = self.slots.read().unwrap();
+        let dense: u64 = slots
+            .objects
             .iter()
-            .map(|s| {
-                s.objects
-                    .lock()
-                    .unwrap()
-                    .values()
-                    .map(|o| o.bytes)
-                    .sum::<u64>()
-            })
-            .sum()
+            .filter_map(|slot| slot.lock().unwrap().as_ref().map(|o| o.bytes))
+            .sum();
+        dense
+            + self
+                .named_objects
+                .lock()
+                .unwrap()
+                .values()
+                .map(|o| o.bytes)
+                .sum::<u64>()
     }
 }
 
@@ -257,8 +412,8 @@ mod tests {
         crate::rt::run_virtual(async {
             let kv = store();
             let key = ObjectKey::output(TaskId(1));
-            kv.put(&key, DataObj::synthetic(1024), 1e9).await;
-            let obj = kv.get(&key, 1e9).await.unwrap();
+            kv.put(key, DataObj::synthetic(1024), 1e9).await;
+            let obj = kv.get(key, 1e9).await.unwrap();
             assert_eq!(obj.bytes, 1024);
             assert_eq!(kv.object_count(), 1);
             assert_eq!(kv.stored_bytes(), 1024);
@@ -269,20 +424,100 @@ mod tests {
     fn missing_key_errors() {
         crate::rt::run_virtual(async {
             let kv = store();
-            let err = kv.get(&ObjectKey::output(TaskId(9)), 1e9).await.unwrap_err();
+            let err = kv.get(ObjectKey::output(TaskId(9)), 1e9).await.unwrap_err();
             assert!(matches!(err, EngineError::MissingObject { .. }));
         });
     }
 
     #[test]
-    fn incr_is_atomic_and_monotonic() {
+    fn incr_concurrent_fan_in_ends_exactly_at_1000() {
+        // 1000 concurrent increments of one fan-in counter: every INCR
+        // observes a distinct value and the counter ends exactly at 1000
+        // — the atomicity the last-writer-continues rule rests on.
         crate::rt::run_virtual(async {
             let kv = store();
             let key = ObjectKey::counter(TaskId(3));
-            assert_eq!(kv.incr(&key).await, 1);
-            assert_eq!(kv.incr(&key).await, 2);
-            assert_eq!(kv.incr(&key).await, 3);
-            assert_eq!(kv.counter_value(&key), 3);
+            let handles: Vec<_> = (0..1000)
+                .map(|_| {
+                    let kv = kv.clone();
+                    crate::rt::spawn(async move { kv.incr(key).await })
+                })
+                .collect();
+            let mut seen = Vec::with_capacity(1000);
+            for h in handles {
+                seen.push(h.await);
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, (1..=1000).collect::<Vec<u64>>());
+            assert_eq!(kv.counter_value(key), 1000);
+        });
+    }
+
+    #[test]
+    fn contains_charges_a_round_trip() {
+        crate::rt::run_virtual(async {
+            let kv = store();
+            let key = ObjectKey::output(TaskId(5));
+            let t0 = clock::now();
+            assert!(!kv.contains(key).await, "nothing stored yet");
+            let dt = clock::now() - t0;
+            // Default config: 300 µs one-way => 600 µs round trip.
+            assert_eq!(dt, Duration::from_secs_f64(300.0 * 1e-6) * 2);
+        });
+    }
+
+    #[test]
+    fn contains_escape_hatch_is_free() {
+        crate::rt::run_virtual(async {
+            let cfg = NetConfig {
+                charge_exists: false,
+                ..NetConfig::default()
+            };
+            let kv = KvStore::new(cfg, Arc::new(MetricsHub::new()));
+            let key = ObjectKey::output(TaskId(5));
+            kv.put(key, DataObj::synthetic(8), 1e9).await;
+            let t0 = clock::now();
+            assert!(kv.contains(key).await);
+            assert_eq!(clock::now(), t0, "charge_exists=false must be free");
+            // The sync forensic probe is always free.
+            assert!(kv.peek_contains(key));
+            assert!(!kv.peek_contains(ObjectKey::output(TaskId(6))));
+        });
+    }
+
+    #[test]
+    fn dense_slots_presize_and_grow() {
+        crate::rt::run_virtual(async {
+            let kv = store();
+            kv.ensure_task_capacity(16);
+            kv.put(ObjectKey::output(TaskId(15)), DataObj::synthetic(1), 1e9)
+                .await;
+            // Beyond the pre-sized range: the cold growth path.
+            kv.put(ObjectKey::output(TaskId(100)), DataObj::synthetic(2), 1e9)
+                .await;
+            assert_eq!(kv.incr(ObjectKey::counter(TaskId(200))).await, 1);
+            assert_eq!(kv.object_count(), 2);
+            assert_eq!(
+                kv.object_keys(),
+                vec!["out:100".to_string(), "out:15".to_string()]
+            );
+            assert_eq!(kv.counter_entries(), vec![("ctr:200".to_string(), 1)]);
+        });
+    }
+
+    #[test]
+    fn named_keys_use_the_side_map() {
+        crate::rt::run_virtual(async {
+            let kv = store();
+            let k = ObjectKey::named("forensics:blob");
+            kv.put(k, DataObj::synthetic(64), 1e9).await;
+            assert!(kv.peek_contains(k));
+            assert_eq!(kv.get(k, 1e9).await.unwrap().bytes, 64);
+            assert_eq!(kv.incr(ObjectKey::named("forensics:ctr")).await, 1);
+            assert_eq!(kv.incr(ObjectKey::named("forensics:ctr")).await, 2);
+            assert_eq!(kv.counter_value(ObjectKey::named("forensics:ctr")), 2);
+            assert_eq!(kv.object_count(), 1);
+            assert!(kv.object_keys()[0].starts_with("key:"));
         });
     }
 
@@ -292,7 +527,7 @@ mod tests {
             let kv = store();
             let t0 = clock::now();
             kv.put(
-                &ObjectKey::output(TaskId(0)),
+                ObjectKey::output(TaskId(0)),
                 DataObj::synthetic(100 * 1024 * 1024),
                 75e6, // lambda NIC ~600 Mbps
             )
@@ -309,12 +544,13 @@ mod tests {
             let kv = KvStore::with_ideal(NetConfig::default(), Arc::new(MetricsHub::new()), true);
             let t0 = clock::now();
             kv.put(
-                &ObjectKey::output(TaskId(0)),
+                ObjectKey::output(TaskId(0)),
                 DataObj::synthetic(1 << 30),
                 75e6,
             )
             .await;
-            kv.get(&ObjectKey::output(TaskId(0)), 75e6).await.unwrap();
+            kv.get(ObjectKey::output(TaskId(0)), 75e6).await.unwrap();
+            assert!(kv.contains(ObjectKey::output(TaskId(0))).await);
             assert_eq!(clock::now(), t0);
         });
     }
@@ -343,11 +579,11 @@ mod tests {
                     Arc::new(MetricsHub::new()),
                 );
                 let mut found = None;
-                'outer: for i in 0..32 {
+                'outer: for i in 0..32u32 {
                     for j in (i + 1)..32 {
-                        let a = format!("key{i}");
-                        let b = format!("key{j}");
-                        if !std::ptr::eq(probe.shard_of(&a), probe.shard_of(&b)) {
+                        let a = ObjectKey::output(TaskId(i));
+                        let b = ObjectKey::output(TaskId(j));
+                        if !std::ptr::eq(probe.shard_of(a), probe.shard_of(b)) {
                             found = Some((a, b));
                             break 'outer;
                         }
@@ -357,8 +593,8 @@ mod tests {
             };
             let t0 = clock::now();
             crate::rt::join_all(vec![
-                shared.put(&ObjectKey(k1.clone()), DataObj::synthetic(1_000_000), 1e9),
-                shared.put(&ObjectKey(k2.clone()), DataObj::synthetic(1_000_000), 1e9),
+                shared.put(k1, DataObj::synthetic(1_000_000), 1e9),
+                shared.put(k2, DataObj::synthetic(1_000_000), 1e9),
             ])
             .await;
             let shared_dt = clock::now() - t0;
@@ -367,8 +603,8 @@ mod tests {
             let split = KvStore::new(cfg, metrics);
             let t1 = clock::now();
             crate::rt::join_all(vec![
-                split.put(&ObjectKey(k1), DataObj::synthetic(1_000_000), 1e9),
-                split.put(&ObjectKey(k2), DataObj::synthetic(1_000_000), 1e9),
+                split.put(k1, DataObj::synthetic(1_000_000), 1e9),
+                split.put(k2, DataObj::synthetic(1_000_000), 1e9),
             ])
             .await;
             let split_dt = clock::now() - t1;

@@ -11,6 +11,8 @@ pub enum KvOpKind {
     Read,
     Write,
     Incr,
+    /// Existence probe (Redis EXISTS) — a round trip without a payload.
+    Exists,
     Publish,
 }
 
@@ -45,6 +47,7 @@ pub struct MetricsHub {
     kv_reads: AtomicU64,
     kv_writes: AtomicU64,
     kv_incrs: AtomicU64,
+    kv_exists: AtomicU64,
     kv_publishes: AtomicU64,
     bytes_read: AtomicU64,
     bytes_written: AtomicU64,
@@ -85,6 +88,9 @@ impl MetricsHub {
             }
             KvOpKind::Incr => {
                 self.kv_incrs.fetch_add(1, Ordering::Relaxed);
+            }
+            KvOpKind::Exists => {
+                self.kv_exists.fetch_add(1, Ordering::Relaxed);
             }
             KvOpKind::Publish => {
                 self.kv_publishes.fetch_add(1, Ordering::Relaxed);
@@ -137,6 +143,9 @@ impl MetricsHub {
     }
     pub fn kv_incrs(&self) -> u64 {
         self.kv_incrs.load(Ordering::Relaxed)
+    }
+    pub fn kv_exists(&self) -> u64 {
+        self.kv_exists.load(Ordering::Relaxed)
     }
     pub fn kv_publishes(&self) -> u64 {
         self.kv_publishes.load(Ordering::Relaxed)

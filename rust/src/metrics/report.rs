@@ -10,6 +10,8 @@ pub struct KvStats {
     pub reads: u64,
     pub writes: u64,
     pub incrs: u64,
+    /// Existence probes (Redis EXISTS) — charged round trips, no payload.
+    pub exists: u64,
     pub publishes: u64,
     pub bytes_read: u64,
     pub bytes_written: u64,
@@ -48,6 +50,7 @@ impl JobReport {
                 reads: hub.kv_reads(),
                 writes: hub.kv_writes(),
                 incrs: hub.kv_incrs(),
+                exists: hub.kv_exists(),
                 publishes: hub.kv_publishes(),
                 bytes_read: hub.bytes_read(),
                 bytes_written: hub.bytes_written(),

@@ -39,7 +39,10 @@ pub struct PolicyRun {
     pub fingerprint: Vec<(TaskId, u64)>,
     /// Canonical event trace (see [`crate::sim::trace`]).
     pub trace: String,
-    /// KV store handle (centralized/decentralized modes).
+    /// KV store handle (centralized/decentralized modes). Post-mortem
+    /// inspection must use the free synchronous probes
+    /// (`peek_contains`, `object_keys`, `counter_entries`) — the run is
+    /// over, so nothing here may touch virtual time.
     pub kv: Option<Arc<KvStore>>,
 }
 

@@ -143,6 +143,11 @@ fn check_substrate(seed: u64, run: &PolicyRun, dag: &Dag) -> Result<(), String> 
                 .as_ref()
                 .ok_or_else(|| format!("seed {seed}: {} returned no KV store", run.label))?;
             // Every task output stored exactly once; no counters used.
+            // The `format!` strings below are the *independent reference*
+            // for the forensic key rendering: the store's packed keys must
+            // render byte-identically to these legacy `out:`/`ctr:` forms,
+            // so the expectations are deliberately NOT built through
+            // `ObjectKey::Display`.
             let expected: Vec<String> = {
                 let mut keys: Vec<String> =
                     dag.task_ids().map(|t| format!("out:{}", t.0)).collect();

@@ -15,7 +15,7 @@ pub fn render_trace(report: &JobReport, spans: &[TaskSpan]) -> String {
     let mut out = String::with_capacity(64 + spans.len() * 48);
     out.push_str(&format!(
         "job platform={} makespan_ns={} tasks={} lambdas={} cold={} \
-         kv_r={} kv_w={} kv_i={} kv_p={} bytes_r={} bytes_w={} billed_ms={} ok={}\n",
+         kv_r={} kv_w={} kv_i={} kv_e={} kv_p={} bytes_r={} bytes_w={} billed_ms={} ok={}\n",
         report.platform,
         report.makespan.as_nanos(),
         report.tasks_executed,
@@ -24,6 +24,7 @@ pub fn render_trace(report: &JobReport, spans: &[TaskSpan]) -> String {
         report.kv.reads,
         report.kv.writes,
         report.kv.incrs,
+        report.kv.exists,
         report.kv.publishes,
         report.kv.bytes_read,
         report.kv.bytes_written,

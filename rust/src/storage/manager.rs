@@ -39,7 +39,7 @@ impl StorageManager {
     pub async fn fetch_final(&self, task: TaskId) -> EngineResult<DataObj> {
         self.ctx
             .kv
-            .get(&ObjectKey::output(task), self.ctx.cfg.net.worker_bandwidth_bps)
+            .get(ObjectKey::output(task), self.ctx.cfg.net.worker_bandwidth_bps)
             .await
     }
 

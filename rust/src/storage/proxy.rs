@@ -2,9 +2,11 @@
 //!
 //! When a fan-out has at least `max_task_fanout` out-edges, the Task
 //! Executor publishes a single message identifying the fan-out's location
-//! in the DAG. The proxy — which received the DAG and the static schedules
-//! from the scheduler at job start — resolves the out-edges and invokes
-//! the executors in parallel with its pool of Fan-out Invokers.
+//! in the DAG as a CSR out-edge range (no owned child list crosses the
+//! channel). The proxy — which received the DAG and the static schedules
+//! from the scheduler at job start — resolves the out-edges from its own
+//! copy of the DAG and invokes the executors in parallel with its pool of
+//! Fan-out Invokers.
 
 use crate::executor::ctx::{WukongCtx, FANOUT_CHANNEL};
 use crate::executor::task_executor::invoke_executor;
@@ -24,11 +26,13 @@ pub fn spawn_proxy(ctx: Arc<WukongCtx>) -> JoinHandle<()> {
         while let Some(msg) = sub.recv().await {
             if let Message::FanOutRequest {
                 fan_out_task,
-                invoke,
+                from_edge,
+                to_edge,
             } = msg
             {
-                for child in invoke {
+                for edge in from_edge..to_edge {
                     let permit = invokers.acquire_owned().await;
+                    let child = ctx.dag.children(fan_out_task)[edge as usize];
                     let ctx = Arc::clone(&ctx);
                     crate::rt::spawn(async move {
                         invoke_executor(ctx, child, Some(fan_out_task)).await;

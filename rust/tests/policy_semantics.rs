@@ -89,7 +89,7 @@ fn fan_in_counter_ends_at_in_degree_and_last_writer_continues() {
         // The dependency counter ended exactly at the join's in-degree —
         // one INCR per in-edge, never more (the executor that saw the
         // final count continued; the other stopped).
-        assert_eq!(ctx.kv.counter_value(&ObjectKey::counter(join)), 2);
+        assert_eq!(ctx.kv.counter_value(ObjectKey::counter(join)), 2);
         assert_eq!(ctx.lowered.in_degree(join), 2);
         proxy.abort();
     });

@@ -209,6 +209,62 @@ fn fan_in_counters_end_exactly_at_in_degree() {
 }
 
 // ---------------------------------------------------------------------
+// Properties of the packed KV object keys (`core::ObjectKey`) — the
+// zero-allocation hot-path representation.
+// ---------------------------------------------------------------------
+
+use wukong::core::{KeyKind, ObjectKey};
+
+#[test]
+fn packed_keys_round_trip_and_namespaces_are_disjoint() {
+    let mut rng = SplitMix64::new(0x5EED_0BEC);
+    for _ in 0..10_000 {
+        let t = TaskId(rng.below(1 << 32) as u32);
+        let o = ObjectKey::output(t);
+        let c = ObjectKey::counter(t);
+        // pack -> unpack identity
+        assert_eq!(o.kind(), KeyKind::Output);
+        assert_eq!(c.kind(), KeyKind::Counter);
+        assert_eq!(o.task(), Some(t));
+        assert_eq!(c.task(), Some(t));
+        assert_eq!(ObjectKey::from_raw(o.raw()), o);
+        assert_eq!(ObjectKey::from_raw(c.raw()), c);
+        // output / counter disjointness for ANY pair of tasks: the kind
+        // bits differ, so the packed words can never collide.
+        let u = TaskId(rng.below(1 << 32) as u32);
+        assert_ne!(o.raw(), ObjectKey::counter(u).raw());
+        assert_ne!(c.raw(), ObjectKey::output(u).raw());
+        // Rendering matches the legacy string forms the oracle checks.
+        assert_eq!(o.to_string(), format!("out:{}", t.0));
+        assert_eq!(c.to_string(), format!("ctr:{}", t.0));
+    }
+}
+
+#[test]
+fn packed_key_shard_routing_is_uniform_across_64_shards() {
+    // Task ids arrive near-sequentially; the integer mix must still
+    // spread them evenly over a power-of-two shard count, for both the
+    // output and the counter namespace.
+    const SHARDS: u64 = 64;
+    const KEYS: u32 = 64_000;
+    let mut out_buckets = vec![0u64; SHARDS as usize];
+    let mut ctr_buckets = vec![0u64; SHARDS as usize];
+    for t in 0..KEYS {
+        out_buckets[(ObjectKey::output(TaskId(t)).shard_hash() % SHARDS) as usize] += 1;
+        ctr_buckets[(ObjectKey::counter(TaskId(t)).shard_hash() % SHARDS) as usize] += 1;
+    }
+    let expect = KEYS as u64 / SHARDS; // 1000 per bucket
+    for (name, buckets) in [("out", &out_buckets), ("ctr", &ctr_buckets)] {
+        for (i, &c) in buckets.iter().enumerate() {
+            assert!(
+                (expect * 7 / 10..=expect * 13 / 10).contains(&c),
+                "{name} shard {i}: {c} keys, expected ~{expect} (±30%)"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Properties of the parameterized random-DAG generator
 // (`workloads::random_dag`) — the family the differential oracle sweeps.
 // ---------------------------------------------------------------------

@@ -69,6 +69,20 @@ fn replaying_a_seed_yields_identical_event_traces() {
 }
 
 #[test]
+fn forensic_key_rendering_matches_legacy_strings() {
+    // The oracle's orphan / exactly-once checks compare the store's
+    // rendered key strings against independently-built `out:`/`ctr:`
+    // forms. The packed-key refactor must keep that rendering
+    // byte-identical — pin it here, including the ids around the
+    // lexicographic-sort edge (2 vs 10).
+    use wukong::core::{ObjectKey, TaskId};
+    for t in [0u32, 1, 2, 9, 10, 42, 99_999, u32::MAX] {
+        assert_eq!(ObjectKey::output(TaskId(t)).to_string(), format!("out:{t}"));
+        assert_eq!(ObjectKey::counter(TaskId(t)).to_string(), format!("ctr:{t}"));
+    }
+}
+
+#[test]
 fn fault_injection_actually_perturbs_timing() {
     // The oracle must not pass vacuously: two runs of the same seed that
     // differ ONLY in FaultConfig (same warm pool, same everything else —
