@@ -41,11 +41,19 @@ impl fmt::Display for ExecutorId {
     }
 }
 
-/// Identity of a submitted job (one DAG execution).
+/// Identity of a submitted job (one DAG execution). Scopes pub/sub
+/// channels, KV arenas, and metrics when many jobs share one platform;
+/// `JobId(0)` is the identity of classic single-job runs.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct JobId(pub u64);
 
 impl fmt::Debug for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
+impl fmt::Display for JobId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "job{}", self.0)
     }

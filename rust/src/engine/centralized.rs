@@ -102,7 +102,7 @@ pub(crate) async fn run(
     // Lambdas' TCP connections (strawman) or a pub/sub subscription
     // relayed into the same scheduler inbox.
     let (tcp_tx, mut tcp_rx) = mpsc::unbounded::<Result<TaskId, EngineError>>();
-    let mut pubsub_rx = kv.subscribe("sched:done");
+    let mut pubsub_rx = kv.subscribe(crate::core::JobId(0), "sched:done");
     let relay = if uses_pubsub {
         // The scheduler's subscriber thread: applies the (cheap)
         // per-message pub/sub handling cost, serialized on the
@@ -200,6 +200,7 @@ pub(crate) async fn run(
                                     state
                                         .kv
                                         .publish(
+                                            crate::core::JobId(0),
                                             "sched:done",
                                             Message::TaskDone {
                                                 task,
@@ -257,6 +258,7 @@ pub(crate) async fn run(
     if let Some(r) = relay {
         r.abort();
     }
+    kv.remove_job_channels(crate::core::JobId(0));
     if failure.is_none() && state.executed_count.load(Ordering::Relaxed) != dag.len() as u64 {
         failure = Some(EngineError::Job("not all tasks executed".into()));
     }

@@ -1,7 +1,7 @@
 //! Shared per-job context for WUKONG executors.
 
 use crate::compute::CostModel;
-use crate::core::{EngineError, EngineResult, SimConfig, SplitMix64, TaskId};
+use crate::core::{EngineError, EngineResult, JobId, SimConfig, SplitMix64, TaskId};
 use crate::dag::Dag;
 use crate::faas::Faas;
 use crate::kvstore::KvStore;
@@ -12,12 +12,19 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Pub/sub channel on which sink results are announced to the client.
+/// Channel names are scoped to the owning [`JobId`] by the pub/sub
+/// registry, so concurrent jobs can all use this well-known name without
+/// cross-delivering.
 pub const FINAL_CHANNEL: &str = "wukong:final";
-/// Pub/sub channel on which large fan-outs are delegated to the proxy.
+/// Pub/sub channel on which large fan-outs are delegated to the proxy
+/// (job-scoped like [`FINAL_CHANNEL`]).
 pub const FANOUT_CHANNEL: &str = "wukong:fanout";
 
 /// Everything a Task Executor needs, shared across the job.
 pub struct WukongCtx {
+    /// Identity of the job this context belongs to — the namespace of its
+    /// pub/sub channels.
+    pub job: JobId,
     pub dag: Arc<Dag>,
     pub cfg: SimConfig,
     pub faas: Arc<Faas>,
@@ -54,8 +61,36 @@ impl WukongCtx {
 
     /// Builds a context with an explicit lowering (the engine driver lowers
     /// through the active [`SchedulingPolicy`](crate::engine::SchedulingPolicy)).
+    /// Single-job entry point: the context belongs to `JobId(0)`.
     #[allow(clippy::too_many_arguments)]
     pub fn with_lowered(
+        dag: Arc<Dag>,
+        cfg: SimConfig,
+        faas: Arc<Faas>,
+        kv: Arc<KvStore>,
+        metrics: Arc<MetricsHub>,
+        schedules: Arc<ScheduleSet>,
+        runtime: Option<PjrtRuntime>,
+        lowered: LoweredOps,
+    ) -> Arc<Self> {
+        Self::with_job(
+            JobId(0),
+            dag,
+            cfg,
+            faas,
+            kv,
+            metrics,
+            schedules,
+            runtime,
+            lowered,
+        )
+    }
+
+    /// Full constructor: builds the context of one job running (possibly
+    /// among others) over the given platform and KV store.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_job(
+        job: JobId,
         dag: Arc<Dag>,
         cfg: SimConfig,
         faas: Arc<Faas>,
@@ -72,6 +107,7 @@ impl WukongCtx {
         // every executor KV op after this is a pure index lookup.
         kv.ensure_task_capacity(n);
         Arc::new(WukongCtx {
+            job,
             dag,
             cost: CostModel::new(cfg.compute.clone()),
             cfg,

@@ -3,8 +3,16 @@
 //! The centralized designs subscribe the scheduler to completion channels;
 //! WUKONG's storage manager subscribes its proxy to the large-fan-out
 //! channel and the client subscribes to the final-result channel.
+//!
+//! Channels are **namespaced per job**: every subscribe/publish names the
+//! [`JobId`] whose namespace it addresses, so two concurrent jobs using
+//! the same well-known channel names (`wukong:final`, `wukong:fanout`,
+//! `sched:done`) can never cross-deliver each other's messages. Before
+//! this scoping existed, a second concurrent job's `FinalResult` would
+//! have been delivered to the first job's client — a real latent bug the
+//! single-job engines simply never triggered.
 
-use crate::core::{ExecutorId, TaskId};
+use crate::core::{ExecutorId, JobId, TaskId};
 use std::collections::HashMap;
 use std::sync::Mutex;
 use crate::rt::sync::mpsc;
@@ -47,17 +55,24 @@ impl Subscription {
     }
 }
 
-/// The channel registry. Publishing is instantaneous at the broker; the
-/// delivery latency is charged by the KV store front end (see
-/// `KvStore::publish`), matching Redis PubSub's near-wire-speed delivery.
+/// The channel registry, namespaced per job: `job -> channel -> senders`.
+/// Publishing is instantaneous at the broker; the delivery latency is
+/// charged by the KV store front end (see `JobArena::publish`), matching
+/// Redis PubSub's near-wire-speed delivery. The two-level map keeps the
+/// publish path allocation-free: the job lookup is an integer key and the
+/// channel lookup borrows the `&str`.
 #[derive(Default)]
 pub struct PubSub {
-    channels: Mutex<HashMap<String, Vec<mpsc::Sender<Message>>>>,
+    channels: Mutex<HashMap<u64, HashMap<String, Vec<mpsc::Sender<Message>>>>>,
 }
 
 impl std::fmt::Debug for PubSub {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "PubSub({} channels)", self.channels.lock().unwrap().len())
+        write!(
+            f,
+            "PubSub({} job namespaces)",
+            self.channels.lock().unwrap().len()
+        )
     }
 }
 
@@ -66,23 +81,37 @@ impl PubSub {
         Self::default()
     }
 
-    /// Subscribes to `channel`, returning the receiving handle.
-    pub fn subscribe(&self, channel: &str) -> Subscription {
+    /// Subscribes to `channel` within `job`'s namespace, returning the
+    /// receiving handle.
+    pub fn subscribe(&self, job: JobId, channel: &str) -> Subscription {
         let (tx, rx) = mpsc::unbounded();
         self.channels
             .lock()
             .unwrap()
+            .entry(job.0)
+            .or_default()
             .entry(channel.to_string())
             .or_default()
             .push(tx);
         Subscription { rx }
     }
 
-    /// Delivers `msg` to all current subscribers of `channel`. Returns the
-    /// number of subscribers reached.
-    pub fn publish(&self, channel: &str, msg: Message) -> usize {
+    /// Drops `job`'s entire channel namespace (its receivers see the
+    /// channel close). Called at job teardown so a long-running service
+    /// does not accumulate one dead namespace per completed job.
+    pub fn remove_job(&self, job: JobId) {
+        self.channels.lock().unwrap().remove(&job.0);
+    }
+
+    /// Delivers `msg` to all current subscribers of `channel` within
+    /// `job`'s namespace. Returns the number of subscribers reached —
+    /// never a subscriber of another job's channel of the same name.
+    pub fn publish(&self, job: JobId, channel: &str, msg: Message) -> usize {
         let mut map = self.channels.lock().unwrap();
-        let Some(subs) = map.get_mut(channel) else {
+        let Some(chans) = map.get_mut(&job.0) else {
+            return 0;
+        };
+        let Some(subs) = chans.get_mut(channel) else {
             return 0;
         };
         // Drop closed subscriptions as we go.
@@ -95,13 +124,16 @@ impl PubSub {
 mod tests {
     use super::*;
 
+    const JOB: JobId = JobId(0);
+
     #[test]
     fn publish_reaches_all_subscribers() {
         crate::rt::run_virtual(async {
             let ps = PubSub::new();
-            let mut s1 = ps.subscribe("done");
-            let mut s2 = ps.subscribe("done");
+            let mut s1 = ps.subscribe(JOB, "done");
+            let mut s2 = ps.subscribe(JOB, "done");
             let n = ps.publish(
+                JOB,
                 "done",
                 Message::TaskDone {
                     task: TaskId(1),
@@ -122,7 +154,7 @@ mod tests {
         crate::rt::run_virtual(async {
             let ps = PubSub::new();
             assert_eq!(
-                ps.publish("nobody", Message::FinalResult { task: TaskId(0) }),
+                ps.publish(JOB, "nobody", Message::FinalResult { task: TaskId(0) }),
                 0
             );
         });
@@ -133,10 +165,39 @@ mod tests {
         crate::rt::run_virtual(async {
             let ps = PubSub::new();
             {
-                let _s = ps.subscribe("c");
+                let _s = ps.subscribe(JOB, "c");
             } // dropped immediately
-            let n = ps.publish("c", Message::FinalResult { task: TaskId(0) });
+            let n = ps.publish(JOB, "c", Message::FinalResult { task: TaskId(0) });
             assert_eq!(n, 0);
+        });
+    }
+
+    #[test]
+    fn jobs_never_cross_deliver_on_shared_channel_names() {
+        // The latent multi-tenant bug this namespace exists to kill: two
+        // jobs both use the well-known "wukong:final" channel name; each
+        // client must see exactly its own job's FinalResult.
+        crate::rt::run_virtual(async {
+            let ps = PubSub::new();
+            let mut a = ps.subscribe(JobId(1), "wukong:final");
+            let mut b = ps.subscribe(JobId(2), "wukong:final");
+            assert_eq!(
+                ps.publish(JobId(1), "wukong:final", Message::FinalResult { task: TaskId(7) }),
+                1,
+                "job 1's publish must reach only job 1's subscriber"
+            );
+            assert_eq!(
+                ps.publish(JobId(2), "wukong:final", Message::FinalResult { task: TaskId(9) }),
+                1
+            );
+            assert!(matches!(
+                a.recv().await,
+                Some(Message::FinalResult { task: TaskId(7) })
+            ));
+            assert!(matches!(
+                b.recv().await,
+                Some(Message::FinalResult { task: TaskId(9) })
+            ));
         });
     }
 }

@@ -20,7 +20,7 @@
 //! pre-packing implementation stored.
 
 use crate::compute::DataObj;
-use crate::core::{clock, EngineError, EngineResult, FaultConfig, NetConfig, ObjectKey};
+use crate::core::{clock, EngineError, EngineResult, FaultConfig, JobId, NetConfig, ObjectKey};
 use crate::kvstore::netmodel::{Nic, TailLatency};
 use crate::kvstore::pubsub::{Message, PubSub, Subscription};
 use crate::metrics::{KvOpKind, MetricsHub};
@@ -288,8 +288,10 @@ impl KvStore {
         }
     }
 
-    /// Publishes `msg` on `channel` with pub/sub delivery latency.
-    pub async fn publish(&self, channel: &str, msg: Message) -> usize {
+    /// Publishes `msg` on `job`'s `channel` with pub/sub delivery latency.
+    /// Channels are namespaced per job (see [`PubSub`]), so concurrent
+    /// jobs sharing well-known channel names never cross-deliver.
+    pub async fn publish(&self, job: JobId, channel: &str, msg: Message) -> usize {
         let t0 = clock::now();
         if !self.ideal {
             clock::sleep(
@@ -298,16 +300,22 @@ impl KvStore {
             )
             .await;
         }
-        let n = self.pubsub.publish(channel, msg);
+        let n = self.pubsub.publish(job, channel, msg);
         self.metrics
             .record_kv_op(KvOpKind::Publish, 0, clock::now() - t0);
         n
     }
 
-    /// Subscribes to `channel` (no modeled cost: subscriptions are set up
-    /// once at job start, like Dask's cluster-init connections).
-    pub fn subscribe(&self, channel: &str) -> Subscription {
-        self.pubsub.subscribe(channel)
+    /// Subscribes to `job`'s `channel` (no modeled cost: subscriptions are
+    /// set up once at job start, like Dask's cluster-init connections).
+    pub fn subscribe(&self, job: JobId, channel: &str) -> Subscription {
+        self.pubsub.subscribe(job, channel)
+    }
+
+    /// Tears down `job`'s pub/sub namespace (job complete). Keeps the
+    /// broker bounded when many jobs stream through one shared store.
+    pub fn remove_job_channels(&self, job: JobId) {
+        self.pubsub.remove_job(job);
     }
 
     /// Number of stored objects (tests / reports).

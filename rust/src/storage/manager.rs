@@ -27,12 +27,12 @@ impl StorageManager {
         StorageManager { ctx, proxy }
     }
 
-    /// Subscribes to the final-result channel (the Subscriber process that
-    /// relays results to the client).
+    /// Subscribes to this job's final-result channel (the Subscriber
+    /// process that relays results to the client).
     pub fn subscribe_finals(&self) -> Subscription {
         self.ctx
             .kv
-            .subscribe(crate::executor::ctx::FINAL_CHANNEL)
+            .subscribe(self.ctx.job, crate::executor::ctx::FINAL_CHANNEL)
     }
 
     /// Fetches a sink task's final output on behalf of the client.
@@ -43,8 +43,10 @@ impl StorageManager {
             .await
     }
 
-    /// Stops the proxy (job complete).
+    /// Stops the proxy and tears down the job's pub/sub namespace
+    /// (job complete).
     pub fn shutdown(self) {
         self.proxy.abort();
+        self.ctx.kv.remove_job_channels(self.ctx.job);
     }
 }
