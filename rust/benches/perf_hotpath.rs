@@ -12,8 +12,11 @@ use std::time::Instant;
 use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
 use wukong::compute::{DataObj, Payload};
 use wukong::core::{Fnv1a, NetConfig, ObjectKey, SimConfig, TaskId};
-use wukong::dag::DagBuilder;
-use wukong::engine::{run_sim, WukongEngine};
+use wukong::dag::{Dag, DagBuilder};
+use wukong::engine::policies::WukongPolicy;
+use wukong::engine::{
+    run_service, run_sim, ArrivalProfile, JobRequest, ServiceConfig, WukongEngine,
+};
 use wukong::kvstore::KvStore;
 use wukong::metrics::{KvOpKind, MetricsHub};
 use wukong::workloads;
@@ -63,6 +66,30 @@ fn bench_case_cold(
         tasks_per_sec,
     });
     tasks_per_sec
+}
+
+/// One multi-tenant service run: `jobs` copies of `dag` admitted in one
+/// burst over ONE shared platform + KV cluster.
+fn run_mt(jobs: usize, dag: &Dag, cfg: &SimConfig) {
+    let requests: Vec<JobRequest> = (0..jobs)
+        .map(|i| JobRequest {
+            name: format!("tr{i}"),
+            tenant: (i % 3) as u32,
+            seed: i as u64,
+            dag: dag.clone(),
+            policy: Arc::new(WukongPolicy),
+        })
+        .collect();
+    let svc = ServiceConfig::new(cfg.clone(), 1)
+        .with_profile(ArrivalProfile::Bursts {
+            burst: jobs,
+            intra_ms: 0.0,
+            idle_ms: 0.0,
+        })
+        .with_concurrency(jobs, jobs);
+    let report = run_service(svc, requests);
+    assert_eq!(report.completed(), jobs);
+    assert!(report.all_ok());
 }
 
 /// Scales an iteration count via `WUKONG_BENCH_ITERS` (CI sets 1 to keep
@@ -284,6 +311,31 @@ fn main() {
         },
     );
 
+    // --- multi-tenant service cases ------------------------------------
+    // MT-<jobs>x<tasks-per-job>: that many concurrent tree-reduction
+    // jobs admitted in one burst through the JobService over ONE shared
+    // platform + KV cluster — the whole-stack multi-tenant hot path
+    // (per-job arenas, job-scoped channels, shared warm pool and
+    // concurrency cap).
+    let tr256 = workloads::tree_reduction(256, 0.0, &cfg);
+    let mt8_tasks = 8 * tr256.len();
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/MT-8x{} ({mt8_tasks} tasks)", tr256.len()),
+        mt8_tasks,
+        iters(2),
+        || run_mt(8, &tr256, &cfg),
+    );
+    let tr64 = workloads::tree_reduction(64, 0.0, &cfg);
+    let mt32_tasks = 32 * tr64.len();
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/MT-32x{} ({mt32_tasks} tasks)", tr64.len()),
+        mt32_tasks,
+        iters(2),
+        || run_mt(32, &tr64, &cfg),
+    );
+
     // --- kv-micro: the key/storage path itself, before vs after -------
     // "packed-dense" is the shipped hot path: Copy u64 keys into dense
     // per-task slots. "legacy-string-keys" reconstructs the pre-refactor
@@ -302,8 +354,8 @@ fn main() {
                     NetConfig::default(),
                     Arc::new(MetricsHub::new()),
                     true,
-                );
-                kv.ensure_task_capacity(KV_TASKS);
+                )
+                .arena(wukong::core::JobId(0), KV_TASKS);
                 for i in 0..KV_TASKS as u32 {
                     let t = TaskId(i);
                     kv.put(ObjectKey::output(t), DataObj::synthetic(8), 1e9).await;

@@ -66,11 +66,11 @@ pub struct NetConfig {
     /// If true, all shards contend for a single NIC (the pre-"shard per
     /// VM" configuration of paper §V-B).
     pub kv_shared_vm: bool,
-    /// If true (default), `KvStore::contains` is charged a full request +
+    /// If true (default), `JobArena::contains` is charged a full request +
     /// reply round trip like `incr` — a Redis EXISTS is not free. The
     /// escape hatch (`false`) keeps existence probes out of virtual time;
     /// forensic post-mortem checks should instead use the always-free,
-    /// synchronous `KvStore::peek_contains`.
+    /// synchronous `JobArena::peek_contains`.
     pub charge_exists: bool,
     /// Pub/sub message delivery latency, microseconds.
     pub pubsub_latency_us: f64,

@@ -90,7 +90,7 @@ const KIND_NAMED: u64 = 2;
 /// integer mix of the packed word ([`ObjectKey::shard_hash`]). The legacy
 /// string forms (`out:<task>`, `ctr:<task>`) exist only as the lazy
 /// [`fmt::Display`] rendering used by the forensic/introspection API
-/// (`KvStore::object_keys` / `counter_entries`), byte-identical to the
+/// (`JobArena::object_keys` / `counter_entries`), byte-identical to the
 /// strings the pre-packing implementation stored.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 #[repr(transparent)]

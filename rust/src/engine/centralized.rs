@@ -19,12 +19,13 @@
 //!   dispatch.
 
 use crate::compute::{CostModel, DataObj};
-use crate::core::{clock, EngineError, EngineResult, ObjectKey, SimConfig, TaskId};
+use crate::core::{clock, EngineError, EngineResult, JobId, ObjectKey, SimConfig, TaskId};
 use crate::dag::Dag;
+use crate::engine::driver::SharedPlatform;
 use crate::engine::policy::{CentralizedSpec, Notification};
 use crate::executor::{jitter_for, run_payload};
-use crate::faas::Faas;
-use crate::kvstore::{KvStore, Message};
+use crate::faas::{Faas, FaasHandle};
+use crate::kvstore::{JobArena, KvStore, Message};
 use crate::metrics::{JobReport, MetricsHub};
 use crate::rt::sync::{mpsc, Semaphore};
 use crate::runtime::PjrtRuntime;
@@ -36,8 +37,8 @@ use std::time::Duration;
 struct SchedState {
     cfg: SimConfig,
     metrics: Arc<MetricsHub>,
-    faas: Arc<Faas>,
-    kv: Arc<KvStore>,
+    faas: Arc<FaasHandle>,
+    kv: Arc<JobArena>,
     cost: CostModel,
     runtime: Option<PjrtRuntime>,
     /// The scheduler machine's single-threaded message-processing loop.
@@ -59,9 +60,11 @@ impl SchedState {
 }
 
 /// Runs `dag` under a centralized scheduler parameterized by `spec`.
-/// With `collect`, additionally fetches every sink's output from the KV
-/// store after completion (every task output is stored there in the
-/// centralized designs).
+/// Runs as `job` over `shared` when given (multi-tenant), or over a
+/// freshly created private substrate. With `collect`, additionally
+/// fetches every sink's output from the KV store after completion (every
+/// task output is stored there in the centralized designs).
+#[allow(clippy::too_many_arguments)]
 pub(crate) async fn run(
     cfg: &SimConfig,
     spec: &CentralizedSpec,
@@ -70,20 +73,27 @@ pub(crate) async fn run(
     dag: &Dag,
     collect: bool,
     label: String,
+    job: JobId,
+    shared: Option<&SharedPlatform>,
 ) -> (
     JobReport,
     std::collections::HashMap<TaskId, DataObj>,
-    Option<Arc<KvStore>>,
+    Option<Arc<JobArena>>,
 ) {
-    let faas = Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), metrics.clone());
-    let kv = KvStore::with_faults(cfg.net.clone(), cfg.faults.clone(), metrics.clone(), false);
-    // Dense KV slots sized once up front — every Lambda's put/get after
-    // this is an index lookup.
-    kv.ensure_task_capacity(dag.len());
+    let (faas, store) = match shared {
+        Some(p) => (p.faas.clone(), p.kv.clone()),
+        None => (
+            Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), metrics.clone()),
+            KvStore::with_faults(cfg.net.clone(), cfg.faults.clone(), metrics.clone(), false),
+        ),
+    };
+    // The job's arena: dense KV slots sized once up front — every
+    // Lambda's put/get after this is an index lookup.
+    let kv = store.arena_with_metrics(job, dag.len(), metrics.clone());
     let state = Arc::new(SchedState {
         cfg: cfg.clone(),
         metrics: metrics.clone(),
-        faas,
+        faas: FaasHandle::new(faas, metrics.clone()),
         kv: kv.clone(),
         cost: CostModel::new(cfg.compute.clone()),
         runtime,
@@ -102,7 +112,7 @@ pub(crate) async fn run(
     // Lambdas' TCP connections (strawman) or a pub/sub subscription
     // relayed into the same scheduler inbox.
     let (tcp_tx, mut tcp_rx) = mpsc::unbounded::<Result<TaskId, EngineError>>();
-    let mut pubsub_rx = kv.subscribe(crate::core::JobId(0), "sched:done");
+    let mut pubsub_rx = kv.subscribe("sched:done");
     let relay = if uses_pubsub {
         // The scheduler's subscriber thread: applies the (cheap)
         // per-message pub/sub handling cost, serialized on the
@@ -200,7 +210,6 @@ pub(crate) async fn run(
                                     state
                                         .kv
                                         .publish(
-                                            crate::core::JobId(0),
                                             "sched:done",
                                             Message::TaskDone {
                                                 task,
@@ -258,7 +267,7 @@ pub(crate) async fn run(
     if let Some(r) = relay {
         r.abort();
     }
-    kv.remove_job_channels(crate::core::JobId(0));
+    kv.remove_job_channels();
     if failure.is_none() && state.executed_count.load(Ordering::Relaxed) != dag.len() as u64 {
         failure = Some(EngineError::Job("not all tasks executed".into()));
     }
@@ -286,7 +295,8 @@ pub(crate) async fn run(
     let report = match failure {
         None => JobReport::success(label, makespan, &metrics),
         Some(e) => JobReport::failure(label, makespan, &metrics, e),
-    };
+    }
+    .for_job(job);
     (report, outputs, Some(kv))
 }
 

@@ -5,13 +5,14 @@
 //! [`ExecutionMode::Decentralized`](crate::engine::ExecutionMode).
 
 use crate::compute::DataObj;
-use crate::core::{clock, EngineError, SimConfig, TaskId};
+use crate::core::{clock, EngineError, JobId, SimConfig, TaskId};
 use crate::dag::Dag;
+use crate::engine::driver::SharedPlatform;
 use crate::engine::policy::{DecentralizedSpec, SchedulingPolicy};
 use crate::executor::ctx::WukongCtx;
 use crate::executor::task_executor::invoke_executor;
 use crate::faas::Faas;
-use crate::kvstore::{KvStore, Message};
+use crate::kvstore::{JobArena, KvStore, Message};
 use crate::metrics::{JobReport, MetricsHub};
 use crate::runtime::PjrtRuntime;
 use crate::schedule::{self, LoweredOps};
@@ -21,8 +22,10 @@ use std::sync::Arc;
 
 /// Runs `dag` decentralized: generate static schedules, lower them through
 /// the policy's fan-out rule, launch the initial executors, track sink
-/// completions. Returns the report, (if `collect`) every sink output, and
-/// the KV store handle for post-run forensic inspection.
+/// completions. Runs as `job` over `shared` when given (multi-tenant), or
+/// over a freshly created private substrate. Returns the report, (if
+/// `collect`) every sink output, and the job's KV arena for post-run
+/// forensic inspection.
 #[allow(clippy::too_many_arguments)]
 pub(crate) async fn run(
     cfg: &SimConfig,
@@ -33,15 +36,22 @@ pub(crate) async fn run(
     dag: &Dag,
     collect: bool,
     label: String,
-) -> (JobReport, HashMap<TaskId, DataObj>, Option<Arc<KvStore>>) {
+    job: JobId,
+    shared: Option<&SharedPlatform>,
+) -> (JobReport, HashMap<TaskId, DataObj>, Option<Arc<JobArena>>) {
     let dag = Arc::new(dag.clone());
-    let faas = Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), metrics.clone());
-    let kv = KvStore::with_faults(
-        cfg.net.clone(),
-        cfg.faults.clone(),
-        metrics.clone(),
-        cfg.wukong.ideal_storage,
-    );
+    let (faas, kv) = match shared {
+        Some(p) => (p.faas.clone(), p.kv.clone()),
+        None => (
+            Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), metrics.clone()),
+            KvStore::with_faults(
+                cfg.net.clone(),
+                cfg.faults.clone(),
+                metrics.clone(),
+                cfg.wukong.ideal_storage,
+            ),
+        ),
+    };
 
     // --- static scheduling (the Schedule Generator, §IV-B) -----------
     let t0 = clock::now();
@@ -49,11 +59,12 @@ pub(crate) async fn run(
     // Lower the schedules into the dense per-task tables the executor hot
     // loop walks, with the policy deciding each fan-out's invoker.
     let lowered = LoweredOps::lower_with(&dag, |width| policy.fan_out(width, cfg));
-    let ctx = WukongCtx::with_lowered(
+    let ctx = WukongCtx::with_job(
+        job,
         Arc::clone(&dag),
         cfg.clone(),
         faas,
-        kv.clone(),
+        kv,
         metrics.clone(),
         schedules,
         runtime,
@@ -146,6 +157,7 @@ pub(crate) async fn run(
     let report = match failure {
         None => JobReport::success(label, makespan, &metrics),
         Some(e) => JobReport::failure(label, makespan, &metrics, e),
-    };
-    (report, outputs, Some(kv))
+    }
+    .for_job(job);
+    (report, outputs, Some(ctx.kv.clone()))
 }

@@ -10,20 +10,71 @@
 //! file (see `rust/src/engine/README.md`), not a new engine.
 
 use crate::compute::DataObj;
-use crate::core::{SimConfig, TaskId};
+use crate::core::{JobId, SimConfig, TaskId};
 use crate::dag::Dag;
 use crate::engine::policy::{ExecutionMode, SchedulingPolicy};
 use crate::engine::{centralized, decentralized, serverful};
-use crate::kvstore::KvStore;
+use crate::faas::Faas;
+use crate::kvstore::{JobArena, KvStore};
 use crate::metrics::{JobReport, MetricsHub};
 use crate::runtime::PjrtRuntime;
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// The shared serverless substrate many concurrent jobs run over: one
+/// FaaS platform (one warm pool, one concurrency cap, one fleet cost
+/// total) and one KV cluster (shared shard NICs and pub/sub broker).
+/// Jobs attach per-job handles — a [`crate::faas::FaasHandle`] and a
+/// [`JobArena`] — so their metrics and state stay scoped while the
+/// contended resources stay shared. Built once by the
+/// [`JobService`](crate::engine::service::JobService) (or a test) and
+/// passed to each job's driver via [`EngineDriver::on_platform`].
+pub struct SharedPlatform {
+    pub faas: Arc<Faas>,
+    pub kv: Arc<KvStore>,
+    /// Fleet-level hub: the default sink for substrate activity not
+    /// attributed to any job (unused by per-job handles).
+    fleet_metrics: Arc<MetricsHub>,
+}
+
+impl SharedPlatform {
+    /// Builds the shared substrate from a base configuration (its fault
+    /// profile and ideal-storage flag apply platform-wide).
+    pub fn new(cfg: &SimConfig) -> Arc<Self> {
+        let fleet_metrics = Arc::new(MetricsHub::new());
+        let faas = Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), fleet_metrics.clone());
+        let kv = KvStore::with_faults(
+            cfg.net.clone(),
+            cfg.faults.clone(),
+            fleet_metrics.clone(),
+            cfg.wukong.ideal_storage,
+        );
+        Arc::new(SharedPlatform {
+            faas,
+            kv,
+            fleet_metrics,
+        })
+    }
+
+    pub fn fleet_metrics(&self) -> &Arc<MetricsHub> {
+        &self.fleet_metrics
+    }
+
+    /// Fleet-wide peak concurrent executions across all jobs.
+    pub fn peak_concurrency(&self) -> u64 {
+        self.faas.peak_concurrency()
+    }
+
+    /// Fleet-wide dollar cost across all jobs.
+    pub fn total_cost_usd(&self) -> f64 {
+        self.faas.total_cost_usd()
+    }
+}
+
 /// Everything a post-mortem needs from one job execution: the report, the
 /// collected sink outputs, the metrics hub (with per-task spans when
-/// sampling is on), and — for modes that use one — the KV store, so tests
-/// and the differential oracle (`crate::sim`) can inspect dependency
+/// sampling is on), and — for modes that use one — the job's KV arena, so
+/// tests and the differential oracle (`crate::sim`) can inspect dependency
 /// counters and look for orphaned intermediates after completion.
 pub struct ForensicRun {
     pub report: JobReport,
@@ -31,17 +82,20 @@ pub struct ForensicRun {
     pub metrics: Arc<MetricsHub>,
     /// `Some` for centralized and decentralized modes; `None` for the
     /// serverful baseline (workers transfer directly, no KV store).
-    pub kv: Option<Arc<KvStore>>,
+    pub kv: Option<Arc<JobArena>>,
 }
 
 /// The policy-driven engine. Construct with a policy, optionally attach a
-/// PJRT runtime / sampling / a label override, then `run` DAGs.
+/// PJRT runtime / sampling / a label override / a shared platform + job
+/// identity (multi-tenant runs), then `run` DAGs.
 pub struct EngineDriver {
     cfg: SimConfig,
     policy: Arc<dyn SchedulingPolicy>,
     runtime: Option<PjrtRuntime>,
     sampling: bool,
     label: Option<String>,
+    job: JobId,
+    shared: Option<Arc<SharedPlatform>>,
 }
 
 impl EngineDriver {
@@ -58,7 +112,25 @@ impl EngineDriver {
             runtime: None,
             sampling: false,
             label: None,
+            job: JobId(0),
+            shared: None,
         }
+    }
+
+    /// Runs the job over a shared platform instead of a freshly created
+    /// private one: warm pool, concurrency cap, shard NICs, and pub/sub
+    /// broker are shared with every co-resident job. (The serverful
+    /// baseline ignores this — its cluster is its own substrate.)
+    pub fn on_platform(mut self, platform: Arc<SharedPlatform>) -> Self {
+        self.shared = Some(platform);
+        self
+    }
+
+    /// Sets the job identity (scopes KV arena, channels, metrics,
+    /// report). Single-job runs default to `JobId(0)`.
+    pub fn for_job(mut self, job: JobId) -> Self {
+        self.job = job;
+        self
     }
 
     /// Attaches the PJRT runtime (real-compute payloads).
@@ -127,6 +199,7 @@ impl EngineDriver {
         collect: bool,
     ) -> ForensicRun {
         let label = self.label();
+        let shared = self.shared.as_deref();
         let (report, outputs, kv) = match self.policy.mode(&self.cfg) {
             ExecutionMode::Decentralized(spec) => {
                 decentralized::run(
@@ -138,6 +211,8 @@ impl EngineDriver {
                     dag,
                     collect,
                     label,
+                    self.job,
+                    shared,
                 )
                 .await
             }
@@ -150,6 +225,8 @@ impl EngineDriver {
                     dag,
                     collect,
                     label,
+                    self.job,
+                    shared,
                 )
                 .await
             }
@@ -162,6 +239,7 @@ impl EngineDriver {
                     dag,
                     collect,
                     label,
+                    self.job,
                 )
                 .await
             }

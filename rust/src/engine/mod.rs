@@ -6,12 +6,17 @@
 //! and how to add a new policy). The mode-specific execution loops live in
 //! the private `centralized` / `decentralized` / `serverful` modules;
 //! [`WukongEngine`] remains as the WUKONG-policy convenience wrapper used
-//! by the client facade and the real-compute examples.
+//! by the client facade and the real-compute examples. [`service`] layers
+//! the multi-tenant [`JobService`] on top: many concurrent jobs — each
+//! with its own `JobId`-scoped arena, channels, and metrics — over one
+//! [`SharedPlatform`], with seeded open-loop arrivals and FIFO/fair
+//! admission.
 
 pub mod client;
 pub mod driver;
 pub mod policies;
 pub mod policy;
+pub mod service;
 pub mod wukong;
 
 pub(crate) mod centralized;
@@ -19,7 +24,11 @@ pub(crate) mod decentralized;
 pub(crate) mod serverful;
 
 pub use client::{Client, JobResult};
-pub use driver::{EngineDriver, ForensicRun};
+pub use driver::{EngineDriver, ForensicRun, SharedPlatform};
+pub use service::{
+    run_service, Admission, ArrivalProfile, JobOutcome, JobRequest, JobService, ServiceConfig,
+    ServiceReport,
+};
 pub use policy::{
     CentralizedSpec, DecentralizedSpec, ExecutionMode, Notification, SchedulingPolicy,
 };

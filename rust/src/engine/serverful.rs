@@ -117,6 +117,9 @@ impl ClusterState {
 /// Runs `dag` on the serverful cluster described by `profile`. With
 /// `collect`, additionally returns every sink's output (sink objects have
 /// no consumers, so they stay resident in worker memory until job end).
+/// `job` only tags the report: the serverful baseline owns its whole
+/// cluster, so there is no shared-platform variant.
+#[allow(clippy::too_many_arguments)]
 pub(crate) async fn run(
     cfg: &SimConfig,
     profile: &ClusterProfile,
@@ -125,10 +128,11 @@ pub(crate) async fn run(
     dag: &Dag,
     collect: bool,
     label: String,
+    job: crate::core::JobId,
 ) -> (
     JobReport,
     std::collections::HashMap<TaskId, DataObj>,
-    Option<Arc<crate::kvstore::KvStore>>,
+    Option<Arc<crate::kvstore::JobArena>>,
 ) {
     let n_workers = profile.total_workers();
     let state = Arc::new(ClusterState {
@@ -280,7 +284,8 @@ pub(crate) async fn run(
     let report = match failure {
         None => JobReport::success(label, makespan, &metrics),
         Some(e) => JobReport::failure(label, makespan, &metrics, e),
-    };
+    }
+    .for_job(job);
     // No KV store in the serverful baseline: workers transfer directly.
     (report, outputs, None)
 }

@@ -1,0 +1,716 @@
+//! The multi-tenant job service: many concurrent DAG jobs over **one**
+//! shared serverless platform, KV cluster, and warm container pool.
+//!
+//! This is the regime the paper's FaaS pitch is actually about — "the
+//! auto-scaling property of serverless platforms accommodates short
+//! tasks and bursty workloads" — made a first-class scenario: jobs
+//! arrive on a deterministic seeded **open-loop** schedule (they arrive
+//! whether or not the platform has caught up, like real tenant traffic),
+//! pass FIFO or fair **admission** with a queue-depth cap, and then run
+//! as ordinary engine jobs whose executors contend for the shared warm
+//! pool, platform concurrency cap, and KV shard NICs. Each job keeps its
+//! own [`JobId`]-scoped KV arena, pub/sub namespace, and metrics hub, so
+//! the service reports both per-job [`JobOutcome`]s (latency, queue
+//! delay, cost, cold-start share) and fleet-level aggregates.
+//!
+//! Determinism: the virtual-time runtime plus seeded arrivals make an
+//! entire service run — admissions, contention, completions — replayable
+//! from its configuration alone; [`ServiceReport::render_trace`] is the
+//! canonical artifact two runs of the same seed must agree on.
+
+use crate::core::{clock, JobId, SimConfig, SplitMix64, TaskId};
+use crate::dag::Dag;
+use crate::engine::driver::{EngineDriver, SharedPlatform};
+use crate::engine::policy::SchedulingPolicy;
+use crate::kvstore::JobArena;
+use crate::metrics::JobReport;
+use crate::rt::sync::mpsc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One job submitted to the service.
+pub struct JobRequest {
+    /// Human-readable workload name ("tr-64", "rand-value", ...).
+    pub name: String,
+    /// Tenant the job belongs to (fair admission balances across
+    /// tenants; several jobs may share one tenant).
+    pub tenant: u32,
+    /// Per-job simulation seed (duration jitter etc.). The fault profile
+    /// and platform knobs come from the service's base config.
+    pub seed: u64,
+    pub dag: Dag,
+    pub policy: Arc<dyn SchedulingPolicy>,
+}
+
+/// Deterministic open-loop arrival schedules. Arrival *offsets* are
+/// precomputed from the profile and the arrival seed, so the schedule
+/// never depends on service progress (open loop) and replays exactly.
+#[derive(Clone, Debug)]
+pub enum ArrivalProfile {
+    /// One job every `gap_ms`.
+    Uniform { gap_ms: f64 },
+    /// Exponential inter-arrival gaps with the given mean (a seeded
+    /// Poisson process — the classic open-loop tenant model).
+    Poisson { mean_gap_ms: f64 },
+    /// Bursts of `burst` jobs spaced `intra_ms` apart, bursts separated
+    /// by `idle_ms` — the bursty regime the paper's pitch names.
+    Bursts {
+        burst: usize,
+        intra_ms: f64,
+        idle_ms: f64,
+    },
+}
+
+impl ArrivalProfile {
+    /// Arrival offsets (from service start) for `n` jobs. Non-decreasing;
+    /// the first job arrives at 0.
+    pub fn arrival_offsets(&self, n: usize, seed: u64) -> Vec<Duration> {
+        let mut rng = SplitMix64::new(seed ^ 0xA881_11A1_5EED_u64);
+        let mut t_ms = 0.0f64;
+        (0..n)
+            .map(|i| {
+                if i > 0 {
+                    t_ms += match self {
+                        ArrivalProfile::Uniform { gap_ms } => gap_ms.max(0.0),
+                        ArrivalProfile::Poisson { mean_gap_ms } => {
+                            -mean_gap_ms.max(0.0) * (1.0 - rng.next_f64()).ln()
+                        }
+                        ArrivalProfile::Bursts {
+                            burst,
+                            intra_ms,
+                            idle_ms,
+                        } => {
+                            if i % burst.max(1) == 0 {
+                                idle_ms.max(0.0)
+                            } else {
+                                intra_ms.max(0.0)
+                            }
+                        }
+                    };
+                }
+                Duration::from_secs_f64(t_ms * 1e-3)
+            })
+            .collect()
+    }
+}
+
+/// Admission order for queued jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Strict arrival order.
+    Fifo,
+    /// Balance across tenants: admit the queued job whose tenant has had
+    /// the fewest jobs admitted so far (ties resolve in arrival order).
+    Fair,
+}
+
+/// Service configuration: the shared-platform base config plus the
+/// arrival/admission policy.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Platform knobs, network model, fault profile — applied to the ONE
+    /// shared substrate every admitted job runs over.
+    pub base: SimConfig,
+    /// Seed of the arrival schedule (independent of per-job seeds).
+    pub arrival_seed: u64,
+    pub profile: ArrivalProfile,
+    pub admission: Admission,
+    /// How many jobs may run concurrently (admission gate, not the
+    /// platform's Lambda concurrency cap — that still applies below).
+    pub max_concurrent_jobs: usize,
+    /// Arrivals beyond this many *waiting* jobs are rejected outright
+    /// (load shedding), not queued.
+    pub queue_cap: usize,
+    /// Record per-task spans in every job (expensive; off by default).
+    pub sampling: bool,
+}
+
+impl ServiceConfig {
+    /// A deterministic-test service config over `base`.
+    pub fn new(base: SimConfig, arrival_seed: u64) -> Self {
+        ServiceConfig {
+            base,
+            arrival_seed,
+            profile: ArrivalProfile::Uniform { gap_ms: 50.0 },
+            admission: Admission::Fifo,
+            max_concurrent_jobs: 8,
+            queue_cap: 64,
+            sampling: false,
+        }
+    }
+
+    pub fn with_profile(mut self, profile: ArrivalProfile) -> Self {
+        self.profile = profile;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: Admission) -> Self {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_concurrency(mut self, max_concurrent_jobs: usize, queue_cap: usize) -> Self {
+        self.max_concurrent_jobs = max_concurrent_jobs;
+        self.queue_cap = queue_cap;
+        self
+    }
+}
+
+/// Everything the service records about one completed job.
+pub struct JobOutcome {
+    pub job: JobId,
+    pub tenant: u32,
+    pub name: String,
+    /// Offsets from service start (virtual time).
+    pub submitted: Duration,
+    pub started: Duration,
+    pub finished: Duration,
+    pub report: JobReport,
+    /// Bit-exact sink-output digest (comparable against an isolated
+    /// single-job run of the same seed — the tenancy-isolation oracle).
+    pub fingerprint: Vec<(TaskId, u64)>,
+    /// The job's metrics hub: per-job KV samples, and per-task spans when
+    /// [`ServiceConfig::sampling`] is on (rendered into the service
+    /// trace).
+    pub metrics: Arc<crate::metrics::MetricsHub>,
+    /// The job's KV arena for post-mortem forensics (None for serverful
+    /// policies).
+    pub kv: Option<Arc<JobArena>>,
+}
+
+impl JobOutcome {
+    /// Time spent waiting for admission.
+    pub fn queue_delay(&self) -> Duration {
+        self.started.saturating_sub(self.submitted)
+    }
+
+    /// End-to-end latency as the tenant sees it (submit -> finish).
+    pub fn latency(&self) -> Duration {
+        self.finished.saturating_sub(self.submitted)
+    }
+
+    /// One formatted row for service tables.
+    pub fn row(&self) -> String {
+        // Rendered first so the `{:<6}` width applies (JobId's Display
+        // does not honor padding flags).
+        let job = self.job.to_string();
+        format!(
+            "{:<6} t{:<2} {:<14} {:<22} sub={:>8.3}s wait={:>7.3}s lat={:>8.3}s tasks={:<6} lambdas={:<5} cold={:<4} billed={:.1}s{}",
+            job,
+            self.tenant,
+            self.name,
+            self.report.platform,
+            self.submitted.as_secs_f64(),
+            self.queue_delay().as_secs_f64(),
+            self.latency().as_secs_f64(),
+            self.report.tasks_executed,
+            self.report.lambdas_invoked,
+            self.report.cold_starts,
+            self.report.billed.as_secs_f64(),
+            if self.report.is_ok() { "" } else { "  FAILED" },
+        )
+    }
+}
+
+/// The outcome of one service run: per-job outcomes plus fleet-level
+/// aggregates over the shared platform.
+pub struct ServiceReport {
+    /// Completed jobs, sorted by job id (== arrival order).
+    pub outcomes: Vec<JobOutcome>,
+    /// Jobs shed at admission (queue over cap), in arrival order.
+    pub rejected: Vec<(JobId, String)>,
+    /// Service makespan: start of first arrival to last completion.
+    pub makespan: Duration,
+    /// Fleet-wide peak concurrent function executions.
+    pub peak_concurrency: u64,
+    /// Fleet-wide dollar cost.
+    pub fleet_cost_usd: f64,
+}
+
+impl ServiceReport {
+    pub fn completed(&self) -> usize {
+        self.outcomes.len()
+    }
+
+    pub fn all_ok(&self) -> bool {
+        self.outcomes.iter().all(|o| o.report.is_ok())
+    }
+
+    pub fn total_lambdas(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.report.lambdas_invoked).sum()
+    }
+
+    pub fn total_cold_starts(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.report.cold_starts).sum()
+    }
+
+    /// Fraction of invocations that cold-started, fleet-wide.
+    pub fn cold_start_share(&self) -> f64 {
+        let total = self.total_lambdas();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_cold_starts() as f64 / total as f64
+        }
+    }
+
+    pub fn total_billed(&self) -> Duration {
+        self.outcomes.iter().map(|o| o.report.billed).sum()
+    }
+
+    /// Latency percentile over completed jobs (`q` in [0, 1]).
+    pub fn latency_percentile(&self, q: f64) -> Duration {
+        if self.outcomes.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut lats: Vec<Duration> = self.outcomes.iter().map(|o| o.latency()).collect();
+        lats.sort_unstable();
+        let idx = ((lats.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        lats[idx]
+    }
+
+    /// Fleet summary row.
+    pub fn fleet_row(&self) -> String {
+        format!(
+            "fleet: {} completed, {} rejected | makespan {:.3}s | p50 lat {:.3}s, p99 lat {:.3}s | lambdas={} cold_share={:.1}% | peak_conc={} | billed={:.1}s cost=${:.4}",
+            self.completed(),
+            self.rejected.len(),
+            self.makespan.as_secs_f64(),
+            self.latency_percentile(0.5).as_secs_f64(),
+            self.latency_percentile(0.99).as_secs_f64(),
+            self.total_lambdas(),
+            self.cold_start_share() * 100.0,
+            self.peak_concurrency,
+            self.total_billed().as_secs_f64(),
+            self.fleet_cost_usd,
+        )
+    }
+
+    /// Canonical text rendering of the whole service run — the replay
+    /// artifact two runs of the same configuration must agree on
+    /// byte-for-byte (the service-level determinism check).
+    pub fn render_trace(&self) -> String {
+        let mut out = String::with_capacity(128 + self.outcomes.len() * 160);
+        out.push_str(&format!(
+            "service completed={} rejected={} makespan_ns={} peak_conc={} lambdas={} cold={}\n",
+            self.completed(),
+            self.rejected.len(),
+            self.makespan.as_nanos(),
+            self.peak_concurrency,
+            self.total_lambdas(),
+            self.total_cold_starts(),
+        ));
+        for (job, name) in &self.rejected {
+            out.push_str(&format!("rejected {job} name={name}\n"));
+        }
+        for o in &self.outcomes {
+            out.push_str(&format!(
+                "outcome {} tenant={} name={} submitted_ns={} started_ns={} finished_ns={}\n",
+                o.job,
+                o.tenant,
+                o.name,
+                o.submitted.as_nanos(),
+                o.started.as_nanos(),
+                o.finished.as_nanos(),
+            ));
+            // With sampling on, the per-task spans of every job land in
+            // the service trace too (empty slice otherwise).
+            out.push_str(&crate::sim::trace::render_trace(
+                &o.report,
+                &o.metrics.task_spans(),
+            ));
+        }
+        out
+    }
+}
+
+/// The job service itself: owns the admission policy and drives arrivals,
+/// admission, and job execution over one [`SharedPlatform`].
+pub struct JobService {
+    cfg: ServiceConfig,
+}
+
+impl JobService {
+    pub fn new(cfg: ServiceConfig) -> Self {
+        assert!(cfg.max_concurrent_jobs >= 1, "need at least one job slot");
+        JobService { cfg }
+    }
+
+    pub fn cfg(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Position within `queue` of the next job to admit, per the
+    /// admission policy. `None` iff the queue is empty.
+    fn pick(
+        &self,
+        queue: &VecDeque<usize>,
+        requests: &[Option<JobRequest>],
+        tenant_admitted: &HashMap<u32, usize>,
+    ) -> Option<usize> {
+        if queue.is_empty() {
+            return None;
+        }
+        match self.cfg.admission {
+            Admission::Fifo => Some(0),
+            Admission::Fair => {
+                // Least-admitted tenant first; arrival order breaks ties.
+                let mut best = 0usize;
+                let mut best_load = usize::MAX;
+                for (pos, &idx) in queue.iter().enumerate() {
+                    let tenant = requests[idx].as_ref().expect("queued twice").tenant;
+                    let load = *tenant_admitted.get(&tenant).unwrap_or(&0);
+                    if load < best_load {
+                        best_load = load;
+                        best = pos;
+                    }
+                }
+                Some(best)
+            }
+        }
+    }
+
+    /// Runs the service over `jobs` (arrival order = vector order) inside
+    /// the **current** virtual-time executor. Use [`run_service`] from
+    /// synchronous code.
+    pub async fn run(&self, jobs: Vec<JobRequest>) -> ServiceReport {
+        let n = jobs.len();
+        let platform = SharedPlatform::new(&self.cfg.base);
+        let arrivals = self.cfg.profile.arrival_offsets(n, self.cfg.arrival_seed);
+        let t0 = clock::now();
+
+        let (done_tx, mut done_rx) = mpsc::unbounded::<JobOutcome>();
+        let mut requests: Vec<Option<JobRequest>> = jobs.into_iter().map(Some).collect();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut tenant_admitted: HashMap<u32, usize> = HashMap::new();
+        let mut next_arrival = 0usize;
+        let mut running = 0usize;
+        let mut outcomes: Vec<JobOutcome> = Vec::with_capacity(n);
+        let mut rejected: Vec<(JobId, String)> = Vec::new();
+
+        while outcomes.len() + rejected.len() < n {
+            // Admit while job slots are free.
+            while running < self.cfg.max_concurrent_jobs {
+                let Some(pos) = self.pick(&queue, &requests, &tenant_admitted) else {
+                    break;
+                };
+                let idx = queue.remove(pos).expect("picked position exists");
+                let req = requests[idx].take().expect("admitted twice");
+                *tenant_admitted.entry(req.tenant).or_insert(0) += 1;
+                running += 1;
+
+                let job = JobId(idx as u64 + 1);
+                let submitted = arrivals[idx];
+                let started = clock::now() - t0;
+                let mut job_cfg = self.cfg.base.clone();
+                job_cfg.seed = req.seed;
+                let platform = Arc::clone(&platform);
+                let tx = done_tx.clone();
+                let sampling = self.cfg.sampling;
+                crate::rt::spawn(async move {
+                    let mut driver = EngineDriver::with_policy(job_cfg, req.policy)
+                        .on_platform(platform)
+                        .for_job(job);
+                    if sampling {
+                        driver = driver.with_sampling();
+                    }
+                    let run = driver.run_forensic(&req.dag).await;
+                    let fingerprint = crate::sim::harness::fingerprint_outputs(&run.outputs);
+                    let _ = tx.send(JobOutcome {
+                        job,
+                        tenant: req.tenant,
+                        name: req.name,
+                        submitted,
+                        started,
+                        finished: clock::now() - t0,
+                        report: run.report,
+                        fingerprint,
+                        metrics: run.metrics,
+                        kv: run.kv,
+                    });
+                });
+            }
+
+            // Absorb the next due arrival — ONE at a time, interleaved
+            // with admission, so a burst fills free job slots before the
+            // queue cap sheds anyone. Shedding only applies to jobs that
+            // would actually have to *wait*: with a free job slot the
+            // arrival is admitted on the next pass even at queue_cap 0
+            // (the admit step above drains the queue whenever slots are
+            // free, so a free slot implies the queue is empty here).
+            if next_arrival < n && clock::now() - t0 >= arrivals[next_arrival] {
+                let idx = next_arrival;
+                next_arrival += 1;
+                if running >= self.cfg.max_concurrent_jobs && queue.len() >= self.cfg.queue_cap {
+                    let name = requests[idx].take().expect("arrived twice").name;
+                    rejected.push((JobId(idx as u64 + 1), name));
+                } else {
+                    queue.push_back(idx);
+                }
+                continue; // try to admit it right away
+            }
+
+            // Wait for the next event: a completion, or the next arrival.
+            if next_arrival < n {
+                let wait = arrivals[next_arrival].saturating_sub(clock::now() - t0);
+                match crate::rt::timeout(wait, done_rx.recv()).await {
+                    Ok(Some(outcome)) => {
+                        running -= 1;
+                        outcomes.push(outcome);
+                    }
+                    Ok(None) => unreachable!("service holds a live sender"),
+                    Err(_) => {} // arrival due — absorbed at loop top
+                }
+            } else if running > 0 {
+                match done_rx.recv().await {
+                    Some(outcome) => {
+                        running -= 1;
+                        outcomes.push(outcome);
+                    }
+                    None => unreachable!("service holds a live sender"),
+                }
+            } else {
+                // No arrival pending, nothing running: every job is
+                // accounted for, so the loop condition is about to end
+                // the service.
+                debug_assert!(queue.is_empty());
+            }
+        }
+
+        let makespan = clock::now() - t0;
+        outcomes.sort_by_key(|o| o.job);
+        rejected.sort_by_key(|r| r.0);
+        ServiceReport {
+            outcomes,
+            rejected,
+            makespan,
+            peak_concurrency: platform.peak_concurrency(),
+            fleet_cost_usd: platform.total_cost_usd(),
+        }
+    }
+}
+
+/// Runs a whole service scenario to completion in deterministic virtual
+/// time — the synchronous entry point (CLI `service` mode, tests,
+/// benches).
+pub fn run_service(cfg: ServiceConfig, jobs: Vec<JobRequest>) -> ServiceReport {
+    let service = JobService::new(cfg);
+    crate::rt::run_virtual(async move { service.run(jobs).await })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::Payload;
+    use crate::dag::DagBuilder;
+    use crate::engine::policies::{PubSubPolicy, WukongPolicy};
+
+    fn chain_job(name: &str, tenant: u32, seed: u64, len: usize) -> JobRequest {
+        let mut b = DagBuilder::new();
+        let mut prev = b.add_task("t0", Payload::Sleep { ms: 5.0 }, 8, &[]);
+        for i in 1..len {
+            prev = b.add_task(format!("t{i}"), Payload::Sleep { ms: 5.0 }, 8, &[prev]);
+        }
+        JobRequest {
+            name: name.to_string(),
+            tenant,
+            seed,
+            dag: b.build().unwrap(),
+            policy: Arc::new(WukongPolicy),
+        }
+    }
+
+    #[test]
+    fn arrival_profiles_are_deterministic_and_monotone() {
+        for profile in [
+            ArrivalProfile::Uniform { gap_ms: 10.0 },
+            ArrivalProfile::Poisson { mean_gap_ms: 10.0 },
+            ArrivalProfile::Bursts {
+                burst: 4,
+                intra_ms: 1.0,
+                idle_ms: 100.0,
+            },
+        ] {
+            let a = profile.arrival_offsets(16, 7);
+            let b = profile.arrival_offsets(16, 7);
+            assert_eq!(a, b, "{profile:?} must replay from its seed");
+            assert_eq!(a[0], Duration::ZERO);
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{profile:?} monotone");
+        }
+        // Bursts: job 4 starts a new burst 100ms after job 3's burst slot.
+        let bursts = ArrivalProfile::Bursts {
+            burst: 4,
+            intra_ms: 1.0,
+            idle_ms: 100.0,
+        }
+        .arrival_offsets(8, 0);
+        assert_eq!(bursts[3], Duration::from_millis(3));
+        assert_eq!(bursts[4], Duration::from_millis(103));
+    }
+
+    #[test]
+    fn service_completes_concurrent_jobs_over_one_platform() {
+        let jobs: Vec<JobRequest> = (0..6)
+            .map(|i| chain_job(&format!("chain{i}"), i % 2, 100 + i as u64, 4))
+            .collect();
+        let cfg = ServiceConfig::new(SimConfig::test(), 1)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 6,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_concurrency(6, 16);
+        let report = run_service(cfg, jobs);
+        assert_eq!(report.completed(), 6);
+        assert!(report.all_ok(), "{}", report.fleet_row());
+        assert!(report.rejected.is_empty());
+        // Job ids are arrival order, 1-based.
+        let ids: Vec<u64> = report.outcomes.iter().map(|o| o.job.0).collect();
+        assert_eq!(ids, vec![1, 2, 3, 4, 5, 6]);
+        for o in &report.outcomes {
+            assert_eq!(o.report.job, o.job, "report carries the job id");
+            assert_eq!(o.report.tasks_executed, 4, "{}", o.row());
+            assert!(o.kv.is_some());
+        }
+        assert!(report.total_lambdas() >= 6);
+    }
+
+    #[test]
+    fn admission_gate_limits_concurrent_jobs_and_queues_the_rest() {
+        // 4 jobs, 1 slot: jobs must serialize — each waits for the
+        // previous one, so queue delay grows monotonically.
+        let jobs: Vec<JobRequest> = (0..4)
+            .map(|i| chain_job(&format!("q{i}"), 0, i as u64, 3))
+            .collect();
+        let cfg = ServiceConfig::new(SimConfig::test(), 2)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 4,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_concurrency(1, 16);
+        let report = run_service(cfg, jobs);
+        assert_eq!(report.completed(), 4);
+        assert!(report.all_ok());
+        let delays: Vec<Duration> = report.outcomes.iter().map(|o| o.queue_delay()).collect();
+        assert!(
+            delays.windows(2).all(|w| w[0] <= w[1]),
+            "serialized jobs queue in order: {delays:?}"
+        );
+        assert!(delays[3] > Duration::ZERO, "last job must have waited");
+    }
+
+    #[test]
+    fn queue_cap_sheds_load() {
+        // 5 jobs arrive at once; 1 runs, queue cap 2 => 2 shed.
+        let jobs: Vec<JobRequest> = (0..5)
+            .map(|i| chain_job(&format!("s{i}"), 0, i as u64, 3))
+            .collect();
+        let cfg = ServiceConfig::new(SimConfig::test(), 3)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 5,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_concurrency(1, 2);
+        let report = run_service(cfg, jobs);
+        assert_eq!(report.completed() + report.rejected.len(), 5);
+        assert_eq!(report.rejected.len(), 2, "{}", report.fleet_row());
+        assert!(report.all_ok());
+    }
+
+    #[test]
+    fn queue_cap_zero_admits_into_free_slots_and_sheds_the_rest() {
+        // 3 jobs at once, 2 slots, queue cap 0: two start immediately
+        // (a free slot means no waiting, so cap 0 must not shed them);
+        // the third would have to wait and is shed.
+        let jobs: Vec<JobRequest> = (0..3)
+            .map(|i| chain_job(&format!("z{i}"), 0, i as u64, 3))
+            .collect();
+        let cfg = ServiceConfig::new(SimConfig::test(), 6)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 3,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_concurrency(2, 0);
+        let report = run_service(cfg, jobs);
+        assert_eq!(report.completed(), 2, "{}", report.fleet_row());
+        assert_eq!(report.rejected.len(), 1);
+        assert!(report.all_ok());
+        assert!(
+            report.outcomes.iter().all(|o| o.queue_delay().is_zero()),
+            "cap 0 means nothing ever waits"
+        );
+    }
+
+    #[test]
+    fn fair_admission_interleaves_tenants() {
+        // Tenant 0 floods 3 jobs, tenant 1 submits 1, all at t=0, one
+        // slot. FIFO admits 0,0,0,1; Fair must admit a tenant-1 job
+        // second.
+        let mk = |admission| {
+            let mut jobs: Vec<JobRequest> = (0..3)
+                .map(|i| chain_job(&format!("flood{i}"), 0, i as u64, 3))
+                .collect();
+            jobs.push(chain_job("minnow", 1, 9, 3));
+            let cfg = ServiceConfig::new(SimConfig::test(), 4)
+                .with_profile(ArrivalProfile::Bursts {
+                    burst: 4,
+                    intra_ms: 0.0,
+                    idle_ms: 0.0,
+                })
+                .with_admission(admission)
+                .with_concurrency(1, 16);
+            run_service(cfg, jobs)
+        };
+        let fifo = mk(Admission::Fifo);
+        let fair = mk(Admission::Fair);
+        let start_of = |r: &ServiceReport, name: &str| {
+            r.outcomes
+                .iter()
+                .find(|o| o.name == name)
+                .expect("job completed")
+                .started
+        };
+        assert!(
+            start_of(&fair, "minnow") < start_of(&fifo, "minnow"),
+            "fair admission must start the minority tenant earlier"
+        );
+        // Under fair, only the first flood job may start before the
+        // minnow (it arrived first into an empty queue).
+        let fair_minnow = start_of(&fair, "minnow");
+        let floods_before = fair
+            .outcomes
+            .iter()
+            .filter(|o| o.tenant == 0 && o.started < fair_minnow)
+            .count();
+        assert!(floods_before <= 1, "got {floods_before} flood jobs first");
+    }
+
+    #[test]
+    fn mixed_policies_share_the_platform() {
+        // A decentralized and a centralized job concurrently over one
+        // shared platform + KV cluster: both complete, channels and
+        // arenas stay isolated.
+        let mut jobs = vec![chain_job("wukong-job", 0, 1, 4)];
+        let mut pubsub_job = chain_job("pubsub-job", 1, 2, 4);
+        pubsub_job.policy = Arc::new(PubSubPolicy);
+        jobs.push(pubsub_job);
+        let cfg = ServiceConfig::new(SimConfig::test(), 5)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 2,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_concurrency(2, 8);
+        let report = run_service(cfg, jobs);
+        assert_eq!(report.completed(), 2);
+        assert!(report.all_ok(), "{}", report.fleet_row());
+        let trace = report.render_trace();
+        assert!(trace.starts_with("service completed=2 rejected=0 "));
+        assert!(trace.contains("outcome job1 "));
+        assert!(trace.contains("outcome job2 "));
+    }
+}

@@ -3,8 +3,8 @@
 use crate::compute::CostModel;
 use crate::core::{EngineError, EngineResult, JobId, SimConfig, SplitMix64, TaskId};
 use crate::dag::Dag;
-use crate::faas::Faas;
-use crate::kvstore::KvStore;
+use crate::faas::{Faas, FaasHandle};
+use crate::kvstore::{JobArena, KvStore};
 use crate::metrics::MetricsHub;
 use crate::runtime::PjrtRuntime;
 use crate::schedule::{LoweredOps, ScheduleSet};
@@ -22,13 +22,15 @@ pub const FANOUT_CHANNEL: &str = "wukong:fanout";
 
 /// Everything a Task Executor needs, shared across the job.
 pub struct WukongCtx {
-    /// Identity of the job this context belongs to — the namespace of its
-    /// pub/sub channels.
+    /// Identity of the job this context belongs to — the scope of its KV
+    /// arena, pub/sub channels, and metrics.
     pub job: JobId,
     pub dag: Arc<Dag>,
     pub cfg: SimConfig,
-    pub faas: Arc<Faas>,
-    pub kv: Arc<KvStore>,
+    /// Per-job handle onto the (possibly shared) FaaS platform.
+    pub faas: Arc<FaasHandle>,
+    /// Per-job KV arena over the (possibly shared) cluster.
+    pub kv: Arc<JobArena>,
     pub metrics: Arc<MetricsHub>,
     pub cost: CostModel,
     pub schedules: Arc<ScheduleSet>,
@@ -87,7 +89,10 @@ impl WukongCtx {
     }
 
     /// Full constructor: builds the context of one job running (possibly
-    /// among others) over the given platform and KV store.
+    /// among others) over the given platform and KV cluster. Creates the
+    /// job's KV arena — dense slots sized once for the DAG, so every
+    /// executor KV op after this is a pure index lookup — and the per-job
+    /// platform handle that records into this job's metrics hub.
     #[allow(clippy::too_many_arguments)]
     pub fn with_job(
         job: JobId,
@@ -102,10 +107,8 @@ impl WukongCtx {
     ) -> Arc<Self> {
         let n = dag.len();
         assert_eq!(lowered.len(), n, "lowering does not cover the DAG");
-        // The DAG size is known up front, so the KV store's dense
-        // task-output / fan-in-counter slots are sized here, once —
-        // every executor KV op after this is a pure index lookup.
-        kv.ensure_task_capacity(n);
+        let kv = kv.arena_with_metrics(job, n, metrics.clone());
+        let faas = FaasHandle::new(faas, metrics.clone());
         Arc::new(WukongCtx {
             job,
             dag,

@@ -120,7 +120,7 @@ pub async fn run_executor(
             FanOutAction::Sink => {
                 store_once(&ctx, &mut cache, current).await;
                 ctx.kv
-                    .publish(ctx.job, FINAL_CHANNEL, Message::FinalResult { task: current })
+                    .publish(FINAL_CHANNEL, Message::FinalResult { task: current })
                     .await;
                 let store = clock::now() - t_store;
                 ctx.metrics.record_task(TaskSpan {
@@ -160,7 +160,6 @@ pub async fn run_executor(
                     // no owned child list is built or copied.
                     ctx.kv
                         .publish(
-                            ctx.job,
                             FANOUT_CHANNEL,
                             Message::FanOutRequest {
                                 fan_out_task: current,
@@ -228,7 +227,6 @@ pub async fn invoke_executor(ctx: Arc<WukongCtx>, start: TaskId, from: Option<Ta
                 // (the paper defers richer fault handling to future work).
                 ctx.kv
                     .publish(
-                        ctx.job,
                         FINAL_CHANNEL,
                         Message::JobFailed {
                             reason: e.to_string(),

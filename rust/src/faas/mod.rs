@@ -10,4 +10,4 @@ pub mod billing;
 pub mod platform;
 
 pub use billing::Billing;
-pub use platform::Faas;
+pub use platform::{Faas, FaasHandle};

@@ -1,7 +1,17 @@
 //! The FaaS platform: function invocation, container lifecycle, timeouts,
 //! retries, concurrency cap, billing.
+//!
+//! One [`Faas`] instance is the **shared platform**: with many concurrent
+//! jobs, they all draw warm containers from one pool, queue on one
+//! platform-wide concurrency cap, and accrue into one fleet cost total —
+//! the cross-job contention the multi-tenant scenarios measure. Each job
+//! attaches through a [`FaasHandle`], which records that job's
+//! invocations, cold starts, and billed time into the job's own metrics
+//! hub.
 
-use crate::core::{clock, EngineError, EngineResult, ExecutorId, FaasConfig, FaultConfig, SplitMix64};
+use crate::core::{
+    clock, EngineError, EngineResult, ExecutorId, FaasConfig, FaultConfig, SplitMix64,
+};
 use crate::faas::billing::Billing;
 use crate::metrics::MetricsHub;
 use std::future::Future;
@@ -11,7 +21,8 @@ use std::time::Duration;
 use crate::rt::sync::Semaphore;
 use crate::rt::JoinHandle;
 
-/// The serverless platform. One instance per simulated job run.
+/// The serverless platform: one instance per simulated deployment,
+/// shared by every job running on it.
 pub struct Faas {
     cfg: FaasConfig,
     billing: Billing,
@@ -90,7 +101,26 @@ impl Faas {
     /// paper §IV-C "fault tolerance").
     ///
     /// `make_body` is called once per attempt with the executor id.
-    pub async fn invoke<F, Fut>(self: &Arc<Self>, mut make_body: F) -> JoinHandle<EngineResult<()>>
+    /// Records into the platform's own metrics hub — the single-job entry
+    /// point; multi-tenant callers go through [`FaasHandle`].
+    pub async fn invoke<F, Fut>(self: &Arc<Self>, make_body: F) -> JoinHandle<EngineResult<()>>
+    where
+        F: FnMut(ExecutorId) -> Fut + 'static,
+        Fut: Future<Output = EngineResult<()>> + 'static,
+    {
+        let metrics = self.metrics.clone();
+        self.invoke_recorded(metrics, make_body).await
+    }
+
+    /// Like [`Faas::invoke`], recording the invocation, cold-start, and
+    /// billing metrics into `metrics` (the calling job's hub) instead of
+    /// the platform hub. Platform-wide state — warm pool, concurrency
+    /// cap, executor ids, fleet cost — stays shared.
+    pub async fn invoke_recorded<F, Fut>(
+        self: &Arc<Self>,
+        metrics: Arc<MetricsHub>,
+        mut make_body: F,
+    ) -> JoinHandle<EngineResult<()>>
     where
         F: FnMut(ExecutorId) -> Fut + 'static,
         Fut: Future<Output = EngineResult<()>> + 'static,
@@ -107,7 +137,9 @@ impl Faas {
                 // Injected crashes stay transient: never crash the final
                 // allowed attempt, so the retry loop always masks them.
                 let may_crash = attempts <= platform.cfg.max_retries;
-                let result = platform.run_container(id, make_body(id), may_crash).await;
+                let result = platform
+                    .run_container(id, make_body(id), may_crash, &metrics)
+                    .await;
                 match result {
                     Ok(()) => return Ok(()),
                     Err(e) if attempts <= platform.cfg.max_retries => {
@@ -128,11 +160,13 @@ impl Faas {
 
     /// Runs one container attempt: concurrency admission, start latency,
     /// body under timeout, billing, container returned to the warm pool.
+    /// `metrics` is the hub of the job that issued the invocation.
     async fn run_container(
         self: &Arc<Self>,
         _id: ExecutorId,
         body: impl Future<Output = EngineResult<()>>,
         may_crash: bool,
+        metrics: &Arc<MetricsHub>,
     ) -> EngineResult<()> {
         // Concurrency admission (throttled invocations queue).
         let permit = self.concurrency.acquire_owned().await;
@@ -157,7 +191,7 @@ impl Faas {
             start_delay *= 1.0 + self.faults.cold_start_spread * u;
         }
         clock::sleep(Duration::from_secs_f64(start_delay * 1e-3)).await;
-        self.metrics.record_invocation(cold);
+        metrics.record_invocation(cold);
 
         // Injected transient crash: the container dies right after
         // start-up, before the function body runs — the body future is
@@ -186,7 +220,7 @@ impl Faas {
 
         // Billing happens regardless of success.
         let billed = self.billing.billable(execution);
-        self.metrics.record_billing(billed);
+        metrics.record_billing(billed);
         let cost = self.billing.cost_usd(execution);
         self.total_cost_nanousd
             .fetch_add((cost * 1e9) as u64, Ordering::Relaxed);
@@ -200,14 +234,66 @@ impl Faas {
         }
     }
 
-    /// Highest number of simultaneously running functions observed.
+    /// Highest number of simultaneously running functions observed
+    /// (fleet-wide: across every job on the platform).
     pub fn peak_concurrency(&self) -> u64 {
         self.peak_active.load(Ordering::Relaxed)
     }
 
-    /// Total dollar cost accrued so far.
+    /// Total dollar cost accrued so far (fleet-wide).
     pub fn total_cost_usd(&self) -> f64 {
         self.total_cost_nanousd.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+/// One job's handle onto the shared platform: invocations made through it
+/// record into the job's own metrics hub, while the warm pool, the
+/// platform concurrency cap, executor-id allocation, and the fleet cost
+/// total stay shared across every co-resident job.
+pub struct FaasHandle {
+    platform: Arc<Faas>,
+    metrics: Arc<MetricsHub>,
+}
+
+impl FaasHandle {
+    pub fn new(platform: Arc<Faas>, metrics: Arc<MetricsHub>) -> Arc<Self> {
+        Arc::new(FaasHandle { platform, metrics })
+    }
+
+    /// The shared platform behind this handle.
+    pub fn platform(&self) -> &Arc<Faas> {
+        &self.platform
+    }
+
+    pub fn config(&self) -> &FaasConfig {
+        self.platform.config()
+    }
+
+    /// The invocation-API latency one caller pays per call.
+    pub fn invoke_latency(&self) -> Duration {
+        self.platform.invoke_latency()
+    }
+
+    /// Invokes a function asynchronously on the shared platform,
+    /// recording into this job's metrics hub. See [`Faas::invoke`].
+    pub async fn invoke<F, Fut>(&self, make_body: F) -> JoinHandle<EngineResult<()>>
+    where
+        F: FnMut(ExecutorId) -> Fut + 'static,
+        Fut: Future<Output = EngineResult<()>> + 'static,
+    {
+        self.platform
+            .invoke_recorded(self.metrics.clone(), make_body)
+            .await
+    }
+
+    /// Fleet-wide peak concurrency (delegates to the platform).
+    pub fn peak_concurrency(&self) -> u64 {
+        self.platform.peak_concurrency()
+    }
+
+    /// Fleet-wide dollar cost (delegates to the platform).
+    pub fn total_cost_usd(&self) -> f64 {
+        self.platform.total_cost_usd()
     }
 }
 
@@ -356,6 +442,49 @@ mod tests {
         // API latency (50ms) + inflated cold start (>= base 250ms).
         assert!(a >= Duration::from_millis(300), "got {a:?}");
         assert!(a <= Duration::from_millis(50 + 750 + 1), "got {a:?}");
+    }
+
+    #[test]
+    fn shared_platform_records_per_job_and_contends_for_warm_pool() {
+        crate::rt::run_virtual(async {
+            let fleet = Arc::new(MetricsHub::new());
+            let faas = Faas::new(
+                FaasConfig {
+                    warm_pool: 1,
+                    ..FaasConfig::default()
+                },
+                fleet.clone(),
+            );
+            let job_a = Arc::new(MetricsHub::new());
+            let job_b = Arc::new(MetricsHub::new());
+            let ha = FaasHandle::new(faas.clone(), job_a.clone());
+            let hb = FaasHandle::new(faas.clone(), job_b.clone());
+            // Job A occupies the single warm container; job B's concurrent
+            // invocation must cold-start — warm-pool contention ACROSS jobs.
+            let h1 = ha
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_secs(1)).await;
+                    Ok(())
+                })
+                .await;
+            let h2 = hb.invoke(|_| async { Ok(()) }).await;
+            h1.await.unwrap();
+            h2.await.unwrap();
+            assert_eq!(job_a.lambdas_invoked(), 1);
+            assert_eq!(job_b.lambdas_invoked(), 1);
+            assert_eq!(
+                fleet.lambdas_invoked(),
+                0,
+                "handle invocations record into the job hubs, not the fleet hub"
+            );
+            assert_eq!(
+                job_a.cold_starts() + job_b.cold_starts(),
+                1,
+                "one warm container, two jobs: exactly one cold start"
+            );
+            assert!(job_a.billed_ms() >= 1000);
+            assert!(faas.total_cost_usd() > 0.0, "fleet cost is shared");
+        });
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Sharded key-value store with pub/sub and atomic counters — the Redis
 //! cluster of the paper's deployment (§V: ten c5.18xlarge shards), plus the
 //! network cost model that gives every operation a virtual-time price.
+//!
+//! Multi-tenant: [`KvStore`] is the shared cluster (shard NICs, broker,
+//! config); each job operates through its own [`JobArena`] handle, which
+//! scopes object/counter storage, channel namespaces, latency-tail
+//! streams, and metrics to that job while contending for the shared NICs.
 
 pub mod netmodel;
 pub mod pubsub;
@@ -8,4 +13,4 @@ pub mod store;
 
 pub use netmodel::{Nic, TailLatency};
 pub use pubsub::{Message, PubSub, Subscription};
-pub use store::KvStore;
+pub use store::{JobArena, KvStore};

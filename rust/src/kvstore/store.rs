@@ -1,26 +1,46 @@
-//! The sharded KV store itself: put/get of data objects, atomic counters
+//! The sharded KV store: put/get of data objects, atomic counters
 //! (fan-in dependency counters, paper §IV-C), and the pub/sub front end.
 //!
-//! ## Hot-path memory layout
+//! ## Multi-tenant layout: one cluster, per-job arenas
 //!
-//! Keys are packed `u64`s ([`ObjectKey`]) and the store is backed by
-//! **dense per-DAG slot storage**: task outputs live in a
+//! [`KvStore`] is the **shared cluster**: the shard NICs (network
+//! endpoints), the pub/sub broker, and the network/fault configuration.
+//! Many concurrent jobs run over one cluster; everything a single job
+//! stores lives in its [`JobArena`] — the per-job handle every executor
+//! holds. The arena owns the job's dense slot storage, its named-key side
+//! maps, its seeded latency-tail stream, and the job's metrics hub, so:
+//!
+//! * two jobs can use the same [`ObjectKey`] (same `TaskId`) without
+//!   colliding — job scope is carried by the arena handle, and the packed
+//!   key stays a `Copy` `u64` (the hot path allocates nothing);
+//! * shard routing mixes job and key (`mix64(key ^ job-salt)`), spreading
+//!   concurrent jobs across shard NICs while keeping `JobId(0)` routing
+//!   bit-identical to the single-job engine;
+//! * NIC queueing is **shared**: bursts from co-resident jobs contend for
+//!   the same endpoints, which is exactly the multi-tenant contention the
+//!   service scenarios measure.
+//!
+//! ## Hot-path memory layout (per arena)
+//!
+//! Keys are packed `u64`s ([`ObjectKey`]) and each arena is backed by
+//! **dense per-job slot storage**: task outputs live in a
 //! `Vec<Mutex<Option<DataObj>>>` and fan-in counters in a
 //! `Vec<AtomicU64>`, both indexed directly by `TaskId` and sized once at
-//! job start ([`KvStore::ensure_task_capacity`]). `get`/`put`/`contains`
-//! are slot lookups and `incr` is a single `fetch_add` — no `String`
-//! allocation, no byte hashing, and no map mutex anywhere on the
-//! task-output/counter path. Shards exist purely as network endpoints
-//! (NIC queues); routing is an integer mix of the packed key.
+//! job start (arena creation pre-sizes for the DAG). `get`/`put`/
+//! `contains` are slot lookups and `incr` is a single `fetch_add` — no
+//! `String` allocation, no byte hashing, and no map mutex anywhere on the
+//! task-output/counter path.
 //!
 //! Keys outside the task range ([`ObjectKey::named`]) go to a small
 //! hash-keyed side map, and the forensic/introspection API
-//! ([`KvStore::object_keys`] / [`KvStore::counter_entries`]) renders key
+//! ([`JobArena::object_keys`] / [`JobArena::counter_entries`]) renders key
 //! strings lazily via `Display`, byte-identical to the strings the
 //! pre-packing implementation stored.
 
 use crate::compute::DataObj;
-use crate::core::{clock, EngineError, EngineResult, FaultConfig, JobId, NetConfig, ObjectKey};
+use crate::core::{
+    clock, mix64, EngineError, EngineResult, FaultConfig, JobId, NetConfig, ObjectKey,
+};
 use crate::kvstore::netmodel::{Nic, TailLatency};
 use crate::kvstore::pubsub::{Message, PubSub, Subscription};
 use crate::metrics::{KvOpKind, MetricsHub};
@@ -29,14 +49,18 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
+/// Per-arena tail-stream salt base: `JobId(0)`'s stream is bit-identical
+/// to the single-store stream of the pre-arena engine.
+const TAIL_SALT: u64 = 0x6b76;
+
 /// One shard: a network endpoint. All data lives in the dense slot arrays
-/// of the store; the shard contributes only its NIC (latency/bandwidth
-/// queueing).
+/// of the job arenas; the shard contributes only its NIC
+/// (latency/bandwidth queueing), which co-resident jobs contend for.
 struct Shard {
     nic: Arc<Nic>,
 }
 
-/// Dense per-DAG slot storage, indexed by `TaskId`. Sized once at job
+/// Dense per-job slot storage, indexed by `TaskId`. Sized once at job
 /// start; growth after that is a cold path taken only by tests that
 /// store ad-hoc keys.
 #[derive(Default)]
@@ -45,20 +69,18 @@ struct TaskSlots {
     counters: Vec<AtomicU64>,
 }
 
-/// The KV store cluster. Cloneable by `Arc`.
+/// The shared KV cluster. Cloneable by `Arc`; jobs attach via
+/// [`KvStore::arena`] / [`KvStore::arena_with_metrics`].
 pub struct KvStore {
     shards: Vec<Shard>,
-    /// Dense task-output / fan-in-counter slots (the hot path).
-    slots: RwLock<TaskSlots>,
-    /// Side maps for the namespaced non-task key range, keyed by the
-    /// packed key word.
-    named_objects: Mutex<HashMap<u64, DataObj>>,
-    named_counters: Mutex<HashMap<u64, u64>>,
     pubsub: PubSub,
     cfg: NetConfig,
+    /// Fault profile; each arena derives its own seeded tail stream from
+    /// it, so one job's op mix never perturbs another job's draws.
+    faults: FaultConfig,
+    /// Default metrics hub for arenas created without an explicit one
+    /// (single-job runs, tests).
     metrics: Arc<MetricsHub>,
-    /// Seeded heavy-tail latency injection (pass-through when benign).
-    tail: TailLatency,
     /// "Ideal storage" mode (Fig. 10 yellow bars): data still flows so
     /// real-compute jobs stay correct, but every transfer is free.
     ideal: bool,
@@ -100,21 +122,98 @@ impl KvStore {
             .collect();
         Arc::new(KvStore {
             shards,
-            slots: RwLock::new(TaskSlots::default()),
-            named_objects: Mutex::new(HashMap::new()),
-            named_counters: Mutex::new(HashMap::new()),
             pubsub: PubSub::new(),
             cfg,
+            faults,
             metrics,
-            tail: TailLatency::from_faults(&faults, 0x6b76),
             ideal,
         })
     }
 
-    /// Pre-sizes the dense slot storage for a DAG of `n` tasks. The
-    /// engines call this once at job start (the DAG size is always known
-    /// up front), so every subsequent task-key operation is a pure index
-    /// lookup with no growth check taken.
+    /// Attaches a job to the cluster: creates its arena with slot storage
+    /// pre-sized for a DAG of `n_tasks`, recording into the store's
+    /// default metrics hub (single-job runs, tests).
+    pub fn arena(self: &Arc<Self>, job: JobId, n_tasks: usize) -> Arc<JobArena> {
+        self.arena_with_metrics(job, n_tasks, self.metrics.clone())
+    }
+
+    /// Attaches a job with its own metrics hub — the multi-tenant entry
+    /// point: each concurrent job records its KV traffic into its own
+    /// per-job hub while sharing the cluster's NICs and broker.
+    pub fn arena_with_metrics(
+        self: &Arc<Self>,
+        job: JobId,
+        n_tasks: usize,
+        metrics: Arc<MetricsHub>,
+    ) -> Arc<JobArena> {
+        let arena = JobArena {
+            store: Arc::clone(self),
+            job,
+            // Multiplicative salt keeps JobId(0) routing bit-identical to
+            // the pre-arena store (salt 0 => mix64(key) exactly).
+            shard_salt: job.0.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            slots: RwLock::new(TaskSlots::default()),
+            named_objects: Mutex::new(HashMap::new()),
+            named_counters: Mutex::new(HashMap::new()),
+            metrics,
+            tail: TailLatency::from_faults(
+                &self.faults,
+                TAIL_SALT ^ job.0.wrapping_mul(0xA24B_AED4_963E_E407),
+            ),
+        };
+        arena.ensure_task_capacity(n_tasks);
+        Arc::new(arena)
+    }
+
+    /// Tears down `job`'s pub/sub namespace (job complete). Keeps the
+    /// broker bounded when many jobs stream through one shared store.
+    pub fn remove_job_channels(&self, job: JobId) {
+        self.pubsub.remove_job(job);
+    }
+
+    /// Number of shards (tests / reports).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// One job's handle onto the shared cluster: dense slot storage scoped to
+/// the job, job-namespaced pub/sub, a per-job latency-tail stream, and
+/// the job's metrics hub. Every executor of the job holds this; the
+/// packed [`ObjectKey`] stays job-agnostic, so the PR-3 hot path is
+/// unchanged — job scope is the handle, not the key.
+pub struct JobArena {
+    store: Arc<KvStore>,
+    job: JobId,
+    /// Mixed into shard routing so concurrent jobs spread over the NICs.
+    shard_salt: u64,
+    /// Dense task-output / fan-in-counter slots (the hot path).
+    slots: RwLock<TaskSlots>,
+    /// Side maps for the namespaced non-task key range, keyed by the
+    /// packed key word.
+    named_objects: Mutex<HashMap<u64, DataObj>>,
+    named_counters: Mutex<HashMap<u64, u64>>,
+    metrics: Arc<MetricsHub>,
+    /// Seeded heavy-tail latency injection (pass-through when benign),
+    /// streamed per job for cross-job determinism.
+    tail: TailLatency,
+}
+
+impl JobArena {
+    /// The job this arena belongs to.
+    pub fn job(&self) -> JobId {
+        self.job
+    }
+
+    /// The shared cluster this arena routes through.
+    pub fn store(&self) -> &Arc<KvStore> {
+        &self.store
+    }
+
+    /// Pre-sizes the dense slot storage for a DAG of `n` tasks. Arena
+    /// creation does this once (the DAG size is always known up front),
+    /// so every subsequent task-key operation is a pure index lookup with
+    /// no growth check taken.
     pub fn ensure_task_capacity(&self, n: usize) {
         {
             let r = self.slots.read().unwrap();
@@ -131,12 +230,15 @@ impl KvStore {
         }
     }
 
+    /// Shard routing: one integer mix of the packed key word and the
+    /// job salt — no byte hashing, no allocation.
     fn shard_of(&self, key: ObjectKey) -> &Shard {
-        &self.shards[(key.shard_hash() % self.shards.len() as u64) as usize]
+        let h = mix64(key.raw() ^ self.shard_salt);
+        &self.store.shards[(h % self.store.shards.len() as u64) as usize]
     }
 
     fn latency(&self) -> Duration {
-        Duration::from_secs_f64(self.cfg.kv_latency_us * 1e-6)
+        Duration::from_secs_f64(self.store.cfg.kv_latency_us * 1e-6)
     }
 
     /// Writes `obj` into the slot / side map for `key` (no modeled cost).
@@ -179,7 +281,7 @@ impl KvStore {
         let t0 = clock::now();
         let bytes = obj.bytes;
         let shard = self.shard_of(key);
-        if !self.ideal {
+        if !self.store.ideal {
             clock::sleep(self.tail.sample(self.latency())).await;
             shard.nic.transfer_capped(bytes, client_bps).await;
         }
@@ -197,7 +299,7 @@ impl KvStore {
             .ok_or_else(|| EngineError::MissingObject {
                 key: key.to_string(),
             })?;
-        if !self.ideal {
+        if !self.store.ideal {
             clock::sleep(self.tail.sample(self.latency())).await;
             shard.nic.transfer_capped(obj.bytes, client_bps).await;
         }
@@ -212,7 +314,7 @@ impl KvStore {
     /// hatch is off (or the store is ideal).
     pub async fn contains(&self, key: ObjectKey) -> bool {
         let t0 = clock::now();
-        if !self.ideal && self.cfg.charge_exists {
+        if !self.store.ideal && self.store.cfg.charge_exists {
             clock::sleep(self.tail.sample(self.latency() * 2)).await; // request + reply
         }
         let hit = self.peek_contains(key);
@@ -244,7 +346,7 @@ impl KvStore {
     /// mutex, no allocation.
     pub async fn incr(&self, key: ObjectKey) -> u64 {
         let t0 = clock::now();
-        if !self.ideal {
+        if !self.store.ideal {
             clock::sleep(self.tail.sample(self.latency() * 2)).await; // request + reply
         }
         let v = match key.counter_slot() {
@@ -288,34 +390,34 @@ impl KvStore {
         }
     }
 
-    /// Publishes `msg` on `job`'s `channel` with pub/sub delivery latency.
-    /// Channels are namespaced per job (see [`PubSub`]), so concurrent
-    /// jobs sharing well-known channel names never cross-deliver.
-    pub async fn publish(&self, job: JobId, channel: &str, msg: Message) -> usize {
+    /// Publishes `msg` on this job's `channel` with pub/sub delivery
+    /// latency. Channels are namespaced per job (see [`PubSub`]), so
+    /// concurrent jobs sharing well-known channel names never
+    /// cross-deliver.
+    pub async fn publish(&self, channel: &str, msg: Message) -> usize {
         let t0 = clock::now();
-        if !self.ideal {
-            clock::sleep(
-                self.tail
-                    .sample(Duration::from_secs_f64(self.cfg.pubsub_latency_us * 1e-6)),
-            )
+        if !self.store.ideal {
+            clock::sleep(self.tail.sample(Duration::from_secs_f64(
+                self.store.cfg.pubsub_latency_us * 1e-6,
+            )))
             .await;
         }
-        let n = self.pubsub.publish(job, channel, msg);
+        let n = self.store.pubsub.publish(self.job, channel, msg);
         self.metrics
             .record_kv_op(KvOpKind::Publish, 0, clock::now() - t0);
         n
     }
 
-    /// Subscribes to `job`'s `channel` (no modeled cost: subscriptions are
-    /// set up once at job start, like Dask's cluster-init connections).
-    pub fn subscribe(&self, job: JobId, channel: &str) -> Subscription {
-        self.pubsub.subscribe(job, channel)
+    /// Subscribes to this job's `channel` (no modeled cost: subscriptions
+    /// are set up once at job start, like Dask's cluster-init
+    /// connections).
+    pub fn subscribe(&self, channel: &str) -> Subscription {
+        self.store.pubsub.subscribe(self.job, channel)
     }
 
-    /// Tears down `job`'s pub/sub namespace (job complete). Keeps the
-    /// broker bounded when many jobs stream through one shared store.
-    pub fn remove_job_channels(&self, job: JobId) {
-        self.pubsub.remove_job(job);
+    /// Tears down this job's pub/sub namespace (job complete).
+    pub fn remove_job_channels(&self) {
+        self.store.pubsub.remove_job(self.job);
     }
 
     /// Number of stored objects (tests / reports).
@@ -411,14 +513,14 @@ mod tests {
     use super::*;
     use crate::core::TaskId;
 
-    fn store() -> Arc<KvStore> {
-        KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()))
+    fn arena() -> Arc<JobArena> {
+        KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new())).arena(JobId(0), 0)
     }
 
     #[test]
     fn put_get_roundtrip() {
         crate::rt::run_virtual(async {
-            let kv = store();
+            let kv = arena();
             let key = ObjectKey::output(TaskId(1));
             kv.put(key, DataObj::synthetic(1024), 1e9).await;
             let obj = kv.get(key, 1e9).await.unwrap();
@@ -431,7 +533,7 @@ mod tests {
     #[test]
     fn missing_key_errors() {
         crate::rt::run_virtual(async {
-            let kv = store();
+            let kv = arena();
             let err = kv.get(ObjectKey::output(TaskId(9)), 1e9).await.unwrap_err();
             assert!(matches!(err, EngineError::MissingObject { .. }));
         });
@@ -443,7 +545,7 @@ mod tests {
         // observes a distinct value and the counter ends exactly at 1000
         // — the atomicity the last-writer-continues rule rests on.
         crate::rt::run_virtual(async {
-            let kv = store();
+            let kv = arena();
             let key = ObjectKey::counter(TaskId(3));
             let handles: Vec<_> = (0..1000)
                 .map(|_| {
@@ -464,7 +566,7 @@ mod tests {
     #[test]
     fn contains_charges_a_round_trip() {
         crate::rt::run_virtual(async {
-            let kv = store();
+            let kv = arena();
             let key = ObjectKey::output(TaskId(5));
             let t0 = clock::now();
             assert!(!kv.contains(key).await, "nothing stored yet");
@@ -481,7 +583,7 @@ mod tests {
                 charge_exists: false,
                 ..NetConfig::default()
             };
-            let kv = KvStore::new(cfg, Arc::new(MetricsHub::new()));
+            let kv = KvStore::new(cfg, Arc::new(MetricsHub::new())).arena(JobId(0), 0);
             let key = ObjectKey::output(TaskId(5));
             kv.put(key, DataObj::synthetic(8), 1e9).await;
             let t0 = clock::now();
@@ -496,7 +598,7 @@ mod tests {
     #[test]
     fn dense_slots_presize_and_grow() {
         crate::rt::run_virtual(async {
-            let kv = store();
+            let kv = arena();
             kv.ensure_task_capacity(16);
             kv.put(ObjectKey::output(TaskId(15)), DataObj::synthetic(1), 1e9)
                 .await;
@@ -516,7 +618,7 @@ mod tests {
     #[test]
     fn named_keys_use_the_side_map() {
         crate::rt::run_virtual(async {
-            let kv = store();
+            let kv = arena();
             let k = ObjectKey::named("forensics:blob");
             kv.put(k, DataObj::synthetic(64), 1e9).await;
             assert!(kv.peek_contains(k));
@@ -532,7 +634,7 @@ mod tests {
     #[test]
     fn transfers_cost_virtual_time() {
         crate::rt::run_virtual(async {
-            let kv = store();
+            let kv = arena();
             let t0 = clock::now();
             kv.put(
                 ObjectKey::output(TaskId(0)),
@@ -549,7 +651,8 @@ mod tests {
     #[test]
     fn ideal_storage_is_free() {
         crate::rt::run_virtual(async {
-            let kv = KvStore::with_ideal(NetConfig::default(), Arc::new(MetricsHub::new()), true);
+            let kv = KvStore::with_ideal(NetConfig::default(), Arc::new(MetricsHub::new()), true)
+                .arena(JobId(0), 0);
             let t0 = clock::now();
             kv.put(
                 ObjectKey::output(TaskId(0)),
@@ -575,7 +678,7 @@ mod tests {
                 ..NetConfig::default()
             };
             cfg.kv_bandwidth_bps = 1e6; // 1 MB/s to make it visible
-            let shared = KvStore::new(cfg.clone(), metrics.clone());
+            let shared = KvStore::new(cfg.clone(), metrics.clone()).arena(JobId(0), 0);
             // Pick two keys that live on *different* shards so that the
             // shard-per-VM configuration can actually parallelize them.
             let (k1, k2) = {
@@ -585,7 +688,8 @@ mod tests {
                         ..NetConfig::default()
                     },
                     Arc::new(MetricsHub::new()),
-                );
+                )
+                .arena(JobId(0), 0);
                 let mut found = None;
                 'outer: for i in 0..32u32 {
                     for j in (i + 1)..32 {
@@ -608,7 +712,7 @@ mod tests {
             let shared_dt = clock::now() - t0;
 
             cfg.kv_shared_vm = false;
-            let split = KvStore::new(cfg, metrics);
+            let split = KvStore::new(cfg, metrics).arena(JobId(0), 0);
             let t1 = clock::now();
             crate::rt::join_all(vec![
                 split.put(k1, DataObj::synthetic(1_000_000), 1e9),
@@ -621,5 +725,82 @@ mod tests {
                 "shared {shared_dt:?} vs split {split_dt:?}"
             );
         });
+    }
+
+    #[test]
+    fn arenas_isolate_objects_and_counters_per_job() {
+        // Two jobs over ONE shared cluster store under the SAME packed
+        // keys: objects, counters, and forensic views must be fully
+        // disjoint — job scope is carried by the arena handle.
+        crate::rt::run_virtual(async {
+            let store = KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()));
+            let a = store.arena(JobId(1), 8);
+            let b = store.arena(JobId(2), 8);
+            let key = ObjectKey::output(TaskId(3));
+            let ctr = ObjectKey::counter(TaskId(3));
+
+            a.put(key, DataObj::synthetic(111), 1e9).await;
+            assert!(a.peek_contains(key));
+            assert!(!b.peek_contains(key), "job 2 must not see job 1's object");
+            assert!(b.get(key, 1e9).await.is_err());
+
+            b.put(key, DataObj::synthetic(222), 1e9).await;
+            assert_eq!(a.get(key, 1e9).await.unwrap().bytes, 111);
+            assert_eq!(b.get(key, 1e9).await.unwrap().bytes, 222);
+
+            assert_eq!(a.incr(ctr).await, 1);
+            assert_eq!(a.incr(ctr).await, 2);
+            assert_eq!(b.incr(ctr).await, 1, "counters are per-job");
+            assert_eq!(a.counter_value(ctr), 2);
+            assert_eq!(b.counter_value(ctr), 1);
+
+            assert_eq!(a.object_keys(), vec!["out:3".to_string()]);
+            assert_eq!(b.object_keys(), vec!["out:3".to_string()]);
+            assert_eq!(a.object_count(), 1);
+            assert_eq!(b.object_count(), 1);
+        });
+    }
+
+    #[test]
+    fn arena_channels_are_job_scoped() {
+        crate::rt::run_virtual(async {
+            let store = KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()));
+            let a = store.arena(JobId(1), 0);
+            let b = store.arena(JobId(2), 0);
+            let mut sub_a = a.subscribe("wukong:final");
+            let mut sub_b = b.subscribe("wukong:final");
+            assert_eq!(
+                a.publish("wukong:final", Message::FinalResult { task: TaskId(1) })
+                    .await,
+                1,
+                "job 1's publish reaches only job 1's subscriber"
+            );
+            assert_eq!(
+                b.publish("wukong:final", Message::FinalResult { task: TaskId(2) })
+                    .await,
+                1
+            );
+            assert!(matches!(
+                sub_a.recv().await,
+                Some(Message::FinalResult { task: TaskId(1) })
+            ));
+            assert!(matches!(
+                sub_b.recv().await,
+                Some(Message::FinalResult { task: TaskId(2) })
+            ));
+        });
+    }
+
+    #[test]
+    fn job_zero_routing_matches_legacy_shard_hash() {
+        // JobId(0)'s shard salt is 0, so its routing must be exactly
+        // mix64(key) — the PR-3 single-job behavior, pinned.
+        let store = KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()));
+        let arena = store.arena(JobId(0), 0);
+        for i in 0..64u32 {
+            let key = ObjectKey::output(TaskId(i));
+            let legacy = (key.shard_hash() % store.shard_count() as u64) as usize;
+            assert!(std::ptr::eq(arena.shard_of(key), &store.shards[legacy]));
+        }
     }
 }

@@ -55,6 +55,16 @@
 //! differential oracle that proves all five designs compute identical
 //! results under adversarial timing.
 //!
+//! The whole stack is **multi-tenant**: every job carries a
+//! [`core::JobId`] that scopes its KV arena ([`kvstore::JobArena`] over
+//! the shared [`kvstore::KvStore`] cluster), its pub/sub channel
+//! namespace, its platform handle ([`faas::FaasHandle`] over the shared
+//! [`faas::Faas`]), and its metrics — and
+//! [`engine::service::JobService`] runs many concurrent jobs over one
+//! [`engine::SharedPlatform`] with seeded open-loop arrivals and
+//! FIFO/fair admission (`wukong service` in the CLI). The multi-job
+//! oracle ([`sim::multi_job_check`]) proves tenancy isolation.
+//!
 //! ## Quick start
 //! ```no_run
 //! use wukong::prelude::*;
@@ -100,9 +110,14 @@ pub mod workloads;
 pub mod prelude {
     pub use crate::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
     pub use crate::compute::{DataObj, Payload, Tensor};
-    pub use crate::core::{ClusterProfile, EngineError, EngineResult, FaultConfig, SimConfig, TaskId};
+    pub use crate::core::{
+        ClusterProfile, EngineError, EngineResult, FaultConfig, JobId, SimConfig, TaskId,
+    };
     pub use crate::dag::{Dag, DagBuilder};
-    pub use crate::engine::{self, Client, EngineDriver, SchedulingPolicy, WukongEngine};
+    pub use crate::engine::{
+        self, Client, EngineDriver, JobService, SchedulingPolicy, ServiceConfig, SharedPlatform,
+        WukongEngine,
+    };
     pub use crate::metrics::{Cdf, JobReport};
     pub use crate::runtime::PjrtRuntime;
     pub use crate::sim::{self, SimHarness};

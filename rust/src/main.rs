@@ -8,12 +8,16 @@
 //! wukong compare --workload gemm --size 25000
 //! wukong stats --workload svd1 --size 200000
 //! wukong dot --workload tr --size 16
+//! wukong service --jobs 12 --profile burst --admission fair
 //! ```
 
 use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
 use wukong::core::SimConfig;
 use wukong::dag::Dag;
-use wukong::engine::{run_sim, WukongEngine};
+use wukong::engine::policies::WukongPolicy;
+use wukong::engine::{
+    run_service, run_sim, Admission, ArrivalProfile, JobRequest, ServiceConfig, WukongEngine,
+};
 use wukong::metrics::JobReport;
 use wukong::workloads;
 
@@ -21,16 +25,24 @@ const USAGE: &str = "\
 wukong — serverless DAG engine (WUKONG reproduction), virtual-time simulator
 
 USAGE:
-    wukong <run|compare|stats|dot> [OPTIONS]
+    wukong <run|compare|stats|dot> --workload <W> --size <N> [OPTIONS]
+    wukong service [--jobs <N>] [OPTIONS]
 
 OPTIONS:
-    --workload <tr|gemm|svd1|svd2|svc>   workload (required)
+    --workload <tr|gemm|svd1|svd2|svc>   workload (required except service)
     --size <N>       problem size: TR array length / GEMM,SVD2 n /
-                     SVD1 rows / SVC samples (required)
+                     SVD1 rows / SVC samples (required except service)
     --sleep-ms <F>   per-task sleep delay for TR (default 0)
     --platform <wukong|wukong-ideal|strawman|pubsub|parallel-invoker|
                 dask-ec2|dask-laptop>    (run only, default wukong)
-    --seed <N>       simulation seed (default 1)
+    --seed <N>       simulation / arrival seed (default 1)
+
+SERVICE OPTIONS (multi-tenant: many jobs, one shared platform):
+    --jobs <N>            number of jobs in the mix (default 12)
+    --profile <uniform|poisson|burst>   arrival profile (default burst)
+    --admission <fifo|fair>             admission order (default fifo)
+    --max-concurrent <N>  concurrent-job slots (default 8)
+    --queue-cap <N>       waiting jobs beyond this are shed (default 64)
 ";
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -55,11 +67,17 @@ enum Platform {
 
 struct Args {
     command: String,
-    workload: Workload,
-    size: usize,
+    workload: Option<Workload>,
+    size: Option<usize>,
     sleep_ms: f64,
     platform: Platform,
     seed: u64,
+    // service mode
+    jobs: usize,
+    profile: String,
+    admission: String,
+    max_concurrent: usize,
+    queue_cap: usize,
 }
 
 fn die(msg: &str) -> ! {
@@ -73,7 +91,7 @@ fn parse_args() -> Args {
         die("missing command");
     }
     let command = argv[0].clone();
-    if !["run", "compare", "stats", "dot"].contains(&command.as_str()) {
+    if !["run", "compare", "stats", "dot", "service"].contains(&command.as_str()) {
         die(&format!("unknown command '{command}'"));
     }
     let mut workload = None;
@@ -81,6 +99,11 @@ fn parse_args() -> Args {
     let mut sleep_ms = 0.0;
     let mut platform = Platform::Wukong;
     let mut seed = 1u64;
+    let mut jobs = 12usize;
+    let mut profile = "burst".to_string();
+    let mut admission = "fifo".to_string();
+    let mut max_concurrent = 8usize;
+    let mut queue_cap = 64usize;
     let mut i = 1;
     while i < argv.len() {
         let flag = argv[i].as_str();
@@ -113,17 +136,29 @@ fn parse_args() -> Args {
                     p => die(&format!("unknown platform '{p}'")),
                 }
             }
+            "--jobs" => jobs = val.parse().unwrap_or_else(|_| die("bad --jobs")),
+            "--profile" => profile = val.clone(),
+            "--admission" => admission = val.clone(),
+            "--max-concurrent" => {
+                max_concurrent = val.parse().unwrap_or_else(|_| die("bad --max-concurrent"))
+            }
+            "--queue-cap" => queue_cap = val.parse().unwrap_or_else(|_| die("bad --queue-cap")),
             f => die(&format!("unknown flag '{f}'")),
         }
         i += 2;
     }
     Args {
         command,
-        workload: workload.unwrap_or_else(|| die("--workload is required")),
-        size: size.unwrap_or_else(|| die("--size is required")),
+        workload,
+        size,
         sleep_ms,
         platform,
         seed,
+        jobs,
+        profile,
+        admission,
+        max_concurrent,
+        queue_cap,
     }
 }
 
@@ -168,20 +203,78 @@ fn run_platform(platform: Platform, dag: &Dag, cfg: &SimConfig) -> JobReport {
     }
 }
 
+/// Builds the mix, runs the multi-tenant service, prints per-job rows and
+/// the fleet summary.
+fn run_service_mode(args: &Args, cfg: &SimConfig) {
+    let profile = match args.profile.as_str() {
+        "uniform" => ArrivalProfile::Uniform { gap_ms: 100.0 },
+        "poisson" => ArrivalProfile::Poisson { mean_gap_ms: 100.0 },
+        "burst" => ArrivalProfile::Bursts {
+            burst: 4,
+            intra_ms: 1.0,
+            idle_ms: 400.0,
+        },
+        p => die(&format!("unknown profile '{p}'")),
+    };
+    let admission = match args.admission.as_str() {
+        "fifo" => Admission::Fifo,
+        "fair" => Admission::Fair,
+        a => die(&format!("unknown admission '{a}'")),
+    };
+    let mix = workloads::service_mix(args.jobs, args.seed, cfg);
+    println!(
+        "service: {} jobs, profile={}, admission={}, max-concurrent={}, queue-cap={}, seed={}",
+        mix.len(),
+        args.profile,
+        args.admission,
+        args.max_concurrent,
+        args.queue_cap,
+        args.seed,
+    );
+    let requests: Vec<JobRequest> = mix
+        .into_iter()
+        .map(|j| JobRequest {
+            name: j.name,
+            tenant: j.tenant,
+            seed: j.seed,
+            dag: j.dag,
+            policy: std::sync::Arc::new(WukongPolicy),
+        })
+        .collect();
+    let svc_cfg = ServiceConfig::new(cfg.clone(), args.seed)
+        .with_profile(profile)
+        .with_admission(admission)
+        .with_concurrency(args.max_concurrent, args.queue_cap);
+    let report = run_service(svc_cfg, requests);
+    for o in &report.outcomes {
+        println!("{}", o.row());
+    }
+    for (job, name) in &report.rejected {
+        println!("{job:<6} {name:<14} REJECTED (queue over cap)");
+    }
+    println!("{}", report.fleet_row());
+}
+
 fn main() {
     let args = parse_args();
     let cfg = SimConfig {
         seed: args.seed,
         ..SimConfig::default()
     };
-    let dag = build_dag(args.workload, args.size, args.sleep_ms, &cfg);
+    if args.command == "service" {
+        run_service_mode(&args, &cfg);
+        return;
+    }
+    let workload = args.workload.unwrap_or_else(|| die("--workload is required"));
+    let size = args.size.unwrap_or_else(|| die("--size is required"));
+    let dag = build_dag(workload, size, args.sleep_ms, &cfg);
 
     match args.command.as_str() {
         "run" => {
             println!(
                 "workload={:?} size={} tasks={} leaves={} depth={}",
-                args.workload,
-                args.size,
+                workload,
+                size,
                 dag.len(),
                 dag.leaves().len(),
                 dag.critical_path_len()
@@ -192,8 +285,8 @@ fn main() {
         "compare" => {
             println!(
                 "workload={:?} size={} tasks={} leaves={} depth={}",
-                args.workload,
-                args.size,
+                workload,
+                size,
                 dag.len(),
                 dag.leaves().len(),
                 dag.critical_path_len()
@@ -213,7 +306,7 @@ fn main() {
         "dot" => {
             print!(
                 "{}",
-                wukong::dag::dot::to_dot(&dag, &format!("{:?}", args.workload))
+                wukong::dag::dot::to_dot(&dag, &format!("{:?}", workload))
             );
         }
         "stats" => {

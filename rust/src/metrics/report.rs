@@ -1,6 +1,6 @@
 //! Job-level result report: everything the paper's figures need.
 
-use crate::core::EngineError;
+use crate::core::{EngineError, JobId};
 use crate::metrics::hub::MetricsHub;
 use std::time::Duration;
 
@@ -20,6 +20,9 @@ pub struct KvStats {
 /// The outcome of one DAG execution on one platform.
 #[derive(Clone, Debug)]
 pub struct JobReport {
+    /// Identity of the job (JobId(0) for single-job runs; assigned by the
+    /// JobService when many jobs share one platform).
+    pub job: JobId,
     /// Platform / scheduler label ("WUKONG", "Dask (EC2)", "Strawman", ...).
     pub platform: String,
     /// End-to-end makespan in virtual (or wall) time.
@@ -40,6 +43,7 @@ pub struct JobReport {
 impl JobReport {
     pub fn success(platform: impl Into<String>, makespan: Duration, hub: &MetricsHub) -> Self {
         JobReport {
+            job: JobId(0),
             platform: platform.into(),
             makespan,
             tasks_executed: hub.tasks_executed(),
@@ -68,6 +72,12 @@ impl JobReport {
         let mut r = Self::success(platform, makespan, hub);
         r.error = Some(error);
         r
+    }
+
+    /// Tags the report with the job it describes (multi-tenant runs).
+    pub fn for_job(mut self, job: JobId) -> Self {
+        self.job = job;
+        self
     }
 
     pub fn is_ok(&self) -> bool {

@@ -11,7 +11,7 @@ use crate::engine::policies::{
     ParallelInvokerPolicy, PubSubPolicy, ServerfulDaskPolicy, StrawmanPolicy, WukongPolicy,
 };
 use crate::engine::{EngineDriver, ExecutionMode, SchedulingPolicy};
-use crate::kvstore::KvStore;
+use crate::kvstore::JobArena;
 use crate::metrics::JobReport;
 use crate::sim::trace::render_trace;
 use std::collections::HashMap;
@@ -39,11 +39,11 @@ pub struct PolicyRun {
     pub fingerprint: Vec<(TaskId, u64)>,
     /// Canonical event trace (see [`crate::sim::trace`]).
     pub trace: String,
-    /// KV store handle (centralized/decentralized modes). Post-mortem
+    /// The job's KV arena (centralized/decentralized modes). Post-mortem
     /// inspection must use the free synchronous probes
     /// (`peek_contains`, `object_keys`, `counter_entries`) — the run is
     /// over, so nothing here may touch virtual time.
-    pub kv: Option<Arc<KvStore>>,
+    pub kv: Option<Arc<JobArena>>,
 }
 
 /// Seeded harness configuration. Build one per (seed, fault profile),

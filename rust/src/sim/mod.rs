@@ -27,5 +27,8 @@ pub mod oracle;
 pub mod trace;
 
 pub use harness::{fingerprint_outputs, paper_policies, ModeKind, PolicyRun, SimHarness};
-pub use oracle::{determinism_check, differential_check, DifferentialReport};
+pub use oracle::{
+    determinism_check, differential_check, multi_job_check, multi_job_determinism_check,
+    DifferentialReport, MultiJobReport,
+};
 pub use trace::{first_divergence, render_trace};

@@ -22,12 +22,19 @@
 //! Any failing seed reproduces locally with
 //! `differential_check(seed)` — no other state is involved.
 
-use crate::core::TaskId;
+use crate::core::{mix64, FaultConfig, SimConfig, TaskId};
 use crate::dag::Dag;
+use crate::engine::policies::{PubSubPolicy, WukongPolicy};
+use crate::engine::service::{
+    run_service, ArrivalProfile, JobRequest, ServiceConfig, ServiceReport,
+};
+use crate::engine::SchedulingPolicy;
+use crate::kvstore::JobArena;
 use crate::sim::harness::{paper_policies, ModeKind, PolicyRun, SimHarness};
 use crate::sim::trace::first_divergence;
 use crate::workloads::random_dag::{random_dag, RandomDagSpec};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Summary of one passing differential check.
 #[derive(Clone, Debug)]
@@ -126,22 +133,189 @@ pub fn determinism_check(seed: u64) -> Result<(), String> {
     Ok(())
 }
 
+/// Summary of one passing multi-job isolation check.
+#[derive(Clone, Debug)]
+pub struct MultiJobReport {
+    pub seed: u64,
+    pub jobs: usize,
+    /// Service makespan, seconds (virtual).
+    pub makespan: f64,
+    /// (job name, end-to-end latency seconds) per job, arrival order.
+    pub per_job: Vec<(String, f64)>,
+}
+
+/// Per-job seed stream of a multi-job scenario (deterministic in the
+/// scenario seed; also used to rebuild the isolated reference runs).
+fn multi_job_seeds(seed: u64, jobs: usize) -> Vec<u64> {
+    (0..jobs as u64)
+        .map(|i| mix64(seed ^ i.wrapping_mul(0xD1B5_4A32_D192_ED03) ^ 0x4D54_4A4F_42u64))
+        .collect()
+}
+
+/// Policy of job `i` in a multi-job scenario: mostly WUKONG, with every
+/// third job a centralized pub/sub design — decentralized and
+/// centralized schedulers must co-exist on one platform.
+fn multi_job_policy(i: usize) -> (Arc<dyn SchedulingPolicy>, ModeKind) {
+    if i % 3 == 1 {
+        (Arc::new(PubSubPolicy), ModeKind::Centralized)
+    } else {
+        (Arc::new(WukongPolicy), ModeKind::Decentralized)
+    }
+}
+
+/// Runs the `jobs`-job shared-platform service scenario of `seed`: one
+/// burst admits every job concurrently over ONE platform + KV cluster,
+/// under a chaos fault profile and a deliberately small warm pool (so
+/// jobs contend for warm containers).
+fn run_multi_job_service(seed: u64, jobs: usize) -> (Vec<Dag>, ServiceReport) {
+    let job_seeds = multi_job_seeds(seed, jobs);
+    let dags: Vec<Dag> = job_seeds
+        .iter()
+        .map(|&s| random_dag(&RandomDagSpec::value(s)))
+        .collect();
+    let mut base = SimConfig::test();
+    base.seed = seed;
+    base.faas.warm_pool = 4;
+    base.faults = FaultConfig::chaos(seed ^ 0xC4A0_5C0D_E5EE_D5u64);
+    let cfg = ServiceConfig::new(base, seed)
+        .with_profile(ArrivalProfile::Bursts {
+            burst: jobs.max(1),
+            intra_ms: 0.5,
+            idle_ms: 50.0,
+        })
+        .with_concurrency(jobs, jobs.saturating_mul(2).max(1));
+    let requests: Vec<JobRequest> = job_seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &job_seed)| JobRequest {
+            name: format!("mt{i}"),
+            tenant: (i % 3) as u32,
+            seed: job_seed,
+            dag: dags[i].clone(),
+            policy: multi_job_policy(i).0,
+        })
+        .collect();
+    let report = run_service(cfg, requests);
+    (dags, report)
+}
+
+/// The multi-tenant isolation oracle: `jobs` concurrent seeded jobs over
+/// ONE shared platform, KV cluster, and warm pool must behave exactly
+/// like the same jobs run alone —
+///
+/// * every job completes with every task executed exactly once;
+/// * each job's sink-output **fingerprint is byte-identical** to an
+///   isolated single-job run of the same job seed (any cross-job object,
+///   counter, or channel leakage flips it or fails the run);
+/// * each job's KV arena passes the per-mode substrate invariants
+///   (counters end at in-degree, store-once rules, no orphans) — over
+///   its own DAG only, proving no foreign keys leaked in.
+pub fn multi_job_check(seed: u64, jobs: usize) -> Result<MultiJobReport, String> {
+    assert!(jobs >= 2, "a multi-job check needs at least two jobs");
+    let job_seeds = multi_job_seeds(seed, jobs);
+
+    // Isolated reference runs: each job alone on a fresh private
+    // substrate, chaos profile derived from its own seed.
+    let isolated: Vec<PolicyRun> = job_seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let dag = random_dag(&RandomDagSpec::value(s));
+            SimHarness::new(s).with_chaos().run(multi_job_policy(i).0, &dag)
+        })
+        .collect();
+    for (i, run) in isolated.iter().enumerate() {
+        if !run.report.is_ok() {
+            return Err(format!(
+                "seed {seed}: isolated job {i} ({}) failed: {:?}",
+                run.label, run.report.error
+            ));
+        }
+    }
+
+    // The shared-platform service run.
+    let (dags, report) = run_multi_job_service(seed, jobs);
+    if report.completed() != jobs || !report.rejected.is_empty() {
+        return Err(format!(
+            "seed {seed}: service completed {}/{jobs} jobs ({} rejected)",
+            report.completed(),
+            report.rejected.len()
+        ));
+    }
+    for (i, outcome) in report.outcomes.iter().enumerate() {
+        let what = format!("seed {seed}: shared-platform job {i} ({})", outcome.name);
+        if outcome.job.0 != i as u64 + 1 {
+            return Err(format!("{what} has id {}, expected job{}", outcome.job, i + 1));
+        }
+        if !outcome.report.is_ok() {
+            return Err(format!("{what} failed: {:?}", outcome.report.error));
+        }
+        if outcome.report.tasks_executed != dags[i].len() as u64 {
+            return Err(format!(
+                "{what} executed {}/{} tasks",
+                outcome.report.tasks_executed,
+                dags[i].len()
+            ));
+        }
+        if outcome.fingerprint != isolated[i].fingerprint {
+            return Err(format!(
+                "{what}: TENANCY ISOLATION VIOLATED — sink outputs differ from the isolated \
+                 run of the same seed (cross-job leakage)"
+            ));
+        }
+        check_substrate_state(&what, multi_job_policy(i).1, outcome.kv.as_ref(), &dags[i])?;
+    }
+
+    Ok(MultiJobReport {
+        seed,
+        jobs,
+        makespan: report.makespan.as_secs_f64(),
+        per_job: report
+            .outcomes
+            .iter()
+            .map(|o| (o.name.clone(), o.latency().as_secs_f64()))
+            .collect(),
+    })
+}
+
+/// Replays the multi-job scenario of `seed` twice and requires
+/// byte-identical service traces (arrivals, admissions, per-job reports).
+pub fn multi_job_determinism_check(seed: u64, jobs: usize) -> Result<(), String> {
+    let (_, a) = run_multi_job_service(seed, jobs);
+    let (_, b) = run_multi_job_service(seed, jobs);
+    let (ta, tb) = (a.render_trace(), b.render_trace());
+    if ta != tb {
+        let (line, left, right) = first_divergence(&ta, &tb).expect("traces differ");
+        return Err(format!(
+            "seed {seed}: service replay is nondeterministic at trace line {line}:\n  run1: {left}\n  run2: {right}"
+        ));
+    }
+    Ok(())
+}
+
 /// Post-mortem substrate invariants per execution mode.
 fn check_substrate(seed: u64, run: &PolicyRun, dag: &Dag) -> Result<(), String> {
-    match run.mode {
+    check_substrate_state(&format!("seed {seed}: {}", run.label), run.mode, run.kv.as_ref(), dag)
+}
+
+/// Mode-specific substrate invariants over a job's KV arena — shared by
+/// the single-job oracle ([`check_substrate`]) and the multi-job
+/// isolation oracle ([`multi_job_check`]), which applies them to every
+/// per-job arena of a shared-platform service run.
+fn check_substrate_state(
+    what: &str,
+    mode: ModeKind,
+    kv: Option<&Arc<JobArena>>,
+    dag: &Dag,
+) -> Result<(), String> {
+    match mode {
         ModeKind::Serverful => {
-            if run.kv.is_some() {
-                return Err(format!(
-                    "seed {seed}: {} is serverful but returned a KV store",
-                    run.label
-                ));
+            if kv.is_some() {
+                return Err(format!("{what} is serverful but returned a KV store"));
             }
         }
         ModeKind::Centralized => {
-            let kv = run
-                .kv
-                .as_ref()
-                .ok_or_else(|| format!("seed {seed}: {} returned no KV store", run.label))?;
+            let kv = kv.ok_or_else(|| format!("{what} returned no KV store"))?;
             // Every task output stored exactly once; no counters used.
             // The `format!` strings below are the *independent reference*
             // for the forensic key rendering: the store's packed keys must
@@ -156,23 +330,16 @@ fn check_substrate(seed: u64, run: &PolicyRun, dag: &Dag) -> Result<(), String> 
             };
             if kv.object_keys() != expected {
                 return Err(format!(
-                    "seed {seed}: {} stored objects {:?}, expected every task output",
-                    run.label,
+                    "{what} stored objects {:?}, expected every task output",
                     kv.object_keys()
                 ));
             }
             if !kv.counter_entries().is_empty() {
-                return Err(format!(
-                    "seed {seed}: {} used fan-in counters in centralized mode",
-                    run.label
-                ));
+                return Err(format!("{what} used fan-in counters in centralized mode"));
             }
         }
         ModeKind::Decentralized => {
-            let kv = run
-                .kv
-                .as_ref()
-                .ok_or_else(|| format!("seed {seed}: {} returned no KV store", run.label))?;
+            let kv = kv.ok_or_else(|| format!("{what} returned no KV store"))?;
             // Fan-in dependency counters end exactly at in-degree, and
             // exist only for fan-in tasks.
             let expected_counters: BTreeMap<String, u64> = dag
@@ -184,8 +351,7 @@ fn check_substrate(seed: u64, run: &PolicyRun, dag: &Dag) -> Result<(), String> 
                 kv.counter_entries().into_iter().collect();
             if actual_counters != expected_counters {
                 return Err(format!(
-                    "seed {seed}: {} counters {:?} != in-degrees {:?}",
-                    run.label, actual_counters, expected_counters
+                    "{what} counters {actual_counters:?} != in-degrees {expected_counters:?}"
                 ));
             }
             // Stored intermediates are exactly what the store-once rules
@@ -199,10 +365,8 @@ fn check_substrate(seed: u64, run: &PolicyRun, dag: &Dag) -> Result<(), String> 
             expected.sort();
             if kv.object_keys() != expected {
                 return Err(format!(
-                    "seed {seed}: {} stored {:?}, store-once rules imply {:?}",
-                    run.label,
-                    kv.object_keys(),
-                    expected
+                    "{what} stored {:?}, store-once rules imply {expected:?}",
+                    kv.object_keys()
                 ));
             }
         }
@@ -272,5 +436,18 @@ mod tests {
     #[test]
     fn determinism_smoke_seed() {
         determinism_check(0).unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    #[test]
+    fn multi_job_oracle_smoke_seed() {
+        let r = multi_job_check(0, 4).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(r.jobs, 4);
+        assert_eq!(r.per_job.len(), 4);
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn multi_job_determinism_smoke_seed() {
+        multi_job_determinism_check(0, 3).unwrap_or_else(|e| panic!("{e}"));
     }
 }

@@ -14,9 +14,10 @@ use crate::metrics::{JobReport, TaskSpan};
 pub fn render_trace(report: &JobReport, spans: &[TaskSpan]) -> String {
     let mut out = String::with_capacity(64 + spans.len() * 48);
     out.push_str(&format!(
-        "job platform={} makespan_ns={} tasks={} lambdas={} cold={} \
+        "job platform={} id={} makespan_ns={} tasks={} lambdas={} cold={} \
          kv_r={} kv_w={} kv_i={} kv_e={} kv_p={} bytes_r={} bytes_w={} billed_ms={} ok={}\n",
         report.platform,
+        report.job,
         report.makespan.as_nanos(),
         report.tasks_executed,
         report.lambdas_invoked,

@@ -30,9 +30,7 @@ impl StorageManager {
     /// Subscribes to this job's final-result channel (the Subscriber
     /// process that relays results to the client).
     pub fn subscribe_finals(&self) -> Subscription {
-        self.ctx
-            .kv
-            .subscribe(self.ctx.job, crate::executor::ctx::FINAL_CHANNEL)
+        self.ctx.kv.subscribe(crate::executor::ctx::FINAL_CHANNEL)
     }
 
     /// Fetches a sink task's final output on behalf of the client.
@@ -47,6 +45,6 @@ impl StorageManager {
     /// (job complete).
     pub fn shutdown(self) {
         self.proxy.abort();
-        self.ctx.kv.remove_job_channels(self.ctx.job);
+        self.ctx.kv.remove_job_channels();
     }
 }

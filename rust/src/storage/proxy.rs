@@ -18,9 +18,10 @@ use crate::rt::JoinHandle;
 /// Spawns the proxy listener. Returns its handle; abort it when the job
 /// completes.
 pub fn spawn_proxy(ctx: Arc<WukongCtx>) -> JoinHandle<()> {
-    // Job-scoped subscription: with many concurrent jobs over one shared
-    // KV store, this proxy only ever sees its own job's fan-out requests.
-    let mut sub = ctx.kv.subscribe(ctx.job, FANOUT_CHANNEL);
+    // Job-scoped subscription (the arena carries the job): with many
+    // concurrent jobs over one shared KV store, this proxy only ever
+    // sees its own job's fan-out requests.
+    let mut sub = ctx.kv.subscribe(FANOUT_CHANNEL);
     // Fan-out Invoker pool: bounds how many invocation API calls the
     // storage manager issues concurrently.
     let invokers = Arc::new(Semaphore::new(ctx.cfg.wukong.proxy_invokers.max(1)));
@@ -88,7 +89,7 @@ mod tests {
             );
 
             let proxy = spawn_proxy(Arc::clone(&ctx));
-            let mut final_sub = kv.subscribe(ctx.job, FINAL_CHANNEL);
+            let mut final_sub = ctx.kv.subscribe(FINAL_CHANNEL);
             invoke_executor(Arc::clone(&ctx), crate::core::TaskId(0), None).await;
 
             // The sink must eventually complete, through the proxy-invoked

@@ -1,0 +1,122 @@
+//! Multi-job workload mixes for the multi-tenant job service.
+//!
+//! A mix is a seeded, reproducible list of heterogeneous small-to-medium
+//! jobs — tree reductions, value-carrying random DAGs, and wide fan-outs
+//! — assigned round-robin to a handful of tenants. The service layer
+//! (`crate::engine::service`) attaches scheduling policies and arrival
+//! times; this module only decides *what* each job computes, keeping
+//! `workloads` free of engine dependencies.
+
+use crate::compute::Payload;
+use crate::core::{SimConfig, SplitMix64};
+use crate::dag::{Dag, DagBuilder};
+use crate::workloads::random_dag::{random_dag, RandomDagSpec};
+use crate::workloads::tree_reduction;
+
+/// One job of a service mix: the DAG plus the identity the service needs.
+pub struct MixJob {
+    /// Workload name ("tr-128", "rand-17", "fanout-24", ...).
+    pub name: String,
+    /// Tenant the job belongs to.
+    pub tenant: u32,
+    /// Per-job simulation seed (jitter; also the random-DAG seed).
+    pub seed: u64,
+    pub dag: Dag,
+}
+
+/// Number of tenants a mix spreads its jobs over.
+pub const MIX_TENANTS: u32 = 3;
+
+/// Builds a deterministic mix of `jobs` heterogeneous jobs from `seed`.
+/// Job `i` cycles through three families — tree reduction (64–256
+/// leaves), value-carrying random layered DAG, and a single wide fan-out
+/// (12–43 branches, above the default proxy-delegation threshold) — with
+/// sizes and per-job seeds drawn from one seeded stream. Identical
+/// `(jobs, seed)` build identical mixes.
+pub fn service_mix(jobs: usize, seed: u64, cfg: &SimConfig) -> Vec<MixJob> {
+    let mut rng = SplitMix64::new(seed ^ 0x6D69_785F_6A6F_6273); // "mix_jobs"
+    (0..jobs)
+        .map(|i| {
+            let job_seed = rng.next_u64();
+            let tenant = i as u32 % MIX_TENANTS;
+            match i % 3 {
+                0 => {
+                    let leaves = 64usize << rng.below(3); // 64 / 128 / 256
+                    MixJob {
+                        name: format!("tr-{leaves}"),
+                        tenant,
+                        seed: job_seed,
+                        dag: tree_reduction(leaves, 0.0, cfg),
+                    }
+                }
+                1 => MixJob {
+                    name: format!("rand-{}", job_seed % 1000),
+                    tenant,
+                    seed: job_seed,
+                    dag: random_dag(&RandomDagSpec::value(job_seed)),
+                },
+                _ => {
+                    let width = 12 + rng.below(32) as usize; // 12..=43
+                    MixJob {
+                        name: format!("fanout-{width}"),
+                        tenant,
+                        seed: job_seed,
+                        dag: wide_fan_out(width),
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+/// 1 -> `width` -> 1: one wide fan-out plus its fan-in — the proxy
+/// delegation shape, as a stand-alone service job.
+fn wide_fan_out(width: usize) -> Dag {
+    let mut b = DagBuilder::new();
+    let root = b.add_task("root", Payload::Noop, 8, &[]);
+    let mids: Vec<_> = (0..width)
+        .map(|i| b.add_task(format!("m{i}"), Payload::Noop, 8, &[root]))
+        .collect();
+    b.add_task("sink", Payload::Noop, 8, &mids);
+    b.build().expect("fan-out DAG is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_is_deterministic_and_heterogeneous() {
+        let cfg = SimConfig::test();
+        let a = service_mix(9, 42, &cfg);
+        let b = service_mix(9, 42, &cfg);
+        assert_eq!(a.len(), 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.dag.len(), y.dag.len());
+        }
+        // All three families appear, and tenants rotate.
+        assert!(a.iter().any(|j| j.name.starts_with("tr-")));
+        assert!(a.iter().any(|j| j.name.starts_with("rand-")));
+        assert!(a.iter().any(|j| j.name.starts_with("fanout-")));
+        assert_eq!(a[0].tenant, 0);
+        assert_eq!(a[1].tenant, 1);
+        assert_eq!(a[2].tenant, 2);
+        assert_eq!(a[3].tenant, 0);
+        // Different seeds produce different mixes.
+        let c = service_mix(9, 43, &cfg);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.seed != y.seed));
+    }
+
+    #[test]
+    fn mix_dags_are_valid_and_bounded() {
+        let cfg = SimConfig::test();
+        for j in service_mix(12, 7, &cfg) {
+            assert!(j.dag.len() >= 2, "{}: {} tasks", j.name, j.dag.len());
+            assert!(j.dag.len() < 600, "{}: {} tasks", j.name, j.dag.len());
+            assert!(!j.dag.sinks().is_empty());
+        }
+    }
+}

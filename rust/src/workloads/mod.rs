@@ -6,6 +6,7 @@
 //! [`real`], actual PJRT payloads at block scale.
 
 pub mod gemm;
+pub mod mix;
 pub mod random_dag;
 pub mod real;
 pub mod svc;
@@ -13,6 +14,7 @@ pub mod svd;
 pub mod tree_reduction;
 
 pub use gemm::{gemm, gemm_blocked};
+pub use mix::{service_mix, MixJob};
 pub use random_dag::{random_dag, RandomDagSpec};
 pub use svc::{svc, svc_chunked};
 pub use svd::{svd1, svd1_blocked, svd2, svd2_blocked};

@@ -66,7 +66,7 @@ fn fan_in_counter_ends_at_in_degree_and_last_writer_continues() {
         let n = dag.len() as u64;
         let ctx = ctx_for(dag, SimConfig::test());
         let proxy = spawn_proxy(Arc::clone(&ctx));
-        let mut finals = ctx.kv.subscribe(ctx.job, FINAL_CHANNEL);
+        let mut finals = ctx.kv.subscribe(FINAL_CHANNEL);
 
         // Launch both leaf executors; they race to the join.
         let leaves = ctx.dag.leaves();
