@@ -75,6 +75,7 @@ fn run_mt(jobs: usize, dag: &Dag, cfg: &SimConfig) {
         .map(|i| JobRequest {
             name: format!("tr{i}"),
             tenant: (i % 3) as u32,
+            priority: 0,
             seed: i as u64,
             dag: dag.clone(),
             policy: Arc::new(WukongPolicy),
@@ -335,6 +336,57 @@ fn main() {
         iters(2),
         || run_mt(32, &tr64, &cfg),
     );
+
+    // --- nic: cross-job fairness, before vs after ----------------------
+    // One shard NIC, a heavy tenant flooding it with 4096 transfers and
+    // a light tenant issuing 8 — the head-of-line-blocking shape the DRR
+    // discipline exists for. "fifo-hog" is the pre-governance global
+    // FIFO queue; "drr-hog" is the shipped per-job deficit-round-robin.
+    // Wall-clock secs/run lands in the JSON like every case; the
+    // *isolation win* is the printed virtual-time latency of the light
+    // tenant (~hog-backlog-proportional under FIFO, ~flat under DRR).
+    let nic_hog = |fair: bool| {
+        wukong::rt::run_virtual(async move {
+            let nic = wukong::kvstore::Nic::with_queueing(
+                1e9,
+                fair,
+                wukong::kvstore::DEFAULT_NIC_QUANTUM,
+            );
+            let mut hogs = Vec::with_capacity(4096);
+            for _ in 0..4096 {
+                let nic = nic.clone();
+                hogs.push(wukong::rt::spawn(async move {
+                    nic.transfer_as(wukong::core::JobId(1), 1 << 20).await;
+                }));
+            }
+            wukong::rt::sleep(std::time::Duration::from_micros(1)).await;
+            let t0 = wukong::rt::now();
+            let mut lights = Vec::with_capacity(8);
+            for _ in 0..8 {
+                let nic = nic.clone();
+                lights.push(wukong::rt::spawn(async move {
+                    nic.transfer_as(wukong::core::JobId(2), 1 << 20).await;
+                }));
+            }
+            for h in lights {
+                h.await;
+            }
+            let light_latency = wukong::rt::now() - t0;
+            for h in hogs {
+                h.await;
+            }
+            light_latency
+        })
+    };
+    let mut light = std::time::Duration::ZERO;
+    bench_case_cold(&mut rows, "nic/fifo-hog (4104 transfers)", 4104, iters(3), || {
+        light = nic_hog(false);
+    });
+    println!("    fifo-hog light-tenant virtual latency: {light:?}");
+    bench_case_cold(&mut rows, "nic/drr-hog (4104 transfers)", 4104, iters(3), || {
+        light = nic_hog(true);
+    });
+    println!("    drr-hog  light-tenant virtual latency: {light:?}");
 
     // --- kv-micro: the key/storage path itself, before vs after -------
     // "packed-dense" is the shipped hot path: Copy u64 keys into dense

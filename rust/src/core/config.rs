@@ -66,6 +66,14 @@ pub struct NetConfig {
     /// If true, all shards contend for a single NIC (the pre-"shard per
     /// VM" configuration of paper §V-B).
     pub kv_shared_vm: bool,
+    /// If true (default), shard NICs use per-job deficit-round-robin fair
+    /// queueing, so a heavy tenant's transfer backlog cannot
+    /// head-of-line-block a light tenant. Single-job timing is
+    /// bit-identical either way (one queue is FIFO under DRR); `false`
+    /// restores the global-FIFO discipline (the `nic/fifo-hog` bench arm).
+    pub nic_fair_queueing: bool,
+    /// DRR byte quantum granted to each contending job per queue visit.
+    pub nic_drr_quantum_bytes: u64,
     /// If true (default), `JobArena::contains` is charged a full request +
     /// reply round trip like `incr` — a Redis EXISTS is not free. The
     /// escape hatch (`false`) keeps existence probes out of virtual time;
@@ -121,6 +129,8 @@ impl Default for NetConfig {
             kv_latency_us: 300.0,
             kv_bandwidth_bps: 25e9 / 8.0,
             kv_shared_vm: false,
+            nic_fair_queueing: true,
+            nic_drr_quantum_bytes: 64 * 1024,
             charge_exists: true,
             pubsub_latency_us: 200.0,
             tcp_conn_us: 3000.0,

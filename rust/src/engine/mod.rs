@@ -26,8 +26,8 @@ pub(crate) mod serverful;
 pub use client::{Client, JobResult};
 pub use driver::{EngineDriver, ForensicRun, SharedPlatform};
 pub use service::{
-    run_service, Admission, ArrivalProfile, JobOutcome, JobRequest, JobService, ServiceConfig,
-    ServiceReport,
+    job_cost_usd, run_service, Admission, ArrivalProfile, JobOutcome, JobRequest, JobService,
+    ServiceConfig, ServiceReport, Shed, ShedReason,
 };
 pub use policy::{
     CentralizedSpec, DecentralizedSpec, ExecutionMode, Notification, SchedulingPolicy,

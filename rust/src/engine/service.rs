@@ -22,7 +22,8 @@ use crate::core::{clock, JobId, SimConfig, SplitMix64, TaskId};
 use crate::dag::Dag;
 use crate::engine::driver::{EngineDriver, SharedPlatform};
 use crate::engine::policy::SchedulingPolicy;
-use crate::kvstore::JobArena;
+use crate::faas::Billing;
+use crate::kvstore::{ArenaForensics, JobArena};
 use crate::metrics::JobReport;
 use crate::rt::sync::mpsc;
 use std::collections::{HashMap, VecDeque};
@@ -36,6 +37,12 @@ pub struct JobRequest {
     /// Tenant the job belongs to (fair admission balances across
     /// tenants; several jobs may share one tenant).
     pub tenant: u32,
+    /// Admission priority (higher wins) under [`Admission::Priority`]:
+    /// the queue admits highest-priority first, and at `queue_cap` the
+    /// lowest-priority *queued* job is shed to make room for a
+    /// higher-priority arrival (running jobs are never preempted).
+    /// Ignored by FIFO/fair admission.
+    pub priority: u8,
     /// Per-job simulation seed (duration jitter etc.). The fault profile
     /// and platform knobs come from the service's base config.
     pub seed: u64,
@@ -103,6 +110,46 @@ pub enum Admission {
     /// Balance across tenants: admit the queued job whose tenant has had
     /// the fewest jobs admitted so far (ties resolve in arrival order).
     Fair,
+    /// Highest [`JobRequest::priority`] first (ties resolve in arrival
+    /// order); at `queue_cap`, the lowest-priority queued job is shed to
+    /// make room for a strictly-higher-priority arrival. Only *queued*
+    /// jobs are ever preempted — running jobs always finish.
+    Priority,
+}
+
+/// Why a job was shed instead of run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Arrived while the wait queue was at `queue_cap`.
+    QueueFull,
+    /// Displaced from the wait queue by a higher-priority arrival
+    /// ([`Admission::Priority`] only).
+    Preempted,
+    /// Its tenant's accumulated cost reached the per-tenant dollar
+    /// budget ([`ServiceConfig::tenant_budget_usd`]).
+    Budget,
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::Preempted => "preempted",
+            ShedReason::Budget => "budget",
+        })
+    }
+}
+
+/// One shed (never-started) job. Shed jobs acquire **no** substrate: no
+/// KV arena, no channel namespace, no metrics hub — the regression tests
+/// assert the registries stay empty.
+#[derive(Clone, Debug)]
+pub struct Shed {
+    pub job: JobId,
+    pub name: String,
+    pub tenant: u32,
+    pub priority: u8,
+    pub reason: ShedReason,
 }
 
 /// Service configuration: the shared-platform base config plus the
@@ -122,6 +169,22 @@ pub struct ServiceConfig {
     /// Arrivals beyond this many *waiting* jobs are rejected outright
     /// (load shedding), not queued.
     pub queue_cap: usize,
+    /// Byte budget for resident KV intermediates of **finished** jobs.
+    /// Each completed job is retired ([`KvStore::retire`]); retired
+    /// arenas then keep their data only while the bytes retained by
+    /// finished jobs stay under this budget — beyond it the
+    /// oldest-finished arenas are evicted deterministically. Running
+    /// jobs' live intermediates never count against the budget (they
+    /// cannot be evicted). `u64::MAX` (default) retains everything; `0`
+    /// reclaims every job's intermediates at retirement.
+    ///
+    /// [`KvStore::retire`]: crate::kvstore::KvStore::retire
+    pub kv_byte_budget: u64,
+    /// Per-tenant dollar budget. Once a tenant's completed-job cost
+    /// (accumulated from each [`JobOutcome::cost_usd`]) reaches it, that
+    /// tenant's arriving *and queued* jobs are shed with
+    /// [`ShedReason::Budget`]. Infinite by default.
+    pub tenant_budget_usd: f64,
     /// Record per-task spans in every job (expensive; off by default).
     pub sampling: bool,
 }
@@ -136,6 +199,8 @@ impl ServiceConfig {
             admission: Admission::Fifo,
             max_concurrent_jobs: 8,
             queue_cap: 64,
+            kv_byte_budget: u64::MAX,
+            tenant_budget_usd: f64::INFINITY,
             sampling: false,
         }
     }
@@ -155,6 +220,30 @@ impl ServiceConfig {
         self.queue_cap = queue_cap;
         self
     }
+
+    /// Caps resident KV bytes of finished jobs (see `kv_byte_budget`).
+    pub fn with_kv_budget(mut self, bytes: u64) -> Self {
+        self.kv_byte_budget = bytes;
+        self
+    }
+
+    /// Caps each tenant's accumulated dollar spend (see
+    /// `tenant_budget_usd`).
+    pub fn with_tenant_budget(mut self, usd: f64) -> Self {
+        self.tenant_budget_usd = usd;
+        self
+    }
+}
+
+/// Dollar cost of one completed job under the platform's billing model
+/// ([`Billing::from_faas`], the same construction the fleet cost uses):
+/// per-invocation fee plus GB-seconds of billed time. `report.billed` is
+/// the sum of already granularity-rounded per-invocation durations, so
+/// this aggregate equals summing [`Billing::cost_usd`] per invocation.
+pub fn job_cost_usd(cfg: &SimConfig, report: &JobReport) -> f64 {
+    let billing = Billing::from_faas(&cfg.faas);
+    report.lambdas_invoked as f64 * billing.per_invocation_usd
+        + report.billed.as_secs_f64() * billing.memory_gb * billing.gb_second_usd
 }
 
 /// Everything the service records about one completed job.
@@ -162,6 +251,10 @@ pub struct JobOutcome {
     pub job: JobId,
     pub tenant: u32,
     pub name: String,
+    /// Admission priority the job ran with.
+    pub priority: u8,
+    /// Dollar cost of this job (fed into the tenant budget ledger).
+    pub cost_usd: f64,
     /// Offsets from service start (virtual time).
     pub submitted: Duration,
     pub started: Duration,
@@ -175,8 +268,16 @@ pub struct JobOutcome {
     /// trace).
     pub metrics: Arc<crate::metrics::MetricsHub>,
     /// The job's KV arena for post-mortem forensics (None for serverful
-    /// policies).
+    /// policies). After retirement the arena's storage may have been
+    /// reclaimed by the byte-budget eviction policy — pre-retirement
+    /// state is in `forensics`.
     pub kv: Option<Arc<JobArena>>,
+    /// Forensic snapshot of the arena captured at job completion,
+    /// **before** retirement/eviction. Captured only when eviction is
+    /// possible (`kv_byte_budget < u64::MAX`) — under an unlimited
+    /// budget the live arena in `kv` is never reclaimed, so the
+    /// snapshot would duplicate it. None for serverful policies.
+    pub forensics: Option<ArenaForensics>,
 }
 
 impl JobOutcome {
@@ -196,9 +297,10 @@ impl JobOutcome {
         // does not honor padding flags).
         let job = self.job.to_string();
         format!(
-            "{:<6} t{:<2} {:<14} {:<22} sub={:>8.3}s wait={:>7.3}s lat={:>8.3}s tasks={:<6} lambdas={:<5} cold={:<4} billed={:.1}s{}",
+            "{:<6} t{:<2} p{:<2} {:<14} {:<22} sub={:>8.3}s wait={:>7.3}s lat={:>8.3}s tasks={:<6} lambdas={:<5} cold={:<4} billed={:.1}s cost=${:.5}{}",
             job,
             self.tenant,
+            self.priority,
             self.name,
             self.report.platform,
             self.submitted.as_secs_f64(),
@@ -208,6 +310,7 @@ impl JobOutcome {
             self.report.lambdas_invoked,
             self.report.cold_starts,
             self.report.billed.as_secs_f64(),
+            self.cost_usd,
             if self.report.is_ok() { "" } else { "  FAILED" },
         )
     }
@@ -218,14 +321,29 @@ impl JobOutcome {
 pub struct ServiceReport {
     /// Completed jobs, sorted by job id (== arrival order).
     pub outcomes: Vec<JobOutcome>,
-    /// Jobs shed at admission (queue over cap), in arrival order.
-    pub rejected: Vec<(JobId, String)>,
+    /// Shed jobs (queue over cap, priority preemption, tenant budget),
+    /// sorted by job id.
+    pub rejected: Vec<Shed>,
     /// Service makespan: start of first arrival to last completion.
     pub makespan: Duration,
     /// Fleet-wide peak concurrent function executions.
     pub peak_concurrency: u64,
     /// Fleet-wide dollar cost.
     pub fleet_cost_usd: f64,
+    /// Jobs whose retired KV arenas the byte-budget policy evicted, in
+    /// eviction (oldest-finished-first) order.
+    pub evicted: Vec<JobId>,
+    /// Per-tenant accumulated dollar spend, sorted by tenant.
+    pub tenant_spend: Vec<(u32, f64)>,
+    /// End-of-run KV ledger: resident bytes still held by the cluster
+    /// (retained finished intermediates; zero under a zero byte budget).
+    pub resident_kv_bytes: u64,
+    /// End-of-run broker namespaces (must be zero: every completed job is
+    /// retired, and shed jobs never create one).
+    pub pubsub_namespaces: usize,
+    /// End-of-run arena registry size (retained finished arenas; zero
+    /// under a zero byte budget).
+    pub registered_arenas: usize,
 }
 
 impl ServiceReport {
@@ -301,8 +419,14 @@ impl ServiceReport {
             self.total_lambdas(),
             self.total_cold_starts(),
         ));
-        for (job, name) in &self.rejected {
-            out.push_str(&format!("rejected {job} name={name}\n"));
+        for s in &self.rejected {
+            out.push_str(&format!(
+                "rejected {} name={} tenant={} priority={} reason={}\n",
+                s.job, s.name, s.tenant, s.priority, s.reason
+            ));
+        }
+        for job in &self.evicted {
+            out.push_str(&format!("evicted {job}\n"));
         }
         for o in &self.outcomes {
             out.push_str(&format!(
@@ -321,6 +445,13 @@ impl ServiceReport {
                 &o.metrics.task_spans(),
             ));
         }
+        for (tenant, usd) in &self.tenant_spend {
+            out.push_str(&format!("tenant t{tenant} spent_usd={usd:.9}\n"));
+        }
+        out.push_str(&format!(
+            "substrate resident_bytes={} namespaces={} arenas={}\n",
+            self.resident_kv_bytes, self.pubsub_namespaces, self.registered_arenas
+        ));
         out
     }
 }
@@ -368,6 +499,19 @@ impl JobService {
                 }
                 Some(best)
             }
+            Admission::Priority => {
+                // Highest priority first; arrival order breaks ties.
+                let mut best = 0usize;
+                let mut best_prio = 0u8;
+                for (pos, &idx) in queue.iter().enumerate() {
+                    let prio = requests[idx].as_ref().expect("queued twice").priority;
+                    if pos == 0 || prio > best_prio {
+                        best_prio = prio;
+                        best = pos;
+                    }
+                }
+                Some(best)
+            }
         }
     }
 
@@ -384,10 +528,27 @@ impl JobService {
         let mut requests: Vec<Option<JobRequest>> = jobs.into_iter().map(Some).collect();
         let mut queue: VecDeque<usize> = VecDeque::new();
         let mut tenant_admitted: HashMap<u32, usize> = HashMap::new();
+        let mut tenant_spent: HashMap<u32, f64> = HashMap::new();
         let mut next_arrival = 0usize;
         let mut running = 0usize;
         let mut outcomes: Vec<JobOutcome> = Vec::with_capacity(n);
-        let mut rejected: Vec<(JobId, String)> = Vec::new();
+        let mut rejected: Vec<Shed> = Vec::new();
+        let mut evicted: Vec<JobId> = Vec::new();
+
+        // Sheds `idx` (a not-yet-admitted job) for `reason`.
+        let shed = |rejected: &mut Vec<Shed>, requests: &mut [Option<JobRequest>], idx: usize, reason: ShedReason| {
+            let req = requests[idx].take().expect("shed twice");
+            rejected.push(Shed {
+                job: JobId(idx as u64 + 1),
+                name: req.name,
+                tenant: req.tenant,
+                priority: req.priority,
+                reason,
+            });
+        };
+        let over_budget = |spent: &HashMap<u32, f64>, tenant: u32| {
+            *spent.get(&tenant).unwrap_or(&0.0) >= self.cfg.tenant_budget_usd
+        };
 
         while outcomes.len() + rejected.len() < n {
             // Admit while job slots are free.
@@ -408,6 +569,11 @@ impl JobService {
                 let platform = Arc::clone(&platform);
                 let tx = done_tx.clone();
                 let sampling = self.cfg.sampling;
+                // Snapshot arenas only when the byte budget can actually
+                // evict them; with an unlimited budget the live arena
+                // survives and a snapshot would be O(objects) of pure
+                // overhead on every completion.
+                let snapshot = self.cfg.kv_byte_budget < u64::MAX;
                 crate::rt::spawn(async move {
                     let mut driver = EngineDriver::with_policy(job_cfg, req.policy)
                         .on_platform(platform)
@@ -417,10 +583,19 @@ impl JobService {
                     }
                     let run = driver.run_forensic(&req.dag).await;
                     let fingerprint = crate::sim::harness::fingerprint_outputs(&run.outputs);
+                    // Snapshot the arena before the service retires the
+                    // job (eviction may reclaim the live storage).
+                    let forensics = if snapshot {
+                        run.kv.as_ref().map(|kv| kv.forensics())
+                    } else {
+                        None
+                    };
                     let _ = tx.send(JobOutcome {
                         job,
                         tenant: req.tenant,
                         name: req.name,
+                        priority: req.priority,
+                        cost_usd: 0.0, // filled by the service loop
                         submitted,
                         started,
                         finished: clock::now() - t0,
@@ -428,6 +603,7 @@ impl JobService {
                         fingerprint,
                         metrics: run.metrics,
                         kv: run.kv,
+                        forensics,
                     });
                 });
             }
@@ -442,9 +618,42 @@ impl JobService {
             if next_arrival < n && clock::now() - t0 >= arrivals[next_arrival] {
                 let idx = next_arrival;
                 next_arrival += 1;
-                if running >= self.cfg.max_concurrent_jobs && queue.len() >= self.cfg.queue_cap {
-                    let name = requests[idx].take().expect("arrived twice").name;
-                    rejected.push((JobId(idx as u64 + 1), name));
+                let (tenant, priority) = {
+                    let req = requests[idx].as_ref().expect("arrived twice");
+                    (req.tenant, req.priority)
+                };
+                if over_budget(&tenant_spent, tenant) {
+                    // The tenant's dollar budget is exhausted: reject at
+                    // the door, before any substrate is touched.
+                    shed(&mut rejected, &mut requests, idx, ShedReason::Budget);
+                } else if running >= self.cfg.max_concurrent_jobs
+                    && queue.len() >= self.cfg.queue_cap
+                {
+                    // Queue full. Under priority admission a strictly
+                    // higher-priority arrival preempts the lowest-priority
+                    // *queued* job (running jobs always finish); among
+                    // equal-priority victims the latest arrival goes, so
+                    // earlier arrivals keep their place.
+                    let victim = if self.cfg.admission == Admission::Priority {
+                        let mut victim: Option<(usize, u8)> = None;
+                        for (pos, &qidx) in queue.iter().enumerate() {
+                            let p = requests[qidx].as_ref().expect("queued twice").priority;
+                            if victim.is_none_or(|(_, vp)| p <= vp) {
+                                victim = Some((pos, p));
+                            }
+                        }
+                        victim.filter(|&(_, vp)| vp < priority).map(|(pos, _)| pos)
+                    } else {
+                        None
+                    };
+                    match victim {
+                        Some(pos) => {
+                            let vidx = queue.remove(pos).expect("victim position exists");
+                            shed(&mut rejected, &mut requests, vidx, ShedReason::Preempted);
+                            queue.push_back(idx);
+                        }
+                        None => shed(&mut rejected, &mut requests, idx, ShedReason::QueueFull),
+                    }
                 } else {
                     queue.push_back(idx);
                 }
@@ -452,41 +661,75 @@ impl JobService {
             }
 
             // Wait for the next event: a completion, or the next arrival.
-            if next_arrival < n {
+            let completed: Option<JobOutcome> = if next_arrival < n {
                 let wait = arrivals[next_arrival].saturating_sub(clock::now() - t0);
                 match crate::rt::timeout(wait, done_rx.recv()).await {
-                    Ok(Some(outcome)) => {
-                        running -= 1;
-                        outcomes.push(outcome);
-                    }
+                    Ok(Some(outcome)) => Some(outcome),
                     Ok(None) => unreachable!("service holds a live sender"),
-                    Err(_) => {} // arrival due — absorbed at loop top
+                    Err(_) => None, // arrival due — absorbed at loop top
                 }
             } else if running > 0 {
                 match done_rx.recv().await {
-                    Some(outcome) => {
-                        running -= 1;
-                        outcomes.push(outcome);
-                    }
+                    Some(outcome) => Some(outcome),
                     None => unreachable!("service holds a live sender"),
                 }
             } else {
                 // No arrival pending, nothing running: every job is
-                // accounted for, so the loop condition is about to end
-                // the service.
+                // accounted for (the budget sweep below clears the queue
+                // the moment a tenant goes over), so the loop condition
+                // is about to end the service.
                 debug_assert!(queue.is_empty());
+                None
+            };
+
+            if let Some(mut outcome) = completed {
+                running -= 1;
+                // Feed the tenant ledger from the job's billed cost.
+                let cost = job_cost_usd(&self.cfg.base, &outcome.report);
+                outcome.cost_usd = cost;
+                *tenant_spent.entry(outcome.tenant).or_insert(0.0) += cost;
+                // Retire the job's substrate: stamp the arena finished,
+                // tear down its channel namespace, and evict
+                // oldest-finished arenas beyond the byte budget.
+                platform.kv.retire(outcome.job);
+                evicted.extend(platform.kv.enforce_kv_budget(self.cfg.kv_byte_budget));
+                // Budget sweep: tenants only cross their budget at a
+                // completion, so shedding their queued jobs here keeps
+                // the queue free of unadmittable entries.
+                if over_budget(&tenant_spent, outcome.tenant) {
+                    let mut pos = 0;
+                    while pos < queue.len() {
+                        let qidx = queue[pos];
+                        if requests[qidx].as_ref().expect("queued twice").tenant
+                            == outcome.tenant
+                        {
+                            queue.remove(pos);
+                            shed(&mut rejected, &mut requests, qidx, ShedReason::Budget);
+                        } else {
+                            pos += 1;
+                        }
+                    }
+                }
+                outcomes.push(outcome);
             }
         }
 
         let makespan = clock::now() - t0;
         outcomes.sort_by_key(|o| o.job);
-        rejected.sort_by_key(|r| r.0);
+        rejected.sort_by_key(|r| r.job);
+        let mut tenant_spend: Vec<(u32, f64)> = tenant_spent.into_iter().collect();
+        tenant_spend.sort_by_key(|&(t, _)| t);
         ServiceReport {
             outcomes,
             rejected,
             makespan,
             peak_concurrency: platform.peak_concurrency(),
             fleet_cost_usd: platform.total_cost_usd(),
+            evicted,
+            tenant_spend,
+            resident_kv_bytes: platform.kv.resident_kv_bytes(),
+            pubsub_namespaces: platform.kv.pubsub_namespace_count(),
+            registered_arenas: platform.kv.registered_arena_count(),
         }
     }
 }
@@ -515,6 +758,7 @@ mod tests {
         JobRequest {
             name: name.to_string(),
             tenant,
+            priority: 0,
             seed,
             dag: b.build().unwrap(),
             policy: Arc::new(WukongPolicy),
@@ -712,5 +956,171 @@ mod tests {
         assert!(trace.starts_with("service completed=2 rejected=0 "));
         assert!(trace.contains("outcome job1 "));
         assert!(trace.contains("outcome job2 "));
+    }
+
+    #[test]
+    fn priority_admission_preempts_queued_lowest_first() {
+        // Six jobs, priorities 0..5, all at t=0, ONE slot, queue cap 2.
+        // Arrival walkthrough: job0 admits into the free slot; jobs 1, 2
+        // queue; each later (higher-priority) arrival preempts the
+        // lowest-priority queued job. Completions then drain the queue
+        // highest-priority-first: 0 (running), then 5, then 4.
+        let jobs: Vec<JobRequest> = (0..6)
+            .map(|i| {
+                let mut j = chain_job(&format!("p{i}"), 0, i as u64, 3);
+                j.priority = i as u8;
+                j
+            })
+            .collect();
+        let cfg = ServiceConfig::new(SimConfig::test(), 7)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 6,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_admission(Admission::Priority)
+            .with_concurrency(1, 2);
+        let report = run_service(cfg, jobs);
+        assert!(report.all_ok());
+        let completed: Vec<String> = report.outcomes.iter().map(|o| o.name.clone()).collect();
+        assert_eq!(completed, vec!["p0", "p4", "p5"], "{}", report.fleet_row());
+        let shed: Vec<(String, ShedReason)> = report
+            .rejected
+            .iter()
+            .map(|s| (s.name.clone(), s.reason))
+            .collect();
+        assert_eq!(
+            shed,
+            vec![
+                ("p1".to_string(), ShedReason::Preempted),
+                ("p2".to_string(), ShedReason::Preempted),
+                ("p3".to_string(), ShedReason::Preempted),
+            ]
+        );
+        // Queued-preemption only: every started job ran to completion.
+        let start_order: Vec<&str> = {
+            let mut by_start: Vec<&JobOutcome> = report.outcomes.iter().collect();
+            by_start.sort_by_key(|o| o.started);
+            by_start.iter().map(|o| o.name.as_str()).collect()
+        };
+        assert_eq!(start_order, vec!["p0", "p5", "p4"]);
+    }
+
+    #[test]
+    fn tenant_budget_sheds_over_budget_tenant_only() {
+        // Tenant 0 submits three jobs spaced far apart, tenant 1 one job.
+        // The budget covers roughly one job's cost, so tenant 0's later
+        // arrivals are shed with the budget reason while tenant 1 runs.
+        let jobs = vec![
+            chain_job("t0-a", 0, 1, 3),
+            chain_job("t0-b", 0, 2, 3),
+            chain_job("t1-a", 1, 3, 3),
+            chain_job("t0-c", 0, 4, 3),
+        ];
+        let cfg = ServiceConfig::new(SimConfig::test(), 8)
+            .with_profile(ArrivalProfile::Uniform { gap_ms: 5000.0 })
+            .with_concurrency(4, 16)
+            // Below one chain job's cost (>= one 100 ms billing unit at
+            // 3 GB ≈ 5e-6 USD), so the first completion trips the budget.
+            .with_tenant_budget(1e-6);
+        let report = run_service(cfg, jobs);
+        let completed: Vec<&str> = report.outcomes.iter().map(|o| o.name.as_str()).collect();
+        assert!(completed.contains(&"t0-a"), "{completed:?}");
+        assert!(completed.contains(&"t1-a"), "tenant 1 is unaffected");
+        let budget_shed: Vec<&str> = report
+            .rejected
+            .iter()
+            .filter(|s| s.reason == ShedReason::Budget)
+            .map(|s| s.name.as_str())
+            .collect();
+        assert_eq!(budget_shed, vec!["t0-b", "t0-c"], "{}", report.fleet_row());
+        // The ledger records the spend that tripped the budget.
+        let spent0 = report
+            .tenant_spend
+            .iter()
+            .find(|&&(t, _)| t == 0)
+            .map(|&(_, s)| s)
+            .unwrap();
+        assert!(spent0 >= 1e-6, "tenant 0 spent {spent0}");
+        assert!(report.outcomes.iter().all(|o| o.cost_usd > 0.0));
+    }
+
+    #[test]
+    fn shed_jobs_leave_no_substrate_and_budget_zero_reclaims_all() {
+        // The shed-path leak regression: more arrivals than queue_cap
+        // admits, under a zero KV byte budget. After the run the shared
+        // substrate must be completely empty — no arena registry entries,
+        // no resident bytes, no broker namespaces — because shed jobs
+        // never touch the substrate and completed jobs are retired and
+        // evicted.
+        let jobs: Vec<JobRequest> = (0..6)
+            .map(|i| chain_job(&format!("s{i}"), i % 2, i as u64, 3))
+            .collect();
+        let cfg = ServiceConfig::new(SimConfig::test(), 9)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 6,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_concurrency(1, 1)
+            .with_kv_budget(0);
+        let report = run_service(cfg, jobs);
+        assert!(!report.rejected.is_empty(), "cap 1 must shed some of 6");
+        assert_eq!(report.completed() + report.rejected.len(), 6);
+        assert_eq!(report.resident_kv_bytes, 0, "no resident bytes survive");
+        assert_eq!(report.pubsub_namespaces, 0, "no broker namespaces survive");
+        assert_eq!(report.registered_arenas, 0, "no arenas stay registered");
+        // Every completed job was evicted, oldest-finished-first.
+        assert_eq!(report.evicted.len(), report.completed());
+        let finished_of = |job: &JobId| {
+            report
+                .outcomes
+                .iter()
+                .find(|o| o.job == *job)
+                .unwrap()
+                .finished
+        };
+        assert!(
+            report.evicted.windows(2).all(|w| finished_of(&w[0]) <= finished_of(&w[1])),
+            "eviction follows completion order: {:?}",
+            report.evicted
+        );
+        // The pre-retirement snapshots survive for forensics.
+        for o in &report.outcomes {
+            let f = o.forensics.as_ref().expect("wukong jobs have arenas");
+            assert!(!f.object_keys.is_empty(), "{}: snapshot kept", o.name);
+            let kv = o.kv.as_ref().unwrap();
+            assert_eq!(kv.resident_bytes(), 0, "{}: live arena evicted", o.name);
+        }
+    }
+
+    #[test]
+    fn finite_kv_budget_retains_newest_finished_jobs() {
+        // A budget big enough for roughly one job's intermediates:
+        // eviction must free the oldest finished jobs and retain the
+        // rest, and the end state must replay deterministically.
+        let run = || {
+            let jobs: Vec<JobRequest> = (0..4)
+                .map(|i| chain_job(&format!("b{i}"), 0, i as u64, 4))
+                .collect();
+            let cfg = ServiceConfig::new(SimConfig::test(), 11)
+                .with_profile(ArrivalProfile::Bursts {
+                    burst: 4,
+                    intra_ms: 0.0,
+                    idle_ms: 0.0,
+                })
+                .with_concurrency(1, 16)
+                .with_kv_budget(10); // each chain sink is 8 bytes resident
+            run_service(cfg, jobs)
+        };
+        let report = run();
+        assert_eq!(report.completed(), 4);
+        // 4 jobs x 8 resident bytes, budget 10: three oldest evicted.
+        assert_eq!(report.evicted.len(), 3, "{:?}", report.evicted);
+        assert_eq!(report.resident_kv_bytes, 8);
+        assert_eq!(report.registered_arenas, 1);
+        let replay = run();
+        assert_eq!(replay.evicted, report.evicted, "eviction is deterministic");
+        assert_eq!(replay.render_trace(), report.render_trace());
     }
 }

@@ -31,6 +31,19 @@ impl Default for Billing {
 }
 
 impl Billing {
+    /// The billing model of a platform configuration: granularity and
+    /// metered memory from the config, default public pricing rates.
+    /// The single construction point shared by the platform's fleet cost
+    /// accounting and the job service's tenant-budget ledger — the two
+    /// must always price in the same dollars.
+    pub fn from_faas(cfg: &crate::core::FaasConfig) -> Self {
+        Billing {
+            granularity: Duration::from_millis(cfg.billing_granularity_ms),
+            memory_gb: cfg.memory_bytes as f64 / (1u64 << 30) as f64,
+            ..Billing::default()
+        }
+    }
+
     /// Billable duration: rounded up to the granularity, minimum one unit.
     pub fn billable(&self, execution: Duration) -> Duration {
         let g = self.granularity.as_nanos().max(1);

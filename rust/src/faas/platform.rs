@@ -58,11 +58,7 @@ impl Faas {
         faults: FaultConfig,
         metrics: Arc<MetricsHub>,
     ) -> Arc<Self> {
-        let billing = Billing {
-            granularity: Duration::from_millis(cfg.billing_granularity_ms),
-            memory_gb: cfg.memory_bytes as f64 / (1u64 << 30) as f64,
-            ..Billing::default()
-        };
+        let billing = Billing::from_faas(&cfg);
         let fault_rng = Mutex::new(SplitMix64::new(
             faults.seed ^ 0x6661_6173u64.wrapping_mul(0x9E37_79B9_7F4A_7C15),
         ));

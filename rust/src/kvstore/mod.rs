@@ -11,6 +11,6 @@ pub mod netmodel;
 pub mod pubsub;
 pub mod store;
 
-pub use netmodel::{Nic, TailLatency};
+pub use netmodel::{Nic, TailLatency, DEFAULT_NIC_QUANTUM};
 pub use pubsub::{Message, PubSub, Subscription};
-pub use store::{JobArena, KvStore};
+pub use store::{ArenaForensics, JobArena, KvStore};

@@ -103,6 +103,13 @@ impl PubSub {
         self.channels.lock().unwrap().remove(&job.0);
     }
 
+    /// Number of live job namespaces — the broker-side leak detector the
+    /// substrate-emptiness invariant checks (zero once every job has
+    /// been torn down).
+    pub fn namespace_count(&self) -> usize {
+        self.channels.lock().unwrap().len()
+    }
+
     /// Delivers `msg` to all current subscribers of `channel` within
     /// `job`'s namespace. Returns the number of subscribers reached —
     /// never a subscriber of another job's channel of the same name.

@@ -36,6 +36,23 @@
 //! ([`JobArena::object_keys`] / [`JobArena::counter_entries`]) renders key
 //! strings lazily via `Display`, byte-identical to the strings the
 //! pre-packing implementation stored.
+//!
+//! ## Arena lifecycle and reclamation (resource governance)
+//!
+//! The cluster keeps an **arena registry**: every arena registers at
+//! creation and reports its resident bytes (dense slots + named maps)
+//! into a cluster-wide ledger, updated delta-wise on every store. At job
+//! end the service calls [`KvStore::retire`], which marks the job's
+//! arenas finished (stamping a retirement sequence number) and tears
+//! down the job's pub/sub namespace. Retired arenas may keep their
+//! intermediates resident — a tenant can still fetch results — until
+//! [`KvStore::enforce_kv_budget`] evicts **oldest-finished-first** to
+//! keep the bytes retained by finished jobs under the service's byte
+//! budget (deterministically: the retirement sequence is the only
+//! eviction order). Running jobs are never evicted and their live bytes
+//! never count against the budget. A budget of zero retains nothing:
+//! every retired arena is reclaimed immediately, which is the
+//! post-retirement-emptiness invariant the multi-job oracle pins.
 
 use crate::compute::DataObj;
 use crate::core::{
@@ -46,7 +63,7 @@ use crate::kvstore::pubsub::{Message, PubSub, Subscription};
 use crate::metrics::{KvOpKind, MetricsHub};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::Duration;
 
 /// Per-arena tail-stream salt base: `JobId(0)`'s stream is bit-identical
@@ -69,6 +86,41 @@ struct TaskSlots {
     counters: Vec<AtomicU64>,
 }
 
+/// One registered arena in the cluster's registry.
+struct RegEntry {
+    /// Unique per registration (two arenas of one job id stay distinct).
+    uid: u64,
+    job: u64,
+    arena: Weak<JobArena>,
+    /// `Some(seq)` once the job retired; `seq` orders eviction
+    /// (oldest-finished-first).
+    retired_seq: Option<u64>,
+}
+
+/// The cluster-side arena registry: who is attached, who has retired,
+/// and in what order retirements happened.
+#[derive(Default)]
+struct ArenaRegistry {
+    entries: Vec<RegEntry>,
+    next_uid: u64,
+    next_retire_seq: u64,
+}
+
+/// Snapshot of one arena's forensic state, captured **before**
+/// retirement so the differential oracle can check store-once /
+/// counter invariants even after the arena's storage has been
+/// reclaimed by the byte-budget eviction policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArenaForensics {
+    /// Rendered object keys, sorted (see [`JobArena::object_keys`]).
+    pub object_keys: Vec<String>,
+    /// Rendered counters and final values, sorted
+    /// (see [`JobArena::counter_entries`]).
+    pub counter_entries: Vec<(String, u64)>,
+    /// Resident payload bytes at capture time.
+    pub resident_bytes: u64,
+}
+
 /// The shared KV cluster. Cloneable by `Arc`; jobs attach via
 /// [`KvStore::arena`] / [`KvStore::arena_with_metrics`].
 pub struct KvStore {
@@ -84,6 +136,12 @@ pub struct KvStore {
     /// "Ideal storage" mode (Fig. 10 yellow bars): data still flows so
     /// real-compute jobs stay correct, but every transfer is free.
     ideal: bool,
+    /// Arena registry: every attached job, its retirement order, and the
+    /// weak handles the eviction policy reclaims through.
+    registry: Mutex<ArenaRegistry>,
+    /// Cluster-wide resident-byte ledger (sum of every arena's resident
+    /// payload bytes), updated delta-wise on each store/evict/drop.
+    resident_total: AtomicU64,
 }
 
 impl KvStore {
@@ -108,16 +166,17 @@ impl KvStore {
         // Shard-per-VM: each shard gets its own NIC. Shared-VM mode (the
         // pre-optimization configuration of Fig. 12): one NIC serves all
         // shards, so bursts contend.
-        let shared: Option<Arc<Nic>> = if cfg.kv_shared_vm {
-            Some(Nic::new(cfg.kv_bandwidth_bps))
-        } else {
-            None
+        let mk_nic = || {
+            Nic::with_queueing(
+                cfg.kv_bandwidth_bps,
+                cfg.nic_fair_queueing,
+                cfg.nic_drr_quantum_bytes,
+            )
         };
+        let shared: Option<Arc<Nic>> = if cfg.kv_shared_vm { Some(mk_nic()) } else { None };
         let shards = (0..cfg.kv_shards)
             .map(|_| Shard {
-                nic: shared
-                    .clone()
-                    .unwrap_or_else(|| Nic::new(cfg.kv_bandwidth_bps)),
+                nic: shared.clone().unwrap_or_else(mk_nic),
             })
             .collect();
         Arc::new(KvStore {
@@ -127,6 +186,8 @@ impl KvStore {
             faults,
             metrics,
             ideal,
+            registry: Mutex::new(ArenaRegistry::default()),
+            resident_total: AtomicU64::new(0),
         })
     }
 
@@ -146,15 +207,23 @@ impl KvStore {
         n_tasks: usize,
         metrics: Arc<MetricsHub>,
     ) -> Arc<JobArena> {
+        let uid = {
+            let mut reg = self.registry.lock().unwrap();
+            let uid = reg.next_uid;
+            reg.next_uid += 1;
+            uid
+        };
         let arena = JobArena {
             store: Arc::clone(self),
             job,
+            uid,
             // Multiplicative salt keeps JobId(0) routing bit-identical to
             // the pre-arena store (salt 0 => mix64(key) exactly).
             shard_salt: job.0.wrapping_mul(0x9E37_79B9_7F4A_7C15),
             slots: RwLock::new(TaskSlots::default()),
             named_objects: Mutex::new(HashMap::new()),
             named_counters: Mutex::new(HashMap::new()),
+            resident: AtomicU64::new(0),
             metrics,
             tail: TailLatency::from_faults(
                 &self.faults,
@@ -162,13 +231,109 @@ impl KvStore {
             ),
         };
         arena.ensure_task_capacity(n_tasks);
-        Arc::new(arena)
+        let arena = Arc::new(arena);
+        self.registry.lock().unwrap().entries.push(RegEntry {
+            uid,
+            job: job.0,
+            arena: Arc::downgrade(&arena),
+            retired_seq: None,
+        });
+        arena
     }
 
     /// Tears down `job`'s pub/sub namespace (job complete). Keeps the
     /// broker bounded when many jobs stream through one shared store.
     pub fn remove_job_channels(&self, job: JobId) {
         self.pubsub.remove_job(job);
+    }
+
+    /// Retires `job`: stamps its arenas with the next retirement sequence
+    /// number (the deterministic eviction order) and tears down its
+    /// pub/sub namespace. The arenas' data stays resident — still
+    /// fetchable post-job — until [`KvStore::enforce_kv_budget`] evicts
+    /// it under byte-budget pressure. Idempotent.
+    pub fn retire(&self, job: JobId) {
+        {
+            let mut reg = self.registry.lock().unwrap();
+            for i in 0..reg.entries.len() {
+                if reg.entries[i].job == job.0 && reg.entries[i].retired_seq.is_none() {
+                    let seq = reg.next_retire_seq;
+                    reg.next_retire_seq += 1;
+                    reg.entries[i].retired_seq = Some(seq);
+                }
+            }
+        }
+        self.pubsub.remove_job(job);
+    }
+
+    /// Evicts retired arenas **oldest-finished-first** until the bytes
+    /// retained by *finished* jobs are at most `budget`; a budget of zero
+    /// additionally drains every retired arena (retain nothing). The
+    /// budget meters only retired arenas — running jobs' live
+    /// intermediates are never evicted and never count against it, so a
+    /// heavy in-flight job cannot force a finished tenant's retained
+    /// results out. Returns the evicted jobs in eviction order. Free in
+    /// virtual time (a DEL of finished intermediates is bookkeeping, not
+    /// data-path traffic).
+    pub fn enforce_kv_budget(&self, budget: u64) -> Vec<JobId> {
+        let mut evicted = Vec::new();
+        loop {
+            let victim = {
+                let mut reg = self.registry.lock().unwrap();
+                let mut retired_resident = 0u64;
+                let mut oldest: Option<usize> = None;
+                let mut oldest_seq = u64::MAX;
+                for (i, e) in reg.entries.iter().enumerate() {
+                    let Some(seq) = e.retired_seq else { continue };
+                    // The upgraded temp Arc is safe to drop under the
+                    // lock: `upgrade` succeeding means another strong
+                    // ref exists, so this can never run the arena's
+                    // Drop (which re-locks the registry).
+                    if let Some(arena) = e.arena.upgrade() {
+                        retired_resident =
+                            retired_resident.saturating_add(arena.resident_bytes());
+                    }
+                    if seq < oldest_seq {
+                        oldest_seq = seq;
+                        oldest = Some(i);
+                    }
+                }
+                match oldest {
+                    Some(i) if retired_resident > budget || budget == 0 => {
+                        Some(reg.entries.remove(i))
+                    }
+                    _ => None,
+                }
+            };
+            let Some(entry) = victim else {
+                return evicted; // retained bytes under budget, or only running jobs left
+            };
+            // Reclaim outside the registry lock: dropping the upgraded
+            // Arc here may run the arena's Drop, which re-locks the
+            // registry (finding its entry already gone).
+            if let Some(arena) = entry.arena.upgrade() {
+                arena.reclaim();
+                evicted.push(JobId(entry.job));
+            }
+        }
+    }
+
+    /// Total resident payload bytes across every attached arena (the
+    /// byte-budget ledger).
+    pub fn resident_kv_bytes(&self) -> u64 {
+        self.resident_total.load(Ordering::Relaxed)
+    }
+
+    /// Number of arenas currently in the registry (running + retired but
+    /// not yet evicted). Zero after every job has retired under a zero
+    /// byte budget — the substrate-emptiness invariant.
+    pub fn registered_arena_count(&self) -> usize {
+        self.registry.lock().unwrap().entries.len()
+    }
+
+    /// Number of live pub/sub job namespaces on the broker.
+    pub fn pubsub_namespace_count(&self) -> usize {
+        self.pubsub.namespace_count()
     }
 
     /// Number of shards (tests / reports).
@@ -185,6 +350,8 @@ impl KvStore {
 pub struct JobArena {
     store: Arc<KvStore>,
     job: JobId,
+    /// Registry identity (unique per attach, even for a reused `JobId`).
+    uid: u64,
     /// Mixed into shard routing so concurrent jobs spread over the NICs.
     shard_salt: u64,
     /// Dense task-output / fan-in-counter slots (the hot path).
@@ -193,6 +360,9 @@ pub struct JobArena {
     /// packed key word.
     named_objects: Mutex<HashMap<u64, DataObj>>,
     named_counters: Mutex<HashMap<u64, u64>>,
+    /// Resident payload bytes of this arena (dense slots + named map),
+    /// mirrored delta-wise into the cluster ledger.
+    resident: AtomicU64,
     metrics: Arc<MetricsHub>,
     /// Seeded heavy-tail latency injection (pass-through when benign),
     /// streamed per job for cross-job determinism.
@@ -241,9 +411,25 @@ impl JobArena {
         Duration::from_secs_f64(self.store.cfg.kv_latency_us * 1e-6)
     }
 
+    /// Mirrors a store/replace/evict into the arena's resident-byte
+    /// counter and the cluster ledger (delta accounting, so replacing an
+    /// object charges only the size difference).
+    fn account(&self, added: u64, removed: u64) {
+        if added > removed {
+            let d = added - removed;
+            self.resident.fetch_add(d, Ordering::Relaxed);
+            self.store.resident_total.fetch_add(d, Ordering::Relaxed);
+        } else if removed > added {
+            let d = removed - added;
+            self.resident.fetch_sub(d, Ordering::Relaxed);
+            self.store.resident_total.fetch_sub(d, Ordering::Relaxed);
+        }
+    }
+
     /// Writes `obj` into the slot / side map for `key` (no modeled cost).
     fn store_obj(&self, key: ObjectKey, obj: DataObj) {
-        match key.object_slot() {
+        let added = obj.bytes;
+        let removed = match key.object_slot() {
             Some(i) => {
                 // `take()` keeps the value re-armable across the (at most
                 // one) growth retry without moving out of a loop.
@@ -252,17 +438,36 @@ impl JobArena {
                     {
                         let slots = self.slots.read().unwrap();
                         if let Some(slot) = slots.objects.get(i) {
-                            *slot.lock().unwrap() = obj.take();
-                            return;
+                            let old = std::mem::replace(&mut *slot.lock().unwrap(), obj.take());
+                            break old.map_or(0, |o| o.bytes);
                         }
                     }
                     self.ensure_task_capacity(i + 1);
                 }
             }
-            None => {
-                self.named_objects.lock().unwrap().insert(key.raw(), obj);
-            }
+            None => self
+                .named_objects
+                .lock()
+                .unwrap()
+                .insert(key.raw(), obj)
+                .map_or(0, |o| o.bytes),
+        };
+        self.account(added, removed);
+    }
+
+    /// Drops this arena's slot storage and side maps, zeroing its entry
+    /// in the cluster's resident-byte ledger. Called by the eviction
+    /// policy on retired arenas; subsequent `get`s see missing objects.
+    fn reclaim(&self) -> u64 {
+        {
+            let mut w = self.slots.write().unwrap();
+            *w = TaskSlots::default();
         }
+        self.named_objects.lock().unwrap().clear();
+        self.named_counters.lock().unwrap().clear();
+        let freed = self.resident.swap(0, Ordering::Relaxed);
+        self.store.resident_total.fetch_sub(freed, Ordering::Relaxed);
+        freed
     }
 
     /// Reads the object for `key` (no modeled cost).
@@ -283,7 +488,7 @@ impl JobArena {
         let shard = self.shard_of(key);
         if !self.store.ideal {
             clock::sleep(self.tail.sample(self.latency())).await;
-            shard.nic.transfer_capped(bytes, client_bps).await;
+            shard.nic.transfer_capped_as(self.job, bytes, client_bps).await;
         }
         self.store_obj(key, obj);
         self.metrics
@@ -301,7 +506,10 @@ impl JobArena {
             })?;
         if !self.store.ideal {
             clock::sleep(self.tail.sample(self.latency())).await;
-            shard.nic.transfer_capped(obj.bytes, client_bps).await;
+            shard
+                .nic
+                .transfer_capped_as(self.job, obj.bytes, client_bps)
+                .await;
         }
         self.metrics
             .record_kv_op(KvOpKind::Read, obj.bytes, clock::now() - t0);
@@ -505,6 +713,39 @@ impl JobArena {
                 .values()
                 .map(|o| o.bytes)
                 .sum::<u64>()
+    }
+
+    /// Resident payload bytes per the delta-maintained counter (equals
+    /// [`JobArena::stored_bytes`]; O(1), and zero after eviction).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// Captures this arena's forensic state (rendered keys, counters,
+    /// resident bytes) — taken by the job service just before retirement
+    /// so post-mortem invariant checks survive budget eviction.
+    pub fn forensics(&self) -> ArenaForensics {
+        ArenaForensics {
+            object_keys: self.object_keys(),
+            counter_entries: self.counter_entries(),
+            resident_bytes: self.resident_bytes(),
+        }
+    }
+}
+
+impl Drop for JobArena {
+    fn drop(&mut self) {
+        // The last handle died without an explicit retire/evict (e.g. a
+        // single-job forensic run going out of scope): settle the ledger
+        // and deregister, so the shared cluster never counts dead bytes.
+        let freed = self.resident.swap(0, Ordering::Relaxed);
+        self.store.resident_total.fetch_sub(freed, Ordering::Relaxed);
+        self.store
+            .registry
+            .lock()
+            .unwrap()
+            .entries
+            .retain(|e| e.uid != self.uid);
     }
 }
 
@@ -802,5 +1043,119 @@ mod tests {
             let legacy = (key.shard_hash() % store.shard_count() as u64) as usize;
             assert!(std::ptr::eq(arena.shard_of(key), &store.shards[legacy]));
         }
+    }
+
+    #[test]
+    fn resident_ledger_tracks_stores_replaces_and_drops() {
+        crate::rt::run_virtual(async {
+            let store = KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()));
+            let a = store.arena(JobId(1), 4);
+            let b = store.arena(JobId(2), 4);
+            a.put(ObjectKey::output(TaskId(0)), DataObj::synthetic(100), 1e9)
+                .await;
+            a.put(ObjectKey::named("side"), DataObj::synthetic(50), 1e9)
+                .await;
+            b.put(ObjectKey::output(TaskId(0)), DataObj::synthetic(30), 1e9)
+                .await;
+            assert_eq!(a.resident_bytes(), 150);
+            assert_eq!(a.resident_bytes(), a.stored_bytes());
+            assert_eq!(store.resident_kv_bytes(), 180);
+            // Replacing an object charges only the delta.
+            a.put(ObjectKey::output(TaskId(0)), DataObj::synthetic(40), 1e9)
+                .await;
+            assert_eq!(a.resident_bytes(), 90);
+            assert_eq!(store.resident_kv_bytes(), 120);
+            assert_eq!(store.registered_arena_count(), 2);
+            // Dropping the last handle settles the ledger + registry.
+            drop(a);
+            assert_eq!(store.resident_kv_bytes(), 30);
+            assert_eq!(store.registered_arena_count(), 1);
+            drop(b);
+            assert_eq!(store.resident_kv_bytes(), 0);
+            assert_eq!(store.registered_arena_count(), 0);
+        });
+    }
+
+    #[test]
+    fn budget_eviction_is_oldest_finished_first_and_spares_running_jobs() {
+        crate::rt::run_virtual(async {
+            let store = KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()));
+            let a = store.arena(JobId(1), 2);
+            let b = store.arena(JobId(2), 2);
+            let c = store.arena(JobId(3), 2);
+            for (arena, bytes) in [(&a, 100u64), (&b, 100), (&c, 100)] {
+                arena
+                    .put(ObjectKey::output(TaskId(0)), DataObj::synthetic(bytes), 1e9)
+                    .await;
+            }
+            assert_eq!(store.resident_kv_bytes(), 300);
+
+            // Nothing retired yet: running jobs are never evicted, even
+            // far over budget.
+            assert!(store.enforce_kv_budget(0).is_empty());
+            assert_eq!(store.resident_kv_bytes(), 300);
+
+            // Retire 2 then 1 (retired bytes = 200; running job 3's 100
+            // bytes do NOT count against the budget). Budget 150 evicts
+            // exactly the OLDEST finished (job 2), not job 1.
+            store.retire(JobId(2));
+            store.retire(JobId(1));
+            assert_eq!(store.enforce_kv_budget(150), vec![JobId(2)]);
+            assert_eq!(store.resident_kv_bytes(), 200);
+            assert_eq!(b.resident_bytes(), 0);
+            assert_eq!(b.object_count(), 0);
+            assert_eq!(a.resident_bytes(), 100, "job 1 retained under budget");
+            // Retained (100) <= budget even though total resident (200,
+            // incl. the running job) exceeds it: re-enforcing changes
+            // nothing — live jobs are outside the budget.
+            assert!(store.enforce_kv_budget(150).is_empty());
+
+            // Budget 0 retains nothing: job 1 goes too; running job 3
+            // survives.
+            assert_eq!(store.enforce_kv_budget(0), vec![JobId(1)]);
+            assert_eq!(store.resident_kv_bytes(), 100);
+            assert_eq!(store.registered_arena_count(), 1);
+            assert!(c.peek_contains(ObjectKey::output(TaskId(0))));
+        });
+    }
+
+    #[test]
+    fn retire_is_idempotent_and_tears_down_channels() {
+        crate::rt::run_virtual(async {
+            let store = KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()));
+            let a = store.arena(JobId(7), 2);
+            let _sub = a.subscribe("wukong:final");
+            assert_eq!(store.pubsub_namespace_count(), 1);
+            store.retire(JobId(7));
+            store.retire(JobId(7)); // idempotent
+            assert_eq!(store.pubsub_namespace_count(), 0);
+            a.put(ObjectKey::output(TaskId(1)), DataObj::synthetic(8), 1e9)
+                .await;
+            assert_eq!(store.enforce_kv_budget(0), vec![JobId(7)]);
+            assert_eq!(store.registered_arena_count(), 0);
+            assert_eq!(store.resident_kv_bytes(), 0);
+        });
+    }
+
+    #[test]
+    fn forensics_snapshot_survives_eviction() {
+        crate::rt::run_virtual(async {
+            let store = KvStore::new(NetConfig::default(), Arc::new(MetricsHub::new()));
+            let a = store.arena(JobId(1), 4);
+            a.put(ObjectKey::output(TaskId(2)), DataObj::synthetic(64), 1e9)
+                .await;
+            a.incr(ObjectKey::counter(TaskId(3))).await;
+            let snap = a.forensics();
+            assert_eq!(snap.object_keys, vec!["out:2".to_string()]);
+            assert_eq!(snap.counter_entries, vec![("ctr:3".to_string(), 1)]);
+            assert_eq!(snap.resident_bytes, 64);
+            store.retire(JobId(1));
+            store.enforce_kv_budget(0);
+            // The live arena is empty, the snapshot is not.
+            assert_eq!(a.object_count(), 0);
+            assert_eq!(a.resident_bytes(), 0);
+            assert!(a.counter_entries().is_empty());
+            assert_eq!(snap.object_keys.len(), 1);
+        });
     }
 }

@@ -40,9 +40,16 @@ OPTIONS:
 SERVICE OPTIONS (multi-tenant: many jobs, one shared platform):
     --jobs <N>            number of jobs in the mix (default 12)
     --profile <uniform|poisson|burst>   arrival profile (default burst)
-    --admission <fifo|fair>             admission order (default fifo)
+    --admission <fifo|fair|priority>    admission order (default fifo)
     --max-concurrent <N>  concurrent-job slots (default 8)
     --queue-cap <N>       waiting jobs beyond this are shed (default 64)
+    --kv-budget <BYTES>   resident-KV byte budget for finished jobs'
+                          intermediates; oldest-finished arenas are
+                          evicted beyond it (default: unlimited)
+    --tenant-budget <USD> per-tenant dollar budget; over-budget tenants'
+                          jobs are shed (default: unlimited)
+    --nic <drr|fifo>      shard-NIC queueing discipline (default drr:
+                          per-job deficit-round-robin fairness)
 ";
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -78,6 +85,9 @@ struct Args {
     admission: String,
     max_concurrent: usize,
     queue_cap: usize,
+    kv_budget: u64,
+    tenant_budget: f64,
+    nic: String,
 }
 
 fn die(msg: &str) -> ! {
@@ -104,6 +114,9 @@ fn parse_args() -> Args {
     let mut admission = "fifo".to_string();
     let mut max_concurrent = 8usize;
     let mut queue_cap = 64usize;
+    let mut kv_budget = u64::MAX;
+    let mut tenant_budget = f64::INFINITY;
+    let mut nic = "drr".to_string();
     let mut i = 1;
     while i < argv.len() {
         let flag = argv[i].as_str();
@@ -143,6 +156,11 @@ fn parse_args() -> Args {
                 max_concurrent = val.parse().unwrap_or_else(|_| die("bad --max-concurrent"))
             }
             "--queue-cap" => queue_cap = val.parse().unwrap_or_else(|_| die("bad --queue-cap")),
+            "--kv-budget" => kv_budget = val.parse().unwrap_or_else(|_| die("bad --kv-budget")),
+            "--tenant-budget" => {
+                tenant_budget = val.parse().unwrap_or_else(|_| die("bad --tenant-budget"))
+            }
+            "--nic" => nic = val.clone(),
             f => die(&format!("unknown flag '{f}'")),
         }
         i += 2;
@@ -159,6 +177,9 @@ fn parse_args() -> Args {
         admission,
         max_concurrent,
         queue_cap,
+        kv_budget,
+        tenant_budget,
+        nic,
     }
 }
 
@@ -219,16 +240,24 @@ fn run_service_mode(args: &Args, cfg: &SimConfig) {
     let admission = match args.admission.as_str() {
         "fifo" => Admission::Fifo,
         "fair" => Admission::Fair,
+        "priority" => Admission::Priority,
         a => die(&format!("unknown admission '{a}'")),
     };
-    let mix = workloads::service_mix(args.jobs, args.seed, cfg);
+    let mut cfg = cfg.clone();
+    match args.nic.as_str() {
+        "drr" => cfg.net.nic_fair_queueing = true,
+        "fifo" => cfg.net.nic_fair_queueing = false,
+        n => die(&format!("unknown nic discipline '{n}'")),
+    }
+    let mix = workloads::service_mix(args.jobs, args.seed, &cfg);
     println!(
-        "service: {} jobs, profile={}, admission={}, max-concurrent={}, queue-cap={}, seed={}",
+        "service: {} jobs, profile={}, admission={}, max-concurrent={}, queue-cap={}, nic={}, seed={}",
         mix.len(),
         args.profile,
         args.admission,
         args.max_concurrent,
         args.queue_cap,
+        args.nic,
         args.seed,
     );
     let requests: Vec<JobRequest> = mix
@@ -236,21 +265,42 @@ fn run_service_mode(args: &Args, cfg: &SimConfig) {
         .map(|j| JobRequest {
             name: j.name,
             tenant: j.tenant,
+            priority: j.priority,
             seed: j.seed,
             dag: j.dag,
             policy: std::sync::Arc::new(WukongPolicy),
         })
         .collect();
-    let svc_cfg = ServiceConfig::new(cfg.clone(), args.seed)
+    let svc_cfg = ServiceConfig::new(cfg, args.seed)
         .with_profile(profile)
         .with_admission(admission)
-        .with_concurrency(args.max_concurrent, args.queue_cap);
+        .with_concurrency(args.max_concurrent, args.queue_cap)
+        .with_kv_budget(args.kv_budget)
+        .with_tenant_budget(args.tenant_budget);
     let report = run_service(svc_cfg, requests);
     for o in &report.outcomes {
         println!("{}", o.row());
     }
-    for (job, name) in &report.rejected {
-        println!("{job:<6} {name:<14} REJECTED (queue over cap)");
+    for s in &report.rejected {
+        println!(
+            "{:<6} t{:<2} p{:<2} {:<14} SHED ({})",
+            s.job.to_string(),
+            s.tenant,
+            s.priority,
+            s.name,
+            s.reason
+        );
+    }
+    for (tenant, usd) in &report.tenant_spend {
+        println!("tenant t{tenant}: spent ${usd:.5}");
+    }
+    if !report.evicted.is_empty() || report.resident_kv_bytes > 0 {
+        println!(
+            "kv governance: {} arenas evicted, {} bytes resident, {} arenas retained",
+            report.evicted.len(),
+            report.resident_kv_bytes,
+            report.registered_arenas
+        );
     }
     println!("{}", report.fleet_row());
 }

@@ -26,10 +26,10 @@ use crate::core::{mix64, FaultConfig, SimConfig, TaskId};
 use crate::dag::Dag;
 use crate::engine::policies::{PubSubPolicy, WukongPolicy};
 use crate::engine::service::{
-    run_service, ArrivalProfile, JobRequest, ServiceConfig, ServiceReport,
+    run_service, Admission, ArrivalProfile, JobRequest, ServiceConfig, ServiceReport, ShedReason,
 };
 use crate::engine::SchedulingPolicy;
-use crate::kvstore::JobArena;
+use crate::kvstore::ArenaForensics;
 use crate::sim::harness::{paper_policies, ModeKind, PolicyRun, SimHarness};
 use crate::sim::trace::first_divergence;
 use crate::workloads::random_dag::{random_dag, RandomDagSpec};
@@ -184,12 +184,17 @@ fn run_multi_job_service(seed: u64, jobs: usize) -> (Vec<Dag>, ServiceReport) {
             idle_ms: 50.0,
         })
         .with_concurrency(jobs, jobs.saturating_mul(2).max(1));
+    // Retain nothing after retirement: the oracle asserts the substrate
+    // is completely empty once every job has retired (per-job forensic
+    // checks run on the pre-retirement snapshots in each outcome).
+    let cfg = cfg.with_kv_budget(0);
     let requests: Vec<JobRequest> = job_seeds
         .iter()
         .enumerate()
         .map(|(i, &job_seed)| JobRequest {
             name: format!("mt{i}"),
             tenant: (i % 3) as u32,
+            priority: 0,
             seed: job_seed,
             dag: dags[i].clone(),
             policy: multi_job_policy(i).0,
@@ -263,7 +268,43 @@ pub fn multi_job_check(seed: u64, jobs: usize) -> Result<MultiJobReport, String>
                  run of the same seed (cross-job leakage)"
             ));
         }
-        check_substrate_state(&what, multi_job_policy(i).1, outcome.kv.as_ref(), &dags[i])?;
+        // Substrate invariants over the PRE-retirement snapshot (the
+        // live arena has been reclaimed by the zero byte budget).
+        check_substrate_view(&what, multi_job_policy(i).1, outcome.forensics.as_ref(), &dags[i])?;
+        // Post-retirement: the live arena must be fully reclaimed.
+        if let Some(kv) = &outcome.kv {
+            if kv.resident_bytes() != 0 || kv.object_count() != 0 {
+                return Err(format!(
+                    "{what}: RECLAMATION VIOLATED — {} resident bytes / {} objects survive \
+                     retirement under a zero byte budget",
+                    kv.resident_bytes(),
+                    kv.object_count()
+                ));
+            }
+        }
+    }
+
+    // The post-retirement substrate-emptiness invariant: with every job
+    // retired and a zero byte budget, the shared cluster must hold no
+    // resident bytes, no broker namespaces, and no registered arenas.
+    if report.resident_kv_bytes != 0 {
+        return Err(format!(
+            "seed {seed}: RECLAMATION VIOLATED — {} resident KV bytes after all jobs retired",
+            report.resident_kv_bytes
+        ));
+    }
+    if report.pubsub_namespaces != 0 {
+        return Err(format!(
+            "seed {seed}: TEARDOWN VIOLATED — {} pub/sub namespaces after all jobs retired",
+            report.pubsub_namespaces
+        ));
+    }
+    if report.registered_arenas != 0 {
+        return Err(format!(
+            "seed {seed}: RECLAMATION VIOLATED — {} arenas still registered after all jobs \
+             retired under a zero byte budget",
+            report.registered_arenas
+        ));
     }
 
     Ok(MultiJobReport {
@@ -275,6 +316,175 @@ pub fn multi_job_check(seed: u64, jobs: usize) -> Result<MultiJobReport, String>
             .iter()
             .map(|o| (o.name.clone(), o.latency().as_secs_f64()))
             .collect(),
+    })
+}
+
+/// Summary of one passing governance check.
+#[derive(Clone, Debug)]
+pub struct GovernanceReport {
+    pub seed: u64,
+    pub jobs: usize,
+    pub completed: usize,
+    /// Sheds by reason: (queue-full, preempted, budget).
+    pub shed: (usize, usize, usize),
+    /// Retired arenas evicted by the byte-budget policy.
+    pub evicted: usize,
+    pub makespan: f64,
+}
+
+/// Per-tenant dollar budget of the governance scenario.
+const GOV_TENANT_BUDGET: f64 = 0.02;
+
+/// Runs the governance scenario of `seed`: a prioritized, budgeted,
+/// tightly-capped service under chaos faults with DRR shard NICs and a
+/// zero KV byte budget.
+fn run_governance_service(seed: u64, jobs: usize) -> ServiceReport {
+    let job_seeds = multi_job_seeds(seed ^ 0x676F_7665_726E, jobs); // "govern"
+    let mut base = SimConfig::test();
+    base.seed = seed;
+    base.faas.warm_pool = 4;
+    base.faults = FaultConfig::chaos(seed ^ 0xC4A0_5C0D_E5EE_D5u64);
+    let cfg = ServiceConfig::new(base, seed)
+        .with_profile(ArrivalProfile::Bursts {
+            burst: 4,
+            intra_ms: 1.0,
+            idle_ms: 20.0,
+        })
+        .with_admission(Admission::Priority)
+        .with_concurrency(2, 3)
+        .with_kv_budget(0)
+        // Roughly a couple of random-DAG jobs' billed cost, so heavier
+        // seeds trip the per-tenant budget and lighter ones do not —
+        // the invariants below must hold either way.
+        .with_tenant_budget(GOV_TENANT_BUDGET);
+    let requests: Vec<JobRequest> = job_seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &job_seed)| JobRequest {
+            name: format!("gov{i}"),
+            tenant: (i % 3) as u32,
+            priority: (i % 4) as u8,
+            seed: job_seed,
+            dag: random_dag(&RandomDagSpec::value(job_seed)),
+            policy: multi_job_policy(i).0,
+        })
+        .collect();
+    run_service(cfg, requests)
+}
+
+/// The resource-governance oracle (the block-6 sweep): priority/budget
+/// admission, oldest-finished-first arena eviction, and DRR NIC fairness
+/// all active at once under chaos faults. Checks, for every seed:
+///
+/// * accounting closes — every job either completes successfully or is
+///   shed with a reason;
+/// * **post-retirement emptiness** — zero resident KV bytes, zero broker
+///   namespaces, zero registered arenas once every job has retired
+///   (budget 0 retains nothing);
+/// * eviction follows completion order (oldest-finished-first) and
+///   covers exactly the completed jobs;
+/// * budget sheds imply the tenant's ledger actually reached the budget;
+/// * the whole run — admissions, preemptions, evictions, ledger —
+///   replays byte-identically from its seed.
+pub fn governance_check(seed: u64) -> Result<GovernanceReport, String> {
+    let jobs = 10;
+    let report = run_governance_service(seed, jobs);
+
+    if report.completed() + report.rejected.len() != jobs {
+        return Err(format!(
+            "seed {seed}: {} completed + {} shed != {jobs} submitted",
+            report.completed(),
+            report.rejected.len()
+        ));
+    }
+    if !report.all_ok() {
+        return Err(format!("seed {seed}: a governed job failed"));
+    }
+
+    // Post-retirement substrate emptiness.
+    if report.resident_kv_bytes != 0
+        || report.pubsub_namespaces != 0
+        || report.registered_arenas != 0
+    {
+        return Err(format!(
+            "seed {seed}: substrate not empty after retirement: {} bytes, {} namespaces, \
+             {} arenas",
+            report.resident_kv_bytes, report.pubsub_namespaces, report.registered_arenas
+        ));
+    }
+
+    // Budget 0: exactly the completed jobs are evicted, and eviction
+    // follows completion order (oldest-finished-first; ties in virtual
+    // finish time are broken by retirement order, so compare the
+    // finish times, not the job ids).
+    let mut evicted_sorted = report.evicted.clone();
+    evicted_sorted.sort();
+    let mut completed_jobs: Vec<_> = report.outcomes.iter().map(|o| o.job).collect();
+    completed_jobs.sort();
+    if evicted_sorted != completed_jobs {
+        return Err(format!(
+            "seed {seed}: evicted {:?} != completed {completed_jobs:?} under budget 0",
+            evicted_sorted
+        ));
+    }
+    let finished_of = |job| {
+        report
+            .outcomes
+            .iter()
+            .find(|o| o.job == job)
+            .expect("evicted job completed")
+            .finished
+    };
+    if !report
+        .evicted
+        .windows(2)
+        .all(|w| finished_of(w[0]) <= finished_of(w[1]))
+    {
+        return Err(format!(
+            "seed {seed}: eviction order {:?} is not oldest-finished-first",
+            report.evicted
+        ));
+    }
+
+    // A budget shed requires the tenant's ledger to have reached the
+    // budget (0.02 in this scenario).
+    for s in report.rejected.iter().filter(|s| s.reason == ShedReason::Budget) {
+        let spent = report
+            .tenant_spend
+            .iter()
+            .find(|&&(t, _)| t == s.tenant)
+            .map_or(0.0, |&(_, usd)| usd);
+        if spent < GOV_TENANT_BUDGET {
+            return Err(format!(
+                "seed {seed}: {} shed for budget but tenant {} only spent {spent}",
+                s.job, s.tenant
+            ));
+        }
+    }
+
+    // Replay determinism over the full governance trace (includes shed
+    // reasons, evictions, and the tenant ledger).
+    let replay = run_governance_service(seed, jobs);
+    let (ta, tb) = (report.render_trace(), replay.render_trace());
+    if ta != tb {
+        let (line, left, right) = first_divergence(&ta, &tb).expect("traces differ");
+        return Err(format!(
+            "seed {seed}: governance replay diverges at trace line {line}:\n  run1: {left}\n  run2: {right}"
+        ));
+    }
+
+    let shed_count = |r: ShedReason| report.rejected.iter().filter(|s| s.reason == r).count();
+    Ok(GovernanceReport {
+        seed,
+        jobs,
+        completed: report.completed(),
+        shed: (
+            shed_count(ShedReason::QueueFull),
+            shed_count(ShedReason::Preempted),
+            shed_count(ShedReason::Budget),
+        ),
+        evicted: report.evicted.len(),
+        makespan: report.makespan.as_secs_f64(),
     })
 }
 
@@ -293,29 +503,31 @@ pub fn multi_job_determinism_check(seed: u64, jobs: usize) -> Result<(), String>
     Ok(())
 }
 
-/// Post-mortem substrate invariants per execution mode.
+/// Post-mortem substrate invariants per execution mode (single-job runs:
+/// the arena is live, so snapshot it here).
 fn check_substrate(seed: u64, run: &PolicyRun, dag: &Dag) -> Result<(), String> {
-    check_substrate_state(&format!("seed {seed}: {}", run.label), run.mode, run.kv.as_ref(), dag)
+    let view = run.kv.as_ref().map(|kv| kv.forensics());
+    check_substrate_view(&format!("seed {seed}: {}", run.label), run.mode, view.as_ref(), dag)
 }
 
-/// Mode-specific substrate invariants over a job's KV arena — shared by
-/// the single-job oracle ([`check_substrate`]) and the multi-job
-/// isolation oracle ([`multi_job_check`]), which applies them to every
-/// per-job arena of a shared-platform service run.
-fn check_substrate_state(
+/// Mode-specific substrate invariants over one job's forensic view —
+/// shared by the single-job oracle ([`check_substrate`], live arena) and
+/// the multi-job isolation oracle ([`multi_job_check`], pre-retirement
+/// snapshots: the live arenas are already budget-evicted there).
+fn check_substrate_view(
     what: &str,
     mode: ModeKind,
-    kv: Option<&Arc<JobArena>>,
+    view: Option<&ArenaForensics>,
     dag: &Dag,
 ) -> Result<(), String> {
     match mode {
         ModeKind::Serverful => {
-            if kv.is_some() {
+            if view.is_some() {
                 return Err(format!("{what} is serverful but returned a KV store"));
             }
         }
         ModeKind::Centralized => {
-            let kv = kv.ok_or_else(|| format!("{what} returned no KV store"))?;
+            let view = view.ok_or_else(|| format!("{what} returned no KV store"))?;
             // Every task output stored exactly once; no counters used.
             // The `format!` strings below are the *independent reference*
             // for the forensic key rendering: the store's packed keys must
@@ -328,18 +540,18 @@ fn check_substrate_state(
                 keys.sort();
                 keys
             };
-            if kv.object_keys() != expected {
+            if view.object_keys != expected {
                 return Err(format!(
                     "{what} stored objects {:?}, expected every task output",
-                    kv.object_keys()
+                    view.object_keys
                 ));
             }
-            if !kv.counter_entries().is_empty() {
+            if !view.counter_entries.is_empty() {
                 return Err(format!("{what} used fan-in counters in centralized mode"));
             }
         }
         ModeKind::Decentralized => {
-            let kv = kv.ok_or_else(|| format!("{what} returned no KV store"))?;
+            let view = view.ok_or_else(|| format!("{what} returned no KV store"))?;
             // Fan-in dependency counters end exactly at in-degree, and
             // exist only for fan-in tasks.
             let expected_counters: BTreeMap<String, u64> = dag
@@ -348,7 +560,7 @@ fn check_substrate_state(
                 .map(|t| (format!("ctr:{}", t.0), dag.in_degree(t) as u64))
                 .collect();
             let actual_counters: BTreeMap<String, u64> =
-                kv.counter_entries().into_iter().collect();
+                view.counter_entries.iter().cloned().collect();
             if actual_counters != expected_counters {
                 return Err(format!(
                     "{what} counters {actual_counters:?} != in-degrees {expected_counters:?}"
@@ -363,10 +575,10 @@ fn check_substrate_state(
                 .map(|t| format!("out:{}", t.0))
                 .collect();
             expected.sort();
-            if kv.object_keys() != expected {
+            if view.object_keys != expected {
                 return Err(format!(
                     "{what} stored {:?}, store-once rules imply {expected:?}",
-                    kv.object_keys()
+                    view.object_keys
                 ));
             }
         }
@@ -449,5 +661,14 @@ mod tests {
     #[test]
     fn multi_job_determinism_smoke_seed() {
         multi_job_determinism_check(0, 3).unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    #[test]
+    fn governance_smoke_seed() {
+        let r = governance_check(0).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(r.jobs, 10);
+        assert_eq!(r.completed + r.shed.0 + r.shed.1 + r.shed.2, 10);
+        assert_eq!(r.evicted, r.completed, "budget 0 evicts every job");
+        assert!(r.makespan > 0.0);
     }
 }

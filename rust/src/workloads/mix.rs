@@ -19,6 +19,9 @@ pub struct MixJob {
     pub name: String,
     /// Tenant the job belongs to.
     pub tenant: u32,
+    /// Admission priority (0–3, seeded), honored under
+    /// `Admission::Priority`; ignored by FIFO/fair admission.
+    pub priority: u8,
     /// Per-job simulation seed (jitter; also the random-DAG seed).
     pub seed: u64,
     pub dag: Dag,
@@ -39,12 +42,14 @@ pub fn service_mix(jobs: usize, seed: u64, cfg: &SimConfig) -> Vec<MixJob> {
         .map(|i| {
             let job_seed = rng.next_u64();
             let tenant = i as u32 % MIX_TENANTS;
+            let priority = rng.below(4) as u8;
             match i % 3 {
                 0 => {
                     let leaves = 64usize << rng.below(3); // 64 / 128 / 256
                     MixJob {
                         name: format!("tr-{leaves}"),
                         tenant,
+                        priority,
                         seed: job_seed,
                         dag: tree_reduction(leaves, 0.0, cfg),
                     }
@@ -52,6 +57,7 @@ pub fn service_mix(jobs: usize, seed: u64, cfg: &SimConfig) -> Vec<MixJob> {
                 1 => MixJob {
                     name: format!("rand-{}", job_seed % 1000),
                     tenant,
+                    priority,
                     seed: job_seed,
                     dag: random_dag(&RandomDagSpec::value(job_seed)),
                 },
@@ -60,6 +66,7 @@ pub fn service_mix(jobs: usize, seed: u64, cfg: &SimConfig) -> Vec<MixJob> {
                     MixJob {
                         name: format!("fanout-{width}"),
                         tenant,
+                        priority,
                         seed: job_seed,
                         dag: wide_fan_out(width),
                     }
@@ -95,6 +102,8 @@ mod tests {
             assert_eq!(x.name, y.name);
             assert_eq!(x.seed, y.seed);
             assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.priority, y.priority);
+            assert!(x.priority < 4);
             assert_eq!(x.dag.len(), y.dag.len());
         }
         // All three families appear, and tenants rotate.

@@ -369,3 +369,224 @@ fn deterministic_across_identical_runs() {
         assert_eq!(a.kv, b.kv, "seed {seed}");
     }
 }
+
+// ---------------------------------------------------------------------
+// Resource-governance properties (ISSUE 5): DRR NIC fairness, byte-budget
+// eviction determinism, and priority-shed ordering.
+
+use std::sync::Arc;
+use std::time::Duration;
+use wukong::core::JobId;
+use wukong::engine::policies::WukongPolicy;
+use wukong::engine::{
+    run_service, Admission, ArrivalProfile, JobRequest, ServiceConfig, ShedReason,
+};
+use wukong::kvstore::{Nic, DEFAULT_NIC_QUANTUM};
+
+/// Offered-load scenario on one NIC: `heavy` concurrent transfers from
+/// job 1 queued ahead of `light` transfers from job 2 (100 KB each at
+/// 1 MB/s => 0.1 s service time per transfer). Returns the virtual
+/// completion times (light job, heavy job).
+fn nic_contention(fair: bool, heavy: usize, light: usize) -> (Duration, Duration) {
+    wukong::rt::run_virtual(async move {
+        let nic = Nic::with_queueing(1e6, fair, DEFAULT_NIC_QUANTUM);
+        let t0 = wukong::rt::now();
+        let mut hogs = Vec::with_capacity(heavy);
+        for _ in 0..heavy {
+            let nic = nic.clone();
+            hogs.push(wukong::rt::spawn(async move {
+                nic.transfer_as(JobId(1), 100_000).await;
+            }));
+        }
+        wukong::rt::sleep(Duration::from_millis(1)).await;
+        let mut lights = Vec::with_capacity(light);
+        for _ in 0..light {
+            let nic = nic.clone();
+            lights.push(wukong::rt::spawn(async move {
+                nic.transfer_as(JobId(2), 100_000).await;
+            }));
+        }
+        for h in lights {
+            h.await;
+        }
+        let light_done = wukong::rt::now() - t0;
+        for h in hogs {
+            h.await;
+        }
+        (light_done, wukong::rt::now() - t0)
+    })
+}
+
+#[test]
+fn drr_bounds_light_tenant_completion_under_100_to_1_load() {
+    // Two jobs at 100:1 offered load. Under DRR the light tenant's
+    // completion must be bounded by (roughly) its own service demand
+    // times the number of contenders — NOT by the heavy backlog. The
+    // property sweeps a few backlog sizes: the FIFO/DRR completion-time
+    // ratio must stay large and DRR's light latency must stay flat as
+    // the hog grows.
+    let mut prev_drr_light = None;
+    for heavy in [100usize, 200] {
+        let (fifo_light, fifo_total) = nic_contention(false, heavy, 2);
+        let (drr_light, drr_total) = nic_contention(true, heavy, 2);
+        // FIFO: light waits behind the whole backlog (~heavy * 0.1 s).
+        assert!(
+            fifo_light >= Duration::from_secs_f64(heavy as f64 * 0.1),
+            "heavy={heavy}: FIFO light done at {fifo_light:?}"
+        );
+        // DRR: served within a handful of rotations, independent of the
+        // backlog depth (2 transfers x 2 quanta each, plus in-service).
+        assert!(
+            drr_light <= Duration::from_millis(1200),
+            "heavy={heavy}: DRR light done at {drr_light:?}"
+        );
+        let ratio = fifo_light.as_secs_f64() / drr_light.as_secs_f64();
+        assert!(ratio >= 10.0, "heavy={heavy}: isolation ratio only {ratio:.1}");
+        // Work conservation: the full backlog drains at the same time.
+        assert_eq!(fifo_total, drr_total, "heavy={heavy}");
+        if let Some(prev) = prev_drr_light {
+            assert_eq!(
+                prev, drr_light,
+                "DRR light latency must not grow with the hog's backlog"
+            );
+        }
+        prev_drr_light = Some(drr_light);
+    }
+}
+
+/// A small service mix with distinct per-job KV footprints, for the
+/// eviction-determinism property.
+fn eviction_service(seed: u64, budget: u64) -> wukong::engine::ServiceReport {
+    let jobs: Vec<JobRequest> = (0..6u32)
+        .map(|i| {
+            // Chains store only their sink: per-job resident footprint is
+            // the sink's output size, distinct per job.
+            let mut b = DagBuilder::new();
+            let a = b.add_task("a", Payload::Sleep { ms: 2.0 }, 8, &[]);
+            b.add_task("s", Payload::Sleep { ms: 2.0 }, 64 * (u64::from(i) + 1), &[a]);
+            JobRequest {
+                name: format!("e{i}"),
+                tenant: i % 2,
+                priority: 0,
+                seed: seed ^ u64::from(i),
+                dag: b.build().unwrap(),
+                policy: Arc::new(WukongPolicy),
+            }
+        })
+        .collect();
+    let cfg = ServiceConfig::new(SimConfig::test(), seed)
+        .with_profile(ArrivalProfile::Bursts {
+            burst: 6,
+            intra_ms: 0.0,
+            idle_ms: 0.0,
+        })
+        .with_concurrency(2, 16)
+        .with_kv_budget(budget);
+    run_service(cfg, jobs)
+}
+
+#[test]
+fn byte_budget_eviction_is_deterministic_and_honored_across_seeds() {
+    for seed in 0..8u64 {
+        for budget in [0u64, 100, 300, u64::MAX] {
+            let a = eviction_service(seed, budget);
+            let b = eviction_service(seed, budget);
+            assert_eq!(a.evicted, b.evicted, "seed {seed} budget {budget}");
+            assert_eq!(
+                a.render_trace(),
+                b.render_trace(),
+                "seed {seed} budget {budget}: replay diverged"
+            );
+            assert_eq!(a.completed(), 6, "seed {seed} budget {budget}");
+            if budget < u64::MAX {
+                // All jobs retired: retained finished bytes obey the cap.
+                assert!(
+                    a.resident_kv_bytes <= budget,
+                    "seed {seed}: {} resident > budget {budget}",
+                    a.resident_kv_bytes
+                );
+            }
+            // Eviction only ever removes finished jobs, oldest first.
+            let finished_of = |job: &JobId| {
+                a.outcomes.iter().find(|o| o.job == *job).unwrap().finished
+            };
+            assert!(
+                a.evicted.windows(2).all(|w| finished_of(&w[0]) <= finished_of(&w[1])),
+                "seed {seed} budget {budget}: {:?} not oldest-finished-first",
+                a.evicted
+            );
+            if budget == 0 {
+                assert_eq!(a.evicted.len(), 6, "budget 0 retains nothing");
+                assert_eq!(a.resident_kv_bytes, 0);
+                assert_eq!(a.registered_arenas, 0);
+                assert_eq!(a.pubsub_namespaces, 0);
+            }
+            if budget == u64::MAX {
+                assert!(a.evicted.is_empty(), "unlimited budget never evicts");
+            }
+        }
+    }
+}
+
+#[test]
+fn priority_shed_keeps_highest_priorities_across_seeds() {
+    // Property: under priority admission with a full queue, every shed
+    // job's priority is <= every completed job's priority among the jobs
+    // that were contending (here: all jobs arrive in one burst, so
+    // completed jobs other than the first-admitted must dominate the
+    // shed set).
+    for seed in 0..10u64 {
+        let mut rng = SplitMix64::new(seed ^ 0x505249);
+        let jobs: Vec<JobRequest> = (0..8u64)
+            .map(|i| {
+                let mut b = DagBuilder::new();
+                let a = b.add_task("a", Payload::Sleep { ms: 2.0 }, 8, &[]);
+                b.add_task("s", Payload::Sleep { ms: 2.0 }, 8, &[a]);
+                JobRequest {
+                    name: format!("p{i}"),
+                    tenant: 0,
+                    priority: rng.below(16) as u8,
+                    seed: i,
+                    dag: b.build().unwrap(),
+                    policy: Arc::new(WukongPolicy),
+                }
+            })
+            .collect();
+        let priorities: Vec<u8> = jobs.iter().map(|j| j.priority).collect();
+        let cfg = ServiceConfig::new(SimConfig::test(), seed)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 8,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_admission(Admission::Priority)
+            .with_concurrency(1, 2);
+        let report = run_service(cfg, jobs);
+        assert_eq!(report.completed() + report.rejected.len(), 8, "seed {seed}");
+        let max_shed = report
+            .rejected
+            .iter()
+            .map(|s| s.priority)
+            .max()
+            .unwrap_or(0);
+        // Completed jobs beyond the first-admitted (job1 took the free
+        // slot before any contention existed) must all dominate every
+        // shed priority.
+        for o in report.outcomes.iter().filter(|o| o.job != JobId(1)) {
+            assert!(
+                o.priority >= max_shed,
+                "seed {seed} (priorities {priorities:?}): {} (p{}) completed while p{} was shed",
+                o.name,
+                o.priority,
+                max_shed
+            );
+        }
+        for s in &report.rejected {
+            assert!(
+                matches!(s.reason, ShedReason::QueueFull | ShedReason::Preempted),
+                "seed {seed}: unexpected reason {:?}",
+                s.reason
+            );
+        }
+    }
+}

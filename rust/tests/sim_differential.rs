@@ -14,7 +14,8 @@
 //! `wukong::sim::differential_check(<seed from the log>)`.
 
 use wukong::sim::{
-    determinism_check, differential_check, multi_job_check, multi_job_determinism_check,
+    determinism_check, differential_check, governance_check, multi_job_check,
+    multi_job_determinism_check,
 };
 
 const BLOCK_SIZE: u64 = 10;
@@ -23,6 +24,10 @@ const TOTAL_SEEDS: u64 = 50;
 /// deeper multi-tenant sweep and skips the single-job oracle (blocks 0–4
 /// cover those seeds).
 const MULTI_JOB_BLOCK: u64 = 5;
+/// The dedicated resource-governance CI block
+/// (`WUKONG_SIM_SEED_BLOCK=6`): sweeps the priority/budget/eviction/DRR
+/// oracle and skips the single-job and multi-job sweeps.
+const GOVERNANCE_BLOCK: u64 = 6;
 
 fn seed_block() -> Option<u64> {
     std::env::var("WUKONG_SIM_SEED_BLOCK").ok().map(|block| {
@@ -33,10 +38,10 @@ fn seed_block() -> Option<u64> {
 }
 
 /// Seeds selected by `WUKONG_SIM_SEED_BLOCK` (all 50 when unset; empty
-/// for the dedicated multi-job block).
+/// for the dedicated multi-job and governance blocks).
 fn seed_range() -> std::ops::Range<u64> {
     match seed_block() {
-        Some(MULTI_JOB_BLOCK) => 0..0,
+        Some(MULTI_JOB_BLOCK) | Some(GOVERNANCE_BLOCK) => 0..0,
         Some(k) => {
             let lo = k * BLOCK_SIZE;
             assert!(lo < TOTAL_SEEDS, "block {k} out of range");
@@ -52,8 +57,19 @@ fn seed_range() -> std::ops::Range<u64> {
 fn multi_job_seeds() -> Vec<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) => (50..58).collect(),
+        Some(GOVERNANCE_BLOCK) => vec![],
         Some(k) => vec![k * BLOCK_SIZE],
         None => vec![0, 25],
+    }
+}
+
+/// Governance scenario seeds: block 6 sweeps eight; a local run samples
+/// one; the other blocks skip (they have their own sweeps).
+fn governance_seeds() -> Vec<u64> {
+    match seed_block() {
+        Some(GOVERNANCE_BLOCK) => (60..68).collect(),
+        Some(_) => vec![],
+        None => vec![60],
     }
 }
 
@@ -118,6 +134,32 @@ fn concurrent_jobs_match_isolated_runs_over_one_shared_platform() {
                 .map(|(n, s)| format!("{n}={s:.2}s"))
                 .collect::<Vec<_>>()
                 .join(" ")
+        );
+    }
+}
+
+#[test]
+fn governance_invariants_hold_under_priority_budget_and_eviction() {
+    // The resource-governance oracle (ISSUE 5): priority admission with
+    // queued-only preemption, a per-tenant dollar budget, a zero KV byte
+    // budget (retire reclaims everything), and DRR shard NICs — under
+    // chaos faults. Every seed must close its accounting, leave the
+    // substrate empty post-retirement, evict oldest-finished-first, and
+    // replay byte-identically.
+    for seed in governance_seeds() {
+        let report = governance_check(seed).unwrap_or_else(|e| {
+            panic!("governance oracle failed — reproduce with wukong::sim::governance_check({seed}): {e}")
+        });
+        println!(
+            "governance seed {:>3}: {}/{} completed, shed q={} p={} b={}, {} evicted, makespan {:.2}s",
+            report.seed,
+            report.completed,
+            report.jobs,
+            report.shed.0,
+            report.shed.1,
+            report.shed.2,
+            report.evicted,
+            report.makespan,
         );
     }
 }
