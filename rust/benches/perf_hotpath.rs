@@ -296,6 +296,62 @@ fn main() {
         },
     );
 
+    // --- locality: clustered fan-out, bytes-moved before vs after ------
+    // The same width-10k fan-out but with a 1 MiB root object. "remote"
+    // is the locality-free baseline: the root's output is published once
+    // and fetched 10_000 times over the NICs (~9.8 GiB of payload).
+    // "local" clusters the whole fan-out on the producing executor
+    // (min_local_bytes=0, unbounded cluster width and delay budget): the
+    // children read the object from the executor-local cache, every
+    // consumer is local, and the KV publish is skipped entirely. Both
+    // wall-clock rows land in the JSON; the *traffic win* is the printed
+    // net-bytes pair, asserted strictly smaller on the local arm.
+    let wide_fat = {
+        let mut b = DagBuilder::new();
+        let root = b.add_task("root", Payload::Noop, 1 << 20, &[]);
+        let mids: Vec<_> = (0..10_000)
+            .map(|i| b.add_task(format!("m{i}"), Payload::Noop, 8, &[root]))
+            .collect();
+        b.add_task("sink", Payload::Noop, 8, &mids);
+        b.build().expect("FO-10k-local DAG")
+    };
+    let mut remote_bytes = 0u64;
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/FO-10k-remote ({n_wide} tasks)"),
+        n_wide,
+        iters(2),
+        || {
+            let (cfg, dag) = (cfg.clone(), wide_fat.clone());
+            let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+            assert!(r.is_ok());
+            remote_bytes = r.net_bytes_moved;
+        },
+    );
+    let local_cfg = {
+        let mut c = cfg.clone().with_locality(0, 10_000);
+        c.locality.delay_budget_ms = f64::INFINITY;
+        c
+    };
+    let mut local_bytes = 0u64;
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/FO-10k-local ({n_wide} tasks)"),
+        n_wide,
+        iters(2),
+        || {
+            let (cfg, dag) = (local_cfg.clone(), wide_fat.clone());
+            let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+            assert!(r.is_ok());
+            local_bytes = r.net_bytes_moved;
+        },
+    );
+    println!("    FO-10k net bytes moved: remote={remote_bytes} local={local_bytes}");
+    assert!(
+        local_bytes < remote_bytes,
+        "clustered fan-out must move fewer payload bytes ({local_bytes} !< {remote_bytes})"
+    );
+
     // 1M-task tree reduction: the full executor + KV hot path at the
     // ROADMAP's million-scale target (2^20 elements -> 2^20 - 1 tasks).
     let tr1m = workloads::tree_reduction(1 << 20, 0.0, &cfg);
@@ -335,6 +391,71 @@ fn main() {
         mt32_tasks,
         iters(2),
         || run_mt(32, &tr64, &cfg),
+    );
+
+    // --- service-mix fleet traffic: locality off vs on ------------------
+    // The heterogeneous 12-job service mix (tree reductions, random
+    // value DAGs, wide fan-outs) through the JobService, with the fleet's
+    // total NIC payload bytes summed across jobs. The "local" arm turns
+    // locality on for every job (threshold 0, wide clusters) and must
+    // strictly shrink fleet traffic — fan-out jobs skip publishes, and
+    // become-chains reuse cached objects.
+    let mix_tasks: usize = workloads::service_mix(12, 7, &cfg)
+        .iter()
+        .map(|j| j.dag.len())
+        .sum();
+    let run_mix = |cfg: &SimConfig| -> u64 {
+        let mix = workloads::service_mix(12, 7, cfg);
+        let requests: Vec<JobRequest> = mix
+            .into_iter()
+            .map(|j| JobRequest {
+                name: j.name,
+                tenant: j.tenant,
+                priority: j.priority,
+                seed: j.seed,
+                dag: j.dag,
+                policy: Arc::new(WukongPolicy),
+            })
+            .collect();
+        let svc = ServiceConfig::new(cfg.clone(), 1)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: requests.len(),
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_concurrency(16, 64);
+        let report = run_service(svc, requests);
+        assert_eq!(report.completed(), 12);
+        assert!(report.all_ok());
+        report.total_net_bytes()
+    };
+    let mut mix_remote_bytes = 0u64;
+    bench_case_cold(
+        &mut rows,
+        "wukong/MT-mix12-remote (12 jobs)",
+        mix_tasks,
+        iters(2),
+        || mix_remote_bytes = run_mix(&cfg),
+    );
+    let mix_local_cfg = {
+        let mut c = cfg.clone().with_locality(0, 64);
+        c.locality.delay_budget_ms = f64::INFINITY;
+        c
+    };
+    let mut mix_local_bytes = 0u64;
+    bench_case_cold(
+        &mut rows,
+        "wukong/MT-mix12-local (12 jobs)",
+        mix_tasks,
+        iters(2),
+        || mix_local_bytes = run_mix(&mix_local_cfg),
+    );
+    println!(
+        "    MT-mix12 ({mix_tasks} tasks) fleet net bytes: remote={mix_remote_bytes} local={mix_local_bytes}"
+    );
+    assert!(
+        mix_local_bytes < mix_remote_bytes,
+        "fleet-wide locality must move fewer payload bytes ({mix_local_bytes} !< {mix_remote_bytes})"
     );
 
     // --- nic: cross-job fairness, before vs after ----------------------

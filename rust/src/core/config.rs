@@ -244,6 +244,10 @@ pub struct WukongConfig {
     /// If true, task outputs are *not* written to / read from the KV store
     /// (zero-size transfers) — the "ideal storage" variant of Fig. 10.
     pub ideal_storage: bool,
+    /// Byte capacity of each executor's local cache. Inserting past the
+    /// bound evicts the oldest unpinned entries first. `u64::MAX`
+    /// (default) is unbounded — bit-identical to the pre-bounded cache.
+    pub cache_capacity_bytes: u64,
 }
 
 impl Default for WukongConfig {
@@ -254,7 +258,65 @@ impl Default for WukongConfig {
             proxy_invokers: 64,
             local_cache: true,
             ideal_storage: false,
+            cache_capacity_bytes: u64::MAX,
         }
+    }
+}
+
+/// Locality-enhanced scheduling knobs (the journal follow-up's task
+/// clustering: run a child on the executor that just produced its input
+/// instead of shipping the bytes through the KV cluster). **Off by
+/// default** — with `enabled = false` every code path is bit-identical
+/// to the locality-free engine; the differential oracle sweeps these
+/// knobs explicitly.
+#[derive(Clone, Debug)]
+pub struct LocalityConfig {
+    /// Master switch. Locality additionally requires the executor local
+    /// cache (`WukongConfig::local_cache`) — see
+    /// [`SimConfig::locality_active`].
+    pub enabled: bool,
+    /// A fan-out clusters (keeps children on the producing executor) only
+    /// when the produced object is at least this many bytes. `0` clusters
+    /// every fan-out; `u64::MAX` effectively disables clustering while
+    /// leaving the locality machinery armed (the sweep's upper arm).
+    pub min_local_bytes: u64,
+    /// How many children of a clustered fan-out run in place on the
+    /// producing executor (the become-child counts as one of them); the
+    /// remainder is invoked/delegated as usual. Clamped to `>= 1` and to
+    /// the fan-out width, and further capped by the delay budget.
+    pub cluster_width: usize,
+    /// Delay-scheduling budget, ms: each in-place child beyond the
+    /// become-child serializes on the producer and defers the remainder
+    /// of the fan-out, but saves one invocation API round
+    /// (`FaasConfig::invoke_latency_ms`). The budget caps the extra
+    /// in-place children at `delay_budget_ms / invoke_latency_ms`, so a
+    /// cluster never delays its remote remainder by more than roughly
+    /// this much invocation-equivalent work.
+    pub delay_budget_ms: f64,
+}
+
+impl Default for LocalityConfig {
+    fn default() -> Self {
+        LocalityConfig {
+            enabled: false,
+            min_local_bytes: 64 * 1024,
+            cluster_width: 4,
+            delay_budget_ms: 150.0,
+        }
+    }
+}
+
+impl LocalityConfig {
+    /// The in-place child count for a fan-out of `width` out-edges:
+    /// `cluster_width`, capped by the delay budget (one extra in-place
+    /// child per `invoke_latency_ms` of budget) and clamped to
+    /// `1..=width`.
+    pub fn cluster_k(&self, width: usize, faas: &FaasConfig) -> usize {
+        let per_child_ms = faas.invoke_latency_ms.max(1e-9);
+        let by_budget = 1usize.saturating_add(
+            (self.delay_budget_ms.max(0.0) / per_child_ms).min(usize::MAX as f64) as usize,
+        );
+        self.cluster_width.min(by_budget).clamp(1, width.max(1))
     }
 }
 
@@ -360,6 +422,8 @@ pub struct SimConfig {
     pub net: NetConfig,
     pub wukong: WukongConfig,
     pub compute: ComputeConfig,
+    /// Locality-enhanced scheduling knobs (off by default).
+    pub locality: LocalityConfig,
     /// Fault-injection profile (benign by default).
     pub faults: FaultConfig,
     /// Seed for all simulation randomness.
@@ -384,6 +448,24 @@ impl SimConfig {
     pub fn with_faults(mut self, faults: FaultConfig) -> Self {
         self.faults = faults;
         self
+    }
+
+    /// Enables locality-enhanced scheduling with the given clustering
+    /// threshold and in-place width (other locality knobs keep their
+    /// defaults).
+    pub fn with_locality(mut self, min_local_bytes: u64, cluster_width: usize) -> Self {
+        self.locality.enabled = true;
+        self.locality.min_local_bytes = min_local_bytes;
+        self.locality.cluster_width = cluster_width;
+        self
+    }
+
+    /// True when locality-enhanced scheduling is actually in effect:
+    /// the knob is on **and** the executor local cache exists (in-place
+    /// children read their dependency from it; without the cache the
+    /// skip-publish rule would drop objects nobody can recover).
+    pub fn locality_active(&self) -> bool {
+        self.locality.enabled && self.wukong.local_cache
     }
 }
 
@@ -416,5 +498,50 @@ mod tests {
     fn cluster_profiles() {
         assert_eq!(ClusterProfile::ec2().total_workers(), 25);
         assert_eq!(ClusterProfile::laptop().total_workers(), 4);
+    }
+
+    #[test]
+    fn locality_defaults_are_off_and_inert() {
+        let c = SimConfig::default();
+        assert!(!c.locality.enabled);
+        assert!(!c.locality_active());
+        assert_eq!(c.wukong.cache_capacity_bytes, u64::MAX);
+        let c = SimConfig::test().with_locality(0, 4);
+        assert!(c.locality_active());
+        assert_eq!(c.locality.min_local_bytes, 0);
+        // Locality without the local cache is inert: in-place children
+        // could not read their input anywhere.
+        let mut c = c;
+        c.wukong.local_cache = false;
+        assert!(!c.locality_active());
+    }
+
+    #[test]
+    fn cluster_k_respects_width_and_delay_budget() {
+        let faas = FaasConfig::default(); // invoke_latency_ms = 50
+        let loc = LocalityConfig {
+            enabled: true,
+            min_local_bytes: 0,
+            cluster_width: 8,
+            delay_budget_ms: 150.0, // 1 + 150/50 = 4 in-place children max
+        };
+        assert_eq!(loc.cluster_k(100, &faas), 4, "budget caps the width");
+        assert_eq!(loc.cluster_k(2, &faas), 2, "never exceeds the fan-out");
+        assert_eq!(loc.cluster_k(1, &faas), 1);
+        let wide = LocalityConfig {
+            delay_budget_ms: f64::INFINITY,
+            cluster_width: usize::MAX,
+            ..loc
+        };
+        assert_eq!(wide.cluster_k(10_000, &faas), 10_000, "uncapped covers all");
+        let zero_budget = LocalityConfig {
+            delay_budget_ms: 0.0,
+            ..wide
+        };
+        assert_eq!(
+            zero_budget.cluster_k(10_000, &faas),
+            1,
+            "zero budget keeps only the become-child local"
+        );
     }
 }

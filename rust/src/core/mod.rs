@@ -11,7 +11,8 @@ pub mod rng;
 pub use bytes::{ByteSize, GB, KB, MB};
 pub use clock::{now, sleep, Clock, SimInstant};
 pub use config::{
-    ClusterProfile, ComputeConfig, FaasConfig, FaultConfig, NetConfig, SimConfig, WukongConfig,
+    ClusterProfile, ComputeConfig, FaasConfig, FaultConfig, LocalityConfig, NetConfig, SimConfig,
+    WukongConfig,
 };
 pub use error::{EngineError, EngineResult};
 pub use ids::{ExecutorId, JobId, KeyKind, ObjectKey, TaskId};

@@ -57,8 +57,12 @@ pub(crate) async fn run(
     let t0 = clock::now();
     let schedules = Arc::new(schedule::generate(&dag));
     // Lower the schedules into the dense per-task tables the executor hot
-    // loop walks, with the policy deciding each fan-out's invoker.
-    let lowered = LoweredOps::lower_with(&dag, |width| policy.fan_out(width, cfg));
+    // loop walks, with the policy deciding each fan-out's invoker. The
+    // rule sees the produced object's size, so size-aware (locality)
+    // policies can keep a large output's children on its producer.
+    let lowered = LoweredOps::lower_with_task(&dag, |t, width| {
+        policy.fan_out_sized(width, dag.task(t).output_bytes, cfg)
+    });
     let ctx = WukongCtx::with_job(
         job,
         Arc::clone(&dag),

@@ -101,6 +101,43 @@ impl SchedulingPolicy for FanOutThresholdPolicy {
     }
 }
 
+/// Locality-enhanced WUKONG with explicit clustering knobs, independent
+/// of `SimConfig::locality` — the sweep arm of the differential oracle
+/// and of locality benches. Fan-outs whose produced object is at least
+/// `min_local_bytes` cluster up to `cluster_width` children on the
+/// producing executor (no delay-budget cap: the knobs given here are
+/// exactly the knobs applied); everything else follows WUKONG's
+/// threshold rule.
+pub struct LocalityWukongPolicy {
+    pub min_local_bytes: u64,
+    pub cluster_width: usize,
+}
+
+impl SchedulingPolicy for LocalityWukongPolicy {
+    fn label(&self) -> String {
+        format!(
+            "WUKONG (local>={}B,k={})",
+            self.min_local_bytes, self.cluster_width
+        )
+    }
+    fn mode(&self, cfg: &SimConfig) -> ExecutionMode {
+        ExecutionMode::Decentralized(DecentralizedSpec {
+            num_invokers: cfg.wukong.num_invokers.max(1),
+        })
+    }
+    fn fan_out_sized(&self, width: usize, output_bytes: u64, cfg: &SimConfig) -> FanOutAction {
+        // The local cache is the mechanism locality rides on; without it
+        // an in-place child could not read its dependency anywhere.
+        if cfg.wukong.local_cache && output_bytes >= self.min_local_bytes {
+            FanOutAction::Cluster {
+                k: self.cluster_width.clamp(1, width) as u32,
+            }
+        } else {
+            self.fan_out(width, cfg)
+        }
+    }
+}
+
 /// Paper §V: the serverful Dask-distributed baseline on a fixed cluster.
 pub struct ServerfulDaskPolicy {
     pub profile: ClusterProfile,
@@ -182,5 +219,32 @@ mod tests {
         };
         assert_eq!(never.fan_out(1 << 20, &cfg), FanOutAction::Invoke);
         assert!(always.label().contains("fanout"));
+    }
+
+    #[test]
+    fn locality_policy_clusters_by_size_regardless_of_config() {
+        let cfg = SimConfig::test(); // cfg.locality disabled
+        let p = LocalityWukongPolicy {
+            min_local_bytes: 1024,
+            cluster_width: 4,
+        };
+        assert!(matches!(p.mode(&cfg), ExecutionMode::Decentralized(_)));
+        // Small objects fan out via the plain threshold rule…
+        assert_eq!(p.fan_out_sized(6, 8, &cfg), FanOutAction::Invoke);
+        assert_eq!(p.fan_out_sized(100, 8, &cfg), FanOutAction::Delegate);
+        // …large ones cluster, clamped to the width.
+        assert_eq!(
+            p.fan_out_sized(6, 4096, &cfg),
+            FanOutAction::Cluster { k: 4 }
+        );
+        assert_eq!(
+            p.fan_out_sized(2, 4096, &cfg),
+            FanOutAction::Cluster { k: 2 }
+        );
+        // Disabling the local cache disarms the policy too.
+        let mut no_cache = SimConfig::test();
+        no_cache.wukong.local_cache = false;
+        assert_eq!(p.fan_out_sized(6, 4096, &no_cache), FanOutAction::Invoke);
+        assert!(p.label().contains("local>="));
     }
 }

@@ -90,6 +90,28 @@ pub trait SchedulingPolicy: 'static {
     fn fan_out(&self, width: usize, cfg: &SimConfig) -> FanOutAction {
         FanOutAction::threshold_rule(width, cfg.wukong.max_task_fanout)
     }
+
+    /// The locality dimension: the action at a fan-out with `width`
+    /// out-edges whose produced object is `output_bytes` large. This is
+    /// what lowering actually consults (`LoweredOps::lower_with_task`),
+    /// so a policy may keep large outputs' children on the producing
+    /// executor while letting small ones fan out freely.
+    ///
+    /// Default: when `cfg.locality` is active and the object meets
+    /// `min_local_bytes`, cluster `LocalityConfig::cluster_k` children
+    /// in place; otherwise fall through to the width-only
+    /// [`fan_out`](Self::fan_out) rule — with locality disabled (the
+    /// default config) this is bit-identical to the locality-free
+    /// engine.
+    fn fan_out_sized(&self, width: usize, output_bytes: u64, cfg: &SimConfig) -> FanOutAction {
+        if cfg.locality_active() && output_bytes >= cfg.locality.min_local_bytes {
+            FanOutAction::Cluster {
+                k: cfg.locality.cluster_k(width, &cfg.faas) as u32,
+            }
+        } else {
+            self.fan_out(width, cfg)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -114,5 +136,50 @@ mod tests {
         assert_eq!(p.fan_out(9, &cfg), FanOutAction::Invoke);
         assert_eq!(p.fan_out(10, &cfg), FanOutAction::Delegate);
         assert_eq!(p.fan_out(1000, &cfg), FanOutAction::Delegate);
+    }
+
+    #[test]
+    fn sized_rule_is_inert_while_locality_is_off() {
+        // The PR-5 pin: with the default (disabled) locality config the
+        // size-aware hook must be the width-only rule, for every width
+        // and every object size — lowering tables, and therefore runs,
+        // stay bit-identical to the locality-free engine.
+        let cfg = SimConfig::test();
+        let p = DefaultFanOut;
+        for width in [2usize, 9, 10, 1000] {
+            for bytes in [0u64, 8, 1 << 20, u64::MAX] {
+                assert_eq!(
+                    p.fan_out_sized(width, bytes, &cfg),
+                    p.fan_out(width, &cfg),
+                    "width {width}, {bytes} bytes"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sized_rule_clusters_large_objects_only() {
+        let mut cfg = SimConfig::test().with_locality(1024, 4);
+        cfg.locality.delay_budget_ms = f64::INFINITY;
+        let p = DefaultFanOut;
+        // Small object: plain threshold rule.
+        assert_eq!(p.fan_out_sized(6, 8, &cfg), FanOutAction::Invoke);
+        assert_eq!(p.fan_out_sized(100, 8, &cfg), FanOutAction::Delegate);
+        // Large object: cluster, k capped by width and cluster_width.
+        assert_eq!(
+            p.fan_out_sized(6, 4096, &cfg),
+            FanOutAction::Cluster { k: 4 }
+        );
+        assert_eq!(
+            p.fan_out_sized(3, 4096, &cfg),
+            FanOutAction::Cluster { k: 3 }
+        );
+        // min_local_bytes = MAX disarms clustering even when enabled.
+        cfg.locality.min_local_bytes = u64::MAX;
+        assert_eq!(p.fan_out_sized(6, 4096, &cfg), FanOutAction::Invoke);
+        // Locality without the local cache is inert.
+        cfg.locality.min_local_bytes = 0;
+        cfg.wukong.local_cache = false;
+        assert_eq!(p.fan_out_sized(6, 4096, &cfg), FanOutAction::Invoke);
     }
 }

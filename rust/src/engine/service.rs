@@ -388,10 +388,17 @@ impl ServiceReport {
         lats[idx]
     }
 
+    /// Payload bytes the whole fleet moved over the network (sum of the
+    /// per-job traffic ledgers) — the number locality-enhanced scheduling
+    /// shrinks at service scale.
+    pub fn total_net_bytes(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.report.net_bytes_moved).sum()
+    }
+
     /// Fleet summary row.
     pub fn fleet_row(&self) -> String {
         format!(
-            "fleet: {} completed, {} rejected | makespan {:.3}s | p50 lat {:.3}s, p99 lat {:.3}s | lambdas={} cold_share={:.1}% | peak_conc={} | billed={:.1}s cost=${:.4}",
+            "fleet: {} completed, {} rejected | makespan {:.3}s | p50 lat {:.3}s, p99 lat {:.3}s | lambdas={} cold_share={:.1}% | peak_conc={} | net_bytes={} | billed={:.1}s cost=${:.4}",
             self.completed(),
             self.rejected.len(),
             self.makespan.as_secs_f64(),
@@ -400,6 +407,7 @@ impl ServiceReport {
             self.total_lambdas(),
             self.cold_start_share() * 100.0,
             self.peak_concurrency,
+            self.total_net_bytes(),
             self.total_billed().as_secs_f64(),
             self.fleet_cost_usd,
         )
@@ -411,13 +419,14 @@ impl ServiceReport {
     pub fn render_trace(&self) -> String {
         let mut out = String::with_capacity(128 + self.outcomes.len() * 160);
         out.push_str(&format!(
-            "service completed={} rejected={} makespan_ns={} peak_conc={} lambdas={} cold={}\n",
+            "service completed={} rejected={} makespan_ns={} peak_conc={} lambdas={} cold={} net_bytes={}\n",
             self.completed(),
             self.rejected.len(),
             self.makespan.as_nanos(),
             self.peak_concurrency,
             self.total_lambdas(),
             self.total_cold_starts(),
+            self.total_net_bytes(),
         ));
         for s in &self.rejected {
             out.push_str(&format!(

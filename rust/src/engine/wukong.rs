@@ -106,6 +106,48 @@ mod tests {
     }
 
     #[test]
+    fn locality_clusters_reduce_network_traffic() {
+        // A 1 MiB root fanning out to 8 tiny children: without locality
+        // the root's output is published once and fetched 8 times
+        // (~9 MiB over the NICs); with the whole fan-out clustered on the
+        // producer the root's output never leaves its executor.
+        fn wide() -> Dag {
+            let mut b = DagBuilder::new();
+            let root = b.add_task("root", Payload::Noop, 1 << 20, &[]);
+            let mids: Vec<_> = (0..8)
+                .map(|i| b.add_task(format!("m{i}"), Payload::Noop, 8, &[root]))
+                .collect();
+            b.add_task("sink", Payload::Noop, 8, &mids);
+            b.build().unwrap()
+        }
+        let base = crate::engine::run_sim(async {
+            let dag = wide();
+            WukongEngine::new(SimConfig::test()).run(&dag).await
+        });
+        let local = crate::engine::run_sim(async {
+            let dag = wide();
+            let mut cfg = SimConfig::test().with_locality(0, 8);
+            cfg.locality.delay_budget_ms = f64::INFINITY;
+            WukongEngine::new(cfg).run(&dag).await
+        });
+        assert!(base.is_ok() && local.is_ok());
+        assert_eq!(base.tasks_executed, 10);
+        assert_eq!(local.tasks_executed, 10);
+        assert!(
+            local.net_bytes_moved < base.net_bytes_moved / 4,
+            "locality {} !<< baseline {}",
+            local.net_bytes_moved,
+            base.net_bytes_moved
+        );
+        assert!(
+            local.lambdas_invoked < base.lambdas_invoked,
+            "in-place children must not cost invocations ({} !< {})",
+            local.lambdas_invoked,
+            base.lambdas_invoked
+        );
+    }
+
+    #[test]
     fn ideal_storage_faster_than_real() {
         // A chain with large outputs: ideal storage removes transfer cost.
         fn mk() -> Dag {

@@ -12,24 +12,68 @@ use crate::core::TaskId;
 /// evicted parents). Flat vectors with linear scans beat hash maps at
 /// that size and keep the executor hot loop free of byte hashing; the
 /// only allocations are the (amortized, tiny) vector growths.
-#[derive(Debug, Default)]
+///
+/// With locality-enhanced scheduling the cache is load-bearing, not just
+/// an optimization: a clustered fan-out may *skip the KV publish* and
+/// serve its children straight from here. Two mechanisms keep that
+/// correct under memory pressure:
+///
+/// * a **byte-capacity bound** (`with_capacity`): inserting past the
+///   bound evicts the **oldest** entries first — never the entry just
+///   inserted, and never a pinned one;
+/// * **pinning** (`pin` / `unpin`): the cluster arm pins the produced
+///   object while its in-place children consume it, so neither the
+///   children's own parent eviction nor capacity pressure can drop an
+///   object that was never published.
+#[derive(Debug)]
 pub struct LocalCache {
+    /// Insertion-ordered (oldest first) — the capacity-eviction order.
     objects: Vec<(TaskId, DataObj)>,
     /// Tasks whose outputs this executor already wrote to the KV store
     /// (avoid double writes at fan-out followed by fan-in).
     stored: Vec<TaskId>,
+    /// Tasks protected from every eviction path (see [`pin`](Self::pin)).
+    pinned: Vec<TaskId>,
     /// Bytes currently cached (observability; Lambdas have 3 GB).
     bytes: u64,
     /// High-water mark.
     peak_bytes: u64,
+    /// Byte-capacity bound (`u64::MAX` = unbounded).
+    capacity: u64,
+    /// Entries dropped by capacity pressure over this cache's lifetime.
+    capacity_evictions: u64,
+}
+
+impl Default for LocalCache {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl LocalCache {
+    /// An unbounded cache (the historical behavior).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_capacity(u64::MAX)
     }
 
-    pub fn insert(&mut self, task: TaskId, obj: DataObj) {
+    /// A cache bounded to `capacity` bytes (`WukongConfig::
+    /// cache_capacity_bytes`); insertions past it evict oldest-first.
+    pub fn with_capacity(capacity: u64) -> Self {
+        LocalCache {
+            objects: Vec::new(),
+            stored: Vec::new(),
+            pinned: Vec::new(),
+            bytes: 0,
+            peak_bytes: 0,
+            capacity,
+            capacity_evictions: 0,
+        }
+    }
+
+    /// Inserts (or replaces) `task`'s output, then enforces the byte
+    /// capacity by evicting the oldest unpinned entries — never `task`
+    /// itself. Returns how many entries capacity pressure evicted.
+    pub fn insert(&mut self, task: TaskId, obj: DataObj) -> u64 {
         self.bytes += obj.bytes;
         self.peak_bytes = self.peak_bytes.max(self.bytes);
         if let Some(slot) = self.objects.iter_mut().find(|(t, _)| *t == task) {
@@ -38,6 +82,27 @@ impl LocalCache {
         } else {
             self.objects.push((task, obj));
         }
+        self.enforce_capacity(task)
+    }
+
+    /// Oldest-first capacity eviction, sparing pinned entries and the
+    /// just-inserted `keep` (evicting the object being handed to the
+    /// next step would turn the bound into a correctness bug).
+    fn enforce_capacity(&mut self, keep: TaskId) -> u64 {
+        let mut evicted = 0u64;
+        let mut i = 0;
+        while self.bytes > self.capacity && i < self.objects.len() {
+            let t = self.objects[i].0;
+            if t == keep || self.pinned.contains(&t) {
+                i += 1;
+                continue;
+            }
+            let (_, o) = self.objects.remove(i);
+            self.bytes -= o.bytes;
+            evicted += 1;
+        }
+        self.capacity_evictions += evicted;
+        evicted
     }
 
     pub fn get(&self, task: TaskId) -> Option<&DataObj> {
@@ -63,10 +128,29 @@ impl LocalCache {
         self.stored.contains(&task)
     }
 
+    /// Protects `task` from `evict` and from capacity pressure until
+    /// [`unpin`](Self::unpin) — used by clustered fan-outs whose produced
+    /// object was (deliberately) never published.
+    pub fn pin(&mut self, task: TaskId) {
+        if !self.pinned.contains(&task) {
+            self.pinned.push(task);
+        }
+    }
+
+    /// Lifts a [`pin`](Self::pin).
+    pub fn unpin(&mut self, task: TaskId) {
+        self.pinned.retain(|&t| t != task);
+    }
+
     /// Drops a cached object (memory management along long paths).
+    /// Pinned entries are spared — they are still owed to a local
+    /// consumer.
     pub fn evict(&mut self, task: TaskId) {
+        if self.pinned.contains(&task) {
+            return;
+        }
         if let Some(i) = self.objects.iter().position(|(t, _)| *t == task) {
-            let (_, o) = self.objects.swap_remove(i);
+            let (_, o) = self.objects.remove(i);
             self.bytes -= o.bytes;
         }
     }
@@ -75,6 +159,7 @@ impl LocalCache {
     /// the Fig. 12 ablation).
     pub fn clear(&mut self) {
         self.objects.clear();
+        self.pinned.clear();
         self.bytes = 0;
     }
 
@@ -84,6 +169,11 @@ impl LocalCache {
 
     pub fn peak_bytes(&self) -> u64 {
         self.peak_bytes
+    }
+
+    /// Lifetime count of capacity-pressure evictions.
+    pub fn capacity_evictions(&self) -> u64 {
+        self.capacity_evictions
     }
 
     pub fn len(&self) -> usize {
@@ -135,5 +225,55 @@ mod tests {
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_first_but_never_the_new_entry() {
+        let mut c = LocalCache::with_capacity(250);
+        assert_eq!(c.insert(TaskId(1), DataObj::synthetic(100)), 0);
+        assert_eq!(c.insert(TaskId(2), DataObj::synthetic(100)), 0);
+        // Third insert crosses the bound: the oldest (task 1) goes.
+        assert_eq!(c.insert(TaskId(3), DataObj::synthetic(100)), 1);
+        assert!(!c.contains(TaskId(1)));
+        assert!(c.contains(TaskId(2)));
+        assert!(c.contains(TaskId(3)));
+        assert_eq!(c.bytes(), 200);
+        assert_eq!(c.capacity_evictions(), 1);
+        // An over-capacity object still lands: everything else is
+        // evicted, the new entry itself is spared.
+        assert_eq!(c.insert(TaskId(4), DataObj::synthetic(400)), 2);
+        assert!(c.contains(TaskId(4)));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.capacity_evictions(), 3);
+    }
+
+    #[test]
+    fn pinned_entries_survive_both_eviction_paths() {
+        let mut c = LocalCache::with_capacity(150);
+        c.insert(TaskId(1), DataObj::synthetic(100));
+        c.pin(TaskId(1));
+        // Explicit eviction is a no-op while pinned.
+        c.evict(TaskId(1));
+        assert!(c.contains(TaskId(1)));
+        // Capacity pressure skips the pinned entry and (here) can free
+        // nothing else — the cache runs over its bound rather than drop
+        // an object still owed to a local consumer.
+        assert_eq!(c.insert(TaskId(2), DataObj::synthetic(100)), 0);
+        assert!(c.contains(TaskId(1)));
+        assert!(c.contains(TaskId(2)));
+        // Once unpinned, normal rules apply again.
+        c.unpin(TaskId(1));
+        c.evict(TaskId(1));
+        assert!(!c.contains(TaskId(1)));
+    }
+
+    #[test]
+    fn unbounded_cache_never_capacity_evicts() {
+        let mut c = LocalCache::new();
+        for i in 0..64 {
+            assert_eq!(c.insert(TaskId(i), DataObj::synthetic(1 << 20)), 0);
+        }
+        assert_eq!(c.len(), 64);
+        assert_eq!(c.capacity_evictions(), 0);
     }
 }

@@ -156,6 +156,15 @@ impl WukongCtx {
     pub fn lambda_bps(&self) -> f64 {
         self.cfg.net.lambda_bandwidth_bps
     }
+
+    /// Byte capacity of an executor's local cache (`u64::MAX` =
+    /// unbounded). Executors materialize their cache from this at entry;
+    /// clustered fan-outs additionally pin the produced object so the
+    /// bound can never drop an output that was deliberately not
+    /// published.
+    pub fn cache_capacity(&self) -> u64 {
+        self.cfg.wukong.cache_capacity_bytes
+    }
 }
 
 /// Deterministic per-task duration jitter derived from the simulation

@@ -16,8 +16,11 @@
 //!   `Continue` (1 out-edge) → walk on; `Invoke` → store output once,
 //!   *become* the executor of the first out-edge and invoke executors for
 //!   the rest; `Delegate` → one pub/sub message hands the invocations to
-//!   the storage-manager proxy; `Sink` → store the final result and
-//!   announce it.
+//!   the storage-manager proxy; `Cluster { k }` → run the first `k`
+//!   children *in place* (sequentially, against this executor's local
+//!   cache) and hand only the remainder to the network — when there is no
+//!   remainder the KV publish is skipped entirely; `Sink` → store the
+//!   final result and announce it.
 
 use crate::compute::DataObj;
 use crate::core::{clock, EngineResult, ExecutorId, ObjectKey, TaskId};
@@ -27,6 +30,8 @@ use crate::executor::exec::run_payload;
 use crate::kvstore::Message;
 use crate::metrics::TaskSpan;
 use crate::schedule::FanOutAction;
+use std::future::Future;
+use std::pin::Pin;
 use std::sync::Arc;
 
 /// Runs one Task Executor starting at `start`. `arrived_from` is the
@@ -38,7 +43,35 @@ pub async fn run_executor(
     arrived_from: Option<TaskId>,
     exec_id: ExecutorId,
 ) -> EngineResult<()> {
-    let mut cache = LocalCache::new();
+    let mut cache = LocalCache::with_capacity(ctx.cache_capacity());
+    run_chain(&ctx, start, arrived_from, exec_id, &mut cache).await
+}
+
+/// Boxed, type-erased recursion point for clustered fan-outs: an in-place
+/// child walks its own chain *inside the parent's Lambda*, sharing the
+/// parent's local cache (that sharing is the locality win — the child
+/// reads its dependency without touching the KV store).
+fn run_chain_boxed<'a>(
+    ctx: &'a Arc<WukongCtx>,
+    start: TaskId,
+    from: Option<TaskId>,
+    exec_id: ExecutorId,
+    cache: &'a mut LocalCache,
+) -> Pin<Box<dyn Future<Output = EngineResult<()>> + 'a>> {
+    Box::pin(run_chain(ctx, start, from, exec_id, cache))
+}
+
+/// Walks one schedule chain over a caller-owned local cache. This is the
+/// executor main loop proper; [`run_executor`] is the entry that owns the
+/// cache, and clustered fan-outs re-enter here for their in-place
+/// children.
+async fn run_chain(
+    ctx: &Arc<WukongCtx>,
+    start: TaskId,
+    arrived_from: Option<TaskId>,
+    exec_id: ExecutorId,
+    cache: &mut LocalCache,
+) -> EngineResult<()> {
     let mut current = start;
     let mut from = arrived_from;
 
@@ -51,7 +84,7 @@ pub async fn run_executor(
             // the conflict, so store it *before* incrementing (this is the
             // ordering the real system uses: write data, then INCR).
             if let Some(p) = from {
-                store_once(&ctx, &mut cache, p).await;
+                store_once(ctx, cache, p).await;
             }
             let n = ctx.kv.incr(ObjectKey::counter(current)).await;
             debug_assert!(
@@ -73,9 +106,11 @@ pub async fn run_executor(
         for &p in ctx.dag.parents(current) {
             if ctx.cfg.wukong.local_cache {
                 if let Some(obj) = cache.get(p) {
+                    ctx.metrics.record_cache_hit();
                     inputs.push(obj.clone());
                     continue;
                 }
+                ctx.metrics.record_cache_miss();
             }
             inputs.push(ctx.kv.get(ObjectKey::output(p), ctx.lambda_bps()).await?);
         }
@@ -96,10 +131,14 @@ pub async fn run_executor(
         .await?;
         let compute = clock::now() - t_exec;
         ctx.mark_executed(current)?;
-        cache.insert(current, out);
+        let evicted = cache.insert(current, out);
+        if evicted > 0 {
+            ctx.metrics.record_cache_evictions(evicted);
+        }
 
         // Inputs are consumed; drop parent objects we no longer need to
-        // bound executor memory on long paths.
+        // bound executor memory on long paths. (Pinned objects — cluster
+        // producers still owed to a local sibling — are spared.)
         for &p in ctx.dag.parents(current) {
             cache.evict(p);
         }
@@ -107,7 +146,7 @@ pub async fn run_executor(
         // Fig. 12 ablation: with the local cache disabled, every output
         // goes straight to the KV store and nothing is kept locally.
         if !ctx.cfg.wukong.local_cache {
-            store_once(&ctx, &mut cache, current).await;
+            store_once(ctx, cache, current).await;
         }
 
         // ---- fan-out ------------------------------------------------------
@@ -118,7 +157,7 @@ pub async fn run_executor(
         match ctx.lowered.fan_out_action(current) {
             // Sink: persist the final result and announce it.
             FanOutAction::Sink => {
-                store_once(&ctx, &mut cache, current).await;
+                store_once(ctx, cache, current).await;
                 ctx.kv
                     .publish(FINAL_CHANNEL, Message::FinalResult { task: current })
                     .await;
@@ -152,7 +191,7 @@ pub async fn run_executor(
             // to whoever the policy chose as the invoker, and become the
             // executor of the first out-edge.
             action @ (FanOutAction::Invoke | FanOutAction::Delegate) => {
-                store_once(&ctx, &mut cache, current).await;
+                store_once(ctx, cache, current).await;
                 if action == FanOutAction::Delegate {
                     // Large fan-out: delegate invocation to the storage
                     // manager's proxy (paper §IV-D) with a single pub/sub
@@ -174,10 +213,70 @@ pub async fn run_executor(
                     let parent = current;
                     let handles: Vec<_> = children[1..]
                         .iter()
-                        .map(|&c| invoke_executor(Arc::clone(&ctx), c, Some(parent)))
+                        .map(|&c| invoke_executor(Arc::clone(ctx), c, Some(parent)))
                         .collect();
                     crate::rt::join_all(handles).await;
                 }
+                let store = clock::now() - t_store;
+                ctx.metrics.record_task(TaskSpan {
+                    task: current,
+                    executor: exec_id,
+                    fetch,
+                    compute,
+                    store,
+                    total: fetch + compute + store,
+                });
+                from = Some(current);
+                current = children[0];
+            }
+            // Clustered fan-out (locality-enhanced scheduling): keep the
+            // first `k` children on this executor — they read the produced
+            // object straight from the local cache — and hand only the
+            // remainder to the network. When every child is local the KV
+            // publish is *skipped entirely*: store-once relaxes to "store
+            // only what a remote consumer or a sink needs". (A fan-in
+            // child needs its parent's output in the KV store too, but
+            // that store happens lazily in the fan-in block above, by
+            // whichever executor — in-place or remote — arrives there.)
+            FanOutAction::Cluster { k } => {
+                let k = (k as usize).clamp(1, children.len());
+                let remote = &children[k..];
+                if !remote.is_empty() {
+                    store_once(ctx, cache, current).await;
+                    if remote.len() >= ctx.cfg.wukong.max_task_fanout {
+                        // The proxy resolves an arbitrary CSR out-edge
+                        // range, so delegating the tail [k..width) reuses
+                        // the §IV-D machinery unchanged.
+                        ctx.kv
+                            .publish(
+                                FANOUT_CHANNEL,
+                                Message::FanOutRequest {
+                                    fan_out_task: current,
+                                    from_edge: k as u32,
+                                    to_edge: children.len() as u32,
+                                },
+                            )
+                            .await;
+                    } else {
+                        let parent = current;
+                        let handles: Vec<_> = remote
+                            .iter()
+                            .map(|&c| invoke_executor(Arc::clone(ctx), c, Some(parent)))
+                            .collect();
+                        crate::rt::join_all(handles).await;
+                    }
+                }
+                // Run children [1..k] in place, sequentially (one Lambda
+                // is one core — the delay-budget knob caps how much
+                // serialization the policy may buy with saved traffic).
+                // They share this cache; the pin keeps their parent-evict
+                // and any capacity pressure from dropping the produced
+                // object, which may exist nowhere else.
+                cache.pin(current);
+                for &c in &children[1..k] {
+                    run_chain_boxed(ctx, c, Some(current), exec_id, cache).await?;
+                }
+                cache.unpin(current);
                 let store = clock::now() - t_store;
                 ctx.metrics.record_task(TaskSpan {
                     task: current,

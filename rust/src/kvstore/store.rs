@@ -224,6 +224,7 @@ impl KvStore {
             named_objects: Mutex::new(HashMap::new()),
             named_counters: Mutex::new(HashMap::new()),
             resident: AtomicU64::new(0),
+            net_bytes: AtomicU64::new(0),
             metrics,
             tail: TailLatency::from_faults(
                 &self.faults,
@@ -363,6 +364,12 @@ pub struct JobArena {
     /// Resident payload bytes of this arena (dense slots + named map),
     /// mirrored delta-wise into the cluster ledger.
     resident: AtomicU64,
+    /// Per-job traffic ledger: payload bytes this job actually moved over
+    /// shard NICs (put + get transfers). Control round trips — incr,
+    /// exists, publish — carry no payload and are not counted, and an
+    /// ideal store moves nothing. Locality-enhanced scheduling is judged
+    /// against exactly this number.
+    net_bytes: AtomicU64,
     metrics: Arc<MetricsHub>,
     /// Seeded heavy-tail latency injection (pass-through when benign),
     /// streamed per job for cross-job determinism.
@@ -489,6 +496,8 @@ impl JobArena {
         if !self.store.ideal {
             clock::sleep(self.tail.sample(self.latency())).await;
             shard.nic.transfer_capped_as(self.job, bytes, client_bps).await;
+            self.net_bytes.fetch_add(bytes, Ordering::Relaxed);
+            self.metrics.record_net_bytes(bytes);
         }
         self.store_obj(key, obj);
         self.metrics
@@ -510,6 +519,8 @@ impl JobArena {
                 .nic
                 .transfer_capped_as(self.job, obj.bytes, client_bps)
                 .await;
+            self.net_bytes.fetch_add(obj.bytes, Ordering::Relaxed);
+            self.metrics.record_net_bytes(obj.bytes);
         }
         self.metrics
             .record_kv_op(KvOpKind::Read, obj.bytes, clock::now() - t0);
@@ -719,6 +730,14 @@ impl JobArena {
     /// [`JobArena::stored_bytes`]; O(1), and zero after eviction).
     pub fn resident_bytes(&self) -> u64 {
         self.resident.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes this job moved over shard NICs so far (put + get
+    /// transfers; control round trips and ideal-store operations move
+    /// nothing). The per-job traffic ledger behind
+    /// `JobReport::net_bytes_moved`.
+    pub fn net_bytes_moved(&self) -> u64 {
+        self.net_bytes.load(Ordering::Relaxed)
     }
 
     /// Captures this arena's forensic state (rendered keys, counters,
@@ -1073,6 +1092,39 @@ mod tests {
             drop(b);
             assert_eq!(store.resident_kv_bytes(), 0);
             assert_eq!(store.registered_arena_count(), 0);
+        });
+    }
+
+    #[test]
+    fn net_bytes_ledger_counts_payload_transfers_only() {
+        crate::rt::run_virtual(async {
+            let metrics = Arc::new(MetricsHub::new());
+            let store = KvStore::new(NetConfig::default(), metrics.clone());
+            let arena = store.arena(JobId(1), 4);
+            arena
+                .put(ObjectKey::output(TaskId(0)), DataObj::synthetic(100), 1e9)
+                .await;
+            arena.get(ObjectKey::output(TaskId(0)), 1e9).await.unwrap();
+            // Control messages carry no payload.
+            arena.incr(ObjectKey::counter(TaskId(1))).await;
+            arena.contains(ObjectKey::output(TaskId(0))).await;
+            assert_eq!(arena.net_bytes_moved(), 200);
+            assert_eq!(metrics.net_bytes_moved(), 200);
+        });
+    }
+
+    #[test]
+    fn ideal_store_moves_no_net_bytes() {
+        crate::rt::run_virtual(async {
+            let metrics = Arc::new(MetricsHub::new());
+            let store = KvStore::with_ideal(NetConfig::default(), metrics.clone(), true);
+            let arena = store.arena(JobId(1), 4);
+            arena
+                .put(ObjectKey::output(TaskId(0)), DataObj::synthetic(100), 1e9)
+                .await;
+            arena.get(ObjectKey::output(TaskId(0)), 1e9).await.unwrap();
+            assert_eq!(arena.net_bytes_moved(), 0);
+            assert_eq!(metrics.net_bytes_moved(), 0);
         });
     }
 

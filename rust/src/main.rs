@@ -36,6 +36,15 @@ OPTIONS:
     --platform <wukong|wukong-ideal|strawman|pubsub|parallel-invoker|
                 dask-ec2|dask-laptop>    (run only, default wukong)
     --seed <N>       simulation / arrival seed (default 1)
+    --locality <on|off>      locality-enhanced scheduling: cluster large
+                             fan-outs on the producing executor and skip
+                             the KV publish when every consumer is local
+                             (default off)
+    --min-local-bytes <N>    cluster a fan-out only when the produced
+                             object is at least N bytes (default 65536)
+    --cluster-width <K>      max children run in-place per fan-out
+                             (default 4; further capped by the
+                             invoke-latency delay budget)
 
 SERVICE OPTIONS (multi-tenant: many jobs, one shared platform):
     --jobs <N>            number of jobs in the mix (default 12)
@@ -88,6 +97,10 @@ struct Args {
     kv_budget: u64,
     tenant_budget: f64,
     nic: String,
+    // locality knobs (None = keep the SimConfig default)
+    locality: bool,
+    min_local_bytes: Option<u64>,
+    cluster_width: Option<usize>,
 }
 
 fn die(msg: &str) -> ! {
@@ -117,6 +130,9 @@ fn parse_args() -> Args {
     let mut kv_budget = u64::MAX;
     let mut tenant_budget = f64::INFINITY;
     let mut nic = "drr".to_string();
+    let mut locality = false;
+    let mut min_local_bytes = None;
+    let mut cluster_width = None;
     let mut i = 1;
     while i < argv.len() {
         let flag = argv[i].as_str();
@@ -161,6 +177,20 @@ fn parse_args() -> Args {
                 tenant_budget = val.parse().unwrap_or_else(|_| die("bad --tenant-budget"))
             }
             "--nic" => nic = val.clone(),
+            "--locality" => {
+                locality = match val.as_str() {
+                    "on" => true,
+                    "off" => false,
+                    v => die(&format!("bad --locality '{v}' (want on|off)")),
+                }
+            }
+            "--min-local-bytes" => {
+                min_local_bytes =
+                    Some(val.parse().unwrap_or_else(|_| die("bad --min-local-bytes")))
+            }
+            "--cluster-width" => {
+                cluster_width = Some(val.parse().unwrap_or_else(|_| die("bad --cluster-width")))
+            }
             f => die(&format!("unknown flag '{f}'")),
         }
         i += 2;
@@ -180,6 +210,9 @@ fn parse_args() -> Args {
         kv_budget,
         tenant_budget,
         nic,
+        locality,
+        min_local_bytes,
+        cluster_width,
     }
 }
 
@@ -307,10 +340,17 @@ fn run_service_mode(args: &Args, cfg: &SimConfig) {
 
 fn main() {
     let args = parse_args();
-    let cfg = SimConfig {
+    let mut cfg = SimConfig {
         seed: args.seed,
         ..SimConfig::default()
     };
+    cfg.locality.enabled = args.locality;
+    if let Some(b) = args.min_local_bytes {
+        cfg.locality.min_local_bytes = b;
+    }
+    if let Some(k) = args.cluster_width {
+        cfg.locality.cluster_width = k;
+    }
     if args.command == "service" {
         run_service_mode(&args, &cfg);
         return;

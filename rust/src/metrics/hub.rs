@@ -55,6 +55,15 @@ pub struct MetricsHub {
     cold_starts: AtomicU64,
     tasks_executed: AtomicU64,
     billed_ms: AtomicU64,
+    /// Payload bytes that actually crossed a NIC (KV put/get transfers;
+    /// control messages — incr/exists/publish — carry no payload). This is
+    /// the traffic metric locality-enhanced scheduling exists to shrink:
+    /// a locally served dependency never reaches this counter.
+    net_bytes_moved: AtomicU64,
+    // executor-local cache effectiveness
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
     // detailed samples (disabled unless `sampling` is set, to keep the
     // simulation hot path allocation-free for the big sweeps)
     sampling: std::sync::atomic::AtomicBool,
@@ -124,6 +133,27 @@ impl MetricsHub {
             .fetch_add(billed.as_millis() as u64, Ordering::Relaxed);
     }
 
+    /// Records `bytes` of payload moved over the network (a real KV or
+    /// peer transfer, not a control round trip).
+    pub fn record_net_bytes(&self, bytes: u64) {
+        self.net_bytes_moved.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// A dependency served from an executor's local cache.
+    pub fn record_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A dependency that had to fall through to the KV store.
+    pub fn record_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` local-cache entries dropped by capacity pressure.
+    pub fn record_cache_evictions(&self, n: u64) {
+        self.cache_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
     // -- accessors --------------------------------------------------------
 
     pub fn lambdas_invoked(&self) -> u64 {
@@ -158,6 +188,18 @@ impl MetricsHub {
     }
     pub fn billed_ms(&self) -> u64 {
         self.billed_ms.load(Ordering::Relaxed)
+    }
+    pub fn net_bytes_moved(&self) -> u64 {
+        self.net_bytes_moved.load(Ordering::Relaxed)
+    }
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions.load(Ordering::Relaxed)
     }
 
     pub fn task_spans(&self) -> Vec<TaskSpan> {
@@ -194,6 +236,22 @@ mod tests {
         m.enable_sampling();
         m.record_kv_op(KvOpKind::Read, 100, Duration::from_millis(1));
         assert_eq!(m.kv_samples().len(), 1);
+    }
+
+    #[test]
+    fn traffic_and_cache_counters() {
+        let m = MetricsHub::new();
+        assert_eq!(m.net_bytes_moved(), 0);
+        m.record_net_bytes(4096);
+        m.record_net_bytes(1024);
+        assert_eq!(m.net_bytes_moved(), 5120);
+        m.record_cache_hit();
+        m.record_cache_hit();
+        m.record_cache_miss();
+        m.record_cache_evictions(3);
+        assert_eq!(m.cache_hits(), 2);
+        assert_eq!(m.cache_misses(), 1);
+        assert_eq!(m.cache_evictions(), 3);
     }
 
     #[test]

@@ -36,6 +36,11 @@ pub struct JobReport {
     /// Total billed function time (100 ms rounding).
     pub billed: Duration,
     pub kv: KvStats,
+    /// Payload bytes that crossed a NIC during the job (KV put/get
+    /// transfers; control messages carry no payload). The traffic metric
+    /// of locality-enhanced scheduling: dependencies served from an
+    /// executor's local cache never appear here.
+    pub net_bytes_moved: u64,
     /// Failure, if the job did not complete (e.g. Dask OOM).
     pub error: Option<EngineError>,
 }
@@ -59,6 +64,7 @@ impl JobReport {
                 bytes_read: hub.bytes_read(),
                 bytes_written: hub.bytes_written(),
             },
+            net_bytes_moved: hub.net_bytes_moved(),
             error: None,
         }
     }
@@ -100,13 +106,14 @@ impl JobReport {
             format!("{:<24} FAILED: {e}", self.platform)
         } else {
             format!(
-                "{:<24} {:>9.2}s  tasks={:<6} lambdas={:<5} kv_r={:<7} kv_w={:<7} billed={:.1}s",
+                "{:<24} {:>9.2}s  tasks={:<6} lambdas={:<5} kv_r={:<7} kv_w={:<7} net_b={:<9} billed={:.1}s",
                 self.platform,
                 self.makespan.as_secs_f64(),
                 self.tasks_executed,
                 self.lambdas_invoked,
                 self.kv.reads,
                 self.kv.writes,
+                self.net_bytes_moved,
                 self.billed.as_secs_f64(),
             )
         }
@@ -122,9 +129,12 @@ mod tests {
         let hub = MetricsHub::new();
         hub.record_invocation(false);
         hub.record_billing(Duration::from_millis(300));
+        hub.record_net_bytes(777);
         let r = JobReport::success("WUKONG", Duration::from_secs(2), &hub);
         assert!(r.is_ok());
         assert_eq!(r.lambdas_invoked, 1);
+        assert_eq!(r.net_bytes_moved, 777);
+        assert!(r.row().contains("net_b=777"));
         assert_eq!(r.billed, Duration::from_millis(300));
         assert_eq!(r.seconds(), 2.0);
         assert!(r.row().contains("WUKONG"));

@@ -35,6 +35,14 @@ pub enum FanOutAction {
     /// Multiple out-edges, large fan-out: publish one message delegating
     /// the invocations to the storage-manager proxy (paper §IV-D).
     Delegate,
+    /// Locality-enhanced fan-out (the journal follow-up's task
+    /// clustering): the producing executor runs the first `k` children
+    /// in place — sequentially, in virtual time, reading the produced
+    /// object from its local cache — and invokes/delegates only the
+    /// remainder. With `k` covering the whole width (and no fan-in
+    /// child forcing a store), the producer skips the KV publish
+    /// entirely: zero network bytes for the fan-out's data motion.
+    Cluster { k: u32 },
 }
 
 impl FanOutAction {
@@ -47,6 +55,29 @@ impl FanOutAction {
             FanOutAction::Delegate
         } else {
             FanOutAction::Invoke
+        }
+    }
+
+    /// Number of children a fan-out of `width` out-edges keeps on the
+    /// producing executor under this action: the become-child for
+    /// `Invoke`/`Delegate`, `k` (clamped to the width) for `Cluster`.
+    pub fn local_children(self, width: usize) -> usize {
+        match self {
+            FanOutAction::Sink => 0,
+            FanOutAction::Continue => 1,
+            FanOutAction::Invoke | FanOutAction::Delegate => 1.min(width),
+            FanOutAction::Cluster { k } => (k as usize).clamp(1, width.max(1)).min(width),
+        }
+    }
+
+    /// True when, at a real fan-out (`width >= 2`), some child runs on a
+    /// *different* executor and must therefore read the produced object
+    /// from the KV store — the store-once trigger.
+    pub fn has_remote_consumer(self, width: usize) -> bool {
+        match self {
+            FanOutAction::Sink | FanOutAction::Continue => false,
+            FanOutAction::Invoke | FanOutAction::Delegate => width > 1,
+            FanOutAction::Cluster { .. } => self.local_children(width) < width,
         }
     }
 }
@@ -64,6 +95,20 @@ impl LoweredOps {
     /// called once per real fan-out (width >= 2) — this is where a
     /// [`SchedulingPolicy`](crate::engine::SchedulingPolicy) plugs in.
     pub fn lower_with(dag: &Dag, mut decide: impl FnMut(usize) -> FanOutAction) -> Self {
+        Self::lower_with_task(dag, |_, w| decide(w))
+    }
+
+    /// Task-aware lowering: like [`lower_with`](Self::lower_with) but the
+    /// rule also sees *which* task fans out, so size-aware policies can
+    /// consult the produced object (`dag.task(t).output_bytes`) when
+    /// choosing between fanning out and clustering children locally.
+    /// `Cluster { k }` decisions are clamped to the fan-out width at
+    /// lowering time, so the executor and the store-once oracle agree on
+    /// the per-edge locality split without re-clamping.
+    pub fn lower_with_task(
+        dag: &Dag,
+        mut decide: impl FnMut(TaskId, usize) -> FanOutAction,
+    ) -> Self {
         let n = dag.len();
         let mut indeg = Vec::with_capacity(n);
         let mut fanout = Vec::with_capacity(n);
@@ -72,7 +117,12 @@ impl LoweredOps {
             fanout.push(match dag.out_degree(t) {
                 0 => FanOutAction::Sink,
                 1 => FanOutAction::Continue,
-                w => decide(w),
+                w => match decide(t, w) {
+                    FanOutAction::Cluster { k } => FanOutAction::Cluster {
+                        k: (k.max(1) as usize).min(w) as u32,
+                    },
+                    a => a,
+                },
             });
         }
         LoweredOps { indeg, fanout }
@@ -224,5 +274,60 @@ mod tests {
         assert_eq!(low.fan_out_action(TaskId(0)), FanOutAction::Delegate);
         // Trivial fan-outs still continue — the rule only sees width >= 2.
         assert_eq!(low.fan_out_action(TaskId(5)), FanOutAction::Continue);
+    }
+
+    #[test]
+    fn task_aware_lowering_sees_the_task_and_clamps_cluster() {
+        let dag = fixture();
+        let mut seen = Vec::new();
+        let low = LoweredOps::lower_with_task(&dag, |t, w| {
+            seen.push((t, w));
+            FanOutAction::Cluster { k: 1000 } // absurd k: must clamp to w
+        });
+        // Only the real fan-out (root, width 4) consults the rule.
+        assert_eq!(seen, vec![(TaskId(0), 4)]);
+        assert_eq!(
+            low.fan_out_action(TaskId(0)),
+            FanOutAction::Cluster { k: 4 }
+        );
+        // Zero k clamps up to 1 (the become-child is always local).
+        let low = LoweredOps::lower_with_task(&dag, |_, _| FanOutAction::Cluster { k: 0 });
+        assert_eq!(
+            low.fan_out_action(TaskId(0)),
+            FanOutAction::Cluster { k: 1 }
+        );
+    }
+
+    #[test]
+    fn task_aware_and_width_only_lowerings_agree() {
+        // `lower_with` is now a thin shim over `lower_with_task`; the two
+        // must produce identical tables for any width-only rule.
+        let dag = fixture();
+        let a = LoweredOps::lower_with(&dag, |w| FanOutAction::threshold_rule(w, 4));
+        let b = LoweredOps::lower_with_task(&dag, |_, w| FanOutAction::threshold_rule(w, 4));
+        for t in dag.task_ids() {
+            assert_eq!(a.fan_out_action(t), b.fan_out_action(t));
+            assert_eq!(a.in_degree(t), b.in_degree(t));
+        }
+    }
+
+    #[test]
+    fn local_children_and_remote_consumer_split() {
+        let w = 6;
+        assert_eq!(FanOutAction::Invoke.local_children(w), 1);
+        assert!(FanOutAction::Invoke.has_remote_consumer(w));
+        assert_eq!(FanOutAction::Delegate.local_children(w), 1);
+        assert!(FanOutAction::Delegate.has_remote_consumer(w));
+        // A cluster covering part of the width leaves a remote remainder…
+        let part = FanOutAction::Cluster { k: 4 };
+        assert_eq!(part.local_children(w), 4);
+        assert!(part.has_remote_consumer(w));
+        // …a cluster covering the whole width has no remote consumer
+        // (over-wide k clamps down).
+        let full = FanOutAction::Cluster { k: 9 };
+        assert_eq!(full.local_children(w), w);
+        assert!(!full.has_remote_consumer(w));
+        assert!(!FanOutAction::Continue.has_remote_consumer(1));
+        assert_eq!(FanOutAction::Sink.local_children(0), 0);
     }
 }

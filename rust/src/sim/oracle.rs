@@ -30,6 +30,7 @@ use crate::engine::service::{
 };
 use crate::engine::SchedulingPolicy;
 use crate::kvstore::ArenaForensics;
+use crate::schedule::LoweredOps;
 use crate::sim::harness::{paper_policies, ModeKind, PolicyRun, SimHarness};
 use crate::sim::trace::first_divergence;
 use crate::workloads::random_dag::{random_dag, RandomDagSpec};
@@ -488,6 +489,165 @@ pub fn governance_check(seed: u64) -> Result<GovernanceReport, String> {
     })
 }
 
+/// Summary of one passing locality check.
+#[derive(Clone, Debug)]
+pub struct LocalityReport {
+    pub seed: u64,
+    pub tasks: usize,
+    /// Payload bytes the locality-free WUKONG baseline moved.
+    pub baseline_net_bytes: u64,
+    /// `(min_local_bytes, cluster_width, net_bytes_moved)` per sweep arm.
+    pub arms: Vec<(u64, usize, u64)>,
+}
+
+/// The locality oracle (the block-7 sweep): locality-enhanced WUKONG,
+/// swept over `min_local_bytes` ∈ {0, median output size, `u64::MAX`} ×
+/// `cluster_width` ∈ {1, 4}, over the seeded value-carrying random DAG
+/// under chaos faults. Checks, for every seed:
+///
+/// * every sweep arm completes with every task executed exactly once and
+///   **byte-identical sink outputs** to all five paper designs —
+///   clustering changes where tasks run, never what they compute;
+/// * the stored intermediates are exactly the locality-aware store-once
+///   set ([`expected_decentralized_outputs_lowered`]): fully clustered
+///   fan-outs skip the KV publish, everything a remote consumer or sink
+///   needs is still there, and fan-in counters end at in-degree;
+/// * locality never moves **more** payload bytes than the baseline (the
+///   whole point of the optimisation, as a monotonicity property);
+/// * `min_local_bytes = u64::MAX` with locality *enabled* renders a
+///   trace byte-identical to locality *disabled* — the knob is inert
+///   until a threshold is actually crossed.
+pub fn locality_check(seed: u64) -> Result<LocalityReport, String> {
+    let dag = random_dag(&RandomDagSpec::value(seed));
+    let harness = SimHarness::new(seed).with_chaos();
+
+    // Reference runs: the five paper designs under the identical chaos
+    // schedule, agreeing among themselves.
+    let runs: Vec<PolicyRun> = paper_policies()
+        .into_iter()
+        .map(|p| harness.run(p, &dag))
+        .collect();
+    for run in &runs {
+        if !run.report.is_ok() {
+            return Err(format!(
+                "seed {seed}: reference {} failed: {:?}",
+                run.label, run.report.error
+            ));
+        }
+    }
+    let reference = &runs[0];
+    for run in &runs[1..] {
+        if run.fingerprint != reference.fingerprint {
+            return Err(format!(
+                "seed {seed}: reference designs disagree ({} vs {})",
+                reference.label, run.label
+            ));
+        }
+    }
+    let baseline = runs
+        .iter()
+        .find(|r| r.label == "WUKONG")
+        .expect("WUKONG is one of the paper policies");
+
+    // Median task-output size: the sweep's "some objects cluster, some
+    // don't" arm.
+    let mut sizes: Vec<u64> = dag.task_ids().map(|t| dag.task(t).output_bytes).collect();
+    sizes.sort_unstable();
+    let median = sizes[sizes.len() / 2];
+
+    let mut arms = Vec::new();
+    for min_local_bytes in [0u64, median, u64::MAX] {
+        for cluster_width in [1usize, 4] {
+            let cfg = harness
+                .cfg()
+                .clone()
+                .with_locality(min_local_bytes, cluster_width);
+            let what =
+                format!("seed {seed}: locality(min={min_local_bytes},k={cluster_width})");
+            let run = SimHarness::with_cfg(cfg.clone()).run(Arc::new(WukongPolicy), &dag);
+            if !run.report.is_ok() {
+                return Err(format!("{what} failed: {:?}", run.report.error));
+            }
+            if run.report.tasks_executed != dag.len() as u64 {
+                return Err(format!(
+                    "{what} executed {}/{} tasks",
+                    run.report.tasks_executed,
+                    dag.len()
+                ));
+            }
+            if run.fingerprint != reference.fingerprint {
+                return Err(format!(
+                    "{what}: sink outputs diverge from the paper designs"
+                ));
+            }
+            // Substrate invariants under the locality-aware store-once
+            // rule, over the lowering this run actually used (the
+            // executor and the oracle reconstruct it identically from
+            // the same policy hook).
+            let lowered = LoweredOps::lower_with_task(&dag, |t, width| {
+                WukongPolicy.fan_out_sized(width, dag.task(t).output_bytes, &cfg)
+            });
+            let view = run
+                .kv
+                .as_ref()
+                .ok_or_else(|| format!("{what} returned no KV store"))?
+                .forensics();
+            let expected_counters: BTreeMap<String, u64> = dag
+                .task_ids()
+                .filter(|&t| dag.in_degree(t) > 1)
+                .map(|t| (format!("ctr:{}", t.0), dag.in_degree(t) as u64))
+                .collect();
+            let actual_counters: BTreeMap<String, u64> =
+                view.counter_entries.iter().cloned().collect();
+            if actual_counters != expected_counters {
+                return Err(format!(
+                    "{what} counters {actual_counters:?} != in-degrees {expected_counters:?}"
+                ));
+            }
+            let mut expected: Vec<String> = expected_decentralized_outputs_lowered(&dag, &lowered)
+                .into_iter()
+                .map(|t| format!("out:{}", t.0))
+                .collect();
+            expected.sort();
+            if view.object_keys != expected {
+                return Err(format!(
+                    "{what} stored {:?}, locality store-once implies {expected:?}",
+                    view.object_keys
+                ));
+            }
+            // The traffic property: locality may never move MORE bytes.
+            if run.report.net_bytes_moved > baseline.report.net_bytes_moved {
+                return Err(format!(
+                    "{what} moved {} payload bytes > locality-free baseline {}",
+                    run.report.net_bytes_moved, baseline.report.net_bytes_moved
+                ));
+            }
+            arms.push((min_local_bytes, cluster_width, run.report.net_bytes_moved));
+        }
+    }
+
+    // The inertness pin: enabled-but-unreachable threshold must replay
+    // the disabled engine byte-for-byte.
+    let inert = SimHarness::with_cfg(harness.cfg().clone().with_locality(u64::MAX, 4))
+        .run(Arc::new(WukongPolicy), &dag);
+    let plain = harness.run(Arc::new(WukongPolicy), &dag);
+    if inert.trace != plain.trace {
+        let (line, left, right) =
+            first_divergence(&inert.trace, &plain.trace).expect("traces differ");
+        return Err(format!(
+            "seed {seed}: locality(min=MAX) is not bit-identical to locality off at trace \
+             line {line}:\n  on:  {left}\n  off: {right}"
+        ));
+    }
+
+    Ok(LocalityReport {
+        seed,
+        tasks: dag.len(),
+        baseline_net_bytes: baseline.report.net_bytes_moved,
+        arms,
+    })
+}
+
 /// Replays the multi-job scenario of `seed` twice and requires
 /// byte-identical service traces (arrivals, admissions, per-job reports).
 pub fn multi_job_determinism_check(seed: u64, jobs: usize) -> Result<(), String> {
@@ -608,6 +768,32 @@ pub fn expected_decentralized_outputs(dag: &Dag) -> Vec<TaskId> {
     dag.task_ids().filter(|t| stored[t.index()]).collect()
 }
 
+/// The locality-aware store-once invariant: the stored intermediates of a
+/// run whose lowering may cluster fan-outs. A fan-out is persisted only
+/// when its lowered action leaves a **remote consumer** — a fully
+/// clustered fan-out's output lives solely in its producer's local cache.
+/// Parents of fan-ins and sinks are stored unconditionally (the fan-in
+/// conflict winner and the client read them from the KV store). With a
+/// cluster-free lowering this is exactly
+/// [`expected_decentralized_outputs`].
+pub fn expected_decentralized_outputs_lowered(dag: &Dag, lowered: &LoweredOps) -> Vec<TaskId> {
+    let mut stored = vec![false; dag.len()];
+    for t in dag.task_ids() {
+        if dag.in_degree(t) > 1 {
+            for &p in dag.parents(t) {
+                stored[p.index()] = true;
+            }
+        }
+        let width = dag.out_degree(t);
+        if width == 0 {
+            stored[t.index()] = true;
+        } else if width >= 2 && lowered.fan_out_action(t).has_remote_consumer(width) {
+            stored[t.index()] = true;
+        }
+    }
+    dag.task_ids().filter(|t| stored[t.index()]).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -636,6 +822,68 @@ mod tests {
         b.add_task("c", Payload::Noop, 8, &[c]);
         let dag = b.build().unwrap();
         assert_eq!(expected_decentralized_outputs(&dag), vec![TaskId(2)]);
+    }
+
+    #[test]
+    fn expected_outputs_lowered_skips_fully_clustered_fan_outs() {
+        use crate::schedule::FanOutAction;
+        // root -> {m0, m1, m2} -> sink: the mids are indeg-1, so only the
+        // sink's parents rule applies to them.
+        let mut b = DagBuilder::new();
+        let root = b.add_task("root", Payload::Noop, 8, &[]);
+        let m0 = b.add_task("m0", Payload::Noop, 8, &[root]);
+        let m1 = b.add_task("m1", Payload::Noop, 8, &[root]);
+        let m2 = b.add_task("m2", Payload::Noop, 8, &[root]);
+        b.add_task("sink", Payload::Noop, 8, &[m0, m1, m2]);
+        let dag = b.build().unwrap();
+
+        // Fully clustered: the root's output never needs the KV store —
+        // only the fan-in parents (mids) and the sink are persisted.
+        let full = LoweredOps::lower_with_task(&dag, |_, _| FanOutAction::Cluster { k: 3 });
+        let exp: Vec<u32> = expected_decentralized_outputs_lowered(&dag, &full)
+            .into_iter()
+            .map(|t| t.0)
+            .collect();
+        assert_eq!(exp, vec![1, 2, 3, 4]);
+
+        // A remote remainder (k=2 of width 3) puts the root back.
+        let partial = LoweredOps::lower_with_task(&dag, |_, _| FanOutAction::Cluster { k: 2 });
+        let exp: Vec<u32> = expected_decentralized_outputs_lowered(&dag, &partial)
+            .into_iter()
+            .map(|t| t.0)
+            .collect();
+        assert_eq!(exp, vec![0, 1, 2, 3, 4]);
+
+        // Cluster-free lowering agrees with the width-only invariant.
+        let plain = LoweredOps::lower(&dag, 10);
+        assert_eq!(
+            expected_decentralized_outputs_lowered(&dag, &plain),
+            expected_decentralized_outputs(&dag)
+        );
+    }
+
+    #[test]
+    fn locality_oracle_smoke_seed() {
+        let r = locality_check(0).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(r.arms.len(), 6);
+        assert!(r
+            .arms
+            .iter()
+            .all(|&(_, _, bytes)| bytes <= r.baseline_net_bytes));
+        // The (min=0, k=4) arm clusters every fan-out beyond the become
+        // child; any fan-out in the DAG means strictly fewer bytes. (The
+        // k=1 arms keep only the become child local — the child that was
+        // never remote — so they are bound, not required, to save.)
+        let &(min, k, aggressive) = r
+            .arms
+            .iter()
+            .find(|&&(min, k, _)| min == 0 && k == 4)
+            .expect("sweep includes the aggressive arm");
+        assert!(
+            aggressive < r.baseline_net_bytes,
+            "clustering (min={min},k={k}) saved nothing ({aggressive} vs {})",
+            r.baseline_net_bytes
+        );
     }
 
     #[test]

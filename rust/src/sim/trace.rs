@@ -15,7 +15,8 @@ pub fn render_trace(report: &JobReport, spans: &[TaskSpan]) -> String {
     let mut out = String::with_capacity(64 + spans.len() * 48);
     out.push_str(&format!(
         "job platform={} id={} makespan_ns={} tasks={} lambdas={} cold={} \
-         kv_r={} kv_w={} kv_i={} kv_e={} kv_p={} bytes_r={} bytes_w={} billed_ms={} ok={}\n",
+         kv_r={} kv_w={} kv_i={} kv_e={} kv_p={} bytes_r={} bytes_w={} net_bytes={} \
+         billed_ms={} ok={}\n",
         report.platform,
         report.job,
         report.makespan.as_nanos(),
@@ -29,6 +30,7 @@ pub fn render_trace(report: &JobReport, spans: &[TaskSpan]) -> String {
         report.kv.publishes,
         report.kv.bytes_read,
         report.kv.bytes_written,
+        report.net_bytes_moved,
         report.billed.as_millis(),
         report.is_ok(),
     ));
@@ -91,6 +93,7 @@ mod tests {
         let report = JobReport::success("WUKONG", Duration::from_secs(1), &hub);
         let t = render_trace(&report, &[span(0), span(1)]);
         assert!(t.starts_with("job platform=WUKONG "));
+        assert!(t.contains(" net_bytes=0 "));
         assert_eq!(t.lines().count(), 3);
         assert!(t.contains("task t1 exec=e7 "));
     }

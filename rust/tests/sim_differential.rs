@@ -14,7 +14,7 @@
 //! `wukong::sim::differential_check(<seed from the log>)`.
 
 use wukong::sim::{
-    determinism_check, differential_check, governance_check, multi_job_check,
+    determinism_check, differential_check, governance_check, locality_check, multi_job_check,
     multi_job_determinism_check,
 };
 
@@ -28,6 +28,11 @@ const MULTI_JOB_BLOCK: u64 = 5;
 /// (`WUKONG_SIM_SEED_BLOCK=6`): sweeps the priority/budget/eviction/DRR
 /// oracle and skips the single-job and multi-job sweeps.
 const GOVERNANCE_BLOCK: u64 = 6;
+/// The dedicated locality CI block (`WUKONG_SIM_SEED_BLOCK=7`): sweeps
+/// the clustered-fan-out oracle (size-threshold × cluster-width grid,
+/// store-once skip-publish invariant, bytes-moved monotonicity) and skips
+/// the other sweeps.
+const LOCALITY_BLOCK: u64 = 7;
 
 fn seed_block() -> Option<u64> {
     std::env::var("WUKONG_SIM_SEED_BLOCK").ok().map(|block| {
@@ -41,7 +46,7 @@ fn seed_block() -> Option<u64> {
 /// for the dedicated multi-job and governance blocks).
 fn seed_range() -> std::ops::Range<u64> {
     match seed_block() {
-        Some(MULTI_JOB_BLOCK) | Some(GOVERNANCE_BLOCK) => 0..0,
+        Some(MULTI_JOB_BLOCK) | Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) => 0..0,
         Some(k) => {
             let lo = k * BLOCK_SIZE;
             assert!(lo < TOTAL_SEEDS, "block {k} out of range");
@@ -57,7 +62,7 @@ fn seed_range() -> std::ops::Range<u64> {
 fn multi_job_seeds() -> Vec<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) => (50..58).collect(),
-        Some(GOVERNANCE_BLOCK) => vec![],
+        Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) => vec![],
         Some(k) => vec![k * BLOCK_SIZE],
         None => vec![0, 25],
     }
@@ -70,6 +75,16 @@ fn governance_seeds() -> Vec<u64> {
         Some(GOVERNANCE_BLOCK) => (60..68).collect(),
         Some(_) => vec![],
         None => vec![60],
+    }
+}
+
+/// Locality scenario seeds: block 7 sweeps eight; a local run samples
+/// one; the other blocks skip.
+fn locality_seeds() -> Vec<u64> {
+    match seed_block() {
+        Some(LOCALITY_BLOCK) => (70..78).collect(),
+        Some(_) => vec![],
+        None => vec![70],
     }
 }
 
@@ -160,6 +175,35 @@ fn governance_invariants_hold_under_priority_budget_and_eviction() {
             report.shed.2,
             report.evicted,
             report.makespan,
+        );
+    }
+}
+
+#[test]
+fn locality_clustering_preserves_outputs_and_never_adds_traffic() {
+    // The locality oracle (ISSUE 6): locality-enhanced WUKONG swept over
+    // min_local_bytes ∈ {0, median, MAX} × cluster_width ∈ {1, 4} under
+    // chaos faults must produce sink outputs byte-identical to all five
+    // paper designs, persist exactly the locality-aware store-once set
+    // (fully clustered fan-outs skip the KV publish), never move more
+    // payload bytes than the locality-free baseline, and be bit-identical
+    // to PR-5 behavior when the threshold is unreachable.
+    for seed in locality_seeds() {
+        let report = locality_check(seed).unwrap_or_else(|e| {
+            panic!("locality oracle failed — reproduce with wukong::sim::locality_check({seed}): {e}")
+        });
+        assert_eq!(report.arms.len(), 6);
+        println!(
+            "locality seed {:>3}: {} tasks, baseline {} B, arms {}",
+            report.seed,
+            report.tasks,
+            report.baseline_net_bytes,
+            report
+                .arms
+                .iter()
+                .map(|(m, k, b)| format!("(min={m},k={k})={b}B"))
+                .collect::<Vec<_>>()
+                .join(" ")
         );
     }
 }
