@@ -393,6 +393,63 @@ fn main() {
         || run_mt(32, &tr64, &cfg),
     );
 
+    // --- spill: working set 4x over the KV byte budget ------------------
+    // The MT-8 burst again, but with a finite resident-byte budget and
+    // the spill tier armed: retirement-time eviction demotes overflowing
+    // arenas to the cold tier (demotion traffic + storage-seconds
+    // billing) instead of destroying them. An unbudgeted probe run
+    // measures the retained working set first, so the budget is always
+    // exactly a quarter of it regardless of the workload's footprint.
+    let run_spill = |budget: u64, spill: bool| {
+        let requests: Vec<JobRequest> = (0..8)
+            .map(|i| JobRequest {
+                name: format!("sp{i}"),
+                tenant: (i % 3) as u32,
+                priority: 0,
+                seed: i as u64,
+                dag: tr256.clone(),
+                policy: Arc::new(WukongPolicy),
+            })
+            .collect();
+        let svc = ServiceConfig::new(cfg.clone(), 1)
+            .with_profile(ArrivalProfile::Bursts {
+                burst: 8,
+                intra_ms: 0.0,
+                idle_ms: 0.0,
+            })
+            .with_concurrency(8, 8)
+            .with_kv_budget(budget)
+            .with_spill(spill);
+        let report = run_service(svc, requests);
+        assert_eq!(report.completed(), 8);
+        assert!(report.all_ok());
+        report
+    };
+    let working_set = run_spill(u64::MAX, false).resident_kv_bytes;
+    assert!(working_set > 0, "probe run retained nothing");
+    let spill_budget = working_set / 4;
+    let mut demoted = 0u64;
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/SPILL-4x-overbudget ({mt8_tasks} tasks)"),
+        mt8_tasks,
+        iters(2),
+        || {
+            let report = run_spill(spill_budget, true);
+            assert!(!report.evicted.is_empty(), "4x over budget must evict");
+            assert!(
+                report.spill_demoted_bytes > 0,
+                "eviction must demote to the cold tier, not destroy"
+            );
+            assert!(report.resident_kv_bytes <= spill_budget);
+            assert!(report.spill_gb_seconds >= 0.0);
+            demoted = report.spill_demoted_bytes;
+        },
+    );
+    println!(
+        "    SPILL-4x: working set {working_set} B, budget {spill_budget} B, demoted {demoted} B/run"
+    );
+
     // --- service-mix fleet traffic: locality off vs on ------------------
     // The heterogeneous 12-job service mix (tree reductions, random
     // value DAGs, wide fan-outs) through the JobService, with the fleet's

@@ -34,6 +34,11 @@ pub struct FaasConfig {
     /// 3 GB Lambda ≈ 2 vCPUs of c5-class hardware at numpy-realistic
     /// dense-kernel rates.
     pub gflops: f64,
+    /// Per-tenant warm-container reservations: `(tenant, count)` pairs.
+    /// Reserved containers come out of `warm_pool` and are handed only to
+    /// invocations of that tenant; the remainder stays first-come-first-
+    /// served. Empty (default) is bit-identical to the unreserved pool.
+    pub warm_reserved: Vec<(u32, usize)>,
 }
 
 impl Default for FaasConfig {
@@ -49,6 +54,7 @@ impl Default for FaasConfig {
             billing_granularity_ms: 100,
             max_retries: 2,
             gflops: 8.0,
+            warm_reserved: Vec::new(),
         }
     }
 }
@@ -320,6 +326,39 @@ impl LocalityConfig {
     }
 }
 
+/// Cold spill-tier (S3-class object storage) parameters. When the KV byte
+/// budget evicts a retired job's arena, its payload objects demote here
+/// instead of vanishing: a late `get` falls through the KV cluster and
+/// pays the cold tier's latency + bandwidth penalty, and the tenant is
+/// billed storage-seconds for the bytes parked in the tier. **Off by
+/// default** — with `enabled = false` eviction is destruction and a late
+/// `get` returns `MissingObject`, bit-identical to the pre-spill engine.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Master switch. The tier only sees traffic under a finite
+    /// `kv_byte_budget`; armed-but-unbudgeted runs are inert.
+    pub enabled: bool,
+    /// One-way request latency to the cold tier, ms (S3-class time to
+    /// first byte; two orders of magnitude above the KV cluster's µs).
+    pub latency_ms: f64,
+    /// Per-read streaming bandwidth from the cold tier, bytes/s
+    /// (S3 single-stream GET ≈ 90 MB/s).
+    pub bandwidth_bps: f64,
+    /// Storage price, $ per GB-second (S3 standard ≈ $0.023/GB-month).
+    pub cost_gb_s: f64,
+}
+
+impl Default for SpillConfig {
+    fn default() -> Self {
+        SpillConfig {
+            enabled: false,
+            latency_ms: 15.0,
+            bandwidth_bps: 90e6,
+            cost_gb_s: 0.023 / (30.0 * 24.0 * 3600.0),
+        }
+    }
+}
+
 /// Fault-injection knobs for the deterministic simulation harness
 /// (`crate::sim`). All fault draws derive from `seed` (mixed with
 /// `SimConfig::seed`), so an entire adversarial run — cold-start spikes,
@@ -424,6 +463,8 @@ pub struct SimConfig {
     pub compute: ComputeConfig,
     /// Locality-enhanced scheduling knobs (off by default).
     pub locality: LocalityConfig,
+    /// Cold spill tier for budget-evicted intermediates (off by default).
+    pub spill: SpillConfig,
     /// Fault-injection profile (benign by default).
     pub faults: FaultConfig,
     /// Seed for all simulation randomness.
@@ -457,6 +498,13 @@ impl SimConfig {
         self.locality.enabled = true;
         self.locality.min_local_bytes = min_local_bytes;
         self.locality.cluster_width = cluster_width;
+        self
+    }
+
+    /// Enables the cold spill tier (other spill knobs keep their
+    /// defaults).
+    pub fn with_spill(mut self) -> Self {
+        self.spill.enabled = true;
         self
     }
 
@@ -514,6 +562,20 @@ mod tests {
         let mut c = c;
         c.wukong.local_cache = false;
         assert!(!c.locality_active());
+    }
+
+    #[test]
+    fn spill_defaults_are_off_and_inert() {
+        let c = SimConfig::default();
+        assert!(!c.spill.enabled);
+        assert!(c.faas.warm_reserved.is_empty());
+        // S3-class defaults: tens of ms to first byte, ~90 MB/s streams,
+        // and roughly $0.023/GB-month of storage.
+        assert_eq!(c.spill.latency_ms, 15.0);
+        assert_eq!(c.spill.bandwidth_bps, 90e6);
+        assert!((c.spill.cost_gb_s * 30.0 * 24.0 * 3600.0 - 0.023).abs() < 1e-12);
+        let c = SimConfig::test().with_spill();
+        assert!(c.spill.enabled);
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub use bytes::{ByteSize, GB, KB, MB};
 pub use clock::{now, sleep, Clock, SimInstant};
 pub use config::{
     ClusterProfile, ComputeConfig, FaasConfig, FaultConfig, LocalityConfig, NetConfig, SimConfig,
-    WukongConfig,
+    SpillConfig, WukongConfig,
 };
 pub use error::{EngineError, EngineResult};
 pub use ids::{ExecutorId, JobId, KeyKind, ObjectKey, TaskId};

@@ -74,6 +74,7 @@ pub(crate) async fn run(
     collect: bool,
     label: String,
     job: JobId,
+    tenant: Option<u32>,
     shared: Option<&SharedPlatform>,
 ) -> (
     JobReport,
@@ -93,7 +94,7 @@ pub(crate) async fn run(
     let state = Arc::new(SchedState {
         cfg: cfg.clone(),
         metrics: metrics.clone(),
-        faas: FaasHandle::new(faas, metrics.clone()),
+        faas: FaasHandle::with_tenant(faas, metrics.clone(), tenant),
         kv: kv.clone(),
         cost: CostModel::new(cfg.compute.clone()),
         runtime,

@@ -37,6 +37,7 @@ pub(crate) async fn run(
     collect: bool,
     label: String,
     job: JobId,
+    tenant: Option<u32>,
     shared: Option<&SharedPlatform>,
 ) -> (JobReport, HashMap<TaskId, DataObj>, Option<Arc<JobArena>>) {
     let dag = Arc::new(dag.clone());
@@ -65,6 +66,7 @@ pub(crate) async fn run(
     });
     let ctx = WukongCtx::with_job(
         job,
+        tenant,
         Arc::clone(&dag),
         cfg.clone(),
         faas,

@@ -43,11 +43,12 @@ impl SharedPlatform {
     pub fn new(cfg: &SimConfig) -> Arc<Self> {
         let fleet_metrics = Arc::new(MetricsHub::new());
         let faas = Faas::with_faults(cfg.faas.clone(), cfg.faults.clone(), fleet_metrics.clone());
-        let kv = KvStore::with_faults(
+        let kv = KvStore::with_spill(
             cfg.net.clone(),
             cfg.faults.clone(),
             fleet_metrics.clone(),
             cfg.wukong.ideal_storage,
+            cfg.spill.clone(),
         );
         Arc::new(SharedPlatform {
             faas,
@@ -95,6 +96,7 @@ pub struct EngineDriver {
     sampling: bool,
     label: Option<String>,
     job: JobId,
+    tenant: Option<u32>,
     shared: Option<Arc<SharedPlatform>>,
 }
 
@@ -113,6 +115,7 @@ impl EngineDriver {
             sampling: false,
             label: None,
             job: JobId(0),
+            tenant: None,
             shared: None,
         }
     }
@@ -130,6 +133,15 @@ impl EngineDriver {
     /// report). Single-job runs default to `JobId(0)`.
     pub fn for_job(mut self, job: JobId) -> Self {
         self.job = job;
+        self
+    }
+
+    /// Sets the tenant the job invokes as, so the shared platform can
+    /// serve it from that tenant's reserved warm slice
+    /// ([`crate::core::FaasConfig::warm_reserved`]) before the shared
+    /// pool. Single-job runs default to no tenant (shared pool only).
+    pub fn for_tenant(mut self, tenant: u32) -> Self {
+        self.tenant = Some(tenant);
         self
     }
 
@@ -212,6 +224,7 @@ impl EngineDriver {
                     collect,
                     label,
                     self.job,
+                    self.tenant,
                     shared,
                 )
                 .await
@@ -226,6 +239,7 @@ impl EngineDriver {
                     collect,
                     label,
                     self.job,
+                    self.tenant,
                     shared,
                 )
                 .await

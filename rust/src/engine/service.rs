@@ -185,6 +185,17 @@ pub struct ServiceConfig {
     /// tenant's arriving *and queued* jobs are shed with
     /// [`ShedReason::Budget`]. Infinite by default.
     pub tenant_budget_usd: f64,
+    /// Demote budget-evicted arenas to the cold spill tier instead of
+    /// destroying them (late `get`s then pay the cold penalty rather
+    /// than failing with `MissingObject`). Defaults from
+    /// `base.spill.enabled` — off unless armed.
+    pub spill_enabled: bool,
+    /// Cold-tier request latency, ms (defaults from `base.spill`).
+    pub spill_latency_ms: f64,
+    /// Cold-tier storage price, $ per GB-second, billed into the tenant
+    /// dollar ledger at end-of-run settlement (defaults from
+    /// `base.spill`).
+    pub spill_cost_gb_s: f64,
     /// Record per-task spans in every job (expensive; off by default).
     pub sampling: bool,
 }
@@ -192,6 +203,9 @@ pub struct ServiceConfig {
 impl ServiceConfig {
     /// A deterministic-test service config over `base`.
     pub fn new(base: SimConfig, arrival_seed: u64) -> Self {
+        let spill_enabled = base.spill.enabled;
+        let spill_latency_ms = base.spill.latency_ms;
+        let spill_cost_gb_s = base.spill.cost_gb_s;
         ServiceConfig {
             base,
             arrival_seed,
@@ -201,6 +215,9 @@ impl ServiceConfig {
             queue_cap: 64,
             kv_byte_budget: u64::MAX,
             tenant_budget_usd: f64::INFINITY,
+            spill_enabled,
+            spill_latency_ms,
+            spill_cost_gb_s,
             sampling: false,
         }
     }
@@ -232,6 +249,23 @@ impl ServiceConfig {
     pub fn with_tenant_budget(mut self, usd: f64) -> Self {
         self.tenant_budget_usd = usd;
         self
+    }
+
+    /// Arms (or disarms) the cold spill tier for budget-evicted
+    /// intermediates (see `spill_enabled`).
+    pub fn with_spill(mut self, enabled: bool) -> Self {
+        self.spill_enabled = enabled;
+        self
+    }
+
+    /// The base config with the service's spill knobs folded in — what
+    /// the shared platform is actually built from.
+    fn effective_base(&self) -> SimConfig {
+        let mut base = self.base.clone();
+        base.spill.enabled = self.spill_enabled;
+        base.spill.latency_ms = self.spill_latency_ms;
+        base.spill.cost_gb_s = self.spill_cost_gb_s;
+        base
     }
 }
 
@@ -333,8 +367,20 @@ pub struct ServiceReport {
     /// Jobs whose retired KV arenas the byte-budget policy evicted, in
     /// eviction (oldest-finished-first) order.
     pub evicted: Vec<JobId>,
-    /// Per-tenant accumulated dollar spend, sorted by tenant.
+    /// Per-tenant accumulated dollar spend (job cost + cold-storage
+    /// settlement), sorted by tenant.
     pub tenant_spend: Vec<(u32, f64)>,
+    /// Payload bytes demoted to the cold spill tier over the run (zero
+    /// with spill off or nothing evicted).
+    pub spill_demoted_bytes: u64,
+    /// Cold reads served by the spill tier / bytes they streamed.
+    pub spill_reads: u64,
+    pub spill_read_bytes: u64,
+    /// GB-seconds of cold storage settled over the run (all spill sets
+    /// are purged at end of run, so this is the whole bill).
+    pub spill_gb_seconds: f64,
+    /// Dollars of that settlement (already folded into `tenant_spend`).
+    pub spill_cost_usd: f64,
     /// End-of-run KV ledger: resident bytes still held by the cluster
     /// (retained finished intermediates; zero under a zero byte budget).
     pub resident_kv_bytes: u64,
@@ -457,6 +503,19 @@ impl ServiceReport {
         for (tenant, usd) in &self.tenant_spend {
             out.push_str(&format!("tenant t{tenant} spent_usd={usd:.9}\n"));
         }
+        // Emitted only when the tier saw traffic, so spill-off runs (and
+        // armed-but-inert runs) stay byte-identical to the pre-spill
+        // trace format.
+        if self.spill_demoted_bytes > 0 || self.spill_reads > 0 {
+            out.push_str(&format!(
+                "spill demoted_bytes={} reads={} read_bytes={} gb_seconds={:.9} cost_usd={:.12}\n",
+                self.spill_demoted_bytes,
+                self.spill_reads,
+                self.spill_read_bytes,
+                self.spill_gb_seconds,
+                self.spill_cost_usd,
+            ));
+        }
         out.push_str(&format!(
             "substrate resident_bytes={} namespaces={} arenas={}\n",
             self.resident_kv_bytes, self.pubsub_namespaces, self.registered_arenas
@@ -529,7 +588,8 @@ impl JobService {
     /// synchronous code.
     pub async fn run(&self, jobs: Vec<JobRequest>) -> ServiceReport {
         let n = jobs.len();
-        let platform = SharedPlatform::new(&self.cfg.base);
+        let base = self.cfg.effective_base();
+        let platform = SharedPlatform::new(&base);
         let arrivals = self.cfg.profile.arrival_offsets(n, self.cfg.arrival_seed);
         let t0 = clock::now();
 
@@ -573,7 +633,7 @@ impl JobService {
                 let job = JobId(idx as u64 + 1);
                 let submitted = arrivals[idx];
                 let started = clock::now() - t0;
-                let mut job_cfg = self.cfg.base.clone();
+                let mut job_cfg = base.clone();
                 job_cfg.seed = req.seed;
                 let platform = Arc::clone(&platform);
                 let tx = done_tx.clone();
@@ -586,7 +646,8 @@ impl JobService {
                 crate::rt::spawn(async move {
                     let mut driver = EngineDriver::with_policy(job_cfg, req.policy)
                         .on_platform(platform)
-                        .for_job(job);
+                        .for_job(job)
+                        .for_tenant(req.tenant);
                     if sampling {
                         driver = driver.with_sampling();
                     }
@@ -726,6 +787,21 @@ impl JobService {
         let makespan = clock::now() - t0;
         outcomes.sort_by_key(|o| o.job);
         rejected.sort_by_key(|r| r.job);
+        // End-of-run spill settlement: purge every remaining cold set
+        // (deterministic uid order) and bill each job's storage-seconds
+        // to its tenant — the storage half of the pay-per-use ledger.
+        // After this the tier's live accrual is zero ("billing closes to
+        // zero"); with spill off every number here is zero and nothing
+        // changes.
+        let spill = platform.kv.spill();
+        let job_tenant: HashMap<u64, u32> = outcomes.iter().map(|o| (o.job.0, o.tenant)).collect();
+        for bill in spill.purge_all(clock::now()) {
+            if let Some(&tenant) = job_tenant.get(&bill.job) {
+                *tenant_spent.entry(tenant).or_insert(0.0) +=
+                    bill.gb_seconds * base.spill.cost_gb_s;
+            }
+        }
+        let spill_gb_seconds = spill.settled_gb_seconds();
         let mut tenant_spend: Vec<(u32, f64)> = tenant_spent.into_iter().collect();
         tenant_spend.sort_by_key(|&(t, _)| t);
         ServiceReport {
@@ -736,6 +812,11 @@ impl JobService {
             fleet_cost_usd: platform.total_cost_usd(),
             evicted,
             tenant_spend,
+            spill_demoted_bytes: spill.demoted_bytes(),
+            spill_reads: spill.reads(),
+            spill_read_bytes: spill.read_bytes(),
+            spill_gb_seconds,
+            spill_cost_usd: spill_gb_seconds * base.spill.cost_gb_s,
             resident_kv_bytes: platform.kv.resident_kv_bytes(),
             pubsub_namespaces: platform.kv.pubsub_namespace_count(),
             registered_arenas: platform.kv.registered_arena_count(),
@@ -1131,5 +1212,83 @@ mod tests {
         let replay = run();
         assert_eq!(replay.evicted, report.evicted, "eviction is deterministic");
         assert_eq!(replay.render_trace(), report.render_trace());
+    }
+
+    #[test]
+    fn spill_service_bills_storage_seconds_into_the_tenant_ledger() {
+        // Budget 0 + spill on: every completed job's intermediates
+        // demote to the cold tier instead of dying, and the end-of-run
+        // settlement bills each tenant the storage-seconds on top of
+        // its job costs. Storage priced at $1/GB-s so the (tiny) bill
+        // is unmistakably visible in the ledger.
+        let run = || {
+            let jobs: Vec<JobRequest> = (0..4)
+                .map(|i| chain_job(&format!("sp{i}"), i % 2, i as u64, 4))
+                .collect();
+            let mut cfg = ServiceConfig::new(SimConfig::test(), 11)
+                .with_profile(ArrivalProfile::Bursts {
+                    burst: 4,
+                    intra_ms: 0.0,
+                    idle_ms: 0.0,
+                })
+                .with_concurrency(1, 16)
+                .with_kv_budget(0)
+                .with_spill(true);
+            cfg.spill_cost_gb_s = 1.0;
+            run_service(cfg, jobs)
+        };
+        let report = run();
+        assert_eq!(report.completed(), 4);
+        assert_eq!(report.evicted.len(), 4, "budget 0 evicts every job");
+        // Each chain job retains its 8-byte sink: demoted, not destroyed.
+        assert_eq!(report.spill_demoted_bytes, 32);
+        assert_eq!(report.spill_reads, 0, "nobody fetched late");
+        assert!(
+            report.spill_gb_seconds > 0.0,
+            "sets accrued storage-seconds until end-of-run settlement"
+        );
+        assert!(report.spill_cost_usd > 0.0);
+        // The tenant ledger carries job costs PLUS the storage bill.
+        let job_costs: f64 = report.outcomes.iter().map(|o| o.cost_usd).sum();
+        let ledger: f64 = report.tenant_spend.iter().map(|&(_, s)| s).sum();
+        assert!(ledger > job_costs, "storage bill lands in the ledger");
+        assert!(
+            (ledger - job_costs - report.spill_cost_usd).abs() < 1e-12,
+            "ledger = job costs + spill settlement"
+        );
+        // The cluster itself is empty (demotion zeroes the KV ledger);
+        // the trace gains a spill line and still replays byte-identically.
+        assert_eq!(report.resident_kv_bytes, 0);
+        assert_eq!(report.registered_arenas, 0);
+        let trace = report.render_trace();
+        assert!(trace.contains("\nspill demoted_bytes=32 reads=0 "), "{trace}");
+        assert_eq!(run().render_trace(), trace, "spill runs replay exactly");
+    }
+
+    #[test]
+    fn spill_armed_but_unbudgeted_is_bit_identical_to_spill_off() {
+        // With an unlimited byte budget nothing is ever evicted, so an
+        // armed spill tier must change NOTHING: the canonical trace is
+        // byte-identical to the spill-off run (which is itself the
+        // pre-spill engine — eviction-as-destruction semantics and all).
+        let run = |spill: bool| {
+            let jobs: Vec<JobRequest> = (0..4)
+                .map(|i| chain_job(&format!("in{i}"), i % 2, i as u64, 4))
+                .collect();
+            let cfg = ServiceConfig::new(SimConfig::test(), 12)
+                .with_profile(ArrivalProfile::Bursts {
+                    burst: 4,
+                    intra_ms: 0.0,
+                    idle_ms: 0.0,
+                })
+                .with_concurrency(2, 16)
+                .with_spill(spill);
+            run_service(cfg, jobs)
+        };
+        let off = run(false);
+        let armed = run(true);
+        assert_eq!(armed.spill_demoted_bytes, 0);
+        assert_eq!(armed.spill_gb_seconds, 0.0);
+        assert_eq!(off.render_trace(), armed.render_trace());
     }
 }

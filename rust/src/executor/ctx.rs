@@ -77,6 +77,7 @@ impl WukongCtx {
     ) -> Arc<Self> {
         Self::with_job(
             JobId(0),
+            None,
             dag,
             cfg,
             faas,
@@ -92,10 +93,12 @@ impl WukongCtx {
     /// among others) over the given platform and KV cluster. Creates the
     /// job's KV arena — dense slots sized once for the DAG, so every
     /// executor KV op after this is a pure index lookup — and the per-job
-    /// platform handle that records into this job's metrics hub.
+    /// platform handle that records into this job's metrics hub and draws
+    /// warm containers as `tenant` (reserved slice first, if configured).
     #[allow(clippy::too_many_arguments)]
     pub fn with_job(
         job: JobId,
+        tenant: Option<u32>,
         dag: Arc<Dag>,
         cfg: SimConfig,
         faas: Arc<Faas>,
@@ -108,7 +111,7 @@ impl WukongCtx {
         let n = dag.len();
         assert_eq!(lowered.len(), n, "lowering does not cover the DAG");
         let kv = kv.arena_with_metrics(job, n, metrics.clone());
-        let faas = FaasHandle::new(faas, metrics.clone());
+        let faas = FaasHandle::with_tenant(faas, metrics.clone(), tenant);
         Arc::new(WukongCtx {
             job,
             dag,

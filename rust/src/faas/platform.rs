@@ -20,6 +20,69 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 use crate::rt::sync::Semaphore;
 use crate::rt::JoinHandle;
+use std::collections::HashMap;
+
+/// Where an acquired warm container came from, so its release returns it
+/// to the same place (a tenant's reserved slice never leaks into the
+/// shared pool).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum WarmSource {
+    Shared,
+    Reserved(u32),
+}
+
+/// The platform's warm-container inventory: a shared first-come-first-
+/// served pool plus optional per-tenant reserved slices
+/// ([`FaasConfig::warm_reserved`]). Reservations are carved out of
+/// `warm_pool` at construction, so a hog tenant strip-mining the shared
+/// pool can never touch another tenant's reserved containers.
+struct WarmPool {
+    shared: usize,
+    reserved: HashMap<u32, usize>,
+}
+
+impl WarmPool {
+    fn new(cfg: &FaasConfig) -> Self {
+        let mut shared = cfg.warm_pool;
+        let mut reserved = HashMap::new();
+        for &(tenant, want) in &cfg.warm_reserved {
+            // A reservation can only carve out what the pool still has.
+            let take = want.min(shared);
+            shared -= take;
+            if take > 0 {
+                *reserved.entry(tenant).or_insert(0) += take;
+            }
+        }
+        WarmPool { shared, reserved }
+    }
+
+    /// Takes a warm container — the tenant's reserved slice first, then
+    /// the shared pool. `None` means a cold start.
+    fn acquire(&mut self, tenant: Option<u32>) -> Option<WarmSource> {
+        if let Some(t) = tenant {
+            if let Some(n) = self.reserved.get_mut(&t) {
+                if *n > 0 {
+                    *n -= 1;
+                    return Some(WarmSource::Reserved(t));
+                }
+            }
+        }
+        if self.shared > 0 {
+            self.shared -= 1;
+            return Some(WarmSource::Shared);
+        }
+        None
+    }
+
+    /// Returns a container to where it came from. Cold-started containers
+    /// release as [`WarmSource::Shared`] — they grow the common pool.
+    fn release(&mut self, src: WarmSource) {
+        match src {
+            WarmSource::Shared => self.shared += 1,
+            WarmSource::Reserved(t) => *self.reserved.entry(t).or_insert(0) += 1,
+        }
+    }
+}
 
 /// The serverless platform: one instance per simulated deployment,
 /// shared by every job running on it.
@@ -28,7 +91,7 @@ pub struct Faas {
     billing: Billing,
     metrics: Arc<MetricsHub>,
     /// Warm containers currently available for reuse.
-    warm: Mutex<usize>,
+    warm: Mutex<WarmPool>,
     /// Platform-wide concurrent execution cap.
     concurrency: Arc<Semaphore>,
     /// Fault-injection profile (benign by default) and its seeded draw
@@ -63,7 +126,7 @@ impl Faas {
             faults.seed ^ 0x6661_6173u64.wrapping_mul(0x9E37_79B9_7F4A_7C15),
         ));
         Arc::new(Faas {
-            warm: Mutex::new(cfg.warm_pool),
+            warm: Mutex::new(WarmPool::new(&cfg)),
             concurrency: Semaphore::new(cfg.max_concurrency),
             cfg,
             billing,
@@ -105,16 +168,19 @@ impl Faas {
         Fut: Future<Output = EngineResult<()>> + 'static,
     {
         let metrics = self.metrics.clone();
-        self.invoke_recorded(metrics, make_body).await
+        self.invoke_recorded(metrics, None, make_body).await
     }
 
     /// Like [`Faas::invoke`], recording the invocation, cold-start, and
     /// billing metrics into `metrics` (the calling job's hub) instead of
-    /// the platform hub. Platform-wide state — warm pool, concurrency
-    /// cap, executor ids, fleet cost — stays shared.
+    /// the platform hub, and drawing warm containers as `tenant` (whose
+    /// reserved slice, if any, is tried before the shared pool).
+    /// Platform-wide state — warm pool, concurrency cap, executor ids,
+    /// fleet cost — stays shared.
     pub async fn invoke_recorded<F, Fut>(
         self: &Arc<Self>,
         metrics: Arc<MetricsHub>,
+        tenant: Option<u32>,
         mut make_body: F,
     ) -> JoinHandle<EngineResult<()>>
     where
@@ -134,7 +200,7 @@ impl Faas {
                 // allowed attempt, so the retry loop always masks them.
                 let may_crash = attempts <= platform.cfg.max_retries;
                 let result = platform
-                    .run_container(id, make_body(id), may_crash, &metrics)
+                    .run_container(id, make_body(id), may_crash, tenant, &metrics)
                     .await;
                 match result {
                     Ok(()) => return Ok(()),
@@ -162,21 +228,18 @@ impl Faas {
         _id: ExecutorId,
         body: impl Future<Output = EngineResult<()>>,
         may_crash: bool,
+        tenant: Option<u32>,
         metrics: &Arc<MetricsHub>,
     ) -> EngineResult<()> {
         // Concurrency admission (throttled invocations queue).
         let permit = self.concurrency.acquire_owned().await;
 
-        // Container start: warm if the pool has one, else cold.
-        let cold = {
-            let mut warm = self.warm.lock().unwrap();
-            if *warm > 0 {
-                *warm -= 1;
-                false
-            } else {
-                true
-            }
-        };
+        // Container start: warm if the tenant's reserved slice or the
+        // shared pool has one, else cold. A cold-started container joins
+        // the shared pool on release.
+        let warm_src = self.warm.lock().unwrap().acquire(tenant);
+        let cold = warm_src.is_none();
+        let warm_src = warm_src.unwrap_or(WarmSource::Shared);
         let mut start_delay = if cold {
             self.cfg.cold_start_ms
         } else {
@@ -196,7 +259,7 @@ impl Faas {
         if may_crash && self.faults.crash_prob > 0.0 {
             let crash = self.fault_rng.lock().unwrap().next_f64() < self.faults.crash_prob;
             if crash {
-                *self.warm.lock().unwrap() += 1;
+                self.warm.lock().unwrap().release(warm_src);
                 drop(permit);
                 return Err(EngineError::Job("injected container crash".into()));
             }
@@ -210,8 +273,9 @@ impl Faas {
         let execution = clock::now() - t0;
 
         self.active.fetch_sub(1, Ordering::Relaxed);
-        // Container becomes warm for future invocations.
-        *self.warm.lock().unwrap() += 1;
+        // Container becomes warm for future invocations (returned to its
+        // tenant's reserved slice if it came from one).
+        self.warm.lock().unwrap().release(warm_src);
         drop(permit);
 
         // Billing happens regardless of success.
@@ -249,11 +313,29 @@ impl Faas {
 pub struct FaasHandle {
     platform: Arc<Faas>,
     metrics: Arc<MetricsHub>,
+    /// Tenant whose reserved warm slice (if configured) this job draws
+    /// from. `None` draws only from the shared pool.
+    tenant: Option<u32>,
 }
 
 impl FaasHandle {
     pub fn new(platform: Arc<Faas>, metrics: Arc<MetricsHub>) -> Arc<Self> {
-        Arc::new(FaasHandle { platform, metrics })
+        Self::with_tenant(platform, metrics, None)
+    }
+
+    /// A handle that invokes on behalf of `tenant`, so the platform can
+    /// hand it containers from that tenant's reserved warm slice before
+    /// falling back to the shared pool.
+    pub fn with_tenant(
+        platform: Arc<Faas>,
+        metrics: Arc<MetricsHub>,
+        tenant: Option<u32>,
+    ) -> Arc<Self> {
+        Arc::new(FaasHandle {
+            platform,
+            metrics,
+            tenant,
+        })
     }
 
     /// The shared platform behind this handle.
@@ -278,7 +360,7 @@ impl FaasHandle {
         Fut: Future<Output = EngineResult<()>> + 'static,
     {
         self.platform
-            .invoke_recorded(self.metrics.clone(), make_body)
+            .invoke_recorded(self.metrics.clone(), self.tenant, make_body)
             .await
     }
 
@@ -480,6 +562,89 @@ mod tests {
             );
             assert!(job_a.billed_ms() >= 1000);
             assert!(faas.total_cost_usd() > 0.0, "fleet cost is shared");
+        });
+    }
+
+    #[test]
+    fn warm_reservations_are_carved_out_and_released_in_place() {
+        let cfg = FaasConfig {
+            warm_pool: 4,
+            warm_reserved: vec![(7, 3), (9, 5)],
+            ..FaasConfig::default()
+        };
+        let mut pool = WarmPool::new(&cfg);
+        // Tenant 7 got its 3; tenant 9 wanted 5 but only 1 remained —
+        // reservations can never mint containers beyond `warm_pool`.
+        assert_eq!(pool.acquire(Some(9)), Some(WarmSource::Reserved(9)));
+        assert_eq!(pool.acquire(Some(9)), None, "slice spent, shared empty");
+        assert_eq!(pool.acquire(None), None, "anonymous callers see no pool");
+        assert_eq!(pool.acquire(Some(7)), Some(WarmSource::Reserved(7)));
+        // Releases return to their source: tenant 9's container is again
+        // invisible to everyone else.
+        pool.release(WarmSource::Reserved(9));
+        assert_eq!(pool.acquire(None), None);
+        assert_eq!(pool.acquire(Some(9)), Some(WarmSource::Reserved(9)));
+        // A cold-started container joins the shared pool for anyone.
+        pool.release(WarmSource::Shared);
+        assert_eq!(pool.acquire(None), Some(WarmSource::Shared));
+    }
+
+    #[test]
+    fn reserved_warm_slice_shields_light_tenant_from_a_hog() {
+        crate::rt::run_virtual(async {
+            let fleet = Arc::new(MetricsHub::new());
+            let faas = Faas::new(
+                FaasConfig {
+                    warm_pool: 4,
+                    warm_reserved: vec![(1, 2)],
+                    ..FaasConfig::default()
+                },
+                fleet,
+            );
+            let hog = Arc::new(MetricsHub::new());
+            let light = Arc::new(MetricsHub::new());
+            let h_hog = FaasHandle::with_tenant(faas.clone(), hog.clone(), Some(0));
+            let h_light = FaasHandle::with_tenant(faas.clone(), light.clone(), Some(1));
+            // Tenant 0 strip-mines the pool: 100 concurrent long-running
+            // invocations (a 100:1 imbalance against tenant 1).
+            let mut hogs = Vec::new();
+            for _ in 0..100 {
+                hogs.push(
+                    h_hog
+                        .invoke(|_| async {
+                            clock::sleep(Duration::from_secs(60)).await;
+                            Ok(())
+                        })
+                        .await,
+                );
+            }
+            // While every hog container is busy, the light tenant's two
+            // invocations still start warm from its reserved slice.
+            let l1 = h_light
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_secs(1)).await;
+                    Ok(())
+                })
+                .await;
+            let l2 = h_light
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_secs(1)).await;
+                    Ok(())
+                })
+                .await;
+            l1.await.unwrap();
+            l2.await.unwrap();
+            for h in hogs {
+                h.await.unwrap();
+            }
+            assert_eq!(light.lambdas_invoked(), 2);
+            assert_eq!(
+                light.cold_starts(),
+                0,
+                "reserved containers shield the light tenant from the hog"
+            );
+            // The hog only ever saw the 2 unreserved containers warm.
+            assert_eq!(hog.cold_starts(), 98);
         });
     }
 

@@ -9,8 +9,10 @@
 
 pub mod netmodel;
 pub mod pubsub;
+pub mod spill;
 pub mod store;
 
 pub use netmodel::{Nic, TailLatency, DEFAULT_NIC_QUANTUM};
 pub use pubsub::{Message, PubSub, Subscription};
+pub use spill::{SpillSettlement, SpillTier};
 pub use store::{ArenaForensics, JobArena, KvStore};

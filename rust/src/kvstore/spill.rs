@@ -1,0 +1,362 @@
+//! The cold spill tier: S3-class object storage behind the KV cluster.
+//!
+//! The storage hierarchy is executor LocalCache → KV cluster → spill
+//! tier. When [`crate::kvstore::KvStore::enforce_kv_budget`] evicts a
+//! retired arena and spill is enabled, the arena's payload objects
+//! demote here instead of being destroyed: a late `get` falls through
+//! the (now empty) KV cluster, finds the object in the spill set, and
+//! pays the cold tier's latency + streaming-bandwidth penalty — no more
+//! `MissingObject` for result-fetch-after-completion. The tier also
+//! runs a storage-seconds meter: every byte parked here accrues
+//! GB-seconds from demotion until purge, and the job service settles
+//! that accrual into the owning tenant's dollar ledger at end of run.
+//!
+//! ## Determinism
+//!
+//! The cold-read latency tail is a seeded [`TailLatency`] stream (its
+//! own stream salt, so arming the tier never perturbs the KV cluster's
+//! draws), and `purge_all` settles sets in registration-uid order, so
+//! identical runs produce identical settlements and traces. The tier
+//! never calls the virtual clock itself: every mutation takes the
+//! caller's `now`, and a high-water mark of the latest observed instant
+//! lets [`crate::kvstore::JobArena`]'s `Drop` — which may run *outside*
+//! the virtual-time executor, where the clock would panic — settle its
+//! spill set deterministically.
+//!
+//! With `SpillConfig::enabled = false` (the default) every method is a
+//! no-op returning "absent", so eviction remains destruction and the
+//! engine is bit-identical to the pre-spill behavior.
+
+use crate::compute::DataObj;
+use crate::core::{FaultConfig, SimInstant, SpillConfig};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Spill-tail stream salt ("spill" in ASCII-ish hex), distinct from the
+/// arena tail salt so arming the tier never shifts KV latency draws.
+const SPILL_SALT: u64 = 0x7370_696c_6c;
+
+/// One demoted arena's payload set, keyed by packed `ObjectKey` word.
+struct SpillSet {
+    job: u64,
+    objects: HashMap<u64, DataObj>,
+    bytes: u64,
+    /// When the set (last) started accruing storage-seconds.
+    demoted_at: SimInstant,
+}
+
+/// The storage-seconds bill of one purged spill set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpillSettlement {
+    pub job: u64,
+    /// Payload bytes the set held at purge time.
+    pub bytes: u64,
+    /// GB-seconds accrued between demotion and purge.
+    pub gb_seconds: f64,
+}
+
+use crate::kvstore::netmodel::TailLatency;
+
+/// The cold tier itself: per-arena spill sets, a seeded cold-read tail,
+/// and cumulative demotion/read/billing meters. Owned by the cluster
+/// ([`crate::kvstore::KvStore`]); one instance serves every job.
+pub struct SpillTier {
+    cfg: SpillConfig,
+    /// Spill sets keyed by arena registration uid (unique per attach).
+    sets: Mutex<HashMap<u64, SpillSet>>,
+    /// Seeded heavy-tail stream for cold-read latency.
+    tail: TailLatency,
+    /// Cumulative payload bytes demoted into the tier.
+    demoted_bytes: AtomicU64,
+    /// Cumulative successful cold reads / bytes served.
+    reads: AtomicU64,
+    read_bytes: AtomicU64,
+    /// GB-seconds already settled by purges.
+    settled_gb_seconds: Mutex<f64>,
+    /// Latest virtual instant any operation observed — the settlement
+    /// timestamp for `Drop`-path purges that cannot query the clock.
+    high_water: Mutex<SimInstant>,
+}
+
+impl SpillTier {
+    pub fn new(cfg: SpillConfig, faults: &FaultConfig) -> Self {
+        SpillTier {
+            cfg,
+            sets: Mutex::new(HashMap::new()),
+            tail: TailLatency::from_faults(faults, SPILL_SALT),
+            demoted_bytes: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            read_bytes: AtomicU64::new(0),
+            settled_gb_seconds: Mutex::new(0.0),
+            high_water: Mutex::new(SimInstant::default()),
+        }
+    }
+
+    /// Whether the tier accepts demotions.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The tier's config (service report / billing rates).
+    pub fn config(&self) -> &SpillConfig {
+        &self.cfg
+    }
+
+    fn raise_high_water(&self, now: SimInstant) {
+        let mut hw = self.high_water.lock().unwrap();
+        if now > *hw {
+            *hw = now;
+        }
+    }
+
+    fn accrue(bytes: u64, from: SimInstant, to: SimInstant) -> f64 {
+        bytes as f64 * 1e-9 * to.duration_since(from).as_secs_f64()
+    }
+
+    /// Parks an evicted arena's payload objects in the tier. Disabled
+    /// tiers accept nothing (the caller destroys instead). Demotion is
+    /// bookkeeping in virtual time — the cost model charges the *read*
+    /// path — but the transferred bytes do count as network traffic
+    /// (the caller feeds its `net_bytes_moved` ledger). Returns the
+    /// bytes demoted.
+    pub fn demote(
+        &self,
+        uid: u64,
+        job: u64,
+        objects: Vec<(u64, DataObj)>,
+        now: SimInstant,
+    ) -> u64 {
+        if !self.cfg.enabled || objects.is_empty() {
+            return 0;
+        }
+        self.raise_high_water(now);
+        let mut sets = self.sets.lock().unwrap();
+        let set = sets.entry(uid).or_insert_with(|| SpillSet {
+            job,
+            objects: HashMap::new(),
+            bytes: 0,
+            demoted_at: now,
+        });
+        // A re-demotion (defensive; eviction normally fires once per
+        // arena) settles the accrual so far and restarts the meter.
+        if set.bytes > 0 && set.demoted_at < now {
+            *self.settled_gb_seconds.lock().unwrap() +=
+                Self::accrue(set.bytes, set.demoted_at, now);
+            set.demoted_at = now;
+        }
+        let mut added = 0u64;
+        for (raw, obj) in objects {
+            added += obj.bytes;
+            if let Some(old) = set.objects.insert(raw, obj) {
+                added -= old.bytes;
+            }
+        }
+        set.bytes += added;
+        self.demoted_bytes.fetch_add(added, Ordering::Relaxed);
+        added
+    }
+
+    /// Looks up a demoted object (synchronous; the caller sleeps
+    /// [`SpillTier::read_penalty`] before handing the bytes back).
+    /// `None` when the tier is disabled or never held the object —
+    /// the caller's `MissingObject` path is unchanged.
+    pub fn read(&self, uid: u64, raw: u64, now: SimInstant) -> Option<DataObj> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let obj = self
+            .sets
+            .lock()
+            .unwrap()
+            .get(&uid)
+            .and_then(|s| s.objects.get(&raw).cloned())?;
+        self.raise_high_water(now);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        self.read_bytes.fetch_add(obj.bytes, Ordering::Relaxed);
+        Some(obj)
+    }
+
+    /// The virtual-time price of one cold read: seeded-tail request
+    /// latency (S3 time-to-first-byte) plus streaming the payload at
+    /// the tier's bandwidth.
+    pub fn read_penalty(&self, bytes: u64) -> Duration {
+        let latency = Duration::from_secs_f64(self.cfg.latency_ms.max(0.0) * 1e-3);
+        let stream = Duration::from_secs_f64(bytes as f64 / self.cfg.bandwidth_bps.max(1.0));
+        self.tail.sample(latency) + stream
+    }
+
+    /// Deletes one arena's spill set, settling its storage-seconds at
+    /// `now`. Idempotent: a second purge finds nothing.
+    pub fn purge(&self, uid: u64, now: SimInstant) -> Option<SpillSettlement> {
+        let set = self.sets.lock().unwrap().remove(&uid)?;
+        self.raise_high_water(now);
+        let gb_seconds = Self::accrue(set.bytes, set.demoted_at, now);
+        *self.settled_gb_seconds.lock().unwrap() += gb_seconds;
+        Some(SpillSettlement {
+            job: set.job,
+            bytes: set.bytes,
+            gb_seconds,
+        })
+    }
+
+    /// `Drop`-path purge: settles at the tier's high-water mark because
+    /// the caller may be outside the virtual-time executor (where the
+    /// clock panics). Deterministic — the mark only ever advances via
+    /// in-virtual-time operations.
+    pub fn purge_at_high_water(&self, uid: u64) -> Option<SpillSettlement> {
+        let now = *self.high_water.lock().unwrap();
+        self.purge(uid, now)
+    }
+
+    /// End-of-run settlement: purges every remaining set in
+    /// registration-uid order (deterministic) and returns the bills.
+    pub fn purge_all(&self, now: SimInstant) -> Vec<SpillSettlement> {
+        let mut uids: Vec<u64> = self.sets.lock().unwrap().keys().copied().collect();
+        uids.sort_unstable();
+        uids.into_iter().filter_map(|uid| self.purge(uid, now)).collect()
+    }
+
+    /// Payload bytes currently parked in the tier.
+    pub fn live_bytes(&self) -> u64 {
+        self.sets.lock().unwrap().values().map(|s| s.bytes).sum()
+    }
+
+    /// GB-seconds accrued by still-parked sets as of `now` (unsettled).
+    /// Zero after a full purge — the billing-closes-to-zero invariant.
+    pub fn live_gb_seconds(&self, now: SimInstant) -> f64 {
+        self.sets
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| Self::accrue(s.bytes, s.demoted_at, now))
+            .sum()
+    }
+
+    /// GB-seconds already settled by purges.
+    pub fn settled_gb_seconds(&self) -> f64 {
+        *self.settled_gb_seconds.lock().unwrap()
+    }
+
+    /// Cumulative payload bytes ever demoted into the tier.
+    pub fn demoted_bytes(&self) -> u64 {
+        self.demoted_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative successful cold reads.
+    pub fn reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative payload bytes served by cold reads.
+    pub fn read_bytes(&self) -> u64 {
+        self.read_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Dollars of storage-seconds settled so far.
+    pub fn settled_cost_usd(&self) -> f64 {
+        self.settled_gb_seconds() * self.cfg.cost_gb_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tier(enabled: bool) -> SpillTier {
+        SpillTier::new(
+            SpillConfig {
+                enabled,
+                ..SpillConfig::default()
+            },
+            &FaultConfig::default(),
+        )
+    }
+
+    fn at(secs: u64) -> SimInstant {
+        SimInstant::default() + Duration::from_secs(secs)
+    }
+
+    #[test]
+    fn disabled_tier_is_inert() {
+        let t = tier(false);
+        assert_eq!(
+            t.demote(1, 7, vec![(0, DataObj::synthetic(100))], at(0)),
+            0
+        );
+        assert!(t.read(1, 0, at(1)).is_none());
+        assert!(t.purge_all(at(2)).is_empty());
+        assert_eq!(t.demoted_bytes(), 0);
+        assert_eq!(t.live_bytes(), 0);
+    }
+
+    #[test]
+    fn demote_read_purge_roundtrip_and_storage_seconds() {
+        let t = tier(true);
+        let demoted = t.demote(
+            1,
+            7,
+            vec![(10, DataObj::synthetic(4_000_000_000)), (11, DataObj::synthetic(0))],
+            at(0),
+        );
+        assert_eq!(demoted, 4_000_000_000);
+        assert_eq!(t.live_bytes(), 4_000_000_000);
+        assert_eq!(t.read(1, 10, at(1)).unwrap().bytes, 4_000_000_000);
+        assert!(t.read(1, 99, at(1)).is_none(), "never-stored key misses");
+        assert!(t.read(2, 10, at(1)).is_none(), "foreign uid misses");
+        assert_eq!(t.reads(), 1);
+        assert_eq!(t.read_bytes(), 4_000_000_000);
+        // 4 GB held for 10 s = 40 GB-seconds.
+        assert!((t.live_gb_seconds(at(10)) - 40.0).abs() < 1e-9);
+        let s = t.purge(1, at(10)).unwrap();
+        assert_eq!(s.job, 7);
+        assert_eq!(s.bytes, 4_000_000_000);
+        assert!((s.gb_seconds - 40.0).abs() < 1e-9);
+        assert!((t.settled_gb_seconds() - 40.0).abs() < 1e-9);
+        assert_eq!(t.live_bytes(), 0);
+        assert_eq!(t.live_gb_seconds(at(20)), 0.0, "billing closes to zero");
+        assert!(t.purge(1, at(20)).is_none(), "purge is idempotent");
+    }
+
+    #[test]
+    fn purge_all_settles_in_uid_order() {
+        let t = tier(true);
+        t.demote(5, 50, vec![(0, DataObj::synthetic(10))], at(0));
+        t.demote(2, 20, vec![(0, DataObj::synthetic(20))], at(0));
+        t.demote(9, 90, vec![(0, DataObj::synthetic(30))], at(0));
+        let bills = t.purge_all(at(1));
+        assert_eq!(
+            bills.iter().map(|b| b.job).collect::<Vec<_>>(),
+            vec![20, 50, 90]
+        );
+        assert_eq!(t.live_bytes(), 0);
+    }
+
+    #[test]
+    fn high_water_settlement_matches_last_observed_instant() {
+        let t = tier(true);
+        t.demote(3, 30, vec![(0, DataObj::synthetic(2_000_000_000))], at(0));
+        t.read(3, 0, at(5)); // advances the high-water mark
+        let s = t.purge_at_high_water(3).unwrap();
+        // 2 GB held 5 s (demote -> last read) = 10 GB-seconds.
+        assert!((s.gb_seconds - 10.0).abs() < 1e-9, "{}", s.gb_seconds);
+    }
+
+    #[test]
+    fn read_penalty_charges_latency_plus_stream() {
+        let t = SpillTier::new(
+            SpillConfig {
+                enabled: true,
+                latency_ms: 15.0,
+                bandwidth_bps: 90e6,
+                ..SpillConfig::default()
+            },
+            &FaultConfig::default(),
+        );
+        let p = t.read_penalty(90_000_000);
+        // 15 ms TTFB + 1 s streaming 90 MB at 90 MB/s.
+        assert_eq!(p, Duration::from_millis(15) + Duration::from_secs(1));
+        assert_eq!(t.read_penalty(0), Duration::from_millis(15));
+    }
+}

@@ -56,10 +56,11 @@
 
 use crate::compute::DataObj;
 use crate::core::{
-    clock, mix64, EngineError, EngineResult, FaultConfig, JobId, NetConfig, ObjectKey,
+    clock, mix64, EngineError, EngineResult, FaultConfig, JobId, NetConfig, ObjectKey, SpillConfig,
 };
 use crate::kvstore::netmodel::{Nic, TailLatency};
 use crate::kvstore::pubsub::{Message, PubSub, Subscription};
+use crate::kvstore::spill::SpillTier;
 use crate::metrics::{KvOpKind, MetricsHub};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -142,6 +143,11 @@ pub struct KvStore {
     /// Cluster-wide resident-byte ledger (sum of every arena's resident
     /// payload bytes), updated delta-wise on each store/evict/drop.
     resident_total: AtomicU64,
+    /// The cold spill tier below the KV cluster. When enabled, budget
+    /// eviction demotes retired arenas' payloads here instead of
+    /// destroying them; disabled (default) it is inert and eviction is
+    /// destruction, bit-identical to the pre-spill engine.
+    spill: SpillTier,
 }
 
 impl KvStore {
@@ -153,14 +159,26 @@ impl KvStore {
         Self::with_faults(cfg, FaultConfig::default(), metrics, ideal)
     }
 
-    /// Full constructor: network config, fault-injection profile, ideal
-    /// mode. Fault draws are seeded, so identical runs sample identical
-    /// latency tails.
+    /// Constructor with fault profile; the spill tier stays at its inert
+    /// default (eviction is destruction).
     pub fn with_faults(
         cfg: NetConfig,
         faults: FaultConfig,
         metrics: Arc<MetricsHub>,
         ideal: bool,
+    ) -> Arc<Self> {
+        Self::with_spill(cfg, faults, metrics, ideal, SpillConfig::default())
+    }
+
+    /// Full constructor: network config, fault-injection profile, ideal
+    /// mode, spill tier. Fault draws are seeded, so identical runs sample
+    /// identical latency tails (the spill tier derives its own stream).
+    pub fn with_spill(
+        cfg: NetConfig,
+        faults: FaultConfig,
+        metrics: Arc<MetricsHub>,
+        ideal: bool,
+        spill: SpillConfig,
     ) -> Arc<Self> {
         assert!(cfg.kv_shards > 0);
         // Shard-per-VM: each shard gets its own NIC. Shared-VM mode (the
@@ -179,6 +197,7 @@ impl KvStore {
                 nic: shared.clone().unwrap_or_else(mk_nic),
             })
             .collect();
+        let spill = SpillTier::new(spill, &faults);
         Arc::new(KvStore {
             shards,
             pubsub: PubSub::new(),
@@ -188,7 +207,13 @@ impl KvStore {
             ideal,
             registry: Mutex::new(ArenaRegistry::default()),
             resident_total: AtomicU64::new(0),
+            spill,
         })
+    }
+
+    /// The cluster's cold spill tier (billing settlement, reports).
+    pub fn spill(&self) -> &SpillTier {
+        &self.spill
     }
 
     /// Attaches a job to the cluster: creates its arena with slot storage
@@ -311,9 +336,16 @@ impl KvStore {
             };
             // Reclaim outside the registry lock: dropping the upgraded
             // Arc here may run the arena's Drop, which re-locks the
-            // registry (finding its entry already gone).
+            // registry (finding its entry already gone). With the spill
+            // tier enabled, eviction is demotion instead of destruction:
+            // the arena's payload parks in the cold tier, still
+            // fetchable (at cold prices) through the same handle.
             if let Some(arena) = entry.arena.upgrade() {
-                arena.reclaim();
+                if self.spill.enabled() {
+                    arena.demote_to_spill();
+                } else {
+                    arena.reclaim();
+                }
                 evicted.push(JobId(entry.job));
             }
         }
@@ -477,6 +509,45 @@ impl JobArena {
         freed
     }
 
+    /// Spill-enabled eviction: moves every payload object out of the KV
+    /// cluster into the cold tier, zeroing the arena's resident-byte
+    /// ledger entry exactly like [`JobArena::reclaim`]. Fan-in counters
+    /// are bookkeeping for a finished DAG and are simply dropped. The
+    /// demotion transfer counts as real network traffic (KV shard →
+    /// cold store), feeding the per-job and fleet `net_bytes_moved`
+    /// ledgers; like the eviction DEL it is free in *virtual time* —
+    /// the cost model charges the cold **read** path instead. Returns
+    /// the demoted bytes.
+    fn demote_to_spill(&self) -> u64 {
+        let slots = {
+            let mut w = self.slots.write().unwrap();
+            std::mem::take(&mut *w)
+        };
+        let mut payloads: Vec<(u64, DataObj)> = slots
+            .objects
+            .into_iter()
+            .enumerate()
+            .filter_map(|(i, slot)| {
+                let obj = slot.into_inner().unwrap()?;
+                Some((ObjectKey::output(crate::core::TaskId(i as u32)).raw(), obj))
+            })
+            .collect();
+        payloads.extend(self.named_objects.lock().unwrap().drain());
+        self.named_counters.lock().unwrap().clear();
+        let freed = self.resident.swap(0, Ordering::Relaxed);
+        self.store.resident_total.fetch_sub(freed, Ordering::Relaxed);
+        let moved = self
+            .store
+            .spill
+            .demote(self.uid, self.job.0, payloads, clock::now());
+        if moved > 0 {
+            self.net_bytes.fetch_add(moved, Ordering::Relaxed);
+            self.metrics.record_net_bytes(moved);
+            self.metrics.record_spill_demotion(moved);
+        }
+        moved
+    }
+
     /// Reads the object for `key` (no modeled cost).
     fn load_obj(&self, key: ObjectKey) -> Option<DataObj> {
         match key.object_slot() {
@@ -505,23 +576,47 @@ impl JobArena {
     }
 
     /// Retrieves the object under `key`, charging latency + bandwidth.
+    /// When the KV cluster no longer holds the object (this arena was
+    /// budget-evicted after retirement), the read falls through to the
+    /// cold spill tier and pays the cold penalty instead of failing —
+    /// `MissingObject` remains only for keys that were never stored (or
+    /// were destroyed with the spill tier disabled).
     pub async fn get(&self, key: ObjectKey, client_bps: f64) -> EngineResult<DataObj> {
         let t0 = clock::now();
-        let shard = self.shard_of(key);
-        let obj = self
-            .load_obj(key)
-            .ok_or_else(|| EngineError::MissingObject {
-                key: key.to_string(),
-            })?;
+        let Some(obj) = self.load_obj(key) else {
+            return self.get_cold(key, t0).await;
+        };
         if !self.store.ideal {
             clock::sleep(self.tail.sample(self.latency())).await;
-            shard
+            self.shard_of(key)
                 .nic
                 .transfer_capped_as(self.job, obj.bytes, client_bps)
                 .await;
             self.net_bytes.fetch_add(obj.bytes, Ordering::Relaxed);
             self.metrics.record_net_bytes(obj.bytes);
         }
+        self.metrics
+            .record_kv_op(KvOpKind::Read, obj.bytes, clock::now() - t0);
+        Ok(obj)
+    }
+
+    /// The cold half of [`JobArena::get`]: serves a demoted object from
+    /// the spill tier, sleeping the tier's seeded latency + streaming
+    /// penalty. The cold store is its own endpoint — shard NICs are not
+    /// held, so a burst of cold fetches never head-of-line-blocks live
+    /// jobs' KV traffic.
+    async fn get_cold(&self, key: ObjectKey, t0: clock::SimInstant) -> EngineResult<DataObj> {
+        let Some(obj) = self.store.spill.read(self.uid, key.raw(), clock::now()) else {
+            return Err(EngineError::MissingObject {
+                key: key.to_string(),
+            });
+        };
+        if !self.store.ideal {
+            clock::sleep(self.store.spill.read_penalty(obj.bytes)).await;
+            self.net_bytes.fetch_add(obj.bytes, Ordering::Relaxed);
+            self.metrics.record_net_bytes(obj.bytes);
+        }
+        self.metrics.record_spill_read(obj.bytes);
         self.metrics
             .record_kv_op(KvOpKind::Read, obj.bytes, clock::now() - t0);
         Ok(obj)
@@ -757,8 +852,13 @@ impl Drop for JobArena {
         // The last handle died without an explicit retire/evict (e.g. a
         // single-job forensic run going out of scope): settle the ledger
         // and deregister, so the shared cluster never counts dead bytes.
+        // A demoted arena's spill set settles too — at the tier's
+        // high-water mark, because Drop may run outside the virtual-time
+        // executor where the clock is unavailable. Idempotent against
+        // the service's end-of-run `purge_all`.
         let freed = self.resident.swap(0, Ordering::Relaxed);
         self.store.resident_total.fetch_sub(freed, Ordering::Relaxed);
+        self.store.spill.purge_at_high_water(self.uid);
         self.store
             .registry
             .lock()
@@ -1186,6 +1286,143 @@ mod tests {
             assert_eq!(store.enforce_kv_budget(0), vec![JobId(7)]);
             assert_eq!(store.registered_arena_count(), 0);
             assert_eq!(store.resident_kv_bytes(), 0);
+        });
+    }
+
+    fn spill_store(metrics: Arc<MetricsHub>) -> Arc<KvStore> {
+        KvStore::with_spill(
+            NetConfig::default(),
+            FaultConfig::default(),
+            metrics,
+            false,
+            SpillConfig {
+                enabled: true,
+                ..SpillConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn late_get_after_eviction_is_served_cold_from_the_spill_tier() {
+        crate::rt::run_virtual(async {
+            let metrics = Arc::new(MetricsHub::new());
+            let store = spill_store(metrics.clone());
+            let a = store.arena(JobId(1), 2);
+            let key = ObjectKey::output(TaskId(0));
+            // 90 MB: exactly 1 s of streaming at the default 90 MB/s tier.
+            a.put(key, DataObj::synthetic(90_000_000), 1e9).await;
+            let put_bytes = a.net_bytes_moved();
+            store.retire(JobId(1));
+            assert_eq!(store.enforce_kv_budget(0), vec![JobId(1)]);
+            // The KV cluster is empty — the payload moved, not died.
+            assert_eq!(a.resident_bytes(), 0);
+            assert_eq!(store.resident_kv_bytes(), 0);
+            assert!(!a.peek_contains(key));
+            assert_eq!(store.spill().live_bytes(), 90_000_000);
+            assert_eq!(metrics.spill_bytes_demoted(), 90_000_000);
+            // Demotion itself counted as traffic (KV shard -> cold store).
+            assert_eq!(a.net_bytes_moved(), put_bytes + 90_000_000);
+
+            // The late get succeeds at cold prices: 15 ms TTFB + 1 s
+            // streaming (benign faults: the tail is pass-through).
+            let t0 = clock::now();
+            let obj = a.get(key, 1e9).await.unwrap();
+            let dt = clock::now() - t0;
+            assert_eq!(obj.bytes, 90_000_000);
+            assert_eq!(
+                dt,
+                Duration::from_millis(15) + Duration::from_secs(1),
+                "cold penalty must be charged"
+            );
+            assert_eq!(metrics.spill_reads(), 1);
+            assert_eq!(metrics.spill_bytes_read(), 90_000_000);
+            assert_eq!(a.net_bytes_moved(), put_bytes + 2 * 90_000_000);
+            // Never-stored keys still error.
+            assert!(matches!(
+                a.get(ObjectKey::output(TaskId(1)), 1e9).await.unwrap_err(),
+                EngineError::MissingObject { .. }
+            ));
+        });
+    }
+
+    #[test]
+    fn spill_off_eviction_stays_destruction() {
+        crate::rt::run_virtual(async {
+            let a = arena(); // default store: spill disabled
+            let key = ObjectKey::output(TaskId(0));
+            a.put(key, DataObj::synthetic(64), 1e9).await;
+            a.store().retire(JobId(0));
+            assert_eq!(a.store().enforce_kv_budget(0), vec![JobId(0)]);
+            assert_eq!(a.store().spill().live_bytes(), 0);
+            assert!(matches!(
+                a.get(key, 1e9).await.unwrap_err(),
+                EngineError::MissingObject { .. }
+            ));
+        });
+    }
+
+    #[test]
+    fn drop_without_retire_settles_the_spill_ledger() {
+        let metrics = Arc::new(MetricsHub::new());
+        let (store, arena) = crate::rt::run_virtual({
+            let metrics = metrics.clone();
+            async move {
+                let store = spill_store(metrics);
+                let a = store.arena(JobId(1), 2);
+                // 2 GB so the storage-seconds accrual is a round number.
+                a.put(ObjectKey::output(TaskId(0)), DataObj::synthetic(2_000_000_000), 1e9)
+                    .await;
+                store.retire(JobId(1));
+                store.enforce_kv_budget(0);
+                let demoted_at = clock::now();
+                clock::sleep(Duration::from_secs(5)).await;
+                // The cold read advances the tier's high-water mark 5 s
+                // past demotion.
+                a.get(ObjectKey::output(TaskId(0)), 1e9).await.unwrap();
+                assert!(clock::now() - demoted_at > Duration::from_secs(5));
+                (store, a)
+            }
+        });
+        // Drop OUTSIDE the virtual-time executor — no explicit purge ran.
+        // The arena's Drop must settle the spill set (at the high-water
+        // mark) without touching the (absent) clock.
+        assert_eq!(store.spill().live_bytes(), 2_000_000_000);
+        drop(arena);
+        assert_eq!(store.spill().live_bytes(), 0);
+        // 2 GB held >= 5 s (demote -> last cold read) = >= 10 GB-seconds.
+        assert!(
+            store.spill().settled_gb_seconds() >= 10.0,
+            "settled {} GB-s",
+            store.spill().settled_gb_seconds()
+        );
+        assert!(store.spill().settled_cost_usd() > 0.0);
+    }
+
+    #[test]
+    fn spill_billing_closes_to_zero_after_purge() {
+        crate::rt::run_virtual(async {
+            let store = spill_store(Arc::new(MetricsHub::new()));
+            let a = store.arena(JobId(1), 2);
+            a.put(ObjectKey::output(TaskId(0)), DataObj::synthetic(1_000_000_000), 1e9)
+                .await;
+            store.retire(JobId(1));
+            store.enforce_kv_budget(0);
+            clock::sleep(Duration::from_secs(10)).await;
+            let now = clock::now();
+            assert!(store.spill().live_gb_seconds(now) > 9.9);
+            let bills = store.spill().purge_all(now);
+            assert_eq!(bills.len(), 1);
+            assert_eq!(bills[0].job, 1);
+            assert_eq!(bills[0].bytes, 1_000_000_000);
+            assert!((bills[0].gb_seconds - store.spill().settled_gb_seconds()).abs() < 1e-12);
+            assert_eq!(store.spill().live_gb_seconds(now), 0.0);
+            assert_eq!(store.spill().live_bytes(), 0);
+            // Purged means gone: the late get is a real miss again.
+            assert!(a.get(ObjectKey::output(TaskId(0)), 1e9).await.is_err());
+            // Arena drop after the purge double-settles nothing.
+            let settled = store.spill().settled_gb_seconds();
+            drop(a);
+            assert_eq!(store.spill().settled_gb_seconds(), settled);
         });
     }
 

@@ -59,6 +59,12 @@ SERVICE OPTIONS (multi-tenant: many jobs, one shared platform):
                           jobs are shed (default: unlimited)
     --nic <drr|fifo>      shard-NIC queueing discipline (default drr:
                           per-job deficit-round-robin fairness)
+    --spill <on|off>      demote evicted arenas' payloads to a cold spill
+                          tier instead of destroying them; late reads pay
+                          the cold penalty (default off)
+    --spill-latency-ms <F>    cold-tier access latency in ms (default 15)
+    --spill-cost-gb-s <F>     storage price in USD per GB-second
+                              (default: S3-standard $0.023/GB-month)
 ";
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -97,6 +103,9 @@ struct Args {
     kv_budget: u64,
     tenant_budget: f64,
     nic: String,
+    spill: bool,
+    spill_latency_ms: Option<f64>,
+    spill_cost_gb_s: Option<f64>,
     // locality knobs (None = keep the SimConfig default)
     locality: bool,
     min_local_bytes: Option<u64>,
@@ -130,6 +139,9 @@ fn parse_args() -> Args {
     let mut kv_budget = u64::MAX;
     let mut tenant_budget = f64::INFINITY;
     let mut nic = "drr".to_string();
+    let mut spill = false;
+    let mut spill_latency_ms = None;
+    let mut spill_cost_gb_s = None;
     let mut locality = false;
     let mut min_local_bytes = None;
     let mut cluster_width = None;
@@ -177,6 +189,21 @@ fn parse_args() -> Args {
                 tenant_budget = val.parse().unwrap_or_else(|_| die("bad --tenant-budget"))
             }
             "--nic" => nic = val.clone(),
+            "--spill" => {
+                spill = match val.as_str() {
+                    "on" => true,
+                    "off" => false,
+                    v => die(&format!("bad --spill '{v}' (want on|off)")),
+                }
+            }
+            "--spill-latency-ms" => {
+                spill_latency_ms =
+                    Some(val.parse().unwrap_or_else(|_| die("bad --spill-latency-ms")))
+            }
+            "--spill-cost-gb-s" => {
+                spill_cost_gb_s =
+                    Some(val.parse().unwrap_or_else(|_| die("bad --spill-cost-gb-s")))
+            }
             "--locality" => {
                 locality = match val.as_str() {
                     "on" => true,
@@ -210,6 +237,9 @@ fn parse_args() -> Args {
         kv_budget,
         tenant_budget,
         nic,
+        spill,
+        spill_latency_ms,
+        spill_cost_gb_s,
         locality,
         min_local_bytes,
         cluster_width,
@@ -335,6 +365,16 @@ fn run_service_mode(args: &Args, cfg: &SimConfig) {
             report.registered_arenas
         );
     }
+    if report.spill_demoted_bytes > 0 || report.spill_reads > 0 {
+        println!(
+            "spill tier: {} bytes demoted, {} cold reads ({} bytes), {:.6} GB-s stored, ${:.9} billed",
+            report.spill_demoted_bytes,
+            report.spill_reads,
+            report.spill_read_bytes,
+            report.spill_gb_seconds,
+            report.spill_cost_usd
+        );
+    }
     println!("{}", report.fleet_row());
 }
 
@@ -350,6 +390,13 @@ fn main() {
     }
     if let Some(k) = args.cluster_width {
         cfg.locality.cluster_width = k;
+    }
+    cfg.spill.enabled = args.spill;
+    if let Some(ms) = args.spill_latency_ms {
+        cfg.spill.latency_ms = ms;
+    }
+    if let Some(c) = args.spill_cost_gb_s {
+        cfg.spill.cost_gb_s = c;
     }
     if args.command == "service" {
         run_service_mode(&args, &cfg);

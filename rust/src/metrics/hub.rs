@@ -64,6 +64,10 @@ pub struct MetricsHub {
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_evictions: AtomicU64,
+    // cold spill tier (storage hierarchy's bottom layer)
+    spill_bytes_demoted: AtomicU64,
+    spill_reads: AtomicU64,
+    spill_bytes_read: AtomicU64,
     // detailed samples (disabled unless `sampling` is set, to keep the
     // simulation hot path allocation-free for the big sweeps)
     sampling: std::sync::atomic::AtomicBool,
@@ -154,6 +158,17 @@ impl MetricsHub {
         self.cache_evictions.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// `bytes` of an evicted arena's payload demoted to the spill tier.
+    pub fn record_spill_demotion(&self, bytes: u64) {
+        self.spill_bytes_demoted.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// One cold read served from the spill tier.
+    pub fn record_spill_read(&self, bytes: u64) {
+        self.spill_reads.fetch_add(1, Ordering::Relaxed);
+        self.spill_bytes_read.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     // -- accessors --------------------------------------------------------
 
     pub fn lambdas_invoked(&self) -> u64 {
@@ -200,6 +215,15 @@ impl MetricsHub {
     }
     pub fn cache_evictions(&self) -> u64 {
         self.cache_evictions.load(Ordering::Relaxed)
+    }
+    pub fn spill_bytes_demoted(&self) -> u64 {
+        self.spill_bytes_demoted.load(Ordering::Relaxed)
+    }
+    pub fn spill_reads(&self) -> u64 {
+        self.spill_reads.load(Ordering::Relaxed)
+    }
+    pub fn spill_bytes_read(&self) -> u64 {
+        self.spill_bytes_read.load(Ordering::Relaxed)
     }
 
     pub fn task_spans(&self) -> Vec<TaskSpan> {
@@ -252,6 +276,13 @@ mod tests {
         assert_eq!(m.cache_hits(), 2);
         assert_eq!(m.cache_misses(), 1);
         assert_eq!(m.cache_evictions(), 3);
+        assert_eq!(m.spill_bytes_demoted(), 0);
+        m.record_spill_demotion(2048);
+        m.record_spill_read(512);
+        m.record_spill_read(256);
+        assert_eq!(m.spill_bytes_demoted(), 2048);
+        assert_eq!(m.spill_reads(), 2);
+        assert_eq!(m.spill_bytes_read(), 768);
     }
 
     #[test]

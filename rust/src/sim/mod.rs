@@ -29,7 +29,7 @@ pub mod trace;
 pub use harness::{fingerprint_outputs, paper_policies, ModeKind, PolicyRun, SimHarness};
 pub use oracle::{
     determinism_check, differential_check, governance_check, locality_check, multi_job_check,
-    multi_job_determinism_check, DifferentialReport, GovernanceReport, LocalityReport,
-    MultiJobReport,
+    multi_job_determinism_check, spill_check, DifferentialReport, GovernanceReport,
+    LocalityReport, MultiJobReport, SpillReport,
 };
 pub use trace::{first_divergence, render_trace};

@@ -22,14 +22,16 @@
 //! Any failing seed reproduces locally with
 //! `differential_check(seed)` — no other state is involved.
 
-use crate::core::{mix64, FaultConfig, SimConfig, TaskId};
+use crate::compute::DataObj;
+use crate::core::{clock, mix64, FaultConfig, JobId, ObjectKey, SimConfig, TaskId};
 use crate::dag::Dag;
 use crate::engine::policies::{PubSubPolicy, WukongPolicy};
 use crate::engine::service::{
     run_service, Admission, ArrivalProfile, JobRequest, ServiceConfig, ServiceReport, ShedReason,
 };
 use crate::engine::SchedulingPolicy;
-use crate::kvstore::ArenaForensics;
+use crate::kvstore::{ArenaForensics, KvStore};
+use crate::metrics::MetricsHub;
 use crate::schedule::LoweredOps;
 use crate::sim::harness::{paper_policies, ModeKind, PolicyRun, SimHarness};
 use crate::sim::trace::first_divergence;
@@ -645,6 +647,213 @@ pub fn locality_check(seed: u64) -> Result<LocalityReport, String> {
         tasks: dag.len(),
         baseline_net_bytes: baseline.report.net_bytes_moved,
         arms,
+    })
+}
+
+/// Summary of one passing spill check.
+#[derive(Clone, Debug)]
+pub struct SpillReport {
+    pub seed: u64,
+    pub jobs: usize,
+    /// Bytes the budgeted run demoted to the cold tier.
+    pub demoted_bytes: u64,
+    /// Storage-seconds settled at end of run.
+    pub gb_seconds: f64,
+    pub makespan: f64,
+}
+
+/// Runs the spill scenario of `seed`: the multi-job burst over one shared
+/// platform under chaos faults, with `budget` resident bytes for finished
+/// jobs' intermediates and the spill tier armed or not.
+fn run_spill_service(
+    seed: u64,
+    jobs: usize,
+    budget: u64,
+    spill: bool,
+) -> (Vec<Dag>, ServiceReport) {
+    let job_seeds = multi_job_seeds(seed ^ 0x73_7069_6C6Cu64, jobs); // "spill"
+    let dags: Vec<Dag> = job_seeds
+        .iter()
+        .map(|&s| random_dag(&RandomDagSpec::value(s)))
+        .collect();
+    let mut base = SimConfig::test();
+    base.seed = seed;
+    base.faas.warm_pool = 4;
+    base.faults = FaultConfig::chaos(seed ^ 0xC4A0_5C0D_E5EE_D5u64);
+    let cfg = ServiceConfig::new(base, seed)
+        .with_profile(ArrivalProfile::Bursts {
+            burst: jobs.max(1),
+            intra_ms: 0.5,
+            idle_ms: 50.0,
+        })
+        .with_concurrency(jobs, jobs.saturating_mul(2).max(1))
+        .with_kv_budget(budget)
+        .with_spill(spill);
+    let requests: Vec<JobRequest> = job_seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &job_seed)| JobRequest {
+            name: format!("sp{i}"),
+            tenant: (i % 3) as u32,
+            priority: 0,
+            seed: job_seed,
+            dag: dags[i].clone(),
+            policy: multi_job_policy(i).0,
+        })
+        .collect();
+    (dags, run_service(cfg, requests))
+}
+
+/// Direct cold-path probe: a seeded arena is filled, retired, evicted
+/// into the spill tier, then every object is read back cold under a
+/// chaos latency tail. Returns each read's `(bytes, latency ns)` plus
+/// the final traffic and settlement counters — everything a replay must
+/// reproduce bit-for-bit.
+fn spill_probe(seed: u64) -> Vec<(u64, u64)> {
+    crate::rt::run_virtual(async move {
+        let cfg = SimConfig::test();
+        let mut spill_cfg = cfg.spill.clone();
+        spill_cfg.enabled = true;
+        let metrics = Arc::new(MetricsHub::new());
+        let store = KvStore::with_spill(
+            cfg.net.clone(),
+            FaultConfig::chaos(seed ^ 0x51_3011),
+            metrics,
+            false,
+            spill_cfg,
+        );
+        let n = 4 + (seed % 4) as usize;
+        let arena = store.arena(JobId(1), n);
+        for i in 0..n {
+            let bytes = 1_000 + mix64(seed ^ i as u64) % 2_000_000;
+            arena
+                .put(ObjectKey::output(TaskId(i as u32)), DataObj::synthetic(bytes), 1e9)
+                .await;
+        }
+        store.retire(JobId(1));
+        assert_eq!(store.enforce_kv_budget(0), vec![JobId(1)]);
+        let mut reads = Vec::with_capacity(n + 2);
+        for i in 0..n {
+            let t0 = clock::now();
+            let obj = arena
+                .get(ObjectKey::output(TaskId(i as u32)), 1e9)
+                .await
+                .expect("evicted object must be served from the spill tier");
+            let dt = clock::now() - t0;
+            reads.push((obj.bytes, dt.as_nanos() as u64));
+        }
+        reads.push((store.spill().read_bytes(), store.spill().reads()));
+        reads.push((arena.net_bytes_moved(), store.spill().live_bytes()));
+        reads
+    })
+}
+
+/// The tiered-storage oracle (the block-8 sweep): a working set far
+/// larger than the byte budget (budget 0 — nothing fits) must spill, not
+/// vanish. Checks, for every seed:
+///
+/// * every job of the budgeted spill run completes with sink outputs
+///   **byte-identical** to the unbudgeted spill-off reference — demotion
+///   changes where retired intermediates live, never what jobs compute;
+/// * the demotion actually happened: every completed job was evicted,
+///   bytes landed in the cold tier, the KV cluster ends empty, and the
+///   end-of-run settlement billed the storage-seconds;
+/// * the budgeted spill run — evictions, demotions, billing trailer —
+///   **replays byte-identically** from its seed;
+/// * an armed-but-unbudgeted tier is inert: its trace is byte-identical
+///   to spill-off (PR-5 semantics preserved bit-for-bit);
+/// * direct cold reads under a chaos latency tail are deterministic:
+///   the per-read `(bytes, latency)` schedule replays exactly.
+pub fn spill_check(seed: u64) -> Result<SpillReport, String> {
+    let jobs = 6;
+
+    // Unbudgeted spill-off reference: what every job must compute.
+    let (_, reference) = run_spill_service(seed, jobs, u64::MAX, false);
+    if reference.completed() != jobs || !reference.all_ok() {
+        return Err(format!(
+            "seed {seed}: unbudgeted reference completed {}/{jobs} jobs",
+            reference.completed()
+        ));
+    }
+
+    // The budgeted spill run: working sets far over budget must demote.
+    let (_, report) = run_spill_service(seed, jobs, 0, true);
+    if report.completed() != jobs || !report.all_ok() {
+        return Err(format!(
+            "seed {seed}: spill run completed {}/{jobs} jobs",
+            report.completed()
+        ));
+    }
+    for (i, (o, r)) in report.outcomes.iter().zip(&reference.outcomes).enumerate() {
+        if o.fingerprint != r.fingerprint {
+            return Err(format!(
+                "seed {seed}: job {i} ({}) sink outputs diverge between the budgeted spill \
+                 run and the unbudgeted reference — demotion corrupted results",
+                o.name
+            ));
+        }
+    }
+    if report.evicted.len() != jobs {
+        return Err(format!(
+            "seed {seed}: budget 0 evicted {}/{jobs} jobs",
+            report.evicted.len()
+        ));
+    }
+    if report.spill_demoted_bytes == 0 {
+        return Err(format!(
+            "seed {seed}: eviction demoted nothing — retired payloads vanished"
+        ));
+    }
+    if report.resident_kv_bytes != 0 || report.registered_arenas != 0 {
+        return Err(format!(
+            "seed {seed}: cluster not empty after demotion: {} bytes, {} arenas",
+            report.resident_kv_bytes, report.registered_arenas
+        ));
+    }
+    if report.spill_gb_seconds < 0.0 || report.spill_cost_usd < 0.0 {
+        return Err(format!(
+            "seed {seed}: negative settlement ({} GB-s, ${})",
+            report.spill_gb_seconds, report.spill_cost_usd
+        ));
+    }
+
+    // Replay determinism of the full spill trace (evictions, demoted
+    // bytes, the billing trailer).
+    let (_, replay) = run_spill_service(seed, jobs, 0, true);
+    let (ta, tb) = (report.render_trace(), replay.render_trace());
+    if ta != tb {
+        let (line, left, right) = first_divergence(&ta, &tb).expect("traces differ");
+        return Err(format!(
+            "seed {seed}: spill replay diverges at trace line {line}:\n  run1: {left}\n  run2: {right}"
+        ));
+    }
+
+    // Armed-but-unbudgeted inertness: spill on with an unlimited budget
+    // must render the spill-off trace byte-for-byte.
+    let (_, armed) = run_spill_service(seed, jobs, u64::MAX, true);
+    let (ta, tb) = (armed.render_trace(), reference.render_trace());
+    if ta != tb {
+        let (line, left, right) = first_divergence(&ta, &tb).expect("traces differ");
+        return Err(format!(
+            "seed {seed}: armed-but-unbudgeted spill is not bit-identical to spill off at \
+             trace line {line}:\n  on:  {left}\n  off: {right}"
+        ));
+    }
+
+    // Cold-read determinism under the chaos latency tail.
+    let (pa, pb) = (spill_probe(seed), spill_probe(seed));
+    if pa != pb {
+        return Err(format!(
+            "seed {seed}: cold-read schedule is nondeterministic:\n  run1: {pa:?}\n  run2: {pb:?}"
+        ));
+    }
+
+    Ok(SpillReport {
+        seed,
+        jobs,
+        demoted_bytes: report.spill_demoted_bytes,
+        gb_seconds: report.spill_gb_seconds,
+        makespan: report.makespan.as_secs_f64(),
     })
 }
 

@@ -7,15 +7,16 @@
 //! counters ending at in-degree, and no orphaned intermediates; a
 //! separate check replays seeds and diffs the canonical event traces.
 //!
-//! Sharding: the full sweep covers seeds `0..50`. Set
+//! Sharding: the full single-job sweep covers seeds `0..50`. Set
 //! `WUKONG_SIM_SEED_BLOCK=<k>` to run only seeds `[10k, 10k+10)` — the CI
-//! matrix fans the five blocks out in parallel; an unset variable (local
+//! matrix fans the blocks out in parallel (0–4 single-job; 5 multi-job;
+//! 6 governance; 7 locality; 8 spill); an unset variable (local
 //! `cargo test`) runs the whole range. To reproduce a CI failure locally:
 //! `wukong::sim::differential_check(<seed from the log>)`.
 
 use wukong::sim::{
     determinism_check, differential_check, governance_check, locality_check, multi_job_check,
-    multi_job_determinism_check,
+    multi_job_determinism_check, spill_check,
 };
 
 const BLOCK_SIZE: u64 = 10;
@@ -33,6 +34,12 @@ const GOVERNANCE_BLOCK: u64 = 6;
 /// store-once skip-publish invariant, bytes-moved monotonicity) and skips
 /// the other sweeps.
 const LOCALITY_BLOCK: u64 = 7;
+/// The dedicated spill CI block (`WUKONG_SIM_SEED_BLOCK=8`): sweeps the
+/// tiered-storage oracle (budget-0 runs fingerprint-match unbudgeted
+/// spill-off references, demotions and cold reads replay
+/// deterministically, armed-but-unbudgeted is bit-identical to off) and
+/// skips the other sweeps.
+const SPILL_BLOCK: u64 = 8;
 
 fn seed_block() -> Option<u64> {
     std::env::var("WUKONG_SIM_SEED_BLOCK").ok().map(|block| {
@@ -46,7 +53,8 @@ fn seed_block() -> Option<u64> {
 /// for the dedicated multi-job and governance blocks).
 fn seed_range() -> std::ops::Range<u64> {
     match seed_block() {
-        Some(MULTI_JOB_BLOCK) | Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) => 0..0,
+        Some(MULTI_JOB_BLOCK) | Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK)
+        | Some(SPILL_BLOCK) => 0..0,
         Some(k) => {
             let lo = k * BLOCK_SIZE;
             assert!(lo < TOTAL_SEEDS, "block {k} out of range");
@@ -62,7 +70,7 @@ fn seed_range() -> std::ops::Range<u64> {
 fn multi_job_seeds() -> Vec<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) => (50..58).collect(),
-        Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) => vec![],
+        Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) | Some(SPILL_BLOCK) => vec![],
         Some(k) => vec![k * BLOCK_SIZE],
         None => vec![0, 25],
     }
@@ -85,6 +93,16 @@ fn locality_seeds() -> Vec<u64> {
         Some(LOCALITY_BLOCK) => (70..78).collect(),
         Some(_) => vec![],
         None => vec![70],
+    }
+}
+
+/// Spill scenario seeds: block 8 sweeps eight; a local run samples one;
+/// the other blocks skip.
+fn spill_seeds() -> Vec<u64> {
+    match seed_block() {
+        Some(SPILL_BLOCK) => (80..88).collect(),
+        Some(_) => vec![],
+        None => vec![80],
     }
 }
 
@@ -204,6 +222,25 @@ fn locality_clustering_preserves_outputs_and_never_adds_traffic() {
                 .map(|(m, k, b)| format!("(min={m},k={k})={b}B"))
                 .collect::<Vec<_>>()
                 .join(" ")
+        );
+    }
+}
+
+#[test]
+fn spill_tier_preserves_outputs_and_replays_deterministically() {
+    // The tiered-storage oracle (ISSUE 7): working sets far larger than
+    // the KV byte budget (budget 0) must demote to the cold spill tier
+    // instead of vanishing — sink fingerprints stay byte-identical to
+    // unbudgeted spill-off references, the demotion/billing trace replays
+    // exactly, cold reads are deterministic under the chaos latency tail,
+    // and an armed-but-unbudgeted tier is bit-identical to spill off.
+    for seed in spill_seeds() {
+        let report = spill_check(seed).unwrap_or_else(|e| {
+            panic!("spill oracle failed — reproduce with wukong::sim::spill_check({seed}): {e}")
+        });
+        println!(
+            "spill seed {:>3}: {} jobs, {} B demoted, {:.9} GB-s, makespan {:.2}s",
+            report.seed, report.jobs, report.demoted_bytes, report.gb_seconds, report.makespan,
         );
     }
 }
