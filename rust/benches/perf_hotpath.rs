@@ -270,6 +270,64 @@ fn main() {
         assert!(r.is_ok());
     });
 
+    // --- chaos: crash recovery, benign vs lethal ------------------------
+    // TR-1024 under fault injection. "CHAOS-benign" is the transient
+    // chaos profile (crashes masked by platform retries — the pre-ISSUE-8
+    // fault model, the natural baseline). "CHAOS-lethal" adds
+    // crash-at-any-phase lethality with recovery armed: task leases, the
+    // lineage watchdog, epoch-deduped re-execution, and seeded backoff
+    // all on the hot path. The pair prices the recovery machinery under
+    // fire; the armed-but-benign inertness pin (sim::recovery_check)
+    // guarantees the fault-free path stays identical.
+    use wukong::core::FaultConfig;
+    let chaos_cfg = |lethal: bool| {
+        let mut c = cfg.clone();
+        c.faas.warm_pool = 4;
+        c.faults = if lethal {
+            c.recovery.enabled = true;
+            FaultConfig::lethal_chaos(11)
+        } else {
+            FaultConfig::chaos(11)
+        };
+        c
+    };
+    let benign_cfg = chaos_cfg(false);
+    bench_case(
+        &mut rows,
+        &format!("wukong/CHAOS-benign ({n_tr} tasks)"),
+        n_tr,
+        iters(3),
+        || {
+            let (cfg, dag) = (benign_cfg.clone(), tr.clone());
+            let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+            assert!(r.is_ok());
+        },
+    );
+    let lethal_cfg = chaos_cfg(true);
+    let mut lethal_retries = 0u64;
+    let mut lethal_recomputed = 0u64;
+    bench_case(
+        &mut rows,
+        &format!("wukong/CHAOS-lethal ({n_tr} tasks)"),
+        n_tr,
+        iters(3),
+        || {
+            let (cfg, dag) = (lethal_cfg.clone(), tr.clone());
+            let r = run_sim(async move { WukongEngine::new(cfg).run(&dag).await });
+            assert!(r.is_ok(), "lethal chaos run failed: {:?}", r.error);
+            assert_eq!(r.tasks_executed, n_tr as u64);
+            lethal_retries = r.recovery.invoke_retries;
+            lethal_recomputed = r.recovery.tasks_recomputed;
+        },
+    );
+    println!(
+        "    CHAOS-lethal recovery: {lethal_retries} retries, {lethal_recomputed} recomputed/run"
+    );
+    assert!(
+        lethal_retries > 0,
+        "lethal chaos fired no platform retries — the profile is inert"
+    );
+
     // --- scaling cases -----------------------------------------------
     // Width-10k single fan-out (1 -> 10_000 -> 1): the proxy delegation
     // path, the CSR FanOutRequest range, and a 10k-way fan-in counter —

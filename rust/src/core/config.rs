@@ -367,12 +367,22 @@ impl Default for SpillConfig {
 /// every spread is neutral, so existing simulations are bit-identical to
 /// the pre-fault-injection engine.
 ///
-/// Injected container crashes are **transient by construction**: the FaaS
-/// platform never crashes the final allowed attempt of an invocation, so
-/// AWS Lambda's automatic retries (paper §IV-C "fault tolerance") always
-/// mask them. Faults perturb *when and where* tasks run, never *what they
-/// compute* — which is exactly the property the differential oracle
-/// (`crate::sim::oracle`) checks across scheduling policies.
+/// Injected container crashes come in two severities. With `lethal =
+/// false` (the default, and the [`FaultConfig::chaos`] profile) they are
+/// **transient by construction**: crashes fire only before the function
+/// body and never on the final allowed attempt, so AWS Lambda's automatic
+/// retries (paper §IV-C "fault tolerance") always mask them and faults
+/// perturb *when and where* tasks run, never *what they compute*. With
+/// `lethal = true` (the [`FaultConfig::lethal_chaos`] profile) that crutch
+/// is gone: a crash may cut the body **mid-execution** — after some
+/// publishes / fan-in increments landed and others didn't — or discard a
+/// fully completed body before its result is reported, and the final
+/// attempt is fair game, so an invocation can terminally fail with
+/// [`crate::core::EngineError::RetriesExhausted`]. Surviving that takes
+/// the recovery machinery ([`RecoveryConfig`] + the engine's task leases,
+/// edge-dedup idempotence, and lineage watchdog), and the block-9
+/// `recovery_check` oracle requires sink outputs byte-identical to a
+/// fault-free reference anyway.
 #[derive(Clone, Debug)]
 pub struct FaultConfig {
     /// Fault-stream seed, mixed with `SimConfig::seed`.
@@ -380,9 +390,39 @@ pub struct FaultConfig {
     /// Extra multiplicative spread on cold-start delay: a cold start takes
     /// `cold_start_ms * (1 + spread * u)` with `u` uniform in [0, 1).
     pub cold_start_spread: f64,
-    /// Per-attempt probability that a container crashes right after
-    /// start-up, before the function body runs (the platform retries).
+    /// Per-attempt probability that a container crashes. With the phase
+    /// weights below at zero, every crash fires before the function body
+    /// runs (the pre-PR-8 behavior, bit-identical RNG stream).
     pub crash_prob: f64,
+    /// Given a crash fires: probability it strikes **mid-body**, dropping
+    /// the in-flight function future at a seeded cut point inside
+    /// `mid_body_window_ms` — side effects already awaited have landed,
+    /// the rest are lost. `0.0` (default) disables the phase draw.
+    pub crash_mid_body: f64,
+    /// Given a crash fires: probability it strikes **pre-result** — the
+    /// body runs to completion (all side effects land) but the platform
+    /// loses the attempt and must retry. Remaining probability mass
+    /// (`1 - crash_mid_body - crash_pre_result`) stays pre-body.
+    pub crash_pre_result: f64,
+    /// Width of the mid-body crash window, ms: the cut point is
+    /// `u * mid_body_window_ms` after the body starts, `u` uniform.
+    pub mid_body_window_ms: f64,
+    /// If true, the platform may crash the **final** allowed attempt, so
+    /// an invocation can terminally fail (`RetriesExhausted`) instead of
+    /// being masked by retries. Arms the engine's recovery paths even
+    /// when `RecoveryConfig::enabled` is false, since duplicate side
+    /// effects become possible the moment bodies can die mid-flight.
+    pub lethal: bool,
+    /// Base delay for seeded exponential backoff between platform retry
+    /// attempts, ms: attempt `n` retries after
+    /// `retry_backoff_ms * 2^(n-1) * (1 + 0.5 u)`. `0.0` (default)
+    /// retries immediately with no extra RNG draw.
+    pub retry_backoff_ms: f64,
+    /// Per-attempt invoke timeout, ms: caps each attempt's body at
+    /// `min(FaasConfig::timeout_ms, attempt_timeout_ms)` so one hung
+    /// attempt cannot eat the whole function timeout budget. `0`
+    /// (default) disables the per-attempt cap.
+    pub attempt_timeout_ms: u64,
     /// Probability that a task is a straggler (applied per task,
     /// consistently across every scheduling mode).
     pub straggler_prob: f64,
@@ -401,6 +441,12 @@ impl Default for FaultConfig {
             seed: 0,
             cold_start_spread: 0.0,
             crash_prob: 0.0,
+            crash_mid_body: 0.0,
+            crash_pre_result: 0.0,
+            mid_body_window_ms: 100.0,
+            lethal: false,
+            retry_backoff_ms: 0.0,
+            attempt_timeout_ms: 0,
             straggler_prob: 0.0,
             straggler_slowdown: 1.0,
             kv_tail_prob: 0.0,
@@ -422,6 +468,23 @@ impl FaultConfig {
             straggler_slowdown: 6.0,
             kv_tail_prob: 0.05,
             kv_tail_factor: 25.0,
+            ..FaultConfig::default()
+        }
+    }
+
+    /// The block-9 recovery oracle's profile: [`FaultConfig::chaos`] made
+    /// **lethal** — crashes may strike mid-body (40%) or discard a
+    /// completed body pre-result (20%), the final attempt is crashable,
+    /// and retries back off exponentially from a 25 ms base. Under this
+    /// profile forward progress is *not* guaranteed by the platform; it
+    /// must come from the engine's recovery machinery.
+    pub fn lethal_chaos(seed: u64) -> Self {
+        FaultConfig {
+            lethal: true,
+            crash_mid_body: 0.4,
+            crash_pre_result: 0.2,
+            retry_backoff_ms: 25.0,
+            ..FaultConfig::chaos(seed)
         }
     }
 
@@ -429,8 +492,47 @@ impl FaultConfig {
     pub fn enabled(&self) -> bool {
         self.cold_start_spread > 0.0
             || self.crash_prob > 0.0
+            || self.lethal
             || (self.straggler_prob > 0.0 && self.straggler_slowdown > 1.0)
             || (self.kv_tail_prob > 0.0 && self.kv_tail_factor > 1.0)
+    }
+}
+
+/// Crash-recovery knobs for the engine's lineage-driven recovery layer
+/// (task leases + watchdog + hedged stragglers). **Off by default** —
+/// with `enabled = false` and benign faults every recovery code path is
+/// skipped and runs are bit-identical to the recovery-free engine. Lethal
+/// fault profiles ([`FaultConfig::lethal`]) arm the idempotence paths
+/// regardless, since duplicate side effects become possible the moment
+/// bodies can die mid-flight.
+#[derive(Clone, Debug)]
+pub struct RecoveryConfig {
+    /// Master switch for the watchdog/lease/hedging machinery.
+    pub enabled: bool,
+    /// Re-dispatch damping window, ms: the watchdog never re-dispatches
+    /// the same task twice within one lease interval, so an in-flight
+    /// recovery gets time to land before being doubted.
+    pub lease_ms: f64,
+    /// Watchdog scan period, ms (virtual time).
+    pub watchdog_period_ms: f64,
+    /// Hedging threshold, ms: a live, heartbeating chain that has held a
+    /// task's lease longer than this (a straggler) gets one speculative
+    /// duplicate dispatch; first result wins, the loser's effects dedup.
+    pub hedge_after_ms: f64,
+    /// Upper bound on watchdog re-dispatches of any single task; past it
+    /// the job fails with a typed error instead of retrying forever.
+    pub max_recovery_rounds: u32,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            enabled: false,
+            lease_ms: 500.0,
+            watchdog_period_ms: 250.0,
+            hedge_after_ms: 5000.0,
+            max_recovery_rounds: 5,
+        }
     }
 }
 
@@ -467,6 +569,8 @@ pub struct SimConfig {
     pub spill: SpillConfig,
     /// Fault-injection profile (benign by default).
     pub faults: FaultConfig,
+    /// Crash-recovery machinery (off by default).
+    pub recovery: RecoveryConfig,
     /// Seed for all simulation randomness.
     pub seed: u64,
 }
@@ -508,12 +612,27 @@ impl SimConfig {
         self
     }
 
+    /// Enables the crash-recovery machinery (other recovery knobs keep
+    /// their defaults).
+    pub fn with_recovery(mut self) -> Self {
+        self.recovery.enabled = true;
+        self
+    }
+
     /// True when locality-enhanced scheduling is actually in effect:
     /// the knob is on **and** the executor local cache exists (in-place
     /// children read their dependency from it; without the cache the
     /// skip-publish rule would drop objects nobody can recover).
     pub fn locality_active(&self) -> bool {
         self.locality.enabled && self.wukong.local_cache
+    }
+
+    /// True when the engine must run its recovery-aware paths: either the
+    /// watchdog machinery is switched on, or the fault profile is lethal
+    /// (bodies can die mid-flight, so idempotence and typed terminal
+    /// failures are required even without the watchdog).
+    pub fn recovery_active(&self) -> bool {
+        self.recovery.enabled || self.faults.lethal
     }
 }
 
@@ -540,6 +659,39 @@ mod tests {
         let c = SimConfig::test().with_faults(FaultConfig::chaos(7));
         assert!(c.faults.enabled());
         assert_eq!(c.faults.seed, 7);
+    }
+
+    #[test]
+    fn recovery_defaults_are_off_and_lethal_chaos_arms_them() {
+        let c = SimConfig::default();
+        assert!(!c.recovery.enabled);
+        assert!(!c.recovery_active());
+        // The new fault knobs default to the pre-lethal behavior: no
+        // phase draws, no backoff draw, no per-attempt cap, retries mask.
+        assert!(!c.faults.lethal);
+        assert_eq!(c.faults.crash_mid_body, 0.0);
+        assert_eq!(c.faults.crash_pre_result, 0.0);
+        assert_eq!(c.faults.retry_backoff_ms, 0.0);
+        assert_eq!(c.faults.attempt_timeout_ms, 0);
+        // chaos stays benign-lethality (transient crashes only) …
+        let chaos = FaultConfig::chaos(7);
+        assert!(!chaos.lethal);
+        assert_eq!(chaos.crash_mid_body, 0.0);
+        // … while lethal_chaos is chaos + lethality + phases + backoff.
+        let lethal = FaultConfig::lethal_chaos(7);
+        assert!(lethal.lethal && lethal.enabled());
+        assert_eq!(lethal.crash_prob, FaultConfig::chaos(7).crash_prob);
+        assert_eq!(lethal.crash_mid_body, 0.4);
+        assert_eq!(lethal.crash_pre_result, 0.2);
+        assert_eq!(lethal.retry_backoff_ms, 25.0);
+        assert_eq!(lethal.seed, 7);
+        // A lethal profile arms recovery paths even without the watchdog;
+        // with_recovery arms them under benign faults.
+        let c = SimConfig::test().with_faults(FaultConfig::lethal_chaos(7));
+        assert!(c.recovery_active());
+        let c = SimConfig::test().with_recovery();
+        assert!(c.recovery.enabled && c.recovery_active());
+        assert_eq!(c.recovery.max_recovery_rounds, 5);
     }
 
     #[test]

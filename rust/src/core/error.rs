@@ -18,6 +18,12 @@ pub enum EngineError {
     /// A function invocation failed after exhausting the platform's
     /// automatic retries.
     InvocationFailed { attempts: u32, reason: String },
+    /// Terminal platform failure under **lethal** fault injection: every
+    /// allowed attempt (including the final one) crashed or timed out.
+    /// Distinct from [`EngineError::InvocationFailed`] so the driver and
+    /// recovery watchdog can tell "the platform gave up" from transient
+    /// invocation trouble.
+    RetriesExhausted { attempts: u32, reason: String },
     /// A KV-store object was requested but never stored.
     MissingObject { key: String },
     /// The DAG failed validation (cycle, dangling edge, ...).
@@ -44,6 +50,9 @@ impl fmt::Display for EngineError {
             }
             EngineError::InvocationFailed { attempts, reason } => {
                 write!(f, "invocation failed after {attempts} attempts: {reason}")
+            }
+            EngineError::RetriesExhausted { attempts, reason } => {
+                write!(f, "invocation retries exhausted after {attempts} attempts: {reason}")
             }
             EngineError::MissingObject { key } => write!(f, "missing KV object {key}"),
             EngineError::InvalidDag(msg) => write!(f, "invalid DAG: {msg}"),
@@ -73,5 +82,11 @@ mod tests {
         assert!(EngineError::MissingObject { key: "out:3".into() }
             .to_string()
             .contains("out:3"));
+        let e = EngineError::RetriesExhausted {
+            attempts: 3,
+            reason: "injected container crash".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("exhausted") && s.contains("3 attempts") && s.contains("crash"));
     }
 }

@@ -23,7 +23,7 @@ use crate::core::{clock, EngineError, EngineResult, JobId, ObjectKey, SimConfig,
 use crate::dag::Dag;
 use crate::engine::driver::SharedPlatform;
 use crate::engine::policy::{CentralizedSpec, Notification};
-use crate::executor::{jitter_for, run_payload};
+use crate::executor::{jitter_for_epoch, run_payload};
 use crate::faas::{Faas, FaasHandle};
 use crate::kvstore::{JobArena, KvStore, Message};
 use crate::metrics::{JobReport, MetricsHub};
@@ -48,14 +48,28 @@ struct SchedState {
 }
 
 impl SchedState {
-    fn mark_executed(&self, task: TaskId) -> EngineResult<()> {
+    /// Marks `task` executed; `Ok(true)` on the first execution. A
+    /// duplicate is a hard error in the fault-free engine, but expected
+    /// under lethal injection: a pre-result container crash re-runs a
+    /// body whose effects already landed, so with recovery armed the
+    /// duplicate is tolerated, counted as a recomputation, and its
+    /// span/task accounting suppressed by the caller.
+    fn mark_executed(&self, task: TaskId) -> EngineResult<bool> {
         let mut v = self.executed.lock().unwrap();
-        if v[task.index()] {
-            return Err(EngineError::Job(format!("task {task} executed twice")));
+        let first = !v[task.index()];
+        if first {
+            v[task.index()] = true;
+            self.executed_count.fetch_add(1, Ordering::Relaxed);
         }
-        v[task.index()] = true;
-        self.executed_count.fetch_add(1, Ordering::Relaxed);
-        Ok(())
+        drop(v);
+        if first {
+            Ok(true)
+        } else if self.cfg.recovery_active() {
+            self.metrics.record_task_recomputed();
+            Ok(false)
+        } else {
+            Err(EngineError::Job(format!("task {task} executed twice")))
+        }
     }
 }
 
@@ -112,7 +126,9 @@ pub(crate) async fn run(
     // Completion notifications: either a direct channel fed by the
     // Lambdas' TCP connections (strawman) or a pub/sub subscription
     // relayed into the same scheduler inbox.
-    let (tcp_tx, mut tcp_rx) = mpsc::unbounded::<Result<TaskId, EngineError>>();
+    // Failures carry the task identity so the scheduler can re-dispatch
+    // a terminally lost invocation under recovery.
+    let (tcp_tx, mut tcp_rx) = mpsc::unbounded::<Result<TaskId, (TaskId, EngineError)>>();
     let mut pubsub_rx = kv.subscribe("sched:done");
     let relay = if uses_pubsub {
         // The scheduler's subscriber thread: applies the (cheap)
@@ -148,6 +164,14 @@ pub(crate) async fn run(
 
     // Seed: every leaf is immediately ready.
     let mut ready: Vec<TaskId> = dag.leaves();
+    // Completion dedup + per-task re-dispatch counts (crash recovery: a
+    // pre-result crash retried by the platform notifies twice; a
+    // terminally lost invocation is re-dispatched a bounded number of
+    // times). Benign runs never produce duplicates, so the dedup is
+    // trace-invisible there.
+    let mut completed_tasks: Vec<bool> = vec![false; dag.len()];
+    let mut rounds: Vec<u32> = vec![0; dag.len()];
+    let recovery_active = cfg.recovery_active();
 
     let parallel_invokers = spec.offload_invocation;
     while remaining > 0 {
@@ -175,23 +199,28 @@ pub(crate) async fn run(
             let dag = Arc::clone(&dag);
             let slots = Arc::clone(&invoke_slots);
             let tcp_tx = tcp_tx.clone();
+            let fail_tx = tcp_tx.clone();
+            // Execution epoch of this dispatch (0 = first): a re-dispatch
+            // re-salts the jitter draw so it does not replay the doomed
+            // schedule.
+            let epoch = rounds[task.index()];
             let dispatch = async move {
                 // Wait for an invoker slot (this is the §III-C
                 // bottleneck: limited invocation throughput).
                 let permit = slots.acquire_owned().await;
                 let body_state = Arc::clone(&state);
-                state
+                let handle = state
                     .faas
                     .invoke(move |_exec| {
                         let state = Arc::clone(&body_state);
                         let dag = Arc::clone(&dag);
                         let tcp_tx = tcp_tx.clone();
                         async move {
-                            let r = execute_single_task(&state, &dag, task).await;
+                            let r = execute_single_task(&state, &dag, task, epoch).await;
                             // Notify the scheduler of completion.
                             match (uses_pubsub, r) {
                                 (_, Err(e)) => {
-                                    let _ = tcp_tx.send(Err(e));
+                                    let _ = tcp_tx.send(Err((task, e)));
                                 }
                                 (false, Ok(())) => {
                                     // Strawman: TCP connection set-up +
@@ -224,6 +253,17 @@ pub(crate) async fn run(
                         }
                     })
                     .await;
+                if recovery_active {
+                    // Lethal injection can exhaust the platform's retries:
+                    // drain the join handle so the terminal
+                    // `RetriesExhausted` reaches the scheduler as a typed
+                    // failure instead of hanging the completion loop.
+                    crate::rt::spawn(async move {
+                        if let Err(e) = handle.await {
+                            let _ = fail_tx.send(Err((task, e)));
+                        }
+                    });
+                }
                 drop(permit);
             };
             if parallel_invokers {
@@ -242,13 +282,22 @@ pub(crate) async fn run(
         // Await one completion from the scheduler inbox (successes
         // and failures both land here; pub/sub successes arrive via
         // the relay above).
-        let completed: Result<TaskId, EngineError> = match tcp_rx.recv().await {
+        let completed: Result<TaskId, (TaskId, EngineError)> = match tcp_rx.recv().await {
             Some(r) => r,
-            None => Err(EngineError::Job("scheduler inbox closed".into())),
+            None => Err((
+                TaskId(0),
+                EngineError::Job("scheduler inbox closed".into()),
+            )),
         };
 
         match completed {
             Ok(task) => {
+                // Dedup: a platform-retried pre-result crash notifies
+                // twice; only the first completion advances the DAG.
+                if completed_tasks[task.index()] {
+                    continue;
+                }
+                completed_tasks[task.index()] = true;
                 remaining -= 1;
                 for &c in dag.children(task) {
                     indeg[c.index()] -= 1;
@@ -257,7 +306,20 @@ pub(crate) async fn run(
                     }
                 }
             }
-            Err(e) => {
+            Err((task, e)) => {
+                // A terminally lost invocation is re-dispatched (bounded)
+                // when the watchdog is armed; anything else — or an
+                // exhausted budget — fails the job with the typed error.
+                let retryable = matches!(e, EngineError::RetriesExhausted { .. });
+                if cfg.recovery.enabled
+                    && retryable
+                    && !completed_tasks[task.index()]
+                    && rounds[task.index()] < cfg.recovery.max_recovery_rounds
+                {
+                    rounds[task.index()] += 1;
+                    ready.push(task);
+                    continue;
+                }
                 failure = Some(e);
                 break;
             }
@@ -307,6 +369,7 @@ async fn execute_single_task(
     state: &Arc<SchedState>,
     dag: &Arc<Dag>,
     task: TaskId,
+    epoch: u32,
 ) -> EngineResult<()> {
     let lambda_bps = state.cfg.net.lambda_bandwidth_bps;
     let t_fetch = clock::now();
@@ -322,24 +385,27 @@ async fn execute_single_task(
         spec.output_bytes,
         &inputs,
         state.faas.config().gflops,
-        jitter_for(&state.cfg, task),
+        jitter_for_epoch(&state.cfg, task, epoch),
         &state.cost,
         state.runtime.as_ref(),
     )
     .await?;
     let compute = clock::now() - t_exec;
-    state.mark_executed(task)?;
-    // Store output and wait for the ACK (modeled inside put).
+    let first = state.mark_executed(task)?;
+    // Store output and wait for the ACK (modeled inside put). Re-storing
+    // the same deterministic bytes on a recovery re-run is idempotent.
     let t_store = clock::now();
     state.kv.put(ObjectKey::output(task), out, lambda_bps).await;
     let store = clock::now() - t_store;
-    state.metrics.record_task(crate::metrics::TaskSpan {
-        task,
-        executor: crate::core::ExecutorId(0),
-        fetch,
-        compute,
-        store,
-        total: fetch + compute + store,
-    });
+    if first {
+        state.metrics.record_task(crate::metrics::TaskSpan {
+            task,
+            executor: crate::core::ExecutorId(0),
+            fetch,
+            compute,
+            store,
+            total: fetch + compute + store,
+        });
+    }
     Ok(())
 }

@@ -5,11 +5,11 @@
 //! [`ExecutionMode::Decentralized`](crate::engine::ExecutionMode).
 
 use crate::compute::DataObj;
-use crate::core::{clock, EngineError, JobId, SimConfig, TaskId};
+use crate::core::{clock, EngineError, JobId, ObjectKey, SimConfig, TaskId};
 use crate::dag::Dag;
 use crate::engine::driver::SharedPlatform;
 use crate::engine::policy::{DecentralizedSpec, SchedulingPolicy};
-use crate::executor::ctx::WukongCtx;
+use crate::executor::ctx::{LeaseState, WukongCtx, FINAL_CHANNEL};
 use crate::executor::task_executor::invoke_executor;
 use crate::faas::Faas;
 use crate::kvstore::{JobArena, KvStore, Message};
@@ -18,7 +18,9 @@ use crate::runtime::PjrtRuntime;
 use crate::schedule::{self, LoweredOps};
 use crate::storage::StorageManager;
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Runs `dag` decentralized: generate static schedules, lower them through
 /// the policy's fan-out rule, launch the initial executors, track sink
@@ -89,8 +91,14 @@ pub(crate) async fn run(
     // ~50 ms — this is exactly the effect parallel invokers exist for).
     let leaves = dag.leaves();
     let n_invokers = spec.num_invokers.max(1);
-    let mut invoker_handles = Vec::with_capacity(n_invokers.min(leaves.len()));
-    for inv in 0..n_invokers.min(leaves.len()) {
+    let n_live = n_invokers.min(leaves.len());
+    // Latch the watchdog keys on: leaves not yet issued by a (sequential,
+    // ~50 ms/call) invoker are *queued*, not lost — recovery must not
+    // start second-guessing dispatches before all initial invocations are
+    // in flight.
+    let invokers_live = Arc::new(AtomicUsize::new(n_live));
+    let mut invoker_handles = Vec::with_capacity(n_live);
+    for inv in 0..n_live {
         let my_leaves: Vec<TaskId> = leaves
             .iter()
             .copied()
@@ -98,12 +106,21 @@ pub(crate) async fn run(
             .step_by(n_invokers)
             .collect();
         let ctx = Arc::clone(&ctx);
+        let live = Arc::clone(&invokers_live);
         invoker_handles.push(crate::rt::spawn(async move {
             for leaf in my_leaves {
-                invoke_executor(Arc::clone(&ctx), leaf, None).await;
+                invoke_executor(Arc::clone(&ctx), leaf, None, 0).await;
             }
+            live.fetch_sub(1, Ordering::Release);
         }));
     }
+
+    // --- recovery watchdog (lineage-driven, §"fault tolerance") -------
+    let watchdog = if cfg.recovery.enabled {
+        Some(spawn_watchdog(Arc::clone(&ctx), Arc::clone(&invokers_live)))
+    } else {
+        None
+    };
 
     // --- completion tracking ------------------------------------------
     let sinks: HashSet<TaskId> = dag.sinks().into_iter().collect();
@@ -112,10 +129,11 @@ pub(crate) async fn run(
     while done.len() < sinks.len() {
         match finals.recv().await {
             Some(Message::FinalResult { task }) => {
+                ctx.note_final(task);
                 done.insert(task);
             }
-            Some(Message::JobFailed { reason }) => {
-                failure = Some(EngineError::Job(reason));
+            Some(Message::JobFailed { error }) => {
+                failure = Some(error);
                 break;
             }
             Some(_) => {}
@@ -126,6 +144,12 @@ pub(crate) async fn run(
                 break;
             }
         }
+    }
+    // Stop orphaned re-executed chains and the watchdog before the
+    // makespan is read (both are inert no-ops when recovery is off).
+    ctx.set_finished();
+    if let Some(w) = watchdog {
+        w.abort();
     }
     let makespan = clock::now() - t0;
 
@@ -166,4 +190,161 @@ pub(crate) async fn run(
     }
     .for_job(job);
     (report, outputs, Some(ctx.kv.clone()))
+}
+
+/// Spawns the recovery watchdog: a periodic virtual-time loop that
+/// detects dead become-chains (abandoned leases), walks the CSR lineage
+/// upward from unfinished sinks to find the orphaned subgraph, and
+/// re-dispatches its frontier — the deepest tasks whose inputs are still
+/// available in the KV/spill substrate. It also hedges stragglers:
+/// a task whose lease has been held past `hedge_after_ms` without a
+/// heartbeat gets one speculative duplicate; first result wins and the
+/// loser's effects are deduped by the epoch/edge machinery.
+fn spawn_watchdog(
+    ctx: Arc<WukongCtx>,
+    invokers_live: Arc<AtomicUsize>,
+) -> crate::rt::JoinHandle<()> {
+    crate::rt::spawn(async move {
+        let period = Duration::from_secs_f64(
+            (ctx.cfg.recovery.watchdog_period_ms.max(1.0)) * 1e-3,
+        );
+        loop {
+            clock::sleep(period).await;
+            if ctx.is_finished() {
+                return;
+            }
+            // Initial invokers still issuing: every not-yet-dispatched
+            // leaf is queued, not lost.
+            if invokers_live.load(Ordering::Acquire) > 0 {
+                continue;
+            }
+            watchdog_round(&ctx).await;
+        }
+    })
+}
+
+/// One watchdog scan. Pure synchronous inspection except for the actual
+/// re-dispatches (spawned detached) and a terminal failure publish.
+async fn watchdog_round(ctx: &Arc<WukongCtx>) {
+    let n = ctx.dag.len();
+    let lease = Duration::from_secs_f64(ctx.cfg.recovery.lease_ms.max(0.0) * 1e-3);
+    let hedge_after = Duration::from_secs_f64(ctx.cfg.recovery.hedge_after_ms.max(0.0) * 1e-3);
+
+    // ---- lineage walk: which tasks must (re-)execute? -----------------
+    // Walk upward from every sink the driver has not heard from. A task
+    // is *covered* — and its ancestry left alone — while a chain holds
+    // its lease or a dispatch of it is still in flight. Recursion into a
+    // parent stops as soon as the parent's contribution is durable: its
+    // fan-in edge increment committed (fan-in children) or its output
+    // object still resident in the KV store or spill tier (linear
+    // children).
+    let mut needed = vec![false; n];
+    let mut stack: Vec<TaskId> = ctx
+        .dag
+        .sinks()
+        .into_iter()
+        .filter(|&s| !ctx.final_seen(s))
+        .collect();
+    while let Some(t) = stack.pop() {
+        if needed[t.index()] {
+            continue;
+        }
+        if ctx.lease_state(t) == LeaseState::Held || ctx.dispatch_outstanding(t) {
+            continue;
+        }
+        needed[t.index()] = true;
+        let fan_in = ctx.lowered.in_degree(t) > 1;
+        for &p in ctx.dag.parents(t) {
+            let durable = if fan_in {
+                ctx.kv.edge_committed(t, p)
+            } else {
+                ctx.kv.peek_available(ObjectKey::output(p))
+            };
+            if !durable {
+                stack.push(p);
+            }
+        }
+    }
+
+    // ---- frontier re-dispatch ----------------------------------------
+    // A needed task is dispatchable when nothing above it is needed and
+    // its inputs are servable: all fan-in edges committed (the dispatch
+    // skips the gate), or all parent outputs resident. Fan-in tasks with
+    // uncommitted edges are instead reached by their re-dispatched
+    // parents' chains, which re-arrive through the normal gate.
+    for i in 0..n {
+        if !needed[i] {
+            continue;
+        }
+        let t = TaskId(i as u32);
+        if ctx.dag.parents(t).iter().any(|&p| needed[p.index()]) {
+            continue;
+        }
+        let fan_in = ctx.lowered.in_degree(t) > 1;
+        let ready = ctx.dag.parents(t).iter().all(|&p| {
+            if fan_in {
+                ctx.kv.edge_committed(t, p)
+            } else {
+                ctx.kv.peek_available(ObjectKey::output(p))
+            }
+        });
+        if !ready {
+            continue;
+        }
+        // Damping: give an earlier re-dispatch a full lease window to
+        // make progress before trying again.
+        if matches!(ctx.since_last_dispatch(t), Some(d) if d < lease) {
+            continue;
+        }
+        if ctx.lease_state(t) == LeaseState::Abandoned {
+            ctx.metrics.record_lease_expired();
+        }
+        let rounds = ctx.bump_rounds(t);
+        if rounds > ctx.cfg.recovery.max_recovery_rounds {
+            ctx.kv
+                .publish(
+                    FINAL_CHANNEL,
+                    Message::JobFailed {
+                        error: EngineError::Job(format!(
+                            "recovery exhausted after {} re-dispatches of task {t}",
+                            rounds - 1
+                        )),
+                    },
+                )
+                .await;
+            return;
+        }
+        let epoch = ctx.bump_epoch(t);
+        crate::rt::spawn(invoke_executor(Arc::clone(ctx), t, None, epoch));
+    }
+
+    // ---- straggler hedging -------------------------------------------
+    // A lease held past the hedge threshold without a heartbeat marks a
+    // straggler (an alive-but-slow chain — injected slowdown, cold KV
+    // tail). Launch at most one speculative duplicate; the epoch re-salts
+    // its jitter draw so it does not replay the slow schedule.
+    for i in 0..n {
+        let t = TaskId(i as u32);
+        if ctx.is_executed(t) {
+            continue;
+        }
+        match ctx.lease_age(t) {
+            Some(age) if age >= hedge_after => {}
+            _ => continue,
+        }
+        let fan_in = ctx.lowered.in_degree(t) > 1;
+        let ready = ctx.dag.parents(t).iter().all(|&p| {
+            if fan_in {
+                ctx.kv.edge_committed(t, p)
+            } else {
+                ctx.kv.peek_available(ObjectKey::output(p))
+            }
+        });
+        if !ready || !ctx.mark_hedged(t) {
+            continue;
+        }
+        ctx.metrics.record_hedge_launched();
+        let epoch = ctx.bump_epoch(t);
+        crate::rt::spawn(invoke_executor(Arc::clone(ctx), t, None, epoch));
+    }
 }

@@ -8,6 +8,14 @@
 //! run-with-outputs / run-detailed entry points, and the dispatch into the
 //! mode-specific execution loop. A new scheduling variant is a new policy
 //! file (see `rust/src/engine/README.md`), not a new engine.
+//!
+//! Crash recovery rides the same configuration path: when
+//! [`SimConfig::recovery`](crate::core::RecoveryConfig) is enabled the
+//! mode-specific loops arm their recovery machinery (decentralized: lease
+//! watchdog + hedging; centralized: bounded re-dispatch on
+//! `RetriesExhausted`) — the driver itself stays mode-agnostic and just
+//! passes `cfg` through. See `rust/src/engine/README.md` § "Failure model
+//! & recovery".
 
 use crate::compute::DataObj;
 use crate::core::{JobId, SimConfig, TaskId};

@@ -441,6 +441,22 @@ impl ServiceReport {
         self.outcomes.iter().map(|o| o.report.net_bytes_moved).sum()
     }
 
+    /// Fleet-wide crash-recovery activity (sum of the per-job recovery
+    /// ledgers) — all-zero on fault-free service runs.
+    pub fn total_recovery(&self) -> crate::metrics::RecoveryStats {
+        let mut total = crate::metrics::RecoveryStats::default();
+        for o in &self.outcomes {
+            let r = &o.report.recovery;
+            total.invoke_retries += r.invoke_retries;
+            total.backoff_ns_slept += r.backoff_ns_slept;
+            total.leases_expired += r.leases_expired;
+            total.tasks_recomputed += r.tasks_recomputed;
+            total.hedges_launched += r.hedges_launched;
+            total.hedges_won += r.hedges_won;
+        }
+        total
+    }
+
     /// Fleet summary row.
     pub fn fleet_row(&self) -> String {
         format!(
@@ -514,6 +530,21 @@ impl ServiceReport {
                 self.spill_read_bytes,
                 self.spill_gb_seconds,
                 self.spill_cost_usd,
+            ));
+        }
+        // Same activity gate for the fleet recovery ledger: fault-free
+        // (and recovery-off) service runs render the pre-recovery format.
+        let rec = self.total_recovery();
+        if rec.any() {
+            out.push_str(&format!(
+                "recovery retries={} backoff_ns={} leases_expired={} recomputed={} \
+                 hedges_launched={} hedges_won={}\n",
+                rec.invoke_retries,
+                rec.backoff_ns_slept,
+                rec.leases_expired,
+                rec.tasks_recomputed,
+                rec.hedges_launched,
+                rec.hedges_won,
             ));
         }
         out.push_str(&format!(

@@ -1,15 +1,17 @@
 //! Shared per-job context for WUKONG executors.
 
 use crate::compute::CostModel;
-use crate::core::{EngineError, EngineResult, JobId, SimConfig, SplitMix64, TaskId};
+use crate::core::{clock, EngineError, EngineResult, JobId, SimConfig, SplitMix64, TaskId};
 use crate::dag::Dag;
 use crate::faas::{Faas, FaasHandle};
 use crate::kvstore::{JobArena, KvStore};
 use crate::metrics::MetricsHub;
 use crate::runtime::PjrtRuntime;
+use crate::rt::SimInstant;
 use crate::schedule::{LoweredOps, ScheduleSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Pub/sub channel on which sink results are announced to the client.
 /// Channel names are scoped to the owning [`JobId`] by the pub/sub
@@ -19,6 +21,73 @@ pub const FINAL_CHANNEL: &str = "wukong:final";
 /// Pub/sub channel on which large fan-outs are delegated to the proxy
 /// (job-scoped like [`FINAL_CHANNEL`]).
 pub const FANOUT_CHANNEL: &str = "wukong:fanout";
+
+/// Observable state of a task's execution lease (see
+/// [`WukongCtx::lease_state`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaseState {
+    /// Never dispatched, or dispatch not yet past its fan-in gate.
+    Idle,
+    /// At least one live executor chain holds the lease and is working.
+    Held,
+    /// Every holder dropped its guard without completing the task — the
+    /// become-chain died (injected crash) and the task needs recovery.
+    Abandoned,
+    /// The task body completed at least once.
+    Done,
+}
+
+/// Per-task recovery bookkeeping (allocated only when recovery is active).
+#[derive(Clone, Copy, Debug, Default)]
+struct RecoverySlot {
+    /// Live [`LeaseGuard`]s over this task (original + hedge duplicates).
+    holders: u32,
+    /// All holders dropped without the body completing.
+    abandoned: bool,
+    /// Body completed at least once.
+    done: bool,
+    /// Execution epoch: 0 on first dispatch, bumped per re-dispatch.
+    epoch: u32,
+    /// Last heartbeat / lease-acquisition instant.
+    since: SimInstant,
+    /// Dispatches in flight but not yet past the executor's entry
+    /// (invoke latency, warm-pool queueing). The watchdog must not
+    /// re-dispatch while this is nonzero: the task is queued, not dead.
+    pending: u32,
+    /// Instant of the most recent watchdog re-dispatch (damping).
+    last_dispatch: SimInstant,
+    /// Whether the watchdog ever re-dispatched this task.
+    redispatched_ever: bool,
+    /// Watchdog re-dispatch count — bounded by `max_recovery_rounds`.
+    rounds: u32,
+    /// A speculative (hedged) duplicate was already launched.
+    hedged: bool,
+    /// A `FinalResult` for this sink was observed by the driver.
+    final_seen: bool,
+}
+
+/// Shared recovery state: per-task slots plus a job-finished latch that
+/// stops orphaned chains and the watchdog.
+struct RecoveryState {
+    slots: Mutex<Vec<RecoverySlot>>,
+    finished: AtomicBool,
+}
+
+/// RAII execution lease: held by a become-chain while it runs a task
+/// body. Dropping the guard without the task completing (the chain future
+/// was dropped by an injected crash, or returned early on error) marks
+/// the lease *abandoned*, which is what the watchdog keys recovery on —
+/// a slow-but-alive straggler keeps its guard and is never recovered.
+pub struct LeaseGuard {
+    ctx: Arc<WukongCtx>,
+    task: TaskId,
+}
+
+impl Drop for LeaseGuard {
+    fn drop(&mut self) {
+        self.ctx.release_lease(self.task);
+    }
+}
 
 /// Everything a Task Executor needs, shared across the job.
 pub struct WukongCtx {
@@ -42,6 +111,11 @@ pub struct WukongCtx {
     /// real system this property is guaranteed by the fan-in counters).
     executed: Mutex<Vec<bool>>,
     executed_count: AtomicU64,
+    /// Crash-recovery bookkeeping; `None` unless
+    /// [`SimConfig::recovery_active`] — the fault-free hot path carries no
+    /// lease/epoch overhead and stays bit-identical to the pre-recovery
+    /// engine.
+    recovery: Option<RecoveryState>,
 }
 
 impl WukongCtx {
@@ -112,6 +186,17 @@ impl WukongCtx {
         assert_eq!(lowered.len(), n, "lowering does not cover the DAG");
         let kv = kv.arena_with_metrics(job, n, metrics.clone());
         let faas = FaasHandle::with_tenant(faas, metrics.clone(), tenant);
+        let recovery = if cfg.recovery_active() {
+            // At-least-once re-execution needs the arena to dedup fan-in
+            // edge increments (exactly-once effective side effects).
+            kv.enable_edge_dedup();
+            Some(RecoveryState {
+                slots: Mutex::new(vec![RecoverySlot::default(); n]),
+                finished: AtomicBool::new(false),
+            })
+        } else {
+            None
+        };
         Arc::new(WukongCtx {
             job,
             dag,
@@ -125,7 +210,232 @@ impl WukongCtx {
             runtime,
             executed: Mutex::new(vec![false; n]),
             executed_count: AtomicU64::new(0),
+            recovery,
         })
+    }
+
+    /// Whether crash-recovery bookkeeping is armed for this job.
+    pub fn recovery_active(&self) -> bool {
+        self.recovery.is_some()
+    }
+
+    /// Acquires the execution lease for `task`. Chains acquire at the top
+    /// of each loop iteration — before the fan-in gate — so a walking
+    /// chain is continuously covered by *something* the watchdog respects
+    /// (a held lease, a pending dispatch, or a completed task). A
+    /// non-last-writer's fan-in return abandons the lease transiently;
+    /// the watchdog disregards that because the fan-in's edges are not
+    /// all committed. Returns `None` when recovery is inactive.
+    pub fn acquire_lease(self: &Arc<Self>, task: TaskId) -> Option<LeaseGuard> {
+        let rec = self.recovery.as_ref()?;
+        let mut slots = rec.slots.lock().unwrap();
+        let s = &mut slots[task.index()];
+        s.holders += 1;
+        s.abandoned = false;
+        s.since = clock::now();
+        drop(slots);
+        Some(LeaseGuard {
+            ctx: Arc::clone(self),
+            task,
+        })
+    }
+
+    fn release_lease(&self, task: TaskId) {
+        if let Some(rec) = &self.recovery {
+            let mut slots = rec.slots.lock().unwrap();
+            let s = &mut slots[task.index()];
+            s.holders = s.holders.saturating_sub(1);
+            if s.holders == 0 && !s.done {
+                s.abandoned = true;
+            }
+        }
+    }
+
+    /// Renews the lease for `task` (no-op unless a guard is held).
+    pub fn heartbeat(&self, task: TaskId) {
+        if let Some(rec) = &self.recovery {
+            let mut slots = rec.slots.lock().unwrap();
+            let s = &mut slots[task.index()];
+            if s.holders > 0 {
+                s.since = clock::now();
+            }
+        }
+    }
+
+    /// Records a dispatch of `task` entering the platform queue (invoke
+    /// latency / warm-pool wait). Settled once the executor body starts,
+    /// or by the dispatch supervisor on terminal platform failure.
+    pub fn note_dispatch(&self, task: TaskId) {
+        if let Some(rec) = &self.recovery {
+            let mut slots = rec.slots.lock().unwrap();
+            let s = &mut slots[task.index()];
+            s.pending += 1;
+        }
+    }
+
+    /// Settles one in-flight dispatch of `task` (see [`Self::note_dispatch`]).
+    pub fn settle_dispatch(&self, task: TaskId) {
+        if let Some(rec) = &self.recovery {
+            let mut slots = rec.slots.lock().unwrap();
+            let s = &mut slots[task.index()];
+            s.pending = s.pending.saturating_sub(1);
+        }
+    }
+
+    /// In-flight dispatches of `task` not yet past the executor entry.
+    pub fn dispatch_outstanding(&self, task: TaskId) -> bool {
+        match &self.recovery {
+            Some(rec) => rec.slots.lock().unwrap()[task.index()].pending > 0,
+            None => false,
+        }
+    }
+
+    /// Current execution epoch of `task` (0 = first execution).
+    pub fn epoch_of(&self, task: TaskId) -> u32 {
+        match &self.recovery {
+            Some(rec) => rec.slots.lock().unwrap()[task.index()].epoch,
+            None => 0,
+        }
+    }
+
+    /// Bumps and returns the execution epoch for a re-dispatch of `task`,
+    /// stamping the dispatch instant for damping.
+    pub fn bump_epoch(&self, task: TaskId) -> u32 {
+        match &self.recovery {
+            Some(rec) => {
+                let mut slots = rec.slots.lock().unwrap();
+                let s = &mut slots[task.index()];
+                s.epoch += 1;
+                s.last_dispatch = clock::now();
+                s.redispatched_ever = true;
+                s.epoch
+            }
+            None => 0,
+        }
+    }
+
+    /// Virtual time since the watchdog last re-dispatched `task`
+    /// (`None` if it never has).
+    pub fn since_last_dispatch(&self, task: TaskId) -> Option<Duration> {
+        let rec = self.recovery.as_ref()?;
+        let s = rec.slots.lock().unwrap()[task.index()];
+        if s.redispatched_ever {
+            Some(clock::now().duration_since(s.last_dispatch))
+        } else {
+            None
+        }
+    }
+
+    /// Bumps and returns the recovery round count for `task`.
+    pub fn bump_rounds(&self, task: TaskId) -> u32 {
+        match &self.recovery {
+            Some(rec) => {
+                let mut slots = rec.slots.lock().unwrap();
+                let s = &mut slots[task.index()];
+                s.rounds += 1;
+                s.rounds
+            }
+            None => 0,
+        }
+    }
+
+    /// Marks `task` hedged; returns false if a hedge was already launched
+    /// (at most one speculative duplicate per task).
+    pub fn mark_hedged(&self, task: TaskId) -> bool {
+        match &self.recovery {
+            Some(rec) => {
+                let mut slots = rec.slots.lock().unwrap();
+                let s = &mut slots[task.index()];
+                if s.hedged {
+                    false
+                } else {
+                    s.hedged = true;
+                    true
+                }
+            }
+            None => false,
+        }
+    }
+
+    /// Records that the driver saw a `FinalResult` for sink `task`.
+    pub fn note_final(&self, task: TaskId) {
+        if let Some(rec) = &self.recovery {
+            rec.slots.lock().unwrap()[task.index()].final_seen = true;
+        }
+    }
+
+    /// Whether the driver has seen a `FinalResult` for sink `task`.
+    pub fn final_seen(&self, task: TaskId) -> bool {
+        match &self.recovery {
+            Some(rec) => rec.slots.lock().unwrap()[task.index()].final_seen,
+            None => false,
+        }
+    }
+
+    /// Latches job completion: orphaned chains and the watchdog observe
+    /// this and stop.
+    pub fn set_finished(&self) {
+        if let Some(rec) = &self.recovery {
+            rec.finished.store(true, Ordering::Release);
+        }
+    }
+
+    /// Whether the job has completed (always false when recovery is off —
+    /// chains then never outlive the driver loop anyway).
+    pub fn is_finished(&self) -> bool {
+        match &self.recovery {
+            Some(rec) => rec.finished.load(Ordering::Acquire),
+            None => false,
+        }
+    }
+
+    /// Observable lease state of `task` for the watchdog.
+    pub fn lease_state(&self, task: TaskId) -> LeaseState {
+        match &self.recovery {
+            Some(rec) => {
+                let s = rec.slots.lock().unwrap()[task.index()];
+                if s.done {
+                    LeaseState::Done
+                } else if s.holders > 0 {
+                    LeaseState::Held
+                } else if s.abandoned {
+                    LeaseState::Abandoned
+                } else {
+                    LeaseState::Idle
+                }
+            }
+            None => LeaseState::Idle,
+        }
+    }
+
+    /// Age of a held lease since its last heartbeat (`None` unless held).
+    pub fn lease_age(&self, task: TaskId) -> Option<Duration> {
+        let rec = self.recovery.as_ref()?;
+        let s = rec.slots.lock().unwrap()[task.index()];
+        if s.holders > 0 {
+            Some(clock::now().duration_since(s.since))
+        } else {
+            None
+        }
+    }
+
+    /// Whether `task` has executed at least once.
+    pub fn is_executed(&self, task: TaskId) -> bool {
+        self.executed.lock().unwrap()[task.index()]
+    }
+
+    /// Credits a won hedge: called by the first execution of `task` when
+    /// it arrives via a re-dispatch (epoch > 0) of a hedged task.
+    pub fn note_first_execution(&self, task: TaskId, epoch: u32) {
+        if epoch == 0 {
+            return;
+        }
+        if let Some(rec) = &self.recovery {
+            let hedged = rec.slots.lock().unwrap()[task.index()].hedged;
+            if hedged {
+                self.metrics.record_hedge_won();
+            }
+        }
     }
 
     /// Deterministic per-task duration jitter derived from the seed.
@@ -133,18 +443,35 @@ impl WukongCtx {
         jitter_for(&self.cfg, task)
     }
 
-    /// Marks `task` executed; errors if it was already executed (the
-    /// exactly-once invariant every scheduler in this repo must uphold).
-    pub fn mark_executed(&self, task: TaskId) -> EngineResult<()> {
+    /// Marks `task` executed. Returns `Ok(true)` on the first execution.
+    ///
+    /// A duplicate is a hard error when recovery is off (the exactly-once
+    /// invariant every fault-free scheduler in this repo must uphold) but
+    /// expected under at-least-once re-execution: with recovery active a
+    /// duplicate returns `Ok(false)`, is counted as a recomputation, and
+    /// the caller suppresses the task's external effects (span recording,
+    /// task counting) so re-execution stays exactly-once *effective*.
+    pub fn mark_executed(&self, task: TaskId) -> EngineResult<bool> {
         let mut v = self.executed.lock().unwrap();
-        if v[task.index()] {
-            return Err(EngineError::Job(format!(
-                "task {task} executed twice — fan-in conflict resolution is broken"
-            )));
+        let first = !v[task.index()];
+        if first {
+            v[task.index()] = true;
+            self.executed_count.fetch_add(1, Ordering::Relaxed);
         }
-        v[task.index()] = true;
-        self.executed_count.fetch_add(1, Ordering::Relaxed);
-        Ok(())
+        drop(v);
+        match &self.recovery {
+            Some(rec) => {
+                rec.slots.lock().unwrap()[task.index()].done = true;
+                if !first {
+                    self.metrics.record_task_recomputed();
+                }
+                Ok(first)
+            }
+            None if first => Ok(true),
+            None => Err(EngineError::Job(format!(
+                "task {task} executed twice — fan-in conflict resolution is broken"
+            ))),
+        }
     }
 
     pub fn executed_count(&self) -> u64 {
@@ -201,6 +528,39 @@ pub fn jitter_for(cfg: &SimConfig, task: TaskId) -> f64 {
     j
 }
 
+/// Epoch-salted variant of [`jitter_for`]: epoch 0 (first execution) is
+/// bit-identical to `jitter_for`, so fault-free runs and the first
+/// attempt under injection see exactly the jitter stream of the
+/// pre-recovery engine. Re-executions (epoch > 0) re-salt both the
+/// jitter and straggler draws — a hedged duplicate of a straggler gets
+/// an independent straggler draw, which is the whole point of hedging.
+pub fn jitter_for_epoch(cfg: &SimConfig, task: TaskId, epoch: u32) -> f64 {
+    if epoch == 0 {
+        return jitter_for(cfg, task);
+    }
+    let salt = (epoch as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    let mut j = if cfg.compute.jitter <= 0.0 {
+        1.0
+    } else {
+        let mut rng =
+            SplitMix64::new(cfg.seed ^ (task.0 as u64).wrapping_mul(0x9E37) ^ salt);
+        rng.jitter(cfg.compute.jitter)
+    };
+    let f = &cfg.faults;
+    if f.straggler_prob > 0.0 && f.straggler_slowdown > 1.0 {
+        let mut rng = SplitMix64::new(
+            f.seed
+                ^ cfg.seed.rotate_left(17)
+                ^ (task.0 as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+                ^ salt,
+        );
+        if rng.next_f64() < f.straggler_prob {
+            j *= f.straggler_slowdown;
+        }
+    }
+    j
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,15 +581,124 @@ mod tests {
         WukongCtx::new(dag, cfg, faas, kv, metrics, schedules, None)
     }
 
+    fn recovery_ctx() -> Arc<WukongCtx> {
+        let mut b = DagBuilder::new();
+        let a = b.add_task("a", Payload::Noop, 1, &[]);
+        b.add_task("b", Payload::Noop, 1, &[a]);
+        let dag = Arc::new(b.build().unwrap());
+        let cfg = SimConfig::test().with_recovery();
+        let metrics = Arc::new(MetricsHub::new());
+        let faas = Faas::new(cfg.faas.clone(), metrics.clone());
+        let kv = KvStore::new(cfg.net.clone(), metrics.clone());
+        let schedules = Arc::new(schedule::generate(&dag));
+        WukongCtx::new(dag, cfg, faas, kv, metrics, schedules, None)
+    }
+
     #[test]
     fn exactly_once_guard() {
         let c = ctx();
-        c.mark_executed(TaskId(0)).unwrap();
+        assert!(!c.recovery_active());
+        assert!(c.mark_executed(TaskId(0)).unwrap());
         assert!(c.mark_executed(TaskId(0)).is_err());
         assert_eq!(c.executed_count(), 1);
         assert!(!c.all_executed());
-        c.mark_executed(TaskId(1)).unwrap();
+        assert!(c.mark_executed(TaskId(1)).unwrap());
         assert!(c.all_executed());
+    }
+
+    #[test]
+    fn recovery_tolerates_duplicate_execution_and_counts_it() {
+        let c = recovery_ctx();
+        assert!(c.recovery_active());
+        assert!(c.mark_executed(TaskId(0)).unwrap());
+        // Duplicate: tolerated, not counted as a new task, recorded as a
+        // recomputation.
+        assert!(!c.mark_executed(TaskId(0)).unwrap());
+        assert_eq!(c.executed_count(), 1);
+        assert_eq!(c.metrics.tasks_recomputed(), 1);
+        assert!(c.is_executed(TaskId(0)));
+        assert!(!c.is_executed(TaskId(1)));
+        assert_eq!(c.lease_state(TaskId(0)), LeaseState::Done);
+    }
+
+    #[test]
+    fn lease_guard_drop_marks_abandoned_and_completion_wins() {
+        crate::rt::run_virtual(async {
+            let c = recovery_ctx();
+            assert_eq!(c.lease_state(TaskId(0)), LeaseState::Idle);
+            let g = c.acquire_lease(TaskId(0)).unwrap();
+            assert_eq!(c.lease_state(TaskId(0)), LeaseState::Held);
+            assert!(c.lease_age(TaskId(0)).is_some());
+            drop(g); // chain died without completing the body
+            assert_eq!(c.lease_state(TaskId(0)), LeaseState::Abandoned);
+            // A later re-dispatch that completes clears abandonment.
+            let g2 = c.acquire_lease(TaskId(0)).unwrap();
+            c.mark_executed(TaskId(0)).unwrap();
+            drop(g2);
+            assert_eq!(c.lease_state(TaskId(0)), LeaseState::Done);
+        });
+    }
+
+    #[test]
+    fn straggler_keeps_lease_alive_via_heartbeat() {
+        crate::rt::run_virtual(async {
+            let c = recovery_ctx();
+            let _g = c.acquire_lease(TaskId(1)).unwrap();
+            clock::sleep(Duration::from_millis(400)).await;
+            c.heartbeat(TaskId(1));
+            // Heartbeat renewed the lease: age restarts from the renewal.
+            assert_eq!(c.lease_age(TaskId(1)), Some(Duration::ZERO));
+            assert_eq!(c.lease_state(TaskId(1)), LeaseState::Held);
+        });
+    }
+
+    #[test]
+    fn dispatch_epoch_and_hedge_bookkeeping() {
+        crate::rt::run_virtual(async {
+            let c = recovery_ctx();
+            let t = TaskId(0);
+            assert!(!c.dispatch_outstanding(t));
+            c.note_dispatch(t);
+            assert!(c.dispatch_outstanding(t));
+            c.settle_dispatch(t);
+            assert!(!c.dispatch_outstanding(t));
+
+            assert_eq!(c.epoch_of(t), 0);
+            assert_eq!(c.since_last_dispatch(t), None);
+            assert_eq!(c.bump_epoch(t), 1);
+            assert_eq!(c.epoch_of(t), 1);
+            assert_eq!(c.since_last_dispatch(t), Some(Duration::ZERO));
+            assert_eq!(c.bump_rounds(t), 1);
+            assert_eq!(c.bump_rounds(t), 2);
+
+            assert!(c.mark_hedged(t), "first hedge is allowed");
+            assert!(!c.mark_hedged(t), "at most one hedge per task");
+            c.note_first_execution(t, 1);
+            assert_eq!(c.metrics.hedges_won(), 1);
+            // Epoch-0 first executions never credit a hedge win.
+            c.note_first_execution(TaskId(1), 0);
+            assert_eq!(c.metrics.hedges_won(), 1);
+
+            assert!(!c.final_seen(t));
+            c.note_final(t);
+            assert!(c.final_seen(t));
+            assert!(!c.is_finished());
+            c.set_finished();
+            assert!(c.is_finished());
+        });
+    }
+
+    #[test]
+    fn inactive_recovery_accessors_are_inert() {
+        let c = ctx();
+        assert!(c.acquire_lease(TaskId(0)).is_none());
+        assert_eq!(c.lease_state(TaskId(0)), LeaseState::Idle);
+        assert_eq!(c.epoch_of(TaskId(0)), 0);
+        assert_eq!(c.bump_epoch(TaskId(0)), 0);
+        assert!(!c.mark_hedged(TaskId(0)));
+        assert!(!c.is_finished());
+        c.set_finished();
+        assert!(!c.is_finished());
     }
 
     #[test]
@@ -255,6 +724,29 @@ mod tests {
         }
         let stragglers = sample.iter().filter(|&&v| v > 1.0).count();
         assert!((20..120).contains(&stragglers), "~30%, got {stragglers}");
+    }
+
+    #[test]
+    fn epoch_zero_jitter_is_bit_identical_and_epochs_resalt() {
+        let mut cfg = SimConfig::test();
+        cfg.compute.jitter = 0.2;
+        cfg.faults = crate::core::FaultConfig {
+            straggler_prob: 0.3,
+            straggler_slowdown: 8.0,
+            seed: 5,
+            ..crate::core::FaultConfig::default()
+        };
+        let mut diverged = false;
+        for i in 0..50u32 {
+            let t = TaskId(i);
+            assert_eq!(jitter_for_epoch(&cfg, t, 0), jitter_for(&cfg, t));
+            // Deterministic per (task, epoch).
+            assert_eq!(jitter_for_epoch(&cfg, t, 1), jitter_for_epoch(&cfg, t, 1));
+            if jitter_for_epoch(&cfg, t, 1) != jitter_for(&cfg, t) {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "epoch 1 must re-salt the jitter stream");
     }
 
     #[test]

@@ -15,6 +15,6 @@ pub mod exec;
 pub mod task_executor;
 
 pub use cache::LocalCache;
-pub use ctx::{jitter_for, WukongCtx};
+pub use ctx::{jitter_for, jitter_for_epoch, LeaseGuard, LeaseState, WukongCtx};
 pub use exec::run_payload;
 pub use task_executor::run_executor;

@@ -25,26 +25,31 @@
 use crate::compute::DataObj;
 use crate::core::{clock, EngineResult, ExecutorId, ObjectKey, TaskId};
 use crate::executor::cache::LocalCache;
-use crate::executor::ctx::{WukongCtx, FANOUT_CHANNEL, FINAL_CHANNEL};
+use crate::executor::ctx::{jitter_for_epoch, WukongCtx, FANOUT_CHANNEL, FINAL_CHANNEL};
 use crate::executor::exec::run_payload;
 use crate::kvstore::Message;
 use crate::metrics::TaskSpan;
 use crate::schedule::FanOutAction;
 use std::future::Future;
 use std::pin::Pin;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Runs one Task Executor starting at `start`. `arrived_from` is the
 /// parent along whose out-edge this executor was invoked (None for the
-/// initial leaf executors).
+/// initial leaf executors and for watchdog/hedge re-dispatches). `epoch`
+/// is the execution epoch of this dispatch: 0 for first executions,
+/// bumped per recovery re-dispatch so re-executed bodies draw re-salted
+/// jitter instead of replaying the doomed schedule.
 pub async fn run_executor(
     ctx: Arc<WukongCtx>,
     start: TaskId,
     arrived_from: Option<TaskId>,
     exec_id: ExecutorId,
+    epoch: u32,
 ) -> EngineResult<()> {
     let mut cache = LocalCache::with_capacity(ctx.cache_capacity());
-    run_chain(&ctx, start, arrived_from, exec_id, &mut cache).await
+    run_chain(&ctx, start, arrived_from, exec_id, &mut cache, epoch).await
 }
 
 /// Boxed, type-erased recursion point for clustered fan-outs: an in-place
@@ -57,8 +62,9 @@ fn run_chain_boxed<'a>(
     from: Option<TaskId>,
     exec_id: ExecutorId,
     cache: &'a mut LocalCache,
+    epoch: u32,
 ) -> Pin<Box<dyn Future<Output = EngineResult<()>> + 'a>> {
-    Box::pin(run_chain(ctx, start, from, exec_id, cache))
+    Box::pin(run_chain(ctx, start, from, exec_id, cache, epoch))
 }
 
 /// Walks one schedule chain over a caller-owned local cache. This is the
@@ -71,34 +77,77 @@ async fn run_chain(
     arrived_from: Option<TaskId>,
     exec_id: ExecutorId,
     cache: &mut LocalCache,
+    epoch: u32,
 ) -> EngineResult<()> {
     let mut current = start;
     let mut from = arrived_from;
 
     loop {
+        // A re-executed chain may outlive the job (its recomputed results
+        // already reached the sinks via a faster duplicate): stop walking.
+        if ctx.is_finished() {
+            return Ok(());
+        }
+        // ---- execution lease --------------------------------------------
+        // Acquired before the fan-in gate so the chain is continuously
+        // covered (parent marked done, or a lease held, or a dispatch
+        // pending — the watchdog only acts on tasks covered by none).
+        // A non-last-writer briefly holds and abandons the lease on its
+        // fan-in return; the watchdog ignores that because the fan-in's
+        // edges are not all committed yet. An injected crash that drops
+        // this future abandons the lease for real — that is the dead-chain
+        // signal recovery keys on.
+        let _lease = ctx.acquire_lease(current);
         let indeg = ctx.lowered.in_degree(current);
 
         // ---- fan-in resolution -----------------------------------------
         if indeg > 1 {
-            // My in-edge output must be visible to whichever executor wins
-            // the conflict, so store it *before* incrementing (this is the
-            // ordering the real system uses: write data, then INCR).
             if let Some(p) = from {
+                // My in-edge output must be visible to whichever executor
+                // wins the conflict, so store it *before* incrementing
+                // (this is the ordering the real system uses: write data,
+                // then INCR). Under crash recovery the increment commits
+                // per-edge, so a re-executed parent chain arriving a
+                // second time is deduped instead of double-counted.
                 store_once(ctx, cache, p).await;
+                match ctx
+                    .kv
+                    .incr_edge(ObjectKey::counter(current), current, p)
+                    .await
+                {
+                    // Duplicate arrival (this edge already committed by an
+                    // earlier attempt): the avalanche of a re-executed
+                    // upstream chain terminates here.
+                    None => return Ok(()),
+                    Some(n) => {
+                        debug_assert!(
+                            n as usize <= indeg,
+                            "dependency counter exceeded in-degree"
+                        );
+                        if (n as usize) < indeg {
+                            // Not all dependencies satisfied: save outputs
+                            // and stop. (Outputs along my path were already
+                            // persisted above / at fan-outs.)
+                            return Ok(());
+                        }
+                    }
+                }
+            } else if !ctx.recovery_active() {
+                let n = ctx.kv.incr(ObjectKey::counter(current)).await;
+                debug_assert!(
+                    n as usize <= indeg,
+                    "dependency counter exceeded in-degree"
+                );
+                if (n as usize) < indeg {
+                    return Ok(());
+                }
             }
-            let n = ctx.kv.incr(ObjectKey::counter(current)).await;
-            debug_assert!(
-                n as usize <= indeg,
-                "dependency counter exceeded in-degree"
-            );
-            if (n as usize) < indeg {
-                // Not all dependencies satisfied: save outputs and stop.
-                // (Outputs along my path were already persisted above /
-                // at fan-outs.)
-                return Ok(());
-            }
+            // `from == None` under recovery is a watchdog / hedge
+            // re-dispatch, issued only once every in-edge is committed —
+            // the gate is already satisfied and must not be re-counted.
             // Mine was the last dependency — I continue through the fan-in.
         }
+
 
         // ---- gather inputs ----------------------------------------------
         let t_fetch = clock::now();
@@ -124,13 +173,23 @@ async fn run_chain(
             spec.output_bytes,
             &inputs,
             ctx.faas.config().gflops,
-            ctx.jitter_for(current),
+            jitter_for_epoch(&ctx.cfg, current, epoch),
             &ctx.cost,
             ctx.runtime.as_ref(),
         )
         .await?;
         let compute = clock::now() - t_exec;
-        ctx.mark_executed(current)?;
+        // Renew the lease: a chain of many quick tasks must not age into
+        // a hedge candidate between bodies.
+        ctx.heartbeat(current);
+        // At-least-once execution, exactly-once effect: a duplicate body
+        // (re-dispatch racing the original, or a pre-result platform
+        // retry) is tolerated under recovery, counted as a recomputation,
+        // and its span/task accounting suppressed below.
+        let first = ctx.mark_executed(current)?;
+        if first {
+            ctx.note_first_execution(current, epoch);
+        }
         let evicted = cache.insert(current, out);
         if evicted > 0 {
             ctx.metrics.record_cache_evictions(evicted);
@@ -158,31 +217,49 @@ async fn run_chain(
             // Sink: persist the final result and announce it.
             FanOutAction::Sink => {
                 store_once(ctx, cache, current).await;
-                ctx.kv
-                    .publish(FINAL_CHANNEL, Message::FinalResult { task: current })
-                    .await;
+                // Re-announce only if the driver has not yet seen this
+                // sink (the original chain may have crashed between the
+                // body and the publish); duplicates are deduped by the
+                // driver's done-set anyway.
+                if first || !ctx.final_seen(current) {
+                    ctx.kv
+                        .publish(FINAL_CHANNEL, Message::FinalResult { task: current })
+                        .await;
+                    // Record delivery at the *publisher*: once the publish
+                    // returned, the message is durably queued to the
+                    // driver, so the watchdog must stop treating this sink
+                    // as unfinished. (A crash cutting the publish itself
+                    // leaves `final_seen` false and the sink walk-visible —
+                    // exactly right.) The driver's own `note_final` is then
+                    // a harmless duplicate.
+                    ctx.note_final(current);
+                }
                 let store = clock::now() - t_store;
-                ctx.metrics.record_task(TaskSpan {
-                    task: current,
-                    executor: exec_id,
-                    fetch,
-                    compute,
-                    store,
-                    total: fetch + compute + store,
-                });
+                if first {
+                    ctx.metrics.record_task(TaskSpan {
+                        task: current,
+                        executor: exec_id,
+                        fetch,
+                        compute,
+                        store,
+                        total: fetch + compute + store,
+                    });
+                }
                 return Ok(());
             }
             // Trivial fan-out: continue along the single out-edge. No
             // network I/O at all — this is WUKONG's data-locality win.
             FanOutAction::Continue => {
-                ctx.metrics.record_task(TaskSpan {
-                    task: current,
-                    executor: exec_id,
-                    fetch,
-                    compute,
-                    store: std::time::Duration::ZERO,
-                    total: fetch + compute,
-                });
+                if first {
+                    ctx.metrics.record_task(TaskSpan {
+                        task: current,
+                        executor: exec_id,
+                        fetch,
+                        compute,
+                        store: std::time::Duration::ZERO,
+                        total: fetch + compute,
+                    });
+                }
                 from = Some(current);
                 current = children[0];
             }
@@ -204,28 +281,45 @@ async fn run_chain(
                                 fan_out_task: current,
                                 from_edge: 1,
                                 to_edge: children.len() as u32,
+                                epoch,
                             },
                         )
                         .await;
+                    // The delegated children are now in flight (queued at
+                    // the proxy): track them so the watchdog never
+                    // re-dispatches a child that is merely waiting for a
+                    // Fan-out Invoker permit. The proxy settles each
+                    // credit when it issues the invocation. Noted *after*
+                    // the publish completes — if this chain crashes
+                    // mid-publish the message may be lost, and an
+                    // unsettleable credit would blind the watchdog
+                    // forever.
+                    if ctx.recovery_active() {
+                        for &c in &children[1..] {
+                            ctx.note_dispatch(c);
+                        }
+                    }
                 } else {
                     // Small fan-out: invoke the executors ourselves, in
                     // parallel (paper §IV-D), straight off the CSR slice.
                     let parent = current;
                     let handles: Vec<_> = children[1..]
                         .iter()
-                        .map(|&c| invoke_executor(Arc::clone(ctx), c, Some(parent)))
+                        .map(|&c| invoke_executor(Arc::clone(ctx), c, Some(parent), epoch))
                         .collect();
                     crate::rt::join_all(handles).await;
                 }
                 let store = clock::now() - t_store;
-                ctx.metrics.record_task(TaskSpan {
-                    task: current,
-                    executor: exec_id,
-                    fetch,
-                    compute,
-                    store,
-                    total: fetch + compute + store,
-                });
+                if first {
+                    ctx.metrics.record_task(TaskSpan {
+                        task: current,
+                        executor: exec_id,
+                        fetch,
+                        compute,
+                        store,
+                        total: fetch + compute + store,
+                    });
+                }
                 from = Some(current);
                 current = children[0];
             }
@@ -254,14 +348,20 @@ async fn run_chain(
                                     fan_out_task: current,
                                     from_edge: k as u32,
                                     to_edge: children.len() as u32,
+                                    epoch,
                                 },
                             )
                             .await;
+                        if ctx.recovery_active() {
+                            for &c in remote {
+                                ctx.note_dispatch(c);
+                            }
+                        }
                     } else {
                         let parent = current;
                         let handles: Vec<_> = remote
                             .iter()
-                            .map(|&c| invoke_executor(Arc::clone(ctx), c, Some(parent)))
+                            .map(|&c| invoke_executor(Arc::clone(ctx), c, Some(parent), epoch))
                             .collect();
                         crate::rt::join_all(handles).await;
                     }
@@ -274,18 +374,20 @@ async fn run_chain(
                 // object, which may exist nowhere else.
                 cache.pin(current);
                 for &c in &children[1..k] {
-                    run_chain_boxed(ctx, c, Some(current), exec_id, cache).await?;
+                    run_chain_boxed(ctx, c, Some(current), exec_id, cache, epoch).await?;
                 }
                 cache.unpin(current);
                 let store = clock::now() - t_store;
-                ctx.metrics.record_task(TaskSpan {
-                    task: current,
-                    executor: exec_id,
-                    fetch,
-                    compute,
-                    store,
-                    total: fetch + compute + store,
-                });
+                if first {
+                    ctx.metrics.record_task(TaskSpan {
+                        task: current,
+                        executor: exec_id,
+                        fetch,
+                        compute,
+                        store,
+                        total: fetch + compute + store,
+                    });
+                }
                 from = Some(current);
                 current = children[0];
             }
@@ -313,28 +415,81 @@ async fn store_once(ctx: &Arc<WukongCtx>, cache: &mut LocalCache, task: TaskId) 
 /// `start`, arriving along the out-edge of `from`. Returns after the
 /// invocation API call completes (the executor itself runs detached; job
 /// failures propagate via the pub/sub failure channel).
-pub async fn invoke_executor(ctx: Arc<WukongCtx>, start: TaskId, from: Option<TaskId>) {
+///
+/// With crash recovery inactive the platform join handle is discarded —
+/// transient injection always masks crashes, so nothing useful ever
+/// comes back through it. With recovery active the dispatch is tracked
+/// (so the watchdog never re-dispatches a task that is merely queued on
+/// invoke latency or the warm pool) and a detached supervisor drains the
+/// handle: a terminal platform failure ([`RetriesExhausted`]
+/// [`crate::core::EngineError::RetriesExhausted`] under lethal
+/// injection) settles the dispatch and — when the watchdog is not armed
+/// to recover it — surfaces as a typed job failure instead of a hang.
+pub async fn invoke_executor(ctx: Arc<WukongCtx>, start: TaskId, from: Option<TaskId>, epoch: u32) {
     let faas = Arc::clone(&ctx.faas);
     let body_ctx = Arc::clone(&ctx);
-    faas.invoke(move |exec_id| {
-        let ctx = Arc::clone(&body_ctx);
-        async move {
-            let r = Box::pin(run_executor(Arc::clone(&ctx), start, from, exec_id)).await;
-            if let Err(e) = &r {
-                // Surface the failure to the client, then swallow it so the
-                // platform does not blindly retry a non-idempotent executor
-                // (the paper defers richer fault handling to future work).
-                ctx.kv
-                    .publish(
-                        FINAL_CHANNEL,
-                        Message::JobFailed {
-                            reason: e.to_string(),
-                        },
-                    )
+    if !ctx.recovery_active() {
+        faas.invoke(move |exec_id| {
+            let ctx = Arc::clone(&body_ctx);
+            async move {
+                let r =
+                    Box::pin(run_executor(Arc::clone(&ctx), start, from, exec_id, epoch)).await;
+                if let Err(e) = &r {
+                    // Surface the failure to the client, then swallow it so
+                    // the platform does not blindly retry a non-idempotent
+                    // executor (re-execution is only idempotent under the
+                    // recovery machinery below).
+                    ctx.kv
+                        .publish(FINAL_CHANNEL, Message::JobFailed { error: e.clone() })
+                        .await;
+                }
+                Ok(())
+            }
+        })
+        .await;
+        return;
+    }
+
+    ctx.note_dispatch(start);
+    // One settle per dispatch, whether the body starts (possibly after
+    // platform retries — the closure runs once per attempt) or the
+    // platform gives up terminally.
+    let settled = Arc::new(AtomicBool::new(false));
+    let body_settled = Arc::clone(&settled);
+    let handle = faas
+        .invoke(move |exec_id| {
+            let ctx = Arc::clone(&body_ctx);
+            let settled = Arc::clone(&body_settled);
+            async move {
+                if !settled.swap(true, Ordering::SeqCst) {
+                    ctx.settle_dispatch(start);
+                }
+                let r =
+                    Box::pin(run_executor(Arc::clone(&ctx), start, from, exec_id, epoch)).await;
+                if let Err(e) = &r {
+                    ctx.kv
+                        .publish(FINAL_CHANNEL, Message::JobFailed { error: e.clone() })
+                        .await;
+                }
+                Ok(())
+            }
+        })
+        .await;
+    let sup_ctx = Arc::clone(&ctx);
+    crate::rt::spawn(async move {
+        if let Err(e) = handle.await {
+            if !settled.swap(true, Ordering::SeqCst) {
+                sup_ctx.settle_dispatch(start);
+            }
+            if !sup_ctx.cfg.recovery.enabled && !sup_ctx.is_finished() {
+                // Lethal faults without the watchdog: report the typed
+                // terminal failure so the driver fails fast instead of
+                // hanging. With the watchdog armed, recovery handles it.
+                sup_ctx
+                    .kv
+                    .publish(FINAL_CHANNEL, Message::JobFailed { error: e })
                     .await;
             }
-            Ok(())
         }
-    })
-    .await;
+    });
 }

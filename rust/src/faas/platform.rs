@@ -14,13 +14,13 @@ use crate::core::{
 };
 use crate::faas::billing::Billing;
 use crate::metrics::MetricsHub;
+use crate::rt::sync::Semaphore;
+use crate::rt::JoinHandle;
+use std::collections::HashMap;
 use std::future::Future;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
-use crate::rt::sync::Semaphore;
-use crate::rt::JoinHandle;
-use std::collections::HashMap;
 
 /// Where an acquired warm container came from, so its release returns it
 /// to the same place (a tenant's reserved slice never leaks into the
@@ -29,6 +29,20 @@ use std::collections::HashMap;
 enum WarmSource {
     Shared,
     Reserved(u32),
+}
+
+/// Where an injected crash strikes within one container attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CrashPhase {
+    /// Before the function body runs (the only phase of transient
+    /// profiles): the body future is dropped unpolled.
+    PreBody,
+    /// Mid-execution: the body future is dropped at a seeded cut point —
+    /// some side effects landed, the rest are lost.
+    MidBody,
+    /// After the body completes but before the attempt is reported: every
+    /// side effect landed, yet the platform retries the whole body.
+    PreResult,
 }
 
 /// The platform's warm-container inventory: a shared first-come-first-
@@ -112,10 +126,14 @@ impl Faas {
     }
 
     /// Full constructor with a fault-injection profile: seeded cold-start
-    /// inflation and transient container crashes (always masked by the
-    /// platform's automatic retries — the final allowed attempt of an
-    /// invocation is never crashed, so injected faults perturb timing and
-    /// placement without ever failing a job).
+    /// inflation and injected container crashes. With `lethal = false`
+    /// (the default and the `chaos` profile) crashes fire only pre-body
+    /// and never on the final allowed attempt, so the platform's
+    /// automatic retries always mask them. With `lethal = true` a crash
+    /// may cut the body mid-execution or discard a completed attempt, and
+    /// the final attempt is crashable — an invocation can then terminally
+    /// fail with [`EngineError::RetriesExhausted`], which the engine's
+    /// recovery layer (not the platform) must survive.
     pub fn with_faults(
         cfg: FaasConfig,
         faults: FaultConfig,
@@ -196,24 +214,41 @@ impl Faas {
             loop {
                 attempts += 1;
                 let id = ExecutorId(platform.next_executor.fetch_add(1, Ordering::Relaxed));
-                // Injected crashes stay transient: never crash the final
-                // allowed attempt, so the retry loop always masks them.
-                let may_crash = attempts <= platform.cfg.max_retries;
+                // Transient profiles (`lethal = false`) never crash the
+                // final allowed attempt, so the retry loop always masks
+                // injected crashes. Lethal profiles may crash any attempt
+                // — including the last — so this invocation can
+                // terminally fail.
+                let may_crash = attempts <= platform.cfg.max_retries || platform.faults.lethal;
                 let result = platform
                     .run_container(id, make_body(id), may_crash, tenant, &metrics)
                     .await;
                 match result {
                     Ok(()) => return Ok(()),
                     Err(e) if attempts <= platform.cfg.max_retries => {
-                        // Automatic retry of a failed async invocation.
+                        // Automatic retry of a failed async invocation,
+                        // after seeded exponential backoff when the fault
+                        // profile configures one.
                         let _ = e;
+                        let base = platform.faults.retry_backoff_ms;
+                        if base > 0.0 {
+                            let u = platform.fault_rng.lock().unwrap().next_f64();
+                            let ms = base * 2f64.powi(attempts as i32 - 1) * (1.0 + 0.5 * u);
+                            let delay = Duration::from_secs_f64(ms * 1e-3);
+                            metrics.record_invoke_retry(delay);
+                            clock::sleep(delay).await;
+                        } else {
+                            metrics.record_invoke_retry(Duration::ZERO);
+                        }
                         continue;
                     }
                     Err(e) => {
-                        return Err(EngineError::InvocationFailed {
-                            attempts,
-                            reason: e.to_string(),
-                        })
+                        let reason = e.to_string();
+                        return Err(if platform.faults.lethal {
+                            EngineError::RetriesExhausted { attempts, reason }
+                        } else {
+                            EngineError::InvocationFailed { attempts, reason }
+                        });
                     }
                 }
             }
@@ -252,29 +287,87 @@ impl Faas {
         clock::sleep(Duration::from_secs_f64(start_delay * 1e-3)).await;
         metrics.record_invocation(cold);
 
-        // Injected transient crash: the container dies right after
-        // start-up, before the function body runs — the body future is
-        // dropped unpolled, so no partial execution can ever leak (the
-        // exactly-once guards stay intact across retries).
+        // Injected crash draw. With the phase weights at zero (transient
+        // profiles) every crash is **pre-body**: the body future is
+        // dropped unpolled, so no partial execution can ever leak. Lethal
+        // profiles spend one extra draw to pick the phase — mid-body
+        // (the body is dropped mid-poll at a seeded cut point: side
+        // effects already awaited have landed, the rest are lost) or
+        // pre-result (the body completes, but the platform loses the
+        // attempt before reporting it) — with the remaining probability
+        // mass staying pre-body. The extra draws fire only when the phase
+        // weights are nonzero, so transient fault streams replay
+        // bit-identically to the pre-lethal engine.
+        let mut crash_phase = None;
         if may_crash && self.faults.crash_prob > 0.0 {
             let crash = self.fault_rng.lock().unwrap().next_f64() < self.faults.crash_prob;
             if crash {
-                self.warm.lock().unwrap().release(warm_src);
-                drop(permit);
-                return Err(EngineError::Job("injected container crash".into()));
+                crash_phase = Some(CrashPhase::PreBody);
+                let phased = self.faults.crash_mid_body + self.faults.crash_pre_result;
+                if phased > 0.0 {
+                    let u = self.fault_rng.lock().unwrap().next_f64();
+                    if u < self.faults.crash_mid_body {
+                        crash_phase = Some(CrashPhase::MidBody);
+                    } else if u < phased {
+                        crash_phase = Some(CrashPhase::PreResult);
+                    }
+                }
             }
+        }
+        if crash_phase == Some(CrashPhase::PreBody) {
+            self.warm.lock().unwrap().release(warm_src);
+            drop(permit);
+            return Err(EngineError::Job("injected container crash".into()));
         }
 
         let n = self.active.fetch_add(1, Ordering::Relaxed) + 1;
         self.peak_active.fetch_max(n, Ordering::Relaxed);
 
+        // Per-attempt cap: a lethal profile may bound each attempt below
+        // the function timeout so one hung attempt cannot eat the whole
+        // timeout budget before the platform retries.
+        let mut limit = Duration::from_millis(self.cfg.timeout_ms);
+        if self.faults.attempt_timeout_ms > 0 {
+            limit = limit.min(Duration::from_millis(self.faults.attempt_timeout_ms));
+        }
+        let limit_ms = limit.as_millis() as u64;
+
+        enum Attempt {
+            Done(EngineResult<()>),
+            TimedOut,
+            Crashed(&'static str),
+        }
         let t0 = clock::now();
-        let outcome = crate::rt::timeout(Duration::from_millis(self.cfg.timeout_ms), body).await;
+        let outcome = match crash_phase {
+            Some(CrashPhase::MidBody) => {
+                let u = self.fault_rng.lock().unwrap().next_f64();
+                let cut =
+                    Duration::from_secs_f64(u * self.faults.mid_body_window_ms.max(0.0) * 1e-3);
+                // The kill is the *outer* deadline: when it fires first
+                // the body future is dropped mid-poll. If the body beats
+                // the cut, the container still dies before the attempt is
+                // reported — effectively a pre-result crash.
+                match crate::rt::timeout(cut, crate::rt::timeout(limit, body)).await {
+                    Err(_) => Attempt::Crashed("mid-body"),
+                    Ok(Err(_)) => Attempt::TimedOut,
+                    Ok(Ok(_)) => Attempt::Crashed("pre-result"),
+                }
+            }
+            Some(CrashPhase::PreResult) => match crate::rt::timeout(limit, body).await {
+                Err(_) => Attempt::TimedOut,
+                Ok(_) => Attempt::Crashed("pre-result"),
+            },
+            _ => match crate::rt::timeout(limit, body).await {
+                Ok(r) => Attempt::Done(r),
+                Err(_) => Attempt::TimedOut,
+            },
+        };
         let execution = clock::now() - t0;
 
         self.active.fetch_sub(1, Ordering::Relaxed);
         // Container becomes warm for future invocations (returned to its
-        // tenant's reserved slice if it came from one).
+        // tenant's reserved slice if it came from one). An injected crash
+        // models the *function* dying, not the host: the slot is reusable.
         self.warm.lock().unwrap().release(warm_src);
         drop(permit);
 
@@ -286,11 +379,14 @@ impl Faas {
             .fetch_add((cost * 1e9) as u64, Ordering::Relaxed);
 
         match outcome {
-            Ok(r) => r,
-            Err(_) => Err(EngineError::FunctionTimeout {
+            Attempt::Done(r) => r,
+            Attempt::TimedOut => Err(EngineError::FunctionTimeout {
                 executor: _id.0,
-                limit_ms: self.cfg.timeout_ms,
+                limit_ms,
             }),
+            Attempt::Crashed(phase) => {
+                Err(EngineError::Job(format!("injected container crash ({phase})")))
+            }
         }
     }
 
@@ -489,6 +585,185 @@ mod tests {
             }
             // Retries visibly happened.
             assert!(m.lambdas_invoked() > 50, "crashed attempts also invoke");
+        });
+    }
+
+    #[test]
+    fn lethal_faults_exhaust_retries_with_typed_error() {
+        crate::rt::run_virtual(async {
+            let m = Arc::new(MetricsHub::new());
+            let faas = Faas::with_faults(
+                FaasConfig {
+                    max_retries: 1,
+                    ..FaasConfig::default()
+                },
+                crate::core::FaultConfig {
+                    crash_prob: 1.0, // every attempt crashes …
+                    lethal: true,    // … including the final one
+                    seed: 3,
+                    ..crate::core::FaultConfig::default()
+                },
+                m,
+            );
+            let h = faas.invoke(|_| async { Ok(()) }).await;
+            match h.await.unwrap_err() {
+                EngineError::RetriesExhausted { attempts, reason } => {
+                    assert_eq!(attempts, 2);
+                    assert!(reason.contains("injected container crash"), "{reason}");
+                }
+                e => panic!("expected RetriesExhausted, got {e}"),
+            }
+        });
+    }
+
+    #[test]
+    fn retry_backoff_is_seeded_and_deterministic() {
+        let run = || {
+            crate::rt::run_virtual(async {
+                let m = Arc::new(MetricsHub::new());
+                let faas = Faas::with_faults(
+                    FaasConfig::default(),
+                    crate::core::FaultConfig {
+                        crash_prob: 0.9, // most attempts crash (transient)
+                        retry_backoff_ms: 40.0,
+                        seed: 11,
+                        ..crate::core::FaultConfig::default()
+                    },
+                    m.clone(),
+                );
+                let t0 = clock::now();
+                for _ in 0..20 {
+                    let h = faas.invoke(|_| async { Ok(()) }).await;
+                    h.await.unwrap();
+                }
+                (clock::now() - t0, m.invoke_retries(), m.backoff_ns_slept())
+            })
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "same seed => identical retry/backoff schedule");
+        let (elapsed, retries, backoff_ns) = a;
+        assert!(retries > 0, "crash_prob 0.9 must force retries");
+        // Every retry slept at least the 40 ms base, at most 3x the
+        // doubled-twice max (40 * 4 * 1.5).
+        assert!(backoff_ns >= retries * 40_000_000, "{backoff_ns} ns / {retries}");
+        assert!(backoff_ns <= retries * 240_000_000);
+        assert!(elapsed >= Duration::from_nanos(backoff_ns));
+    }
+
+    #[test]
+    fn mid_body_crash_loses_unawaited_side_effects() {
+        crate::rt::run_virtual(async {
+            let m = Arc::new(MetricsHub::new());
+            let faas = Faas::with_faults(
+                FaasConfig {
+                    max_retries: 2,
+                    ..FaasConfig::default()
+                },
+                crate::core::FaultConfig {
+                    crash_prob: 1.0,
+                    crash_mid_body: 1.0, // every crash cuts mid-body
+                    mid_body_window_ms: 50.0,
+                    lethal: true,
+                    seed: 5,
+                    ..crate::core::FaultConfig::default()
+                },
+                m,
+            );
+            let early = Arc::new(AtomicU64::new(0));
+            let late = Arc::new(AtomicU64::new(0));
+            let (e2, l2) = (early.clone(), late.clone());
+            let h = faas
+                .invoke(move |_| {
+                    let (early, late) = (e2.clone(), l2.clone());
+                    async move {
+                        early.fetch_add(1, Ordering::Relaxed);
+                        clock::sleep(Duration::from_secs(1)).await; // cut lands in here
+                        late.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    }
+                })
+                .await;
+            assert!(matches!(
+                h.await.unwrap_err(),
+                EngineError::RetriesExhausted { attempts: 3, .. }
+            ));
+            // Each attempt's pre-cut effect landed; the post-cut one was
+            // dropped with the body future every time.
+            assert_eq!(early.load(Ordering::Relaxed), 3);
+            assert_eq!(late.load(Ordering::Relaxed), 0);
+        });
+    }
+
+    #[test]
+    fn pre_result_crash_duplicates_completed_side_effects() {
+        crate::rt::run_virtual(async {
+            let m = Arc::new(MetricsHub::new());
+            let faas = Faas::with_faults(
+                FaasConfig {
+                    max_retries: 1,
+                    ..FaasConfig::default()
+                },
+                crate::core::FaultConfig {
+                    crash_prob: 1.0,
+                    crash_pre_result: 1.0, // body completes, attempt lost
+                    lethal: true,
+                    seed: 6,
+                    ..crate::core::FaultConfig::default()
+                },
+                m,
+            );
+            let effects = Arc::new(AtomicU64::new(0));
+            let fx = effects.clone();
+            let h = faas
+                .invoke(move |_| {
+                    let fx = fx.clone();
+                    async move {
+                        fx.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    }
+                })
+                .await;
+            assert!(matches!(
+                h.await.unwrap_err(),
+                EngineError::RetriesExhausted { attempts: 2, .. }
+            ));
+            // This is exactly the at-least-once duplication the engine's
+            // idempotence layer must absorb.
+            assert_eq!(effects.load(Ordering::Relaxed), 2);
+        });
+    }
+
+    #[test]
+    fn attempt_timeout_caps_each_attempt_below_function_timeout() {
+        crate::rt::run_virtual(async {
+            let m = Arc::new(MetricsHub::new());
+            let faas = Faas::with_faults(
+                FaasConfig {
+                    max_retries: 0,
+                    ..FaasConfig::default() // function timeout: 120 s
+                },
+                crate::core::FaultConfig {
+                    attempt_timeout_ms: 100,
+                    ..crate::core::FaultConfig::default()
+                },
+                m,
+            );
+            let t0 = clock::now();
+            let h = faas
+                .invoke(|_| async {
+                    clock::sleep(Duration::from_secs(10)).await;
+                    Ok(())
+                })
+                .await;
+            match h.await.unwrap_err() {
+                EngineError::InvocationFailed { attempts, reason } => {
+                    assert_eq!(attempts, 1);
+                    assert!(reason.contains("100 ms"), "{reason}");
+                }
+                e => panic!("unexpected error {e}"),
+            }
+            // The hung body was cut at 100 ms, not at the 120 s timeout.
+            assert!(clock::now() - t0 < Duration::from_secs(1));
         });
     }
 

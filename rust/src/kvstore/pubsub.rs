@@ -11,11 +11,19 @@
 //! this scoping existed, a second concurrent job's `FinalResult` would
 //! have been delivered to the first job's client — a real latent bug the
 //! single-job engines simply never triggered.
+//!
+//! **Delivery semantics under crash recovery:** publishes are
+//! at-least-once. A lethal fault can kill a chain after it published but
+//! before the platform saw the attempt complete, so the re-executed chain
+//! publishes again; receivers (the driver completion loops, the fan-out
+//! proxy) dedup by task identity, and `FanOutRequest` carries the
+//! publisher's execution `epoch` so re-invoked children re-draw their
+//! straggler jitter instead of replaying the original slow draw.
 
-use crate::core::{ExecutorId, JobId, TaskId};
+use crate::core::{EngineError, ExecutorId, JobId, TaskId};
+use crate::rt::sync::mpsc;
 use std::collections::HashMap;
 use std::sync::Mutex;
-use crate::rt::sync::mpsc;
 
 /// Messages carried over pub/sub channels.
 #[derive(Clone, Debug)]
@@ -36,11 +44,17 @@ pub enum Message {
         from_edge: u32,
         /// One past the last out-edge index to invoke.
         to_edge: u32,
+        /// Execution epoch of the publishing chain — 0 on the first
+        /// execution, bumped by every recovery/hedge re-dispatch so the
+        /// delegated children's jitter draws are re-salted.
+        epoch: u32,
     },
     /// A final (sink) task's result key is available.
     FinalResult { task: TaskId },
-    /// Job-level failure broadcast.
-    JobFailed { reason: String },
+    /// Job-level failure broadcast, carrying the typed engine error so a
+    /// terminal `RetriesExhausted` surfaces to the driver as itself
+    /// rather than flattened into a string.
+    JobFailed { error: EngineError },
 }
 
 /// A subscription handle: an unbounded receiver of channel messages.

@@ -178,6 +178,21 @@ impl SpillTier {
         Some(obj)
     }
 
+    /// Free, synchronous existence probe — no metrics, no storage-second
+    /// accrual. Used by the recovery watchdog's lineage walk, which must
+    /// not recompute an intermediate that merely demoted to cold storage
+    /// (and must not perturb billing while looking).
+    pub fn peek(&self, uid: u64, raw: u64) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        self.sets
+            .lock()
+            .unwrap()
+            .get(&uid)
+            .is_some_and(|s| s.objects.contains_key(&raw))
+    }
+
     /// The virtual-time price of one cold read: seeded-tail request
     /// latency (S3 time-to-first-byte) plus streaming the payload at
     /// the tier's bandwidth.

@@ -57,12 +57,13 @@
 use crate::compute::DataObj;
 use crate::core::{
     clock, mix64, EngineError, EngineResult, FaultConfig, JobId, NetConfig, ObjectKey, SpillConfig,
+    TaskId,
 };
 use crate::kvstore::netmodel::{Nic, TailLatency};
 use crate::kvstore::pubsub::{Message, PubSub, Subscription};
 use crate::kvstore::spill::SpillTier;
 use crate::metrics::{KvOpKind, MetricsHub};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::Duration;
@@ -255,6 +256,7 @@ impl KvStore {
                 &self.faults,
                 TAIL_SALT ^ job.0.wrapping_mul(0xA24B_AED4_963E_E407),
             ),
+            edge_dedup: Mutex::new(None),
         };
         arena.ensure_task_capacity(n_tasks);
         let arena = Arc::new(arena);
@@ -406,6 +408,15 @@ pub struct JobArena {
     /// Seeded heavy-tail latency injection (pass-through when benign),
     /// streamed per job for cross-job determinism.
     tail: TailLatency,
+    /// Committed fan-in edges (packed `child << 32 | parent`), allocated
+    /// only when crash recovery arms edge dedup. `None` (the default)
+    /// keeps the benign hot path a bare `fetch_add` with no set lookup —
+    /// `incr_edge` then behaves exactly like `incr`.
+    edge_dedup: Mutex<Option<HashSet<u64>>>,
+}
+
+fn pack_edge(child: TaskId, parent: TaskId) -> u64 {
+    ((child.0 as u64) << 32) | parent.0 as u64
 }
 
 impl JobArena {
@@ -653,6 +664,16 @@ impl JobArena {
         }
     }
 
+    /// Free, synchronous availability probe spanning both the resident
+    /// KV tier and the cold spill tier. The recovery watchdog's lineage
+    /// walk uses this to decide whether an intermediate must be
+    /// recomputed: an object demoted to the spill tier is still
+    /// recoverable by a plain [`JobArena::get`], so it does not count as
+    /// lost.
+    pub fn peek_available(&self, key: ObjectKey) -> bool {
+        self.peek_contains(key) || self.store.spill.peek(self.uid, key.raw())
+    }
+
     /// Atomically increments the counter at `key` and returns the new
     /// value (Redis INCR — the fan-in dependency counter of paper §IV-C).
     /// Small fixed-size message: round-trip latency only. On the
@@ -663,7 +684,16 @@ impl JobArena {
         if !self.store.ideal {
             clock::sleep(self.tail.sample(self.latency() * 2)).await; // request + reply
         }
-        let v = match key.counter_slot() {
+        let v = self.incr_value(key);
+        self.metrics
+            .record_kv_op(KvOpKind::Incr, 0, clock::now() - t0);
+        v
+    }
+
+    /// The synchronous counter bump behind [`JobArena::incr`] /
+    /// [`JobArena::incr_edge`] — no virtual time, no metrics.
+    fn incr_value(&self, key: ObjectKey) -> u64 {
+        match key.counter_slot() {
             Some(i) => loop {
                 {
                     let slots = self.slots.read().unwrap();
@@ -679,10 +709,61 @@ impl JobArena {
                 *e += 1;
                 *e
             }
-        };
+        }
+    }
+
+    /// Arms fan-in **edge dedup** for this arena (crash recovery): each
+    /// `parent -> child` in-edge commits its INCR at most once, so a
+    /// re-executed parent's duplicate delivery can never push a fan-in
+    /// counter past the child's in-degree. Off by default — see the
+    /// `edge_dedup` field. Idempotent.
+    pub fn enable_edge_dedup(&self) {
+        let mut d = self.edge_dedup.lock().unwrap();
+        if d.is_none() {
+            *d = Some(HashSet::new());
+        }
+    }
+
+    /// Free, synchronous probe: has the in-edge `parent -> child` already
+    /// committed its fan-in increment? Always `false` while edge dedup is
+    /// disarmed. The recovery watchdog's lineage walk uses this to tell a
+    /// delivered edge from one lost with its crashed chain.
+    pub fn edge_committed(&self, child: TaskId, parent: TaskId) -> bool {
+        self.edge_dedup
+            .lock()
+            .unwrap()
+            .as_ref()
+            .is_some_and(|s| s.contains(&pack_edge(child, parent)))
+    }
+
+    /// Fan-in increment of `key` (the counter of `child`) attributed to
+    /// the in-edge arriving from `parent`. With edge dedup disarmed this
+    /// is bit-identical to [`JobArena::incr`]. Armed, a duplicate
+    /// delivery of an already-committed edge still pays the round trip
+    /// (the retry's INCR really goes to the wire) but does not move the
+    /// counter and returns `None` — the caller must treat itself as "not
+    /// the last writer" and end its chain. The commit (set insert +
+    /// `fetch_add`) is one synchronous section, so a chain dropped
+    /// mid-crash either committed its edge or left it fully uncommitted.
+    pub async fn incr_edge(&self, key: ObjectKey, child: TaskId, parent: TaskId) -> Option<u64> {
+        let t0 = clock::now();
+        if !self.store.ideal {
+            clock::sleep(self.tail.sample(self.latency() * 2)).await; // request + reply
+        }
+        {
+            let mut d = self.edge_dedup.lock().unwrap();
+            if let Some(set) = d.as_mut() {
+                if !set.insert(pack_edge(child, parent)) {
+                    self.metrics
+                        .record_kv_op(KvOpKind::Incr, 0, clock::now() - t0);
+                    return None;
+                }
+            }
+        }
+        let v = self.incr_value(key);
         self.metrics
             .record_kv_op(KvOpKind::Incr, 0, clock::now() - t0);
-        v
+        Some(v)
     }
 
     /// Reads a counter without incrementing (tests / debugging).
@@ -920,6 +1001,30 @@ mod tests {
             seen.sort_unstable();
             assert_eq!(seen, (1..=1000).collect::<Vec<u64>>());
             assert_eq!(kv.counter_value(key), 1000);
+        });
+    }
+
+    #[test]
+    fn incr_edge_disarmed_matches_incr_and_armed_dedups() {
+        crate::rt::run_virtual(async {
+            let kv = arena();
+            let child = TaskId(7);
+            let key = ObjectKey::counter(child);
+            // Disarmed: behaves exactly like incr — duplicates count.
+            assert_eq!(kv.incr_edge(key, child, TaskId(1)).await, Some(1));
+            assert_eq!(kv.incr_edge(key, child, TaskId(1)).await, Some(2));
+            assert!(!kv.edge_committed(child, TaskId(1)), "disarmed probe is false");
+            // Armed: each (child, parent) edge commits at most once, and a
+            // duplicate still charges the round trip but moves nothing.
+            kv.enable_edge_dedup();
+            assert_eq!(kv.incr_edge(key, child, TaskId(2)).await, Some(3));
+            let t0 = clock::now();
+            assert_eq!(kv.incr_edge(key, child, TaskId(2)).await, None);
+            assert_eq!(clock::now() - t0, Duration::from_secs_f64(300.0 * 1e-6) * 2);
+            assert_eq!(kv.incr_edge(key, child, TaskId(3)).await, Some(4));
+            assert!(kv.edge_committed(child, TaskId(2)));
+            assert!(!kv.edge_committed(child, TaskId(4)));
+            assert_eq!(kv.counter_value(key), 4);
         });
     }
 

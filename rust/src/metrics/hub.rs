@@ -68,6 +68,14 @@ pub struct MetricsHub {
     spill_bytes_demoted: AtomicU64,
     spill_reads: AtomicU64,
     spill_bytes_read: AtomicU64,
+    // crash recovery (platform retries + engine watchdog); all zero on a
+    // fault-free run, so recovery trace lines stay activity-gated
+    invoke_retries: AtomicU64,
+    backoff_ns_slept: AtomicU64,
+    leases_expired: AtomicU64,
+    tasks_recomputed: AtomicU64,
+    hedges_launched: AtomicU64,
+    hedges_won: AtomicU64,
     // detailed samples (disabled unless `sampling` is set, to keep the
     // simulation hot path allocation-free for the big sweeps)
     sampling: std::sync::atomic::AtomicBool,
@@ -169,6 +177,36 @@ impl MetricsHub {
         self.spill_bytes_read.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// One platform retry of a failed invocation attempt, after sleeping
+    /// `backoff` of seeded exponential backoff (zero when unconfigured).
+    pub fn record_invoke_retry(&self, backoff: Duration) {
+        self.invoke_retries.fetch_add(1, Ordering::Relaxed);
+        self.backoff_ns_slept
+            .fetch_add(backoff.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// The watchdog found a dead chain's abandoned lease and re-dispatched
+    /// its task.
+    pub fn record_lease_expired(&self) {
+        self.leases_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A task body ran again after already having executed once (a
+    /// duplicate whose side effects were deduped).
+    pub fn record_task_recomputed(&self) {
+        self.tasks_recomputed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A speculative duplicate of a straggling task was dispatched.
+    pub fn record_hedge_launched(&self) {
+        self.hedges_launched.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A hedged duplicate finished first (the speculation paid off).
+    pub fn record_hedge_won(&self) {
+        self.hedges_won.fetch_add(1, Ordering::Relaxed);
+    }
+
     // -- accessors --------------------------------------------------------
 
     pub fn lambdas_invoked(&self) -> u64 {
@@ -224,6 +262,24 @@ impl MetricsHub {
     }
     pub fn spill_bytes_read(&self) -> u64 {
         self.spill_bytes_read.load(Ordering::Relaxed)
+    }
+    pub fn invoke_retries(&self) -> u64 {
+        self.invoke_retries.load(Ordering::Relaxed)
+    }
+    pub fn backoff_ns_slept(&self) -> u64 {
+        self.backoff_ns_slept.load(Ordering::Relaxed)
+    }
+    pub fn leases_expired(&self) -> u64 {
+        self.leases_expired.load(Ordering::Relaxed)
+    }
+    pub fn tasks_recomputed(&self) -> u64 {
+        self.tasks_recomputed.load(Ordering::Relaxed)
+    }
+    pub fn hedges_launched(&self) -> u64 {
+        self.hedges_launched.load(Ordering::Relaxed)
+    }
+    pub fn hedges_won(&self) -> u64 {
+        self.hedges_won.load(Ordering::Relaxed)
     }
 
     pub fn task_spans(&self) -> Vec<TaskSpan> {
@@ -283,6 +339,27 @@ mod tests {
         assert_eq!(m.spill_bytes_demoted(), 2048);
         assert_eq!(m.spill_reads(), 2);
         assert_eq!(m.spill_bytes_read(), 768);
+    }
+
+    #[test]
+    fn recovery_counters_accumulate_and_default_to_zero() {
+        let m = MetricsHub::new();
+        assert_eq!(m.invoke_retries(), 0);
+        assert_eq!(m.leases_expired(), 0);
+        assert_eq!(m.hedges_launched(), 0);
+        m.record_invoke_retry(Duration::from_millis(40));
+        m.record_invoke_retry(Duration::ZERO);
+        m.record_lease_expired();
+        m.record_task_recomputed();
+        m.record_task_recomputed();
+        m.record_hedge_launched();
+        m.record_hedge_won();
+        assert_eq!(m.invoke_retries(), 2);
+        assert_eq!(m.backoff_ns_slept(), 40_000_000);
+        assert_eq!(m.leases_expired(), 1);
+        assert_eq!(m.tasks_recomputed(), 2);
+        assert_eq!(m.hedges_launched(), 1);
+        assert_eq!(m.hedges_won(), 1);
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod report;
 
 pub use histogram::Cdf;
 pub use hub::{KvOpKind, MetricsHub, TaskSpan};
-pub use report::{JobReport, KvStats};
+pub use report::{JobReport, KvStats, RecoveryStats};

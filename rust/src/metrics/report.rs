@@ -4,6 +4,43 @@ use crate::core::{EngineError, JobId};
 use crate::metrics::hub::MetricsHub;
 use std::time::Duration;
 
+/// Crash-recovery activity summary: platform retries plus the engine
+/// watchdog's lease/recompute/hedge work. All-zero on a fault-free run,
+/// which is what keeps the recovery trace line activity-gated.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Platform retries of failed invocation attempts.
+    pub invoke_retries: u64,
+    /// Virtual nanoseconds slept in seeded exponential backoff.
+    pub backoff_ns_slept: u64,
+    /// Dead chains detected via abandoned leases and re-dispatched.
+    pub leases_expired: u64,
+    /// Task bodies that ran again after already executing once.
+    pub tasks_recomputed: u64,
+    /// Speculative straggler duplicates dispatched.
+    pub hedges_launched: u64,
+    /// Hedged duplicates that finished first.
+    pub hedges_won: u64,
+}
+
+impl RecoveryStats {
+    fn from_hub(hub: &MetricsHub) -> Self {
+        RecoveryStats {
+            invoke_retries: hub.invoke_retries(),
+            backoff_ns_slept: hub.backoff_ns_slept(),
+            leases_expired: hub.leases_expired(),
+            tasks_recomputed: hub.tasks_recomputed(),
+            hedges_launched: hub.hedges_launched(),
+            hedges_won: hub.hedges_won(),
+        }
+    }
+
+    /// True when any counter is nonzero — the trace-line gate.
+    pub fn any(&self) -> bool {
+        *self != RecoveryStats::default()
+    }
+}
+
 /// KV-store traffic summary.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct KvStats {
@@ -41,6 +78,8 @@ pub struct JobReport {
     /// of locality-enhanced scheduling: dependencies served from an
     /// executor's local cache never appear here.
     pub net_bytes_moved: u64,
+    /// Crash-recovery activity (all-zero on fault-free runs).
+    pub recovery: RecoveryStats,
     /// Failure, if the job did not complete (e.g. Dask OOM).
     pub error: Option<EngineError>,
 }
@@ -65,6 +104,7 @@ impl JobReport {
                 bytes_written: hub.bytes_written(),
             },
             net_bytes_moved: hub.net_bytes_moved(),
+            recovery: RecoveryStats::from_hub(hub),
             error: None,
         }
     }
@@ -132,6 +172,14 @@ mod tests {
         hub.record_net_bytes(777);
         let r = JobReport::success("WUKONG", Duration::from_secs(2), &hub);
         assert!(r.is_ok());
+        assert!(!r.recovery.any(), "fault-free hub => all-zero recovery stats");
+        hub.record_invoke_retry(Duration::from_millis(40));
+        hub.record_hedge_launched();
+        let r2 = JobReport::success("WUKONG", Duration::from_secs(2), &hub);
+        assert!(r2.recovery.any());
+        assert_eq!(r2.recovery.invoke_retries, 1);
+        assert_eq!(r2.recovery.backoff_ns_slept, 40_000_000);
+        assert_eq!(r2.recovery.hedges_launched, 1);
         assert_eq!(r.lambdas_invoked, 1);
         assert_eq!(r.net_bytes_moved, 777);
         assert!(r.row().contains("net_b=777"));

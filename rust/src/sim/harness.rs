@@ -83,6 +83,19 @@ impl SimHarness {
         self.with_faults(FaultConfig::chaos(seed ^ 0xC4A0_5C0D_E5EE_D5u64))
     }
 
+    /// Attaches the *lethal* chaos profile (see
+    /// [`FaultConfig::lethal_chaos`]: crashes at any phase, any attempt,
+    /// terminal `RetriesExhausted` possible) and arms crash recovery —
+    /// the block-9 oracle configuration. Same warm-pool shrink and seed
+    /// derivation as [`SimHarness::with_chaos`], so the benign chaos
+    /// profile is the natural baseline.
+    pub fn with_lethal_chaos(mut self) -> Self {
+        self.cfg.faas.warm_pool = 4;
+        self.cfg.recovery.enabled = true;
+        let seed = self.cfg.seed;
+        self.with_faults(FaultConfig::lethal_chaos(seed ^ 0xC4A0_5C0D_E5EE_D5u64))
+    }
+
     pub fn cfg(&self) -> &SimConfig {
         &self.cfg
     }

@@ -5,7 +5,9 @@
 //!
 //! * the **DAG** under test ([`crate::workloads::random_dag`]);
 //! * the **fault schedule** ([`crate::core::FaultConfig`]): inflated cold
-//!   starts, transient container crashes masked by platform retries,
+//!   starts, container crashes (transient ones masked by platform
+//!   retries; the lethal profile crashes any phase of any attempt and is
+//!   absorbed by crash recovery — see [`oracle::recovery_check`]),
 //!   straggler tasks, and heavy-tailed KV latencies — injected through
 //!   the FaaS platform ([`crate::faas`]), the KV store network model
 //!   ([`crate::kvstore`]), and the shared per-task jitter
@@ -29,7 +31,7 @@ pub mod trace;
 pub use harness::{fingerprint_outputs, paper_policies, ModeKind, PolicyRun, SimHarness};
 pub use oracle::{
     determinism_check, differential_check, governance_check, locality_check, multi_job_check,
-    multi_job_determinism_check, spill_check, DifferentialReport, GovernanceReport,
-    LocalityReport, MultiJobReport, SpillReport,
+    multi_job_determinism_check, recovery_check, spill_check, DifferentialReport,
+    GovernanceReport, LocalityReport, MultiJobReport, RecoveryReport, SpillReport,
 };
 pub use trace::{first_divergence, render_trace};

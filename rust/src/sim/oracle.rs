@@ -31,7 +31,7 @@ use crate::engine::service::{
 };
 use crate::engine::SchedulingPolicy;
 use crate::kvstore::{ArenaForensics, KvStore};
-use crate::metrics::MetricsHub;
+use crate::metrics::{MetricsHub, RecoveryStats};
 use crate::schedule::LoweredOps;
 use crate::sim::harness::{paper_policies, ModeKind, PolicyRun, SimHarness};
 use crate::sim::trace::first_divergence;
@@ -857,6 +857,159 @@ pub fn spill_check(seed: u64) -> Result<SpillReport, String> {
     })
 }
 
+/// Summary of one passing recovery check.
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    pub seed: u64,
+    pub tasks: usize,
+    /// (policy label, recovery counters of the lethal run) per design.
+    pub per_policy: Vec<(String, RecoveryStats)>,
+}
+
+/// The crash-recovery oracle (the block-9 sweep): all five paper designs
+/// under the **lethal** chaos profile ([`FaultConfig::lethal_chaos`]:
+/// crashes at any phase — pre-body, mid-body, pre-result — on any attempt,
+/// the never-crash-the-final-attempt crutch removed) with task leases,
+/// lineage recompute, and hedged stragglers armed. Checks, for every seed:
+///
+/// * every lethal run completes with every task *effectively* executed
+///   exactly once (duplicate executions dedup, not double-count) and sink
+///   outputs **byte-identical** to the benign-chaos reference of the same
+///   seed — recovery changes when and where bodies run, never what jobs
+///   compute;
+/// * substrate invariants survive re-execution: fan-in counters end
+///   exactly at in-degree (edge dedup absorbs duplicate increments),
+///   stored intermediates are exactly the store-once set — crashed chains
+///   leave no orphans, recovered chains lose no outputs;
+/// * platform retries stay bounded (`<= lambdas_invoked * max_retries`):
+///   the lethal profile terminates in `RetriesExhausted` + re-dispatch,
+///   it never retries forever;
+/// * every lethal run — crashes, backoff sleeps, watchdog re-dispatches,
+///   hedges — **replays byte-identically** from its seed;
+/// * armed-but-benign inertness: recovery *enabled* under the benign
+///   (non-lethal) chaos profile renders a trace byte-identical to
+///   recovery *off* — the machinery is free until a chain actually dies;
+/// * a fault-free recovery-off run reports all-zero recovery counters and
+///   renders no recovery trace line (pre-recovery output preserved
+///   bit-for-bit).
+pub fn recovery_check(seed: u64) -> Result<RecoveryReport, String> {
+    let dag = random_dag(&RandomDagSpec::value(seed));
+    let benign = SimHarness::new(seed).with_chaos();
+    let lethal = SimHarness::new(seed).with_lethal_chaos();
+
+    // Benign-chaos reference: the five designs agree among themselves
+    // (transient crashes only, masked by platform retries).
+    let reference_runs: Vec<PolicyRun> = paper_policies()
+        .into_iter()
+        .map(|p| benign.run(p, &dag))
+        .collect();
+    for run in &reference_runs {
+        if !run.report.is_ok() {
+            return Err(format!(
+                "seed {seed}: benign reference {} failed: {:?}",
+                run.label, run.report.error
+            ));
+        }
+    }
+    let reference = &reference_runs[0];
+    for run in &reference_runs[1..] {
+        if run.fingerprint != reference.fingerprint {
+            return Err(format!(
+                "seed {seed}: benign reference designs disagree ({} vs {})",
+                reference.label, run.label
+            ));
+        }
+    }
+
+    // The lethal runs: crash-at-any-phase chaos with recovery armed.
+    let max_retries = lethal.cfg().faas.max_retries as u64;
+    let mut lethal_runs = Vec::new();
+    for policy in paper_policies() {
+        let run = lethal.run(policy, &dag);
+        let what = format!("seed {seed}: lethal {}", run.label);
+        if !run.report.is_ok() {
+            return Err(format!("{what} failed: {:?}", run.report.error));
+        }
+        if run.report.tasks_executed != dag.len() as u64 {
+            return Err(format!(
+                "{what} executed {}/{} tasks — effective exactly-once violated",
+                run.report.tasks_executed,
+                dag.len()
+            ));
+        }
+        if run.fingerprint != reference.fingerprint {
+            return Err(format!(
+                "{what}: sink outputs diverge from the benign reference — crash \
+                 recovery corrupted results"
+            ));
+        }
+        check_substrate(seed, &run, &dag)?;
+        let rec = &run.report.recovery;
+        if rec.invoke_retries > run.report.lambdas_invoked.saturating_mul(max_retries) {
+            return Err(format!(
+                "{what}: {} platform retries over {} invocations exceeds the \
+                 max_retries={max_retries} budget",
+                rec.invoke_retries, run.report.lambdas_invoked
+            ));
+        }
+        lethal_runs.push(run);
+    }
+
+    // Replay determinism: the whole lethal schedule — crash draws, backoff
+    // sleeps, watchdog re-dispatches, hedges — must reproduce from the seed.
+    for (policy, first) in paper_policies().into_iter().zip(&lethal_runs) {
+        let again = lethal.run(policy, &dag);
+        if again.trace != first.trace {
+            let (line, left, right) =
+                first_divergence(&first.trace, &again.trace).expect("traces differ");
+            return Err(format!(
+                "seed {seed}: lethal {} replay diverges at trace line {line}:\n  run1: {left}\n  run2: {right}",
+                first.label
+            ));
+        }
+    }
+
+    // Armed-but-benign inertness: recovery enabled under non-lethal chaos
+    // must render the recovery-off trace byte-for-byte (the lease/epoch/
+    // watchdog machinery may not perturb a run where no chain dies).
+    let armed = SimHarness::with_cfg(benign.cfg().clone().with_recovery())
+        .run(Arc::new(WukongPolicy), &dag);
+    let plain = benign.run(Arc::new(WukongPolicy), &dag);
+    if armed.trace != plain.trace {
+        let (line, left, right) =
+            first_divergence(&armed.trace, &plain.trace).expect("traces differ");
+        return Err(format!(
+            "seed {seed}: armed-but-benign recovery is not bit-identical to recovery off \
+             at trace line {line}:\n  on:  {left}\n  off: {right}"
+        ));
+    }
+
+    // Fault-free recovery-off runs keep the pre-recovery rendering: zero
+    // counters, no recovery trace line.
+    let quiet = SimHarness::new(seed).run(Arc::new(WukongPolicy), &dag);
+    if quiet.report.recovery != RecoveryStats::default() {
+        return Err(format!(
+            "seed {seed}: fault-free recovery-off run reports nonzero recovery \
+             counters: {:?}",
+            quiet.report.recovery
+        ));
+    }
+    if quiet.trace.contains("recovery ") {
+        return Err(format!(
+            "seed {seed}: fault-free recovery-off trace grew a recovery line"
+        ));
+    }
+
+    Ok(RecoveryReport {
+        seed,
+        tasks: dag.len(),
+        per_policy: lethal_runs
+            .iter()
+            .map(|r| (r.label.clone(), r.report.recovery.clone()))
+            .collect(),
+    })
+}
+
 /// Replays the multi-job scenario of `seed` twice and requires
 /// byte-identical service traces (arrivals, admissions, per-job reports).
 pub fn multi_job_determinism_check(seed: u64, jobs: usize) -> Result<(), String> {
@@ -1118,6 +1271,131 @@ mod tests {
     #[test]
     fn multi_job_determinism_smoke_seed() {
         multi_job_determinism_check(0, 3).unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    #[test]
+    fn recovery_oracle_smoke_seed() {
+        let r = recovery_check(90).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(r.per_policy.len(), 5);
+        // The lethal profile must actually bite: at least one design
+        // recorded recovery activity (retries, recomputes, ...).
+        assert!(
+            r.per_policy.iter().any(|(_, rec)| rec.any()),
+            "lethal chaos was inert: {:?}",
+            r.per_policy
+        );
+        // Serverful never touches the FaaS platform — auto-immune.
+        let (_, serverful) = r
+            .per_policy
+            .iter()
+            .find(|(l, _)| l.contains("Dask"))
+            .expect("serverful baseline in per_policy");
+        assert!(!serverful.any(), "serverful recorded recovery activity");
+    }
+
+    #[test]
+    fn straggler_keeps_its_lease_no_false_positive_kills() {
+        // A slow-but-heartbeating chain is a straggler, not a corpse:
+        // even under an aggressively tight lease and watchdog period,
+        // armed recovery must never declare it dead, recompute its
+        // tasks, or (with hedging off) dispatch duplicates.
+        let mut cfg = SimConfig::test().with_recovery();
+        cfg.seed = 91;
+        cfg.faults = FaultConfig {
+            seed: 91,
+            straggler_prob: 1.0,
+            straggler_slowdown: 50.0,
+            ..FaultConfig::default()
+        };
+        cfg.recovery.lease_ms = 1.0;
+        cfg.recovery.watchdog_period_ms = 0.5;
+        cfg.recovery.hedge_after_ms = 1e12; // hedging off: leases only
+        let dag = random_dag(&RandomDagSpec::value(91));
+        let run = SimHarness::with_cfg(cfg).run(Arc::new(WukongPolicy), &dag);
+        assert!(run.report.is_ok(), "{:?}", run.report.error);
+        assert_eq!(run.report.tasks_executed, dag.len() as u64);
+        let rec = &run.report.recovery;
+        assert_eq!(rec.leases_expired, 0, "live straggler declared dead");
+        assert_eq!(rec.tasks_recomputed, 0, "live straggler recomputed");
+        assert_eq!(rec.hedges_launched, 0, "hedging was disabled");
+    }
+
+    #[test]
+    fn hedged_stragglers_never_corrupt_results() {
+        // Universal extreme stragglers + a hair-trigger hedge threshold:
+        // speculative duplicates must launch, and whoever wins, the sink
+        // outputs must match a fault-free run bit-for-bit.
+        let mut cfg = SimConfig::test().with_recovery();
+        cfg.seed = 94;
+        cfg.faults = FaultConfig {
+            seed: 94,
+            straggler_prob: 1.0,
+            straggler_slowdown: 100.0,
+            ..FaultConfig::default()
+        };
+        cfg.recovery.watchdog_period_ms = 0.05;
+        cfg.recovery.hedge_after_ms = 0.1;
+        let dag = random_dag(&RandomDagSpec::value(94));
+        let run = SimHarness::with_cfg(cfg).run(Arc::new(WukongPolicy), &dag);
+        assert!(run.report.is_ok(), "{:?}", run.report.error);
+        assert_eq!(run.report.tasks_executed, dag.len() as u64);
+        assert!(
+            run.report.recovery.hedges_launched > 0,
+            "no hedge fired under universal stragglers: {:?}",
+            run.report.recovery
+        );
+        let reference = SimHarness::new(94).run(Arc::new(WukongPolicy), &dag);
+        assert_eq!(
+            run.fingerprint, reference.fingerprint,
+            "hedged run diverged from the fault-free reference"
+        );
+    }
+
+    #[test]
+    fn mid_body_crashes_leave_no_orphans_or_double_counts() {
+        // Every crash strikes mid-body — after partial side effects have
+        // landed. Recovery must converge with fan-in counters exactly at
+        // in-degree and exactly the store-once object set: partial
+        // effects dedup, they do not accumulate.
+        let mut cfg = SimConfig::test().with_recovery();
+        cfg.seed = 92;
+        cfg.faas.warm_pool = 4;
+        let mut faults = FaultConfig::lethal_chaos(92);
+        faults.crash_prob = 0.5;
+        faults.crash_mid_body = 1.0;
+        faults.crash_pre_result = 0.0;
+        cfg.faults = faults;
+        let dag = random_dag(&RandomDagSpec::value(92));
+        let run = SimHarness::with_cfg(cfg).run(Arc::new(WukongPolicy), &dag);
+        assert!(run.report.is_ok(), "{:?}", run.report.error);
+        assert_eq!(run.report.tasks_executed, dag.len() as u64);
+        assert!(
+            run.report.recovery.invoke_retries > 0,
+            "mid-body crashes at prob 0.5 never fired"
+        );
+        check_substrate(92, &run, &dag).unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    #[test]
+    fn exhausted_retries_fail_typed_instead_of_hanging() {
+        // Crash every attempt of every invocation with the watchdog
+        // disarmed: the run must terminate with a typed RetriesExhausted
+        // failure and a partial report — never hang, never panic.
+        let mut cfg = SimConfig::test();
+        cfg.seed = 93;
+        cfg.faults.crash_prob = 1.0;
+        cfg.faults.lethal = true;
+        let dag = random_dag(&RandomDagSpec::value(93));
+        let run = SimHarness::with_cfg(cfg).run(Arc::new(WukongPolicy), &dag);
+        assert!(!run.report.is_ok(), "all-attempts-crash run reported ok");
+        assert!(
+            matches!(
+                run.report.error,
+                Some(crate::core::EngineError::RetriesExhausted { .. })
+            ),
+            "expected RetriesExhausted, got {:?}",
+            run.report.error
+        );
     }
 
     #[test]

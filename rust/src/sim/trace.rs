@@ -34,6 +34,21 @@ pub fn render_trace(report: &JobReport, spans: &[TaskSpan]) -> String {
         report.billed.as_millis(),
         report.is_ok(),
     ));
+    // Recovery line only on activity: fault-free runs (and recovery-off
+    // runs) render byte-identically to the pre-recovery engine.
+    let rec = &report.recovery;
+    if rec.any() {
+        out.push_str(&format!(
+            "recovery retries={} backoff_ns={} leases_expired={} recomputed={} \
+             hedges_launched={} hedges_won={}\n",
+            rec.invoke_retries,
+            rec.backoff_ns_slept,
+            rec.leases_expired,
+            rec.tasks_recomputed,
+            rec.hedges_launched,
+            rec.hedges_won,
+        ));
+    }
     for s in spans {
         out.push_str(&format!(
             "task {} exec={} fetch_ns={} compute_ns={} store_ns={} total_ns={}\n",
@@ -96,6 +111,24 @@ mod tests {
         assert!(t.contains(" net_bytes=0 "));
         assert_eq!(t.lines().count(), 3);
         assert!(t.contains("task t1 exec=e7 "));
+    }
+
+    #[test]
+    fn recovery_line_renders_only_on_activity() {
+        let hub = MetricsHub::new();
+        let quiet = render_trace(
+            &JobReport::success("WUKONG", Duration::from_secs(1), &hub),
+            &[],
+        );
+        assert!(!quiet.contains("recovery "), "zero-activity hub: no line");
+        hub.record_invoke_retry(Duration::from_millis(25));
+        hub.record_lease_expired();
+        let loud = render_trace(
+            &JobReport::success("WUKONG", Duration::from_secs(1), &hub),
+            &[],
+        );
+        assert!(loud.contains("recovery retries=1 backoff_ns=25000000 leases_expired=1"));
+        assert_eq!(loud.lines().count(), 2);
     }
 
     #[test]

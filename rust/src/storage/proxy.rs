@@ -31,6 +31,7 @@ pub fn spawn_proxy(ctx: Arc<WukongCtx>) -> JoinHandle<()> {
                 fan_out_task,
                 from_edge,
                 to_edge,
+                epoch,
             } = msg
             {
                 for edge in from_edge..to_edge {
@@ -38,7 +39,12 @@ pub fn spawn_proxy(ctx: Arc<WukongCtx>) -> JoinHandle<()> {
                     let child = ctx.dag.children(fan_out_task)[edge as usize];
                     let ctx = Arc::clone(&ctx);
                     crate::rt::spawn(async move {
-                        invoke_executor(ctx, child, Some(fan_out_task)).await;
+                        // Hand the delegation credit (noted by the
+                        // publishing executor) over to the invocation's
+                        // own dispatch tracking — same synchronous
+                        // stretch, so watchdog coverage never lapses.
+                        ctx.settle_dispatch(child);
+                        invoke_executor(ctx, child, Some(fan_out_task), epoch).await;
                         drop(permit);
                     });
                 }
@@ -90,7 +96,7 @@ mod tests {
 
             let proxy = spawn_proxy(Arc::clone(&ctx));
             let mut final_sub = ctx.kv.subscribe(FINAL_CHANNEL);
-            invoke_executor(Arc::clone(&ctx), crate::core::TaskId(0), None).await;
+            invoke_executor(Arc::clone(&ctx), crate::core::TaskId(0), None, 0).await;
 
             // The sink must eventually complete, through the proxy-invoked
             // executors.

@@ -72,7 +72,7 @@ fn fan_in_counter_ends_at_in_degree_and_last_writer_continues() {
         let leaves = ctx.dag.leaves();
         let handles: Vec<_> = leaves
             .iter()
-            .map(|&l| invoke_executor(Arc::clone(&ctx), l, None))
+            .map(|&l| invoke_executor(Arc::clone(&ctx), l, None, 0))
             .collect();
         wukong::rt::join_all(handles).await;
 

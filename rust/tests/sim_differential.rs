@@ -10,13 +10,13 @@
 //! Sharding: the full single-job sweep covers seeds `0..50`. Set
 //! `WUKONG_SIM_SEED_BLOCK=<k>` to run only seeds `[10k, 10k+10)` — the CI
 //! matrix fans the blocks out in parallel (0–4 single-job; 5 multi-job;
-//! 6 governance; 7 locality; 8 spill); an unset variable (local
-//! `cargo test`) runs the whole range. To reproduce a CI failure locally:
-//! `wukong::sim::differential_check(<seed from the log>)`.
+//! 6 governance; 7 locality; 8 spill; 9 recovery); an unset variable
+//! (local `cargo test`) runs the whole range. To reproduce a CI failure
+//! locally: `wukong::sim::differential_check(<seed from the log>)`.
 
 use wukong::sim::{
     determinism_check, differential_check, governance_check, locality_check, multi_job_check,
-    multi_job_determinism_check, spill_check,
+    multi_job_determinism_check, recovery_check, spill_check,
 };
 
 const BLOCK_SIZE: u64 = 10;
@@ -40,6 +40,13 @@ const LOCALITY_BLOCK: u64 = 7;
 /// deterministically, armed-but-unbudgeted is bit-identical to off) and
 /// skips the other sweeps.
 const SPILL_BLOCK: u64 = 8;
+/// The dedicated crash-recovery CI block (`WUKONG_SIM_SEED_BLOCK=9`):
+/// sweeps the lethal-chaos oracle (crashes at any phase of any attempt,
+/// leases + lineage recompute + hedging armed; sink outputs must match
+/// the benign reference byte-for-byte, retries stay bounded, replays are
+/// exact, armed-but-benign is bit-identical to recovery off) and skips
+/// the other sweeps.
+const RECOVERY_BLOCK: u64 = 9;
 
 fn seed_block() -> Option<u64> {
     std::env::var("WUKONG_SIM_SEED_BLOCK").ok().map(|block| {
@@ -54,7 +61,7 @@ fn seed_block() -> Option<u64> {
 fn seed_range() -> std::ops::Range<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) | Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK)
-        | Some(SPILL_BLOCK) => 0..0,
+        | Some(SPILL_BLOCK) | Some(RECOVERY_BLOCK) => 0..0,
         Some(k) => {
             let lo = k * BLOCK_SIZE;
             assert!(lo < TOTAL_SEEDS, "block {k} out of range");
@@ -70,7 +77,8 @@ fn seed_range() -> std::ops::Range<u64> {
 fn multi_job_seeds() -> Vec<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) => (50..58).collect(),
-        Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) | Some(SPILL_BLOCK) => vec![],
+        Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) | Some(SPILL_BLOCK)
+        | Some(RECOVERY_BLOCK) => vec![],
         Some(k) => vec![k * BLOCK_SIZE],
         None => vec![0, 25],
     }
@@ -103,6 +111,16 @@ fn spill_seeds() -> Vec<u64> {
         Some(SPILL_BLOCK) => (80..88).collect(),
         Some(_) => vec![],
         None => vec![80],
+    }
+}
+
+/// Recovery scenario seeds: block 9 sweeps eight; a local run samples
+/// one; the other blocks skip.
+fn recovery_seeds() -> Vec<u64> {
+    match seed_block() {
+        Some(RECOVERY_BLOCK) => (90..98).collect(),
+        Some(_) => vec![],
+        None => vec![90],
     }
 }
 
@@ -241,6 +259,36 @@ fn spill_tier_preserves_outputs_and_replays_deterministically() {
         println!(
             "spill seed {:>3}: {} jobs, {} B demoted, {:.9} GB-s, makespan {:.2}s",
             report.seed, report.jobs, report.demoted_bytes, report.gb_seconds, report.makespan,
+        );
+    }
+}
+
+#[test]
+fn crash_recovery_preserves_outputs_and_bounds_retries() {
+    // The crash-recovery oracle (ISSUE 8): all five paper designs under
+    // the lethal chaos profile — crashes at any phase (pre-body,
+    // mid-body, pre-result) of any attempt, task leases + lineage
+    // recompute + hedged stragglers armed — must produce sink outputs
+    // byte-identical to the benign reference, keep platform retries
+    // bounded, replay byte-identically, and be bit-identical to the
+    // pre-recovery engine when armed under benign faults.
+    for seed in recovery_seeds() {
+        let report = recovery_check(seed).unwrap_or_else(|e| {
+            panic!("recovery oracle failed — reproduce with wukong::sim::recovery_check({seed}): {e}")
+        });
+        println!(
+            "recovery seed {:>3}: {} tasks, {}",
+            report.seed,
+            report.tasks,
+            report
+                .per_policy
+                .iter()
+                .map(|(l, r)| format!(
+                    "{l}[retries={} recomputed={} hedges={}]",
+                    r.invoke_retries, r.tasks_recomputed, r.hedges_launched
+                ))
+                .collect::<Vec<_>>()
+                .join(" ")
         );
     }
 }
