@@ -93,6 +93,31 @@ fn run_mt(jobs: usize, dag: &Dag, cfg: &SimConfig) {
     assert!(report.all_ok());
 }
 
+/// One sharded-fleet service run: `jobs` copies of `dag` with Poisson
+/// arrivals over ONE shared platform, partitioned whole-job across
+/// `shards` virtual-clock shards (1 = the serial service loop). Poisson
+/// gaps keep cross-shard events off a shared time lattice, so the
+/// conservative gates almost never hit same-instant ties.
+fn run_fleet_sharded(jobs: usize, dag: &Dag, cfg: &SimConfig, shards: usize) {
+    let requests: Vec<JobRequest> = (0..jobs)
+        .map(|i| JobRequest {
+            name: format!("sh{i}"),
+            tenant: (i % 3) as u32,
+            priority: 0,
+            seed: i as u64,
+            dag: dag.clone(),
+            policy: Arc::new(WukongPolicy),
+        })
+        .collect();
+    let svc = ServiceConfig::new(cfg.clone(), 1)
+        .with_profile(ArrivalProfile::Poisson { mean_gap_ms: 5.0 })
+        .with_concurrency(jobs, jobs)
+        .with_shards(shards);
+    let report = run_service(svc, requests);
+    assert_eq!(report.completed(), jobs);
+    assert!(report.all_ok());
+}
+
 /// Scales an iteration count via `WUKONG_BENCH_ITERS` (CI sets 1 to keep
 /// the job short; unset means the full default count).
 fn iters(default: usize) -> usize {
@@ -449,6 +474,40 @@ fn main() {
         mt32_tasks,
         iters(2),
         || run_mt(32, &tr64, &cfg),
+    );
+
+    // --- parallel simulation: sharded clocks, serial vs 8-way -----------
+    // The million-task fleet as 8 Poisson-arriving TR-131072 jobs over
+    // ONE shared platform. "shard1" is the serial service loop; "shard8"
+    // partitions whole jobs across 8 virtual-clock shards synchronized
+    // by conservative lookahead gates (rt::sharded). The byte-identical
+    // invariant is swept separately by sim::parallel_check (CI seed
+    // block 10); this pair prices the wall-clock win on real cores.
+    let tr128k = workloads::tree_reduction(1 << 17, 0.0, &cfg);
+    let fleet_tasks = 8 * tr128k.len();
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/TR-1M-shard1 ({fleet_tasks} tasks)"),
+        fleet_tasks,
+        iters(1),
+        || run_fleet_sharded(8, &tr128k, &cfg, 1),
+    );
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/TR-1M-shard8 ({fleet_tasks} tasks)"),
+        fleet_tasks,
+        iters(1),
+        || run_fleet_sharded(8, &tr128k, &cfg, 8),
+    );
+    // The many-small-jobs shape under sharding: 32 tiny jobs across 8
+    // shards, where cross-shard gate overhead (not task work) dominates —
+    // the honest lower bound on the speedup.
+    bench_case_cold(
+        &mut rows,
+        &format!("wukong/MT-32x{}-shard8 ({mt32_tasks} tasks)", tr64.len()),
+        mt32_tasks,
+        iters(2),
+        || run_fleet_sharded(32, &tr64, &cfg, 8),
     );
 
     // --- spill: working set 4x over the KV byte budget ------------------

@@ -6,6 +6,13 @@
 //! deterministic discrete-event simulation. Under `Mode::Real` the
 //! identical code runs against the wall clock (used by the end-to-end
 //! PJRT examples).
+//!
+//! **Sharded runs**: under `rt::sharded::run_sharded` each shard owns a
+//! *per-shard* clock — [`now`] reads the calling shard's timeline, and
+//! the conservative-PDES coordinator guarantees it never runs ahead of
+//! an event another shard could still send it. [`low_water`] exposes the
+//! fleet-wide minimum (the global virtual time every shard has provably
+//! passed); it is `None` in ordinary single-clock runs.
 
 use std::time::Duration;
 
@@ -16,6 +23,20 @@ pub type SimInstant = crate::rt::SimInstant;
 #[inline]
 pub fn now() -> SimInstant {
     crate::rt::now()
+}
+
+/// Returns the current time, or `None` when called outside a running
+/// executor (e.g. from a `Drop` during teardown).
+#[inline]
+pub fn try_now() -> Option<SimInstant> {
+    crate::rt::executor::try_now()
+}
+
+/// Fleet-wide low-water mark under sharded simulation: the earliest
+/// per-shard clock among live shards. `None` outside a sharded run.
+#[inline]
+pub fn low_water() -> Option<SimInstant> {
+    crate::rt::sharded::low_water()
 }
 
 /// Sleeps for `d` on the (virtual or wall) timeline.

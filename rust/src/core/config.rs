@@ -80,6 +80,14 @@ pub struct NetConfig {
     pub nic_fair_queueing: bool,
     /// DRR byte quantum granted to each contending job per queue visit.
     pub nic_drr_quantum_bytes: u64,
+    /// Per-tenant-class DRR weight multipliers, `(tenant, weight)`: a
+    /// job admitted by tenant `t` with an entry `(t, w)` accrues
+    /// `w * nic_drr_quantum_bytes` of deficit per queue visit on every
+    /// shard NIC, so a premium class drains its backlog `w×` faster under
+    /// contention. Tenants without an entry (and weights `<= 1`) get the
+    /// plain quantum; a solo job's service is weight-independent, so the
+    /// empty default is bit-identical to the unweighted engine.
+    pub nic_drr_class_weights: Vec<(u32, u64)>,
     /// If true (default), `JobArena::contains` is charged a full request +
     /// reply round trip like `incr` — a Redis EXISTS is not free. The
     /// escape hatch (`false`) keeps existence probes out of virtual time;
@@ -137,6 +145,7 @@ impl Default for NetConfig {
             kv_shared_vm: false,
             nic_fair_queueing: true,
             nic_drr_quantum_bytes: 64 * 1024,
+            nic_drr_class_weights: Vec::new(),
             charge_exists: true,
             pubsub_latency_us: 200.0,
             tcp_conn_us: 3000.0,
@@ -346,6 +355,13 @@ pub struct SpillConfig {
     pub bandwidth_bps: f64,
     /// Storage price, $ per GB-second (S3 standard ≈ $0.023/GB-month).
     pub cost_gb_s: f64,
+    /// Capacity cap on the tier, bytes. Demotions past the cap delete the
+    /// **oldest** spilled sets (smallest demotion uid) to make room —
+    /// deletion is real: a late `get` of a deleted object returns
+    /// `MissingObject`, and the victim's storage-seconds settle at the
+    /// deletion instant. `u64::MAX` (default) never deletes —
+    /// bit-identical to the uncapped tier.
+    pub max_spill_bytes: u64,
 }
 
 impl Default for SpillConfig {
@@ -355,6 +371,7 @@ impl Default for SpillConfig {
             latency_ms: 15.0,
             bandwidth_bps: 90e6,
             cost_gb_s: 0.023 / (30.0 * 24.0 * 3600.0),
+            max_spill_bytes: u64::MAX,
         }
     }
 }
@@ -647,6 +664,10 @@ mod tests {
         assert_eq!(c.faas.billing_granularity_ms, 100);
         assert_eq!(c.faas.max_retries, 2);
         assert_eq!(c.net.kv_shards, 10);
+        assert!(
+            c.net.nic_drr_class_weights.is_empty(),
+            "every tenant class gets the plain quantum by default"
+        );
         assert_eq!(c.wukong.max_task_fanout, 10);
         assert_eq!(c.wukong.num_invokers, 20);
     }
@@ -726,6 +747,7 @@ mod tests {
         assert_eq!(c.spill.latency_ms, 15.0);
         assert_eq!(c.spill.bandwidth_bps, 90e6);
         assert!((c.spill.cost_gb_s * 30.0 * 24.0 * 3600.0 - 0.023).abs() < 1e-12);
+        assert_eq!(c.spill.max_spill_bytes, u64::MAX, "uncapped by default");
         let c = SimConfig::test().with_spill();
         assert!(c.spill.enabled);
     }

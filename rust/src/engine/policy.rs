@@ -72,7 +72,11 @@ pub enum ExecutionMode {
 /// driver. Implementations are tiny — see [`crate::engine::policies`] for
 /// the five paper designs and `rust/src/engine/README.md` for how to add
 /// a new one.
-pub trait SchedulingPolicy: 'static {
+///
+/// `Send + Sync` because sharded simulation shares one policy value
+/// across the fleet's shard threads; policies are stateless decision
+/// tables, so this costs implementations nothing.
+pub trait SchedulingPolicy: Send + Sync + 'static {
     /// Report label ("WUKONG", "Strawman", ...). The driver's
     /// `with_label` overrides it.
     fn label(&self) -> String;

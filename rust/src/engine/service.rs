@@ -17,6 +17,16 @@
 //! entire service run — admissions, contention, completions — replayable
 //! from its configuration alone; [`ServiceReport::render_trace`] is the
 //! canonical artifact two runs of the same seed must agree on.
+//!
+//! Parallel simulation: [`ServiceConfig::sim_shards`] `> 1` runs the
+//! fleet over N per-shard virtual-time executors (one OS thread each)
+//! synchronized by conservative PDES (`rt::sharded`). Jobs partition
+//! whole-job-per-shard by arrival index; the shared substrate — warm
+//! pool, concurrency cap, KV shard NICs, arena registry — is reached
+//! through gated rendezvous points, so the canonical trace stays
+//! byte-identical to the serial path (swept per seed by
+//! `sim::parallel_check`). Only the contention-free service regime is
+//! supported; see [`JobService::run_sharded`].
 
 use crate::core::{clock, JobId, SimConfig, SplitMix64, TaskId};
 use crate::dag::Dag;
@@ -198,6 +208,16 @@ pub struct ServiceConfig {
     pub spill_cost_gb_s: f64,
     /// Record per-task spans in every job (expensive; off by default).
     pub sampling: bool,
+    /// Number of parallel simulation shards. `1` (the default) runs the
+    /// classic single-executor service loop, bit-identical to every
+    /// prior release. `> 1` shards the virtual clock: each job runs on
+    /// one of N per-shard executors synchronized by conservative PDES
+    /// (`rt::sharded`), and the configuration must be in the
+    /// contention-free service regime [`JobService::run_sharded`]
+    /// validates — every job admitted at arrival, unlimited KV/tenant
+    /// budgets, benign shared fault streams, strictly positive substrate
+    /// latency floors (the lookahead window).
+    pub sim_shards: usize,
 }
 
 impl ServiceConfig {
@@ -219,6 +239,7 @@ impl ServiceConfig {
             spill_latency_ms,
             spill_cost_gb_s,
             sampling: false,
+            sim_shards: 1,
         }
     }
 
@@ -258,6 +279,14 @@ impl ServiceConfig {
         self
     }
 
+    /// Shards the virtual clock across `n` parallel executors (see
+    /// `sim_shards`). `1` restores the serial path.
+    pub fn with_shards(mut self, n: usize) -> Self {
+        assert!(n >= 1, "need at least one simulation shard");
+        self.sim_shards = n;
+        self
+    }
+
     /// The base config with the service's spill knobs folded in — what
     /// the shared platform is actually built from.
     fn effective_base(&self) -> SimConfig {
@@ -278,6 +307,17 @@ pub fn job_cost_usd(cfg: &SimConfig, report: &JobReport) -> f64 {
     let billing = Billing::from_faas(&cfg.faas);
     report.lambdas_invoked as f64 * billing.per_invocation_usd
         + report.billed.as_secs_f64() * billing.memory_gb * billing.gb_second_usd
+}
+
+/// Weighted-DRR class weight for `tenant` under the
+/// [`NetConfig::nic_drr_class_weights`](crate::core::NetConfig) table —
+/// `1` (the plain quantum) when the tenant has no entry.
+fn tenant_nic_weight(cfg: &SimConfig, tenant: u32) -> u64 {
+    cfg.net
+        .nic_drr_class_weights
+        .iter()
+        .find(|&&(t, _)| t == tenant)
+        .map_or(1, |&(_, w)| w.max(1))
 }
 
 /// Everything the service records about one completed job.
@@ -390,6 +430,13 @@ pub struct ServiceReport {
     /// End-of-run arena registry size (retained finished arenas; zero
     /// under a zero byte budget).
     pub registered_arenas: usize,
+    /// Same-instant cross-shard gate admissions broken by arrival order
+    /// during a sharded run ([`ServiceConfig::sim_shards`] `> 1`) — the
+    /// documented determinism soundness boundary of conservative PDES
+    /// (`rt::sharded`). Always zero for serial runs; `sim::parallel_check`
+    /// pins it at zero for the swept scenarios. Not part of the canonical
+    /// trace (it describes the simulator, not the simulated fleet).
+    pub tie_breaks: u64,
 }
 
 impl ServiceReport {
@@ -662,6 +709,15 @@ impl JobService {
                 running += 1;
 
                 let job = JobId(idx as u64 + 1);
+                // The tenant's DRR class weight applies to every NIC
+                // transfer the job issues; `KvStore::retire` clears the
+                // entry with the job. With no weight table (the default)
+                // nothing is registered and the NIC is bit-identical to
+                // the unweighted engine.
+                let weight = tenant_nic_weight(&base, req.tenant);
+                if weight != 1 {
+                    platform.kv.set_job_nic_weight(job, weight);
+                }
                 let submitted = arrivals[idx];
                 let started = clock::now() - t0;
                 let mut job_cfg = base.clone();
@@ -851,15 +907,239 @@ impl JobService {
             resident_kv_bytes: platform.kv.resident_kv_bytes(),
             pubsub_namespaces: platform.kv.pubsub_namespace_count(),
             registered_arenas: platform.kv.registered_arena_count(),
+            tie_breaks: 0,
+        }
+    }
+
+    /// Panics unless the configuration is in the contention-free regime
+    /// the sharded path is equivalence-checked for. Each rejected knob is
+    /// a *global serialization point*: its semantics depend on the total
+    /// order of events across jobs, which only the serial loop (or a
+    /// far heavier synchronization protocol) provides.
+    fn validate_sharded(&self, n_jobs: usize) {
+        let b = &self.cfg.base;
+        assert!(
+            self.cfg.max_concurrent_jobs >= n_jobs,
+            "sim_shards > 1 requires contention-free admission: \
+             max_concurrent_jobs ({}) must cover all {} jobs (queueing \
+             couples every job's start time to global completion order)",
+            self.cfg.max_concurrent_jobs,
+            n_jobs,
+        );
+        assert_eq!(
+            self.cfg.kv_byte_budget,
+            u64::MAX,
+            "sim_shards > 1 requires an unlimited kv_byte_budget \
+             (mid-run eviction depends on global completion order)"
+        );
+        assert!(
+            self.cfg.tenant_budget_usd.is_infinite(),
+            "sim_shards > 1 requires an infinite tenant_budget_usd \
+             (budget shedding depends on global completion order)"
+        );
+        assert!(
+            b.faults.crash_prob == 0.0 && b.faults.cold_start_spread == 0.0 && !b.faults.lethal,
+            "sim_shards > 1 requires benign shared fault streams \
+             (crash_prob == 0, cold_start_spread == 0, not lethal): the \
+             platform fault RNG is a single sequence whose draw order \
+             would depend on shard scheduling, not virtual time"
+        );
+        assert!(
+            b.net.kv_latency_us > 0.0
+                && b.net.pubsub_latency_us > 0.0
+                && b.faas.invoke_latency_ms > 0.0,
+            "sim_shards > 1 requires strictly positive substrate latency \
+             floors (kv_latency_us, pubsub_latency_us, invoke_latency_ms): \
+             they are the conservative lookahead window that keeps the \
+             fleet's low-water mark ratcheting forward"
+        );
+    }
+
+    /// Runs the service with the virtual clock sharded across
+    /// [`ServiceConfig::sim_shards`] per-shard executors, one OS thread
+    /// each, synchronized by conservative PDES (`rt::sharded`). The
+    /// synchronous entry point [`run_service`] dispatches here when
+    /// `sim_shards > 1`.
+    ///
+    /// Jobs partition whole-job-per-shard by arrival index
+    /// (`idx % sim_shards`); each shard spawns its jobs at their arrival
+    /// offsets and runs the exact serial job body. The completion fold
+    /// the serial loop performs online (cost → tenant ledger → retire)
+    /// replays post-hoc in canonical `(finished, job)` order, which is
+    /// the order the serial loop drains completions in — exact finish-time
+    /// ties between *different* jobs are broken by job id, the one
+    /// documented divergence boundary (`ShardStats::tie_breaks` counts
+    /// the analogous gate ties; `sim::parallel_check` pins both stay
+    /// benign for the swept scenarios).
+    ///
+    /// For every seed the returned report renders a canonical trace
+    /// byte-identical to the serial path's.
+    pub fn run_sharded(&self, jobs: Vec<JobRequest>) -> ServiceReport {
+        let shards = self.cfg.sim_shards.max(1);
+        let n = jobs.len();
+        self.validate_sharded(n);
+        let base = self.cfg.effective_base();
+        let platform = SharedPlatform::new(&base);
+        let arrivals = self.cfg.profile.arrival_offsets(n, self.cfg.arrival_seed);
+
+        // Whole-job-per-shard partition. DRR class weights register up
+        // front (the serial path resolves them at admission; a job's NIC
+        // transfers only start after its arrival, so pre-registering is
+        // behavior-equivalent and needs no gate).
+        let mut per_shard: Vec<Vec<(usize, Duration, JobRequest)>> =
+            (0..shards).map(|_| Vec::new()).collect();
+        for (idx, req) in jobs.into_iter().enumerate() {
+            let weight = tenant_nic_weight(&base, req.tenant);
+            if weight != 1 {
+                platform.kv.set_job_nic_weight(JobId(idx as u64 + 1), weight);
+            }
+            per_shard[idx % shards].push((idx, arrivals[idx], req));
+        }
+
+        let sampling = self.cfg.sampling;
+        let mains: Vec<_> = per_shard
+            .into_iter()
+            .map(|owned| {
+                let base = base.clone();
+                let platform = Arc::clone(&platform);
+                move || shard_main(base, platform, owned, sampling)
+            })
+            .collect();
+        let (shard_outcomes, stats) = crate::rt::run_sharded_stats(mains);
+
+        // Post-hoc canonical completion fold, replaying the serial
+        // loop's per-completion bookkeeping in its drain order. Under
+        // the validated regime retirement has no cross-job effect while
+        // jobs run (nothing evicts, namespaces are job-scoped), so
+        // deferring it past the fleet is invisible to the jobs.
+        let mut outcomes: Vec<JobOutcome> = shard_outcomes.into_iter().flatten().collect();
+        outcomes.sort_by_key(|o| (o.finished, o.job));
+        let makespan = outcomes
+            .iter()
+            .map(|o| o.finished)
+            .max()
+            .unwrap_or(Duration::ZERO);
+        let mut tenant_spent: HashMap<u32, f64> = HashMap::new();
+        let mut evicted: Vec<JobId> = Vec::new();
+        for o in &mut outcomes {
+            let cost = job_cost_usd(&self.cfg.base, &o.report);
+            o.cost_usd = cost;
+            *tenant_spent.entry(o.tenant).or_insert(0.0) += cost;
+            platform.kv.retire(o.job);
+            evicted.extend(platform.kv.enforce_kv_budget(self.cfg.kv_byte_budget));
+        }
+        outcomes.sort_by_key(|o| o.job);
+
+        // End-of-run spill settlement at the makespan instant, exactly
+        // where the serial loop's clock rests when it settles. Inert
+        // under the validated regime (nothing ever demotes), kept for
+        // structural parity with the serial epilogue.
+        let spill = platform.kv.spill();
+        let job_tenant: HashMap<u64, u32> =
+            outcomes.iter().map(|o| (o.job.0, o.tenant)).collect();
+        for bill in spill.purge_all(crate::rt::SimInstant::default() + makespan) {
+            if let Some(&tenant) = job_tenant.get(&bill.job) {
+                *tenant_spent.entry(tenant).or_insert(0.0) +=
+                    bill.gb_seconds * base.spill.cost_gb_s;
+            }
+        }
+        let spill_gb_seconds = spill.settled_gb_seconds();
+        let mut tenant_spend: Vec<(u32, f64)> = tenant_spent.into_iter().collect();
+        tenant_spend.sort_by_key(|&(t, _)| t);
+        ServiceReport {
+            outcomes,
+            rejected: Vec::new(),
+            makespan,
+            peak_concurrency: platform.peak_concurrency(),
+            fleet_cost_usd: platform.total_cost_usd(),
+            evicted,
+            tenant_spend,
+            spill_demoted_bytes: spill.demoted_bytes(),
+            spill_reads: spill.reads(),
+            spill_read_bytes: spill.read_bytes(),
+            spill_gb_seconds,
+            spill_cost_usd: spill_gb_seconds * base.spill.cost_gb_s,
+            resident_kv_bytes: platform.kv.resident_kv_bytes(),
+            pubsub_namespaces: platform.kv.pubsub_namespace_count(),
+            registered_arenas: platform.kv.registered_arena_count(),
+            tie_breaks: stats.tie_breaks,
         }
     }
 }
 
+/// One shard's main: a full virtual-time executor owning this shard's
+/// jobs. Each job is spawned at `t0`, sleeps to its arrival offset, and
+/// then runs the exact serial job body (driver chain, fingerprint) under
+/// the shard's own clock; cross-shard ordering is the coordinator's
+/// problem, not this function's.
+fn shard_main(
+    base: SimConfig,
+    platform: Arc<SharedPlatform>,
+    owned: Vec<(usize, Duration, JobRequest)>,
+    sampling: bool,
+) -> Vec<JobOutcome> {
+    crate::rt::run_virtual(async move {
+        let t0 = clock::now();
+        let count = owned.len();
+        let (tx, mut rx) = mpsc::unbounded::<JobOutcome>();
+        for (idx, submitted, req) in owned {
+            let job = JobId(idx as u64 + 1);
+            let mut job_cfg = base.clone();
+            job_cfg.seed = req.seed;
+            let platform = Arc::clone(&platform);
+            let tx = tx.clone();
+            crate::rt::spawn(async move {
+                crate::rt::sleep_until(t0 + submitted).await;
+                let started = clock::now() - t0;
+                let mut driver = EngineDriver::with_policy(job_cfg, req.policy)
+                    .on_platform(platform)
+                    .for_job(job)
+                    .for_tenant(req.tenant);
+                if sampling {
+                    driver = driver.with_sampling();
+                }
+                let run = driver.run_forensic(&req.dag).await;
+                let fingerprint = crate::sim::harness::fingerprint_outputs(&run.outputs);
+                let _ = tx.send(JobOutcome {
+                    job,
+                    tenant: req.tenant,
+                    name: req.name,
+                    priority: req.priority,
+                    cost_usd: 0.0, // filled by the post-hoc fold
+                    submitted,
+                    started,
+                    finished: clock::now() - t0,
+                    report: run.report,
+                    fingerprint,
+                    metrics: run.metrics,
+                    kv: run.kv,
+                    // kv_byte_budget == u64::MAX is validated at entry:
+                    // the live arena is never reclaimed, so — exactly
+                    // like the serial path — no snapshot is taken.
+                    forensics: None,
+                });
+            });
+        }
+        drop(tx);
+        let mut outs = Vec::with_capacity(count);
+        while let Some(o) = rx.recv().await {
+            outs.push(o);
+        }
+        outs
+    })
+}
+
 /// Runs a whole service scenario to completion in deterministic virtual
 /// time — the synchronous entry point (CLI `service` mode, tests,
-/// benches).
+/// benches). Dispatches on [`ServiceConfig::sim_shards`]: `1` runs the
+/// serial loop on one fresh executor, `> 1` runs the conservative-PDES
+/// sharded fleet ([`JobService::run_sharded`]); both render the same
+/// canonical trace for the same configuration.
 pub fn run_service(cfg: ServiceConfig, jobs: Vec<JobRequest>) -> ServiceReport {
     let service = JobService::new(cfg);
+    if service.cfg.sim_shards > 1 {
+        return service.run_sharded(jobs);
+    }
     crate::rt::run_virtual(async move { service.run(jobs).await })
 }
 
@@ -1321,5 +1601,150 @@ mod tests {
         assert_eq!(armed.spill_demoted_bytes, 0);
         assert_eq!(armed.spill_gb_seconds, 0.0);
         assert_eq!(off.render_trace(), armed.render_trace());
+    }
+
+    fn fan_job(name: &str, tenant: u32, seed: u64) -> JobRequest {
+        let mut b = DagBuilder::new();
+        let src = b.add_task("src", Payload::Sleep { ms: 3.0 }, 64, &[]);
+        let kids: Vec<_> = (0..4)
+            .map(|i| b.add_task(format!("c{i}"), Payload::Sleep { ms: 2.0 }, 32, &[src]))
+            .collect();
+        b.add_task("sink", Payload::Sleep { ms: 1.0 }, 8, &kids);
+        JobRequest {
+            name: name.to_string(),
+            tenant,
+            priority: 0,
+            seed,
+            dag: b.build().unwrap(),
+            policy: Arc::new(WukongPolicy),
+        }
+    }
+
+    /// A mixed contention-free fleet for the sharded-equivalence tests:
+    /// chains, fan-outs, and one centralized job, two tenants, Poisson
+    /// arrivals (distinct fractional-nanosecond offsets keep cross-job
+    /// events off a shared time lattice).
+    fn sharded_fleet() -> Vec<JobRequest> {
+        let mut jobs: Vec<JobRequest> = (0..6)
+            .map(|i| {
+                if i % 2 == 0 {
+                    chain_job(&format!("chain{i}"), i % 2, 200 + i as u64, 4)
+                } else {
+                    fan_job(&format!("fan{i}"), i % 2, 300 + i as u64)
+                }
+            })
+            .collect();
+        let mut central = chain_job("central", 1, 7, 3);
+        central.policy = Arc::new(PubSubPolicy);
+        jobs.push(central);
+        jobs
+    }
+
+    fn sharded_cfg() -> ServiceConfig {
+        ServiceConfig::new(SimConfig::test(), 13)
+            .with_profile(ArrivalProfile::Poisson { mean_gap_ms: 20.0 })
+            .with_concurrency(16, 16)
+    }
+
+    #[test]
+    fn sharded_clocks_replay_the_serial_service_byte_for_byte() {
+        // THE tentpole invariant: for every shard count the canonical
+        // trace — completions, virtual timestamps, ledgers, substrate
+        // state — is byte-identical to the serial single-executor run.
+        let serial = run_service(sharded_cfg(), sharded_fleet());
+        assert_eq!(serial.completed(), 7);
+        assert!(serial.all_ok(), "{}", serial.fleet_row());
+        let serial_trace = serial.render_trace();
+        for shards in [2usize, 3, 8] {
+            let report = run_service(sharded_cfg().with_shards(shards), sharded_fleet());
+            assert_eq!(
+                report.render_trace(),
+                serial_trace,
+                "{shards} shards diverged from the serial trace"
+            );
+            assert_eq!(
+                report.tie_breaks, 0,
+                "{shards} shards: distinct Poisson arrivals must keep cross-shard \
+                 events off a shared instant"
+            );
+            // Fingerprints are covered by the trace only indirectly;
+            // pin the sink digests themselves too.
+            for (a, b) in report.outcomes.iter().zip(serial.outcomes.iter()) {
+                assert_eq!(a.fingerprint, b.fingerprint, "job {} ({shards} shards)", a.job);
+            }
+        }
+    }
+
+    #[test]
+    fn one_shard_config_is_the_serial_path_bit_for_bit() {
+        // sim_shards = 1 must not merely be equivalent — it IS the serial
+        // code path (run_service dispatches to the sharded fleet only
+        // above 1), pinned here against the default config.
+        let default_run = run_service(sharded_cfg(), sharded_fleet());
+        let one_shard = run_service(sharded_cfg().with_shards(1), sharded_fleet());
+        assert_eq!(one_shard.render_trace(), default_run.render_trace());
+    }
+
+    #[test]
+    #[should_panic(expected = "contention-free admission")]
+    fn sharded_service_rejects_admission_contention() {
+        let jobs: Vec<JobRequest> = (0..4)
+            .map(|i| chain_job(&format!("c{i}"), 0, i as u64, 3))
+            .collect();
+        let cfg = ServiceConfig::new(SimConfig::test(), 1)
+            .with_concurrency(1, 16)
+            .with_shards(2);
+        run_service(cfg, jobs);
+    }
+
+    #[test]
+    #[should_panic(expected = "benign shared fault streams")]
+    fn sharded_service_rejects_shared_fault_streams() {
+        let mut base = SimConfig::test();
+        base.faults.crash_prob = 0.1;
+        let cfg = ServiceConfig::new(base, 1).with_concurrency(16, 16).with_shards(2);
+        run_service(cfg, vec![chain_job("c", 0, 1, 3)]);
+    }
+
+    #[test]
+    fn unit_nic_class_weights_are_bit_identical_to_no_weights() {
+        // Weight 1 is the implicit default: registering it explicitly
+        // for every tenant must leave the DRR — and the whole trace —
+        // untouched (the satellite's single-class inertness pin, at
+        // service level where the tenant -> weight resolution lives).
+        let run = |weights: Vec<(u32, u64)>| {
+            let mut base = SimConfig::test();
+            base.net.nic_drr_class_weights = weights;
+            let jobs: Vec<JobRequest> = (0..4)
+                .map(|i| chain_job(&format!("w{i}"), i % 2, 400 + i as u64, 4))
+                .collect();
+            let cfg = ServiceConfig::new(base, 14)
+                .with_profile(ArrivalProfile::Poisson { mean_gap_ms: 10.0 })
+                .with_concurrency(4, 8);
+            run_service(cfg, jobs)
+        };
+        let plain = run(Vec::new());
+        let unit = run(vec![(0, 1), (1, 1)]);
+        assert_eq!(unit.render_trace(), plain.render_trace());
+    }
+
+    #[test]
+    fn class_weights_plumb_through_the_sharded_path() {
+        // A weighted tenant class must produce the same (weighted) trace
+        // under sharding as under the serial loop — weights and shards
+        // compose.
+        let run = |shards: usize| {
+            let mut base = SimConfig::test();
+            base.net.nic_drr_class_weights = vec![(1, 4)];
+            let jobs: Vec<JobRequest> = (0..4)
+                .map(|i| fan_job(&format!("wf{i}"), i % 2, 500 + i as u64))
+                .collect();
+            let cfg = ServiceConfig::new(base, 15)
+                .with_profile(ArrivalProfile::Poisson { mean_gap_ms: 15.0 })
+                .with_concurrency(8, 8)
+                .with_shards(shards);
+            run_service(cfg, jobs)
+        };
+        assert_eq!(run(2).render_trace(), run(1).render_trace());
     }
 }

@@ -213,7 +213,13 @@ impl Faas {
             let mut attempts = 0u32;
             loop {
                 attempts += 1;
-                let id = ExecutorId(platform.next_executor.fetch_add(1, Ordering::Relaxed));
+                // Executor-id allocation is fleet-shared state: under
+                // sharded simulation it is a gate sequence point so ids
+                // land in virtual-time order (no-op guard serially).
+                let id = {
+                    let _gate = crate::rt::sharded::gate();
+                    ExecutorId(platform.next_executor.fetch_add(1, Ordering::Relaxed))
+                };
                 // Transient profiles (`lethal = false`) never crash the
                 // final allowed attempt, so the retry loop always masks
                 // injected crashes. Lethal profiles may crash any attempt
@@ -272,7 +278,12 @@ impl Faas {
         // Container start: warm if the tenant's reserved slice or the
         // shared pool has one, else cold. A cold-started container joins
         // the shared pool on release.
-        let warm_src = self.warm.lock().unwrap().acquire(tenant);
+        let warm_src = {
+            // The pool is fleet-shared: draws must land in virtual-time
+            // order across shards (gate is a no-op guard serially).
+            let _gate = crate::rt::sharded::gate();
+            self.warm.lock().unwrap().acquire(tenant)
+        };
         let cold = warm_src.is_none();
         let warm_src = warm_src.unwrap_or(WarmSource::Shared);
         let mut start_delay = if cold {
@@ -315,13 +326,22 @@ impl Faas {
             }
         }
         if crash_phase == Some(CrashPhase::PreBody) {
-            self.warm.lock().unwrap().release(warm_src);
+            {
+                let _gate = crate::rt::sharded::gate();
+                self.warm.lock().unwrap().release(warm_src);
+            }
             drop(permit);
             return Err(EngineError::Job("injected container crash".into()));
         }
 
-        let n = self.active.fetch_add(1, Ordering::Relaxed) + 1;
-        self.peak_active.fetch_max(n, Ordering::Relaxed);
+        {
+            // Fleet-wide active/peak counters: the max-update must see
+            // every body start in virtual-time order or the observed peak
+            // could diverge between shard counts.
+            let _gate = crate::rt::sharded::gate();
+            let n = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+            self.peak_active.fetch_max(n, Ordering::Relaxed);
+        }
 
         // Per-attempt cap: a lethal profile may bound each attempt below
         // the function timeout so one hung attempt cannot eat the whole
@@ -364,11 +384,20 @@ impl Faas {
         };
         let execution = clock::now() - t0;
 
-        self.active.fetch_sub(1, Ordering::Relaxed);
-        // Container becomes warm for future invocations (returned to its
-        // tenant's reserved slice if it came from one). An injected crash
-        // models the *function* dying, not the host: the slot is reusable.
-        self.warm.lock().unwrap().release(warm_src);
+        {
+            // Body end is one gate sequence point: the active decrement
+            // and the warm-pool return become visible to every other
+            // shard's same-instant starts in virtual-time order. The
+            // permit drop gates again internally (gates are re-entrant
+            // per shard).
+            let _gate = crate::rt::sharded::gate();
+            self.active.fetch_sub(1, Ordering::Relaxed);
+            // Container becomes warm for future invocations (returned to
+            // its tenant's reserved slice if it came from one). An
+            // injected crash models the *function* dying, not the host:
+            // the slot is reusable.
+            self.warm.lock().unwrap().release(warm_src);
+        }
         drop(permit);
 
         // Billing happens regardless of success.

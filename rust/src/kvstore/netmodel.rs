@@ -29,6 +29,13 @@
 //!   / `NetConfig::nic_fair_queueing = false`): all jobs collapse into
 //!   one queue — the before/after arm of the `nic/fifo-hog` vs
 //!   `nic/drr-hog` bench pair.
+//!
+//! Quanta are **class-weighted** ([`Nic::set_job_weight`], plumbed from
+//! `NetConfig::nic_drr_class_weights` by tenant): a job with weight `w`
+//! earns `w * quantum` bytes of credit per visit, so a premium class's
+//! oversized transfers clear in proportionally fewer rotations. Weight 1
+//! (the default for every unconfigured job) is bit-identical to the
+//! unweighted discipline, and solo-job timing is weight-independent.
 
 use crate::core::{clock, FaultConfig, JobId, SplitMix64};
 use std::collections::{HashMap, VecDeque};
@@ -97,6 +104,11 @@ struct NicWaiter {
     /// Set by the dispatcher when this waiter is handed the NIC. From
     /// that point the waiter (or its `Drop`) owns the release.
     granted: bool,
+    /// Virtual time on the dispatching shard's clock at grant (None when
+    /// granted outside an executor). Under sharded simulation the woken
+    /// waiter re-sleeps to this stamp so it starts its service at exactly
+    /// the serial run's instant.
+    granted_at: Option<clock::SimInstant>,
 }
 
 /// Scheduler state of one NIC (plain mutex: critical sections never
@@ -118,6 +130,13 @@ struct NicState {
     /// DRR deficit counters, reset when a job's queue drains (no banking
     /// of idle credit).
     deficit: HashMap<u64, u64>,
+    /// Per-job DRR weight multipliers (tenant-class weighting): a job
+    /// with weight `w` earns `w * quantum` bytes of credit per visit.
+    /// Absent entries weigh 1, so an unconfigured NIC is bit-identical
+    /// to the unweighted discipline. Keyed by `JobId.0` (ignored under
+    /// FIFO collapse). Solo-job service is weight-independent by
+    /// construction (the sole-queue path zeroes the deficit).
+    weights: HashMap<u64, u64>,
 }
 
 /// A serial bandwidth server (one NIC / one network direction) with
@@ -165,6 +184,9 @@ struct Acquire<'a> {
     bytes: u64,
     id: Option<u64>,
     acquired: bool,
+    /// Coordinator hold while queued cross-shard (None in serial runs or
+    /// once the grant has been observed).
+    hold: Option<crate::rt::sharded::HoldGuard>,
 }
 
 impl<'a> Future for Acquire<'a> {
@@ -172,9 +194,14 @@ impl<'a> Future for Acquire<'a> {
 
     fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
         let this = &mut *self;
-        let mut s = this.nic.state.lock().unwrap();
         match this.id {
             None => {
+                // Entry is a sharded sequence point: after admission no
+                // other live shard can act at an earlier virtual time, so
+                // the busy check and FIFO enqueue below land in
+                // virtual-time order fleet-wide (no-op in serial runs).
+                let _gate = crate::rt::sharded::gate();
+                let mut s = this.nic.state.lock().unwrap();
                 if !s.busy {
                     // Idle NIC: the invariantly-empty queues mean nobody
                     // is ahead of us — serve immediately.
@@ -191,6 +218,7 @@ impl<'a> Future for Acquire<'a> {
                         bytes: this.bytes,
                         waker: Some(cx.waker().clone()),
                         granted: false,
+                        granted_at: None,
                     },
                 );
                 match s.queues.entry(this.job) {
@@ -202,12 +230,28 @@ impl<'a> Future for Acquire<'a> {
                         e.get_mut().push_back(id);
                     }
                 }
+                drop(s);
+                this.hold = crate::rt::sharded::hold();
                 Poll::Pending
             }
             Some(id) => {
+                let mut s = this.nic.state.lock().unwrap();
                 let w = s.waiters.get_mut(&id).expect("live waiter");
                 if w.granted {
-                    s.waiters.remove(&id);
+                    let stamp = w.granted_at;
+                    drop(s);
+                    // The rendezvous has resolved: the remaining wait (if
+                    // any) is a local timer to the grant's virtual-time
+                    // stamp; the shard's advance needs no further cap.
+                    this.hold = None;
+                    if let Some(stamp) = stamp {
+                        if crate::rt::time::poll_sleep_until(stamp, cx).is_pending() {
+                            // The waiter stays in the map as granted, so a
+                            // drop mid-stamp-sleep still releases the NIC.
+                            return Poll::Pending;
+                        }
+                    }
+                    this.nic.state.lock().unwrap().waiters.remove(&id);
                     this.acquired = true;
                     Poll::Ready(NicPermit { nic: this.nic })
                 } else {
@@ -265,8 +309,28 @@ impl Nic {
                 queues: HashMap::new(),
                 rr: VecDeque::new(),
                 deficit: HashMap::new(),
+                weights: HashMap::new(),
             }),
         })
+    }
+
+    /// Sets `job`'s DRR weight multiplier: `weight * quantum` bytes of
+    /// credit per queue visit (class-weighted fair queueing). Weight 1 —
+    /// or never calling this — is the unweighted discipline. No effect
+    /// under FIFO collapse (`fair = false`) or on a solo job.
+    pub fn set_job_weight(&self, job: JobId, weight: u64) {
+        let mut s = self.state.lock().unwrap();
+        if weight <= 1 {
+            s.weights.remove(&job.0);
+        } else {
+            s.weights.insert(job.0, weight);
+        }
+    }
+
+    /// Drops `job`'s DRR weight (back to 1). Called at job retirement so
+    /// a long-running service does not accumulate dead entries.
+    pub fn clear_job_weight(&self, job: JobId) {
+        self.state.lock().unwrap().weights.remove(&job.0);
     }
 
     /// Pure service time of `bytes` at this NIC's bandwidth (no queueing).
@@ -285,6 +349,11 @@ impl Nic {
     /// Hands the NIC to the next queued transfer per the DRR discipline,
     /// or marks it idle. Called whenever the current holder releases.
     fn dispatch_next(&self) {
+        // Release reorders the queue's future: a sharded sequence point,
+        // so cross-shard releases and enqueues interleave in virtual-time
+        // order (no-op guard in serial runs). The grant below is stamped
+        // with this shard's clock.
+        let _gate = crate::rt::sharded::gate();
         let mut s = self.state.lock().unwrap();
         loop {
             let Some(j) = s.rr.pop_front() else {
@@ -309,9 +378,12 @@ impl Nic {
             let head = *s.queues.get(&j).unwrap().front().unwrap();
             let need = s.waiters.get(&head).expect("head is live").bytes;
             let sole = s.rr.is_empty();
-            let quantum = self.quantum;
+            let credit = self
+                .quantum
+                .saturating_mul(*s.weights.get(&j).unwrap_or(&1))
+                .max(1);
             let d = s.deficit.entry(j).or_insert(0);
-            *d = d.saturating_add(quantum);
+            *d = d.saturating_add(credit);
             if sole {
                 // No competing job: pure FIFO, and idle credit must not
                 // bank up for later contention.
@@ -333,6 +405,7 @@ impl Nic {
             }
             let w = s.waiters.get_mut(&head).expect("head is live");
             w.granted = true;
+            w.granted_at = clock::try_now();
             if let Some(wk) = w.waker.take() {
                 wk.wake();
             }
@@ -348,6 +421,7 @@ impl Nic {
             bytes,
             id: None,
             acquired: false,
+            hold: None,
         }
     }
 
@@ -583,6 +657,95 @@ mod tests {
         };
         assert_eq!(run(true), expected, "DRR solo must be exact FIFO");
         assert_eq!(run(false), expected, "FIFO discipline sanity");
+    }
+
+    /// One hog (job 1) floods the NIC with quantum-sized transfers; one
+    /// light tenant (job 2, DRR weight `w`) queues a single 4-quantum
+    /// transfer 1 ms in. Returns (light completion, total makespan).
+    fn weighted_hog_scenario(w: u64) -> (Duration, Duration) {
+        crate::rt::run_virtual(async move {
+            let nic = Nic::with_queueing(1e6, true, DEFAULT_NIC_QUANTUM);
+            nic.set_job_weight(JobId(2), w);
+            let t0 = now();
+            let mut hogs = Vec::new();
+            for _ in 0..8 {
+                let nic = nic.clone();
+                hogs.push(crate::rt::spawn(async move {
+                    nic.transfer_as(JobId(1), DEFAULT_NIC_QUANTUM).await;
+                }));
+            }
+            clock::sleep(Duration::from_millis(1)).await;
+            let light = {
+                let nic = nic.clone();
+                crate::rt::spawn(async move {
+                    nic.transfer_as(JobId(2), 4 * DEFAULT_NIC_QUANTUM).await;
+                    now()
+                })
+            };
+            let light_done = light.await - t0;
+            for h in hogs {
+                h.await;
+            }
+            (light_done, now() - t0)
+        })
+    }
+
+    #[test]
+    fn weighted_drr_quanta_pin_the_class_service_ratio() {
+        // The light tenant's 4-quantum head needs ceil(4/w) queue visits
+        // to accumulate credit — one hog transfer serves per visit, so
+        // its completion is exactly (ceil(4/w) + 1) hog slots plus its
+        // own service time. Weights 1/2/4 pin the full weighted ratio,
+        // and the makespan is identical across weights (weighting moves
+        // service order, never total work).
+        let nic = Nic::new(1e6);
+        let slot = nic.service_time(DEFAULT_NIC_QUANTUM);
+        let own = nic.service_time(4 * DEFAULT_NIC_QUANTUM);
+        let mut totals = Vec::new();
+        for (w, visits) in [(1u64, 4u32), (2, 2), (4, 1)] {
+            let (light, total) = weighted_hog_scenario(w);
+            assert_eq!(
+                light,
+                slot * (visits + 1) + own,
+                "weight {w} must serve the light head after {visits} visits"
+            );
+            totals.push(total);
+        }
+        assert!(
+            totals.iter().all(|t| *t == totals[0]),
+            "weighting must stay work-conserving: {totals:?}"
+        );
+    }
+
+    #[test]
+    fn solo_job_service_is_weight_independent() {
+        // The sole-queue path zeroes the deficit, so a configured weight
+        // must not move a lone job's timing by a nanosecond — the
+        // single-class inertness pin.
+        let run = |weight: Option<u64>| {
+            crate::rt::run_virtual(async move {
+                let nic = Nic::with_queueing(1e6, true, DEFAULT_NIC_QUANTUM);
+                if let Some(w) = weight {
+                    nic.set_job_weight(JobId(0), w);
+                }
+                let t0 = now();
+                let mut handles = Vec::new();
+                for (i, bytes) in [200_000u64, 50_000, 500_000].into_iter().enumerate() {
+                    let nic = nic.clone();
+                    handles.push(crate::rt::spawn(async move {
+                        clock::sleep(Duration::from_millis(i as u64)).await;
+                        nic.transfer_as(JobId(0), bytes).await;
+                        now()
+                    }));
+                }
+                let mut ends = Vec::new();
+                for h in handles {
+                    ends.push(h.await - t0);
+                }
+                ends
+            })
+        };
+        assert_eq!(run(None), run(Some(9)));
     }
 
     #[test]

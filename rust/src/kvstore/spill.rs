@@ -23,6 +23,20 @@
 //! the virtual-time executor, where the clock would panic — settle its
 //! spill set deterministically.
 //!
+//! ## Capacity cap
+//!
+//! `SpillConfig::max_spill_bytes` bounds the tier. A demotion that would
+//! push the parked total past the cap **deletes** the oldest spill sets
+//! (smallest registration uid — the deterministic demotion order) until
+//! the total fits; a set too large to ever fit deletes itself. Deletion
+//! is real: a late `get` of a deleted object is `MissingObject` again,
+//! exactly as if the tier were disabled for that set. Victims settle
+//! their storage-seconds at the deletion instant into a pending-bill
+//! queue that [`SpillTier::purge_all`] drains ahead of the end-of-run
+//! settlements, so the owning tenants still pay for the residency they
+//! used. The `u64::MAX` default never deletes — bit-identical to the
+//! uncapped tier.
+//!
 //! With `SpillConfig::enabled = false` (the default) every method is a
 //! no-op returning "absent", so eviction remains destruction and the
 //! engine is bit-identical to the pre-spill behavior.
@@ -75,6 +89,11 @@ pub struct SpillTier {
     read_bytes: AtomicU64,
     /// GB-seconds already settled by purges.
     settled_gb_seconds: Mutex<f64>,
+    /// Bills of sets deleted by the capacity cap, awaiting collection by
+    /// [`SpillTier::purge_all`] (the service's settlement pass).
+    pending_bills: Mutex<Vec<SpillSettlement>>,
+    /// Cumulative payload bytes deleted by the capacity cap.
+    cap_deleted_bytes: AtomicU64,
     /// Latest virtual instant any operation observed — the settlement
     /// timestamp for `Drop`-path purges that cannot query the clock.
     high_water: Mutex<SimInstant>,
@@ -90,6 +109,8 @@ impl SpillTier {
             reads: AtomicU64::new(0),
             read_bytes: AtomicU64::new(0),
             settled_gb_seconds: Mutex::new(0.0),
+            pending_bills: Mutex::new(Vec::new()),
+            cap_deleted_bytes: AtomicU64::new(0),
             high_water: Mutex::new(SimInstant::default()),
         }
     }
@@ -155,7 +176,32 @@ impl SpillTier {
         }
         set.bytes += added;
         self.demoted_bytes.fetch_add(added, Ordering::Relaxed);
+        if self.cfg.max_spill_bytes < u64::MAX {
+            self.enforce_cap(&mut sets, now);
+        }
         added
+    }
+
+    /// Deletes oldest spill sets (smallest uid) until the parked total is
+    /// at most `max_spill_bytes`, settling each victim's storage-seconds
+    /// at `now` into the pending-bill queue. Called with the set map
+    /// locked, from [`SpillTier::demote`] only — never on the uncapped
+    /// default path.
+    fn enforce_cap(&self, sets: &mut HashMap<u64, SpillSet>, now: SimInstant) {
+        let mut total: u64 = sets.values().map(|s| s.bytes).sum();
+        while total > self.cfg.max_spill_bytes {
+            let oldest = sets.keys().copied().min().expect("total > 0 implies a set");
+            let victim = sets.remove(&oldest).unwrap();
+            total -= victim.bytes;
+            let gb_seconds = Self::accrue(victim.bytes, victim.demoted_at, now);
+            *self.settled_gb_seconds.lock().unwrap() += gb_seconds;
+            self.cap_deleted_bytes.fetch_add(victim.bytes, Ordering::Relaxed);
+            self.pending_bills.lock().unwrap().push(SpillSettlement {
+                job: victim.job,
+                bytes: victim.bytes,
+                gb_seconds,
+            });
+        }
     }
 
     /// Looks up a demoted object (synchronous; the caller sleeps
@@ -225,12 +271,15 @@ impl SpillTier {
         self.purge(uid, now)
     }
 
-    /// End-of-run settlement: purges every remaining set in
-    /// registration-uid order (deterministic) and returns the bills.
+    /// End-of-run settlement: drains the cap-deletion bills accrued
+    /// mid-run (in deletion order), then purges every remaining set in
+    /// registration-uid order (deterministic), returning all the bills.
     pub fn purge_all(&self, now: SimInstant) -> Vec<SpillSettlement> {
+        let mut bills = std::mem::take(&mut *self.pending_bills.lock().unwrap());
         let mut uids: Vec<u64> = self.sets.lock().unwrap().keys().copied().collect();
         uids.sort_unstable();
-        uids.into_iter().filter_map(|uid| self.purge(uid, now)).collect()
+        bills.extend(uids.into_iter().filter_map(|uid| self.purge(uid, now)));
+        bills
     }
 
     /// Payload bytes currently parked in the tier.
@@ -257,6 +306,12 @@ impl SpillTier {
     /// Cumulative payload bytes ever demoted into the tier.
     pub fn demoted_bytes(&self) -> u64 {
         self.demoted_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative payload bytes deleted by the capacity cap (zero on the
+    /// uncapped default).
+    pub fn cap_deleted_bytes(&self) -> u64 {
+        self.cap_deleted_bytes.load(Ordering::Relaxed)
     }
 
     /// Cumulative successful cold reads.
@@ -356,6 +411,63 @@ mod tests {
         let s = t.purge_at_high_water(3).unwrap();
         // 2 GB held 5 s (demote -> last read) = 10 GB-seconds.
         assert!((s.gb_seconds - 10.0).abs() < 1e-9, "{}", s.gb_seconds);
+    }
+
+    fn capped_tier(max_spill_bytes: u64) -> SpillTier {
+        SpillTier::new(
+            SpillConfig {
+                enabled: true,
+                max_spill_bytes,
+                ..SpillConfig::default()
+            },
+            &FaultConfig::default(),
+        )
+    }
+
+    #[test]
+    fn cap_deletes_oldest_sets_and_bills_their_residency() {
+        let t = capped_tier(150);
+        t.demote(1, 10, vec![(0, DataObj::synthetic(100))], at(0));
+        assert_eq!(t.live_bytes(), 100, "under cap: nothing deleted");
+        // uid 2's demotion pushes the total to 200 > 150: uid 1 (oldest)
+        // is deleted, settling 100 B held 0..5 s.
+        t.demote(2, 20, vec![(0, DataObj::synthetic(100))], at(5));
+        assert_eq!(t.live_bytes(), 100);
+        assert_eq!(t.cap_deleted_bytes(), 100);
+        assert!(t.read(1, 0, at(6)).is_none(), "deletion is real");
+        assert!(!t.peek(1, 0));
+        assert_eq!(t.read(2, 0, at(6)).unwrap().bytes, 100, "survivor serves");
+        // The victim's bill reaches the settlement pass ahead of the
+        // end-of-run purges, still attributed to its job.
+        let bills = t.purge_all(at(10));
+        assert_eq!(bills.len(), 2);
+        assert_eq!(bills[0].job, 10);
+        assert_eq!(bills[0].bytes, 100);
+        assert!((bills[0].gb_seconds - 100.0 * 1e-9 * 5.0).abs() < 1e-18);
+        assert_eq!(bills[1].job, 20);
+        assert_eq!(t.live_bytes(), 0);
+        assert_eq!(t.live_gb_seconds(at(20)), 0.0, "billing closes to zero");
+    }
+
+    #[test]
+    fn cap_deletes_a_set_too_large_to_ever_fit() {
+        let t = capped_tier(50);
+        t.demote(7, 70, vec![(0, DataObj::synthetic(100))], at(0));
+        assert_eq!(t.live_bytes(), 0, "oversized set is its own victim");
+        assert_eq!(t.cap_deleted_bytes(), 100);
+        assert!(t.read(7, 0, at(1)).is_none());
+        assert_eq!(t.purge_all(at(1)).len(), 1, "it is still billed");
+    }
+
+    #[test]
+    fn uncapped_default_never_deletes() {
+        let t = tier(true); // max_spill_bytes = u64::MAX
+        for uid in 0..8u64 {
+            t.demote(uid, uid, vec![(0, DataObj::synthetic(u32::MAX as u64))], at(0));
+        }
+        assert_eq!(t.cap_deleted_bytes(), 0);
+        assert_eq!(t.live_bytes(), 8 * (u32::MAX as u64));
+        assert_eq!(t.purge_all(at(1)).len(), 8);
     }
 
     #[test]

@@ -233,6 +233,12 @@ impl KvStore {
         n_tasks: usize,
         metrics: Arc<MetricsHub>,
     ) -> Arc<JobArena> {
+        // Registration allocates the cluster-wide `uid`, which orders
+        // spill-set settlement and forensic teardown; under sharded
+        // simulation the allocation must land in virtual-time order, so
+        // the whole (synchronous) registration is one gate sequence
+        // point. No-op in serial runs.
+        let _gate = crate::rt::sharded::gate();
         let uid = {
             let mut reg = self.registry.lock().unwrap();
             let uid = reg.next_uid;
@@ -281,6 +287,7 @@ impl KvStore {
     /// fetchable post-job — until [`KvStore::enforce_kv_budget`] evicts
     /// it under byte-budget pressure. Idempotent.
     pub fn retire(&self, job: JobId) {
+        self.set_job_nic_weight(job, 1); // weight entries die with the job
         {
             let mut reg = self.registry.lock().unwrap();
             for i in 0..reg.entries.len() {
@@ -369,6 +376,16 @@ impl KvStore {
     /// Number of live pub/sub job namespaces on the broker.
     pub fn pubsub_namespace_count(&self) -> usize {
         self.pubsub.namespace_count()
+    }
+
+    /// Sets `job`'s DRR scheduling weight on every shard NIC (weight 1 —
+    /// the default — clears the entry; see [`Nic::set_job_weight`]). The
+    /// job service plumbs `NetConfig::nic_drr_class_weights` through
+    /// here at admission; [`KvStore::retire`] clears it.
+    pub fn set_job_nic_weight(&self, job: JobId, weight: u64) {
+        for s in &self.shards {
+            s.nic.set_job_weight(job, weight);
+        }
     }
 
     /// Number of shards (tests / reports).

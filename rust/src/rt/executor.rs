@@ -52,6 +52,13 @@ pub(crate) struct Shared {
     /// True only while the executor thread is parked on the condvar;
     /// lets the hot wake path skip the notify syscall entirely.
     sleeping: std::sync::atomic::AtomicBool,
+    /// Set when this executor runs as one shard of a [`sharded`] fleet:
+    /// wakes (which may come from peer shards) must also rouse an
+    /// executor blocked on the fleet coordinator, not just one parked on
+    /// its own condvar.
+    ///
+    /// [`sharded`]: crate::rt::sharded
+    coordinator: std::sync::OnceLock<Arc<crate::rt::sharded::Coordinator>>,
 }
 
 impl Shared {
@@ -59,11 +66,20 @@ impl Shared {
         if self.sleeping.load(Ordering::SeqCst) {
             self.condvar.notify_one();
         }
+        if let Some(coord) = self.coordinator.get() {
+            coord.notify_wake();
+        }
     }
 
     fn push_wake(&self, id: TaskId) {
         self.wake_queue.lock().unwrap().push(id);
         self.notify();
+    }
+
+    /// True if the wake queue is non-empty (used by the fleet coordinator
+    /// while this shard blocks on an advance grant).
+    pub(crate) fn has_pending_wakes(&self) -> bool {
+        !self.wake_queue.lock().unwrap().is_empty()
     }
 
     /// Parks on the condvar for up to `dur` unless the queue is non-empty.
@@ -154,6 +170,18 @@ pub(crate) fn with_core<R>(f: impl FnOnce(&Rc<Core>) -> R) -> R {
             .expect("not inside a wukong::rt runtime (wrap the call in rt::run_virtual / rt::run_real)");
         f(core)
     })
+}
+
+/// Non-panicking variant of [`with_core`]: `None` outside `block_on`.
+pub(crate) fn try_with_core<R>(f: impl FnOnce(&Rc<Core>) -> R) -> Option<R> {
+    CURRENT.with(|c| c.borrow().as_ref().map(f))
+}
+
+/// Current executor time, `None` outside a running executor. Lets code
+/// that may run during teardown (permit drops, test scaffolding) stamp
+/// events without risking the `with_core` panic.
+pub(crate) fn try_now() -> Option<SimInstant> {
+    try_with_core(|core| core.now())
 }
 
 impl Core {
@@ -353,9 +381,18 @@ where
             condvar: Condvar::new(),
             external: AtomicI64::new(0),
             sleeping: std::sync::atomic::AtomicBool::new(false),
+            coordinator: std::sync::OnceLock::new(),
         }),
         aborted: Arc::new(Mutex::new(Vec::new())),
     });
+
+    // When this executor is one shard of a sharded fleet, clock advances
+    // go through the fleet coordinator instead of jumping freely, and
+    // wakers must rouse a coordinator-blocked executor.
+    let shard_ctx = crate::rt::sharded::current();
+    if let Some(ctx) = &shard_ctx {
+        let _ = core.shared.coordinator.set(ctx.coord.clone());
+    }
 
     CURRENT.with(|c| {
         assert!(
@@ -414,14 +451,27 @@ where
                     core.shared.park(Duration::from_millis(50));
                     continue;
                 }
-                // Check for races: an external thread may have queued a
-                // wake between the drain above and now.
-                let q = core.shared.wake_queue.lock().unwrap();
-                if !q.is_empty() {
-                    continue;
-                }
-                drop(q);
-                {
+                if let Some(ctx) = &shard_ctx {
+                    // Sharded fleet: ask the coordinator how far this
+                    // shard's clock may safely move. A partial grant
+                    // (below `deadline`) fires nothing — the loop simply
+                    // re-enters `advance` from the new cursor.
+                    let cursor = *core.now_ns.borrow();
+                    match ctx.coord.advance(ctx.shard, cursor, deadline, &core.shared) {
+                        crate::rt::sharded::Advance::Wake => continue,
+                        crate::rt::sharded::Advance::Clock(granted) => {
+                            let mut now = core.now_ns.borrow_mut();
+                            *now = (*now).max(granted);
+                        }
+                    }
+                } else {
+                    // Check for races: an external thread may have queued
+                    // a wake between the drain above and now.
+                    let q = core.shared.wake_queue.lock().unwrap();
+                    if !q.is_empty() {
+                        continue;
+                    }
+                    drop(q);
                     let mut now = core.now_ns.borrow_mut();
                     *now = (*now).max(deadline);
                 }
@@ -456,6 +506,11 @@ where
                 // No timers. Wait for external activity if any is pending.
                 if core.shared.external.load(Ordering::SeqCst) > 0 {
                     core.shared.park(Duration::from_millis(100));
+                } else if let Some(ctx) = &shard_ctx {
+                    // Sharded fleet: a wake may still arrive from a peer
+                    // shard. Block on the coordinator, which panics
+                    // (naming this shard) if the whole fleet is parked.
+                    ctx.coord.park_no_deadline(ctx.shard, &core.shared);
                 } else {
                     // Give racing cross-thread wakes one more chance.
                     let q = core.shared.wake_queue.lock().unwrap();
@@ -577,6 +632,96 @@ mod tests {
             Mode::Real,
         );
         assert!(wall.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn timer_deadline_ties_resolve_by_registration_order() {
+        // Three tasks sleep to the SAME deadline; the heap breaks ties by
+        // registration seq, so they fire in spawn order — every run.
+        for _ in 0..3 {
+            let order = block_on(
+                async {
+                    let log = std::rc::Rc::new(RefCell::new(Vec::new()));
+                    let mut handles = Vec::new();
+                    for i in 0..3 {
+                        let log = log.clone();
+                        handles.push(spawn(async move {
+                            sleep(Duration::from_millis(7)).await;
+                            log.borrow_mut().push(i);
+                        }));
+                    }
+                    for h in handles {
+                        h.await;
+                    }
+                    let out = log.borrow().clone();
+                    out
+                },
+                Mode::Virtual,
+            );
+            assert_eq!(order, vec![0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn external_wake_racing_a_timer_does_not_advance_the_clock() {
+        // While an ExternalGuard is alive, a pending timer must NOT pull
+        // the virtual clock forward: the external completion wins and the
+        // clock reads 0 when it lands.
+        let at = block_on(
+            async {
+                let (tx, rx) = crate::rt::sync::oneshot::channel::<()>();
+                let guard = ExternalGuard::register();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(20));
+                    let _ = tx.send(());
+                });
+                let slow = spawn(async {
+                    sleep(Duration::from_secs(3600)).await;
+                });
+                rx.await.unwrap();
+                drop(guard);
+                let woke_at = now();
+                slow.await;
+                woke_at
+            },
+            Mode::Virtual,
+        );
+        assert_eq!(at, SimInstant::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "shard 0")]
+    fn sharded_deadlock_panic_names_the_shard() {
+        crate::rt::sharded::run_sharded(vec![|| {
+            block_on(
+                async {
+                    std::future::pending::<()>().await;
+                },
+                Mode::Virtual,
+            )
+        }]);
+    }
+
+    #[test]
+    fn cross_thread_wake_delivered_into_a_shard() {
+        // A foreign OS thread (not a shard) wakes a task inside a sharded
+        // executor: the wake must rouse the coordinator-blocked shard,
+        // exactly like the condvar path does for a serial executor.
+        let outs = crate::rt::sharded::run_sharded(vec![|| {
+            block_on(
+                async {
+                    let (tx, rx) = crate::rt::sync::oneshot::channel::<u32>();
+                    let _guard = ExternalGuard::register();
+                    std::thread::spawn(move || {
+                        std::thread::sleep(Duration::from_millis(10));
+                        let _ = tx.send(11);
+                    });
+                    rx.await.unwrap()
+                },
+                Mode::Virtual,
+            )
+        }]);
+        assert_eq!(outs, vec![11]);
     }
 
     #[test]

@@ -16,18 +16,25 @@
 //! * async **sync primitives** with FIFO fairness ([`sync::Mutex`],
 //!   [`sync::Semaphore`], [`sync::mpsc`], [`sync::oneshot`]) — fairness
 //!   matters because NICs are modeled as FIFO queueing servers,
-//! * small future combinators ([`join_all`], [`timeout`], [`yield_now`]).
+//! * small future combinators ([`join_all`], [`timeout`], [`yield_now`]),
+//! * **sharded parallel simulation** ([`sharded::run_sharded`]): N of
+//!   these executors on N OS threads, synchronized by conservative
+//!   parallel discrete-event simulation so a fleet of independent jobs
+//!   advances concurrently while remaining bit-identical to a serial
+//!   run (see `rt::sharded` for the protocol).
 //!
 //! Everything is `std`-only.
 
 pub mod combinators;
 pub mod executor;
+pub mod sharded;
 pub mod sync;
 pub mod time;
 
 pub use combinators::{block_on_simple, join_all, yield_now};
 pub use executor::{block_on, spawn, ExternalGuard, JoinHandle, Mode};
-pub use time::{now, sleep, timeout, Elapsed, SimInstant};
+pub use sharded::{run_sharded, run_sharded_stats, ShardStats};
+pub use time::{now, sleep, sleep_until, timeout, Elapsed, SimInstant};
 
 /// Runs a future to completion on a fresh executor in **virtual time**.
 pub fn run_virtual<F: std::future::Future + 'static>(fut: F) -> F::Output

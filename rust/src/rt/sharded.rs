@@ -1,0 +1,625 @@
+//! Conservative parallel discrete-event simulation: sharded virtual clocks.
+//!
+//! ## Model
+//!
+//! [`run_sharded`] runs N shard mains, one OS thread each; every shard
+//! main calls `rt::run_virtual` and so owns a full single-threaded
+//! executor with its own virtual clock. Jobs are partitioned across
+//! shards by `JobId` (whole-job-per-shard; see `engine/service.rs`), and
+//! the shared substrate — KV cluster NICs, the warm pool, executor-id
+//! allocation — is reached through cross-shard rendezvous points guarded
+//! by [`gate`] / [`hold`].
+//!
+//! The [`Coordinator`] implements classic conservative PDES (Chandy–
+//! Misra–Bryant flavored, adapted to a shared-memory rendezvous model
+//! instead of message channels):
+//!
+//! * Every shard publishes a **horizon** — a lower bound on the virtual
+//!   time of any future event it can still cause on another shard:
+//!   its clock while running or gate-waiting, its next timer deadline
+//!   while blocked waiting for an advance grant, and infinity once it
+//!   is parked with no timers or done.
+//! * A shard with **no holds** (no task enqueued on a cross-shard
+//!   rendezvous) can receive no cross-shard wake at all, so it advances
+//!   straight to its next timer deadline.
+//! * A shard **holding** (a task of its is queued on the NIC or the
+//!   warm-pool semaphore, waiting for a grant another shard will
+//!   dispatch) may only advance to `min(deadline, W)` where `W` is the
+//!   minimum horizon over all other live shards — the earliest instant
+//!   an incoming grant could still be stamped with.
+//! * Grants are **stamped** with the dispatching shard's clock; the
+//!   receiving task re-sleeps to the stamp locally (`rt::sleep_until`),
+//!   so the rendezvous completes at exactly the virtual time it would
+//!   have in a serial run.
+//!
+//! **Progress**: every modeled substrate operation has a strictly
+//! positive latency floor (`NetConfig`/`FaasConfig` minimums, validated
+//! at sharded-service entry), so every re-registered timer is strictly
+//! in the future and the global low-water mark ratchets forward in
+//! steps bounded below by the minimum floor — the lookahead window that
+//! makes conservative synchronization livelock-free. Among blocked
+//! shards the one holding the minimum deadline always receives a grant
+//! (`W >= its own deadline` cannot cap it below the deadline of the
+//! minimum holder), so the fleet cannot collectively stall.
+//!
+//! **Determinism**: [`gate`] is a synchronous sequence point for
+//! order-sensitive shared-substrate mutations (executor-id allocation,
+//! warm-pool acquire/release, active/peak counters, arena uid
+//! allocation). A gate at virtual time `t` is admitted only once every
+//! other live shard provably cannot act at a time `< t`; ties at
+//! exactly `t` are broken by arrival order and counted in
+//! [`ShardStats::tie_breaks`] — the one documented soundness boundary
+//! (the serial-equivalence oracle `sim::parallel_check` sweeps seeds to
+//! pin that ties stay absent or benign for the covered scenarios).
+//!
+//! In a non-sharded run all helpers ([`gate`], [`hold`], [`low_water`])
+//! are `None`-returning no-ops, so the serial path is bit-identical to
+//! the pre-sharding code.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::rt::time::SimInstant;
+
+/// Per-shard scheduling status, as seen by the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    /// Executing tasks at its current clock.
+    Running,
+    /// Blocked in `advance` waiting for a clock grant; its next event is
+    /// at `deadline`.
+    Blocked { deadline: u128 },
+    /// Blocked with no timers at all (waiting for a cross-shard wake).
+    Parked,
+    /// Blocked inside [`gate`] waiting for admission at its clock.
+    GateWaiting,
+    /// Shard main returned; it will never cause another event.
+    Done,
+}
+
+struct ShardState {
+    /// The shard's virtual clock (nanoseconds), last value granted by or
+    /// reported to the coordinator.
+    cursor: u128,
+    status: Status,
+    /// Number of live [`HoldGuard`]s: tasks of this shard queued on a
+    /// cross-shard rendezvous, each of which may be woken by a stamped
+    /// grant from another shard.
+    holds: usize,
+}
+
+impl ShardState {
+    /// Lower bound on the virtual time of any future cross-shard effect.
+    fn horizon(&self) -> u128 {
+        match self.status {
+            Status::Running | Status::GateWaiting => self.cursor,
+            Status::Blocked { deadline } => deadline,
+            Status::Parked | Status::Done => u128::MAX,
+        }
+    }
+
+    fn is_waiting(&self) -> bool {
+        !matches!(self.status, Status::Running)
+    }
+}
+
+struct CoordState {
+    shards: Vec<ShardState>,
+    /// Count of same-instant cross-shard gate admissions broken by
+    /// arrival order — the documented determinism soundness boundary.
+    tie_breaks: u64,
+    /// Set once a shard detects deadlock or panics; every other blocked
+    /// shard unblocks and aborts so `std::thread::scope` can join.
+    aborted: Option<usize>,
+}
+
+impl CoordState {
+    fn min_other_horizon(&self, shard: usize) -> u128 {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| *i != shard && s.status != Status::Done)
+            .map(|(_, s)| s.horizon())
+            .min()
+            .unwrap_or(u128::MAX)
+    }
+
+    fn all_live_parked(&self) -> Option<usize> {
+        let mut first = None;
+        for (i, s) in self.shards.iter().enumerate() {
+            match s.status {
+                Status::Done => {}
+                Status::Parked => {
+                    if first.is_none() {
+                        first = Some(i);
+                    }
+                }
+                _ => return None,
+            }
+        }
+        first
+    }
+}
+
+/// Result of asking the coordinator for a clock advance.
+pub(crate) enum Advance {
+    /// A wake arrived on this shard's queue; drain and poll before
+    /// advancing time.
+    Wake,
+    /// Advance the clock to this instant (nanoseconds). May be earlier
+    /// than the requested deadline (a *partial* advance capped by the
+    /// fleet's horizon): fire nothing and ask again.
+    Clock(u128),
+}
+
+/// The conservative-PDES clock coordinator shared by all shards of one
+/// [`run_sharded`] fleet.
+pub struct Coordinator {
+    state: Mutex<CoordState>,
+    cv: Condvar,
+}
+
+impl Coordinator {
+    fn new(n: usize) -> Self {
+        Coordinator {
+            state: Mutex::new(CoordState {
+                shards: (0..n)
+                    .map(|_| ShardState {
+                        cursor: 0,
+                        status: Status::Running,
+                        holds: 0,
+                    })
+                    .collect(),
+                tie_breaks: 0,
+                aborted: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Total same-instant gate admissions broken by arrival order so far.
+    pub fn tie_breaks(&self) -> u64 {
+        self.state.lock().unwrap().tie_breaks
+    }
+
+    /// Global low-water mark: the minimum clock over live shards.
+    pub fn low_water(&self) -> SimInstant {
+        let st = self.state.lock().unwrap();
+        let ns = st
+            .shards
+            .iter()
+            .filter(|s| s.status != Status::Done)
+            .map(|s| s.cursor)
+            .min()
+            .unwrap_or_else(|| st.shards.iter().map(|s| s.cursor).max().unwrap_or(0));
+        SimInstant::from_nanos(ns)
+    }
+
+    /// Called by `Shared::push_wake` (possibly from another shard's
+    /// thread) so shards blocked on the coordinator re-check their wake
+    /// queues. The momentary lock acquisition orders the notification
+    /// after any in-progress check-then-wait, preventing lost wakeups.
+    pub(crate) fn notify_wake(&self) {
+        let _guard = self.state.lock();
+        self.cv.notify_all();
+    }
+
+    fn abort_check(&self, st: &CoordState, shard: usize) {
+        if let Some(culprit) = st.aborted {
+            if culprit == shard {
+                panic!(
+                    "executor deadlock: all tasks blocked, no timers, no external \
+                     operations pending (shard {shard})"
+                );
+            }
+            panic!(
+                "shard {shard}: aborting, simulation halted by shard {culprit} \
+                 (deadlock or panic)"
+            );
+        }
+    }
+
+    /// Requests permission for `shard` (clock at `cursor` ns) to advance
+    /// to its next timer `deadline`. Blocks until either a wake arrives
+    /// on the shard's queue or some advance (possibly partial) is safe.
+    pub(crate) fn advance(
+        &self,
+        shard: usize,
+        cursor: u128,
+        deadline: u128,
+        shared: &crate::rt::executor::Shared,
+    ) -> Advance {
+        debug_assert!(deadline > cursor, "timers due now must fire before advancing");
+        let mut st = self.state.lock().unwrap();
+        st.shards[shard].cursor = cursor;
+        loop {
+            self.abort_check(&st, shard);
+            if shared.has_pending_wakes() {
+                st.shards[shard].status = Status::Running;
+                return Advance::Wake;
+            }
+            let grant = if st.shards[shard].holds == 0 {
+                // No task of ours is queued on a cross-shard rendezvous:
+                // no incoming wake is possible, the deadline is ours.
+                deadline
+            } else {
+                deadline.min(st.min_other_horizon(shard))
+            };
+            if grant > cursor {
+                st.shards[shard].status = Status::Running;
+                st.shards[shard].cursor = grant;
+                // Our horizon moved up: blocked peers may now advance.
+                self.cv.notify_all();
+                return Advance::Clock(grant);
+            }
+            st.shards[shard].status = Status::Blocked { deadline };
+            // Becoming blocked raises our horizon from cursor to
+            // deadline: peers capped by us may now advance.
+            self.cv.notify_all();
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Called when `shard` has no ready tasks and no timers. Returns when
+    /// a cross-shard wake arrives; panics (naming the shard) when every
+    /// live shard is parked — the sharded analogue of the serial
+    /// executor's deadlock detection.
+    pub(crate) fn park_no_deadline(&self, shard: usize, shared: &crate::rt::executor::Shared) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            self.abort_check(&st, shard);
+            if shared.has_pending_wakes() {
+                st.shards[shard].status = Status::Running;
+                return;
+            }
+            st.shards[shard].status = Status::Parked;
+            if st.all_live_parked().is_some() {
+                st.aborted = Some(shard);
+                self.cv.notify_all();
+                drop(st);
+                panic!(
+                    "executor deadlock: all tasks blocked, no timers, no external \
+                     operations pending (shard {shard})"
+                );
+            }
+            self.cv.notify_all();
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Marks `shard`'s main as returned. If every remaining live shard is
+    /// parked waiting for a wake that can now never come, flags the
+    /// deadlock so they abort instead of hanging the join.
+    fn mark_done(&self, shard: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.shards[shard].status = Status::Done;
+        if st.aborted.is_none() {
+            if let Some(parked) = st.all_live_parked() {
+                st.aborted = Some(parked);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Flags an abnormal termination (panic in `shard`'s main) so blocked
+    /// peers unwind instead of waiting forever.
+    fn poison(&self, shard: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st.aborted.is_none() {
+            st.aborted = Some(shard);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Admission control for an order-sensitive shared-substrate mutation
+    /// at virtual time `t` (ns): blocks until every other live shard
+    /// provably cannot act at any time `< t`. Exactly one shard runs
+    /// gated code at a time (an admitted shard is `Running` at `t`, which
+    /// fails every concurrent waiter's predicate until it blocks again).
+    fn gate_enter(self: &Arc<Self>, shard: usize, t: u128) -> GateGuard {
+        let mut st = self.state.lock().unwrap();
+        debug_assert_eq!(st.shards[shard].cursor, t, "gate time must match shard clock");
+        loop {
+            self.abort_check(&st, shard);
+            let mut ties = 0u64;
+            let admitted = st
+                .shards
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| *i != shard && s.status != Status::Done)
+                .all(|(_, s)| {
+                    let h = s.horizon();
+                    if h > t {
+                        true
+                    } else if h == t && s.is_waiting() {
+                        ties += 1;
+                        true
+                    } else {
+                        false
+                    }
+                });
+            if admitted {
+                st.tie_breaks += ties;
+                st.shards[shard].status = Status::Running;
+                return GateGuard {
+                    coord: Arc::clone(self),
+                };
+            }
+            st.shards[shard].status = Status::GateWaiting;
+            self.cv.notify_all();
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn add_hold(&self, shard: usize) {
+        self.state.lock().unwrap().shards[shard].holds += 1;
+    }
+
+    fn drop_hold(&self, shard: usize) {
+        self.state.lock().unwrap().shards[shard].holds -= 1;
+    }
+}
+
+/// Exclusive admission to a shared-substrate sequence point. Never hold
+/// one across an `.await` — gated code must be synchronous, or every
+/// other shard's gate at the same fleet state deadlocks.
+pub struct GateGuard {
+    coord: Arc<Coordinator>,
+}
+
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        // Same-time gate waiters re-check admission.
+        self.coord.notify_wake();
+    }
+}
+
+/// Marks this shard as having a task queued on a cross-shard rendezvous
+/// (so its clock advance stays capped by the fleet horizon until the
+/// grant's stamp has been observed).
+pub struct HoldGuard {
+    coord: Arc<Coordinator>,
+    shard: usize,
+}
+
+impl Drop for HoldGuard {
+    fn drop(&mut self) {
+        self.coord.drop_hold(self.shard);
+    }
+}
+
+#[derive(Clone)]
+pub(crate) struct ShardCtx {
+    pub(crate) coord: Arc<Coordinator>,
+    pub(crate) shard: usize,
+}
+
+thread_local! {
+    static SHARD_CTX: std::cell::RefCell<Option<ShardCtx>> = const { std::cell::RefCell::new(None) };
+}
+
+pub(crate) fn current() -> Option<ShardCtx> {
+    SHARD_CTX.with(|c| c.borrow().clone())
+}
+
+/// Index of the current shard, `None` outside a sharded run.
+pub fn current_shard() -> Option<usize> {
+    current().map(|c| c.shard)
+}
+
+/// Global low-water mark of the current fleet, `None` outside a sharded
+/// run.
+pub fn low_water() -> Option<SimInstant> {
+    current().map(|c| c.coord.low_water())
+}
+
+/// Enters a shared-substrate sequence point at the current virtual time.
+/// `None` (a no-op) outside a sharded run.
+pub fn gate() -> Option<GateGuard> {
+    let ctx = current()?;
+    let t = crate::rt::executor::try_now()?.as_nanos();
+    Some(ctx.coord.gate_enter(ctx.shard, t))
+}
+
+/// Registers a cross-shard rendezvous hold for the current shard. `None`
+/// (a no-op) outside a sharded run.
+pub fn hold() -> Option<HoldGuard> {
+    let ctx = current()?;
+    ctx.coord.add_hold(ctx.shard);
+    Some(HoldGuard {
+        coord: ctx.coord,
+        shard: ctx.shard,
+    })
+}
+
+/// Fleet-level counters surfaced by [`run_sharded_stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    /// Same-instant cross-shard gate admissions broken by arrival order.
+    /// Zero means the run was provably order-independent; non-zero runs
+    /// are still swept against the serial oracle per seed.
+    pub tie_breaks: u64,
+}
+
+/// Runs one closure per shard, each on its own OS thread under the shared
+/// [`Coordinator`], and returns their results in shard order. Each
+/// closure is expected to call `rt::run_virtual` exactly once; everything
+/// it runs is synchronized by conservative PDES against its peers.
+pub fn run_sharded<R, F>(mains: Vec<F>) -> Vec<R>
+where
+    F: FnOnce() -> R + Send,
+    R: Send,
+{
+    run_sharded_stats(mains).0
+}
+
+/// [`run_sharded`], also returning fleet statistics.
+pub fn run_sharded_stats<R, F>(mains: Vec<F>) -> (Vec<R>, ShardStats)
+where
+    F: FnOnce() -> R + Send,
+    R: Send,
+{
+    let coord = Arc::new(Coordinator::new(mains.len()));
+    let joined: Vec<std::thread::Result<R>> = std::thread::scope(|s| {
+        let handles: Vec<_> = mains
+            .into_iter()
+            .enumerate()
+            .map(|(i, f)| {
+                let coord = Arc::clone(&coord);
+                std::thread::Builder::new()
+                    .name(format!("wukong-shard-{i}"))
+                    .spawn_scoped(s, move || {
+                        SHARD_CTX.with(|c| {
+                            *c.borrow_mut() = Some(ShardCtx {
+                                coord: Arc::clone(&coord),
+                                shard: i,
+                            });
+                        });
+                        struct Clear;
+                        impl Drop for Clear {
+                            fn drop(&mut self) {
+                                SHARD_CTX.with(|c| *c.borrow_mut() = None);
+                            }
+                        }
+                        let _clear = Clear;
+                        let out =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                        match out {
+                            Ok(v) => {
+                                coord.mark_done(i);
+                                v
+                            }
+                            Err(payload) => {
+                                coord.poison(i);
+                                std::panic::resume_unwind(payload);
+                            }
+                        }
+                    })
+                    .expect("spawn shard thread")
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    let stats = ShardStats {
+        tie_breaks: coord.tie_breaks(),
+    };
+    let mut results = Vec::with_capacity(joined.len());
+    let mut first_panic = None;
+    for r in joined {
+        match r {
+            Ok(v) => results.push(v),
+            Err(p) => {
+                if first_panic.is_none() {
+                    first_panic = Some(p);
+                }
+            }
+        }
+    }
+    if let Some(p) = first_panic {
+        std::panic::resume_unwind(p);
+    }
+    (results, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rt;
+    use std::time::Duration;
+
+    #[test]
+    fn helpers_are_noops_outside_sharded_runs() {
+        assert!(current_shard().is_none());
+        assert!(low_water().is_none());
+        assert!(gate().is_none());
+        assert!(hold().is_none());
+    }
+
+    #[test]
+    fn shards_advance_independently_to_their_own_deadlines() {
+        let outs = run_sharded(
+            (0..3u64)
+                .map(|i| {
+                    move || {
+                        rt::run_virtual(async move {
+                            rt::sleep(Duration::from_millis(10 * (i + 1))).await;
+                            rt::now().duration_since(SimInstant::default())
+                        })
+                    }
+                })
+                .collect(),
+        );
+        assert_eq!(
+            outs,
+            vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30)
+            ]
+        );
+    }
+
+    #[test]
+    fn single_shard_fleet_matches_serial_semantics() {
+        let outs = run_sharded(vec![|| {
+            rt::run_virtual(async {
+                rt::sleep(Duration::from_secs(5)).await;
+                crate::rt::time::now().as_secs_f64()
+            })
+        }]);
+        assert_eq!(outs, vec![5.0]);
+    }
+
+    #[test]
+    fn shard_context_is_visible_inside_the_fleet() {
+        let outs = run_sharded(
+            (0..2usize)
+                .map(|_| {
+                    move || {
+                        rt::run_virtual(async {
+                            let shard = current_shard().expect("inside a sharded run");
+                            assert!(low_water().is_some());
+                            shard
+                        })
+                    }
+                })
+                .collect(),
+        );
+        assert_eq!(outs, vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn fleet_deadlock_panics_and_names_the_shard() {
+        run_sharded(
+            (0..2u32)
+                .map(|i| {
+                    move || {
+                        rt::run_virtual(async move {
+                            if i == 0 {
+                                std::future::pending::<()>().await;
+                            } else {
+                                rt::sleep(Duration::from_millis(1)).await;
+                            }
+                        })
+                    }
+                })
+                .collect(),
+        );
+    }
+
+    #[test]
+    fn tie_break_counter_starts_at_zero_for_disjoint_timelines() {
+        let (_, stats) = run_sharded_stats(
+            (0..2u64)
+                .map(|i| {
+                    move || {
+                        rt::run_virtual(async move {
+                            rt::sleep(Duration::from_millis(1 + i)).await;
+                        })
+                    }
+                })
+                .collect(),
+        );
+        assert_eq!(stats.tie_breaks, 0);
+    }
+}

@@ -1,4 +1,14 @@
 //! FIFO-fair async counting semaphore with owned permits.
+//!
+//! **Sharded simulation:** under `rt::sharded` a semaphore may be shared
+//! across shards (the platform's fleet-concurrency limit). Acquire entry
+//! and release are gate sequence points, so the FIFO queue order equals
+//! virtual-time arrival order even when waiters come from different
+//! shard threads; a queued waiter registers a coordinator *hold* (its
+//! shard's clock stays capped by the fleet horizon), and every grant is
+//! stamped with the granting shard's clock so the woken waiter resumes
+//! at exactly the serial run's virtual instant. All of it is a no-op in
+//! ordinary single-clock runs.
 
 use std::collections::VecDeque;
 use std::future::Future;
@@ -6,10 +16,15 @@ use std::pin::Pin;
 use std::sync::{Arc, Mutex};
 use std::task::{Context, Poll, Waker};
 
+use crate::rt::time::SimInstant;
+
 struct Waiter {
     granted: bool,
     cancelled: bool,
     waker: Option<Waker>,
+    /// Virtual time on the granting shard's clock at the moment the
+    /// permit was handed over (None when granted outside an executor).
+    granted_at: Option<SimInstant>,
 }
 
 struct State {
@@ -32,6 +47,7 @@ impl State {
             }
             self.permits -= 1;
             w.granted = true;
+            w.granted_at = crate::rt::executor::try_now();
             if let Some(wk) = w.waker.take() {
                 wk.wake();
             }
@@ -53,6 +69,10 @@ pub struct OwnedPermit {
 
 impl Drop for OwnedPermit {
     fn drop(&mut self) {
+        // Releasing reorders the queue's future: make it a sharded
+        // sequence point so cross-shard releases land in virtual-time
+        // order (no-op guard in serial runs).
+        let _gate = crate::rt::sharded::gate();
         let mut s = self.sem.state.lock().unwrap();
         s.permits += 1;
         s.grant();
@@ -63,6 +83,9 @@ impl Drop for OwnedPermit {
 pub struct Acquire {
     sem: Arc<Semaphore>,
     waiter: Option<Arc<Mutex<Waiter>>>,
+    /// Coordinator hold while queued cross-shard (None in serial runs or
+    /// once the grant has been observed).
+    hold: Option<crate::rt::sharded::HoldGuard>,
 }
 
 impl Future for Acquire {
@@ -70,6 +93,10 @@ impl Future for Acquire {
     fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<OwnedPermit> {
         // Fast path / enqueue on first poll.
         if self.waiter.is_none() {
+            // Entry is a sharded sequence point: after admission no other
+            // live shard can act at an earlier virtual time, so the FIFO
+            // enqueue below lands in virtual-time order fleet-wide.
+            let _gate = crate::rt::sharded::gate();
             let mut s = self.sem.state.lock().unwrap();
             if s.permits > 0 && s.queue.is_empty() {
                 s.permits -= 1;
@@ -82,16 +109,28 @@ impl Future for Acquire {
                 granted: false,
                 cancelled: false,
                 waker: Some(cx.waker().clone()),
+                granted_at: None,
             }));
             s.queue.push_back(w.clone());
             drop(s);
             self.waiter = Some(w);
+            self.hold = crate::rt::sharded::hold();
             return Poll::Pending;
         }
         let waiter = self.waiter.as_ref().unwrap().clone();
         let mut w = waiter.lock().unwrap();
         if w.granted {
+            let stamp = w.granted_at;
             drop(w);
+            // The rendezvous has resolved: the remaining wait (if any) is
+            // a plain local timer to the grant's virtual-time stamp, so
+            // the shard no longer needs its advance capped.
+            self.hold = None;
+            if let Some(stamp) = stamp {
+                if crate::rt::time::poll_sleep_until(stamp, cx).is_pending() {
+                    return Poll::Pending;
+                }
+            }
             self.waiter = None; // permit taken; Drop must not cancel
             Poll::Ready(OwnedPermit {
                 sem: self.sem.clone(),
@@ -110,6 +149,7 @@ impl Drop for Acquire {
             if w.granted {
                 // Granted but never polled to completion: return permit.
                 drop(w);
+                let _gate = crate::rt::sharded::gate();
                 let mut s = self.sem.state.lock().unwrap();
                 s.permits += 1;
                 s.grant();
@@ -135,6 +175,7 @@ impl Semaphore {
         Acquire {
             sem: self.clone(),
             waiter: None,
+            hold: None,
         }
     }
 

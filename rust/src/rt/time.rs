@@ -58,17 +58,25 @@ pub struct Sleep {
 impl Future for Sleep {
     type Output = ();
     fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
-        with_core(|core| {
-            if core.now() >= self.deadline {
-                Poll::Ready(())
-            } else {
-                // (Re-)register; duplicate registrations only cause a
-                // harmless spurious wake.
-                core.register_timer(self.deadline, cx.waker().clone());
-                Poll::Pending
-            }
-        })
+        poll_sleep_until(self.deadline, cx)
     }
+}
+
+/// One poll step of "sleep until `deadline`": ready if the clock has
+/// reached it, otherwise (re-)registers a timer. Usable from hand-rolled
+/// `poll` impls (the NIC/semaphore grant paths resume at a cross-shard
+/// grant's virtual-time stamp through this).
+pub(crate) fn poll_sleep_until(deadline: SimInstant, cx: &mut Context<'_>) -> Poll<()> {
+    with_core(|core| {
+        if core.now() >= deadline {
+            Poll::Ready(())
+        } else {
+            // (Re-)register; duplicate registrations only cause a
+            // harmless spurious wake.
+            core.register_timer(deadline, cx.waker().clone());
+            Poll::Pending
+        }
+    })
 }
 
 /// Sleeps for `d` on the executor timeline. Zero-duration sleeps complete
@@ -79,6 +87,12 @@ pub fn sleep(d: Duration) -> Sleep {
     } else {
         now() + d
     };
+    Sleep { deadline }
+}
+
+/// Sleeps until `deadline` on the executor timeline (immediate if the
+/// deadline has already passed).
+pub fn sleep_until(deadline: SimInstant) -> Sleep {
     Sleep { deadline }
 }
 

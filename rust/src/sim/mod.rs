@@ -20,7 +20,10 @@
 //! forensic artifacts; [`oracle::differential_check`] runs all five paper
 //! designs and proves them equivalent (byte-identical sink outputs plus
 //! substrate invariants); [`oracle::determinism_check`] proves each run
-//! replays to an identical [`trace`]. `rust/tests/sim_differential.rs`
+//! replays to an identical [`trace`]; [`oracle::parallel_check`] proves
+//! sharded parallel simulation (`rt::sharded`,
+//! `ServiceConfig::sim_shards`) byte-identical to the serial service for
+//! the same seed. `rust/tests/sim_differential.rs`
 //! sweeps these over seed ranges in CI; see `rust/src/engine/README.md`
 //! for how to reproduce a failing seed from a CI log.
 
@@ -31,7 +34,7 @@ pub mod trace;
 pub use harness::{fingerprint_outputs, paper_policies, ModeKind, PolicyRun, SimHarness};
 pub use oracle::{
     determinism_check, differential_check, governance_check, locality_check, multi_job_check,
-    multi_job_determinism_check, recovery_check, spill_check, DifferentialReport,
-    GovernanceReport, LocalityReport, MultiJobReport, RecoveryReport, SpillReport,
+    multi_job_determinism_check, parallel_check, recovery_check, spill_check, DifferentialReport,
+    GovernanceReport, LocalityReport, MultiJobReport, ParallelReport, RecoveryReport, SpillReport,
 };
 pub use trace::{first_divergence, render_trace};

@@ -1025,6 +1025,118 @@ pub fn multi_job_determinism_check(seed: u64, jobs: usize) -> Result<(), String>
     Ok(())
 }
 
+/// Summary of one passing parallel-simulation equivalence check.
+#[derive(Clone, Debug)]
+pub struct ParallelReport {
+    pub seed: u64,
+    pub jobs: usize,
+    /// Shard counts proven byte-identical to the serial run.
+    pub shard_counts: Vec<usize>,
+    /// Service makespan, seconds (virtual) — identical across all shard
+    /// counts by construction.
+    pub makespan: f64,
+}
+
+/// Per-job seed stream of the parallel-simulation scenario (salted so it
+/// never collides with the multi-job or governance streams).
+fn parallel_seeds(seed: u64, jobs: usize) -> Vec<u64> {
+    multi_job_seeds(seed ^ 0x7061_7261_6C6C_656C, jobs) // "parallel"
+}
+
+/// Runs the parallel-check fleet of `seed` over `shards` simulation
+/// shards: seeded random value DAGs, mixed decentralized/centralized
+/// policies, three tenants, Poisson arrivals (fractional-nanosecond
+/// offsets keep cross-job events off a shared time lattice), a small
+/// warm pool (so jobs genuinely contend through the gated rendezvous),
+/// and the contention-free admission regime the sharded path requires.
+fn run_parallel_service(seed: u64, jobs: usize, shards: usize) -> ServiceReport {
+    let job_seeds = parallel_seeds(seed, jobs);
+    let mut base = SimConfig::test();
+    base.seed = seed;
+    base.faas.warm_pool = 4;
+    let cfg = ServiceConfig::new(base, seed)
+        .with_profile(ArrivalProfile::Poisson { mean_gap_ms: 20.0 })
+        .with_concurrency(jobs.max(1), jobs.max(1))
+        .with_shards(shards);
+    let requests: Vec<JobRequest> = job_seeds
+        .iter()
+        .enumerate()
+        .map(|(i, &job_seed)| JobRequest {
+            name: format!("par{i}"),
+            tenant: (i % 3) as u32,
+            priority: 0,
+            seed: job_seed,
+            dag: random_dag(&RandomDagSpec::value(job_seed)),
+            policy: multi_job_policy(i).0,
+        })
+        .collect();
+    run_service(cfg, requests)
+}
+
+/// The serial-equivalence oracle for sharded parallel simulation
+/// (`ServiceConfig::sim_shards`, `rt::sharded`): the same seeded fleet
+/// runs serially and over 2 and 8 shards, and every sharded run must be
+/// **byte-identical** to the serial one —
+///
+/// * identical canonical service traces (completions, virtual
+///   timestamps, tenant ledgers, substrate end state);
+/// * identical per-job sink-output fingerprints;
+/// * zero conservative-gate tie-breaks (the runs are provably
+///   order-independent, not merely order-lucky).
+pub fn parallel_check(seed: u64) -> Result<ParallelReport, String> {
+    const JOBS: usize = 8;
+    const SHARD_COUNTS: [usize; 2] = [2, 8];
+
+    let serial = run_parallel_service(seed, JOBS, 1);
+    if serial.completed() != JOBS || !serial.rejected.is_empty() {
+        return Err(format!(
+            "seed {seed}: serial reference completed {}/{JOBS} jobs ({} rejected)",
+            serial.completed(),
+            serial.rejected.len()
+        ));
+    }
+    if !serial.all_ok() {
+        return Err(format!("seed {seed}: serial reference has failed jobs"));
+    }
+    let serial_trace = serial.render_trace();
+
+    for shards in SHARD_COUNTS {
+        let report = run_parallel_service(seed, JOBS, shards);
+        let trace = report.render_trace();
+        if trace != serial_trace {
+            let (line, left, right) =
+                first_divergence(&serial_trace, &trace).expect("traces differ");
+            return Err(format!(
+                "seed {seed}: PARALLEL SIMULATION DIVERGED — {shards} shards differ from \
+                 the serial run at trace line {line}:\n  serial:    {left}\n  {shards} shards: {right}"
+            ));
+        }
+        for (a, b) in report.outcomes.iter().zip(serial.outcomes.iter()) {
+            if a.fingerprint != b.fingerprint {
+                return Err(format!(
+                    "seed {seed}: PARALLEL SIMULATION DIVERGED — job {} sink fingerprints \
+                     differ between {shards} shards and serial",
+                    a.job
+                ));
+            }
+        }
+        if report.tie_breaks != 0 {
+            return Err(format!(
+                "seed {seed}: {shards}-shard run needed {} same-instant gate tie-breaks — \
+                 the scenario is only order-lucky, not order-independent",
+                report.tie_breaks
+            ));
+        }
+    }
+
+    Ok(ParallelReport {
+        seed,
+        jobs: JOBS,
+        shard_counts: SHARD_COUNTS.to_vec(),
+        makespan: serial.makespan.as_secs_f64(),
+    })
+}
+
 /// Post-mortem substrate invariants per execution mode (single-job runs:
 /// the arena is live, so snapshot it here).
 fn check_substrate(seed: u64, run: &PolicyRun, dag: &Dag) -> Result<(), String> {

@@ -10,13 +10,14 @@
 //! Sharding: the full single-job sweep covers seeds `0..50`. Set
 //! `WUKONG_SIM_SEED_BLOCK=<k>` to run only seeds `[10k, 10k+10)` — the CI
 //! matrix fans the blocks out in parallel (0–4 single-job; 5 multi-job;
-//! 6 governance; 7 locality; 8 spill; 9 recovery); an unset variable
-//! (local `cargo test`) runs the whole range. To reproduce a CI failure
-//! locally: `wukong::sim::differential_check(<seed from the log>)`.
+//! 6 governance; 7 locality; 8 spill; 9 recovery; 10 parallel
+//! simulation); an unset variable (local `cargo test`) runs the whole
+//! range. To reproduce a CI failure locally:
+//! `wukong::sim::differential_check(<seed from the log>)`.
 
 use wukong::sim::{
     determinism_check, differential_check, governance_check, locality_check, multi_job_check,
-    multi_job_determinism_check, recovery_check, spill_check,
+    multi_job_determinism_check, parallel_check, recovery_check, spill_check,
 };
 
 const BLOCK_SIZE: u64 = 10;
@@ -47,6 +48,13 @@ const SPILL_BLOCK: u64 = 8;
 /// exact, armed-but-benign is bit-identical to recovery off) and skips
 /// the other sweeps.
 const RECOVERY_BLOCK: u64 = 9;
+/// The dedicated parallel-simulation CI block
+/// (`WUKONG_SIM_SEED_BLOCK=10`): sweeps the serial-equivalence oracle
+/// for sharded clocks (an 8-job fleet run under `sim_shards` ∈ {2, 8}
+/// must render the same canonical trace and per-job sink fingerprints
+/// byte-for-byte as the serial service, with zero same-instant gate
+/// ties) and skips the other sweeps.
+const PARALLEL_BLOCK: u64 = 10;
 
 fn seed_block() -> Option<u64> {
     std::env::var("WUKONG_SIM_SEED_BLOCK").ok().map(|block| {
@@ -61,7 +69,7 @@ fn seed_block() -> Option<u64> {
 fn seed_range() -> std::ops::Range<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) | Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK)
-        | Some(SPILL_BLOCK) | Some(RECOVERY_BLOCK) => 0..0,
+        | Some(SPILL_BLOCK) | Some(RECOVERY_BLOCK) | Some(PARALLEL_BLOCK) => 0..0,
         Some(k) => {
             let lo = k * BLOCK_SIZE;
             assert!(lo < TOTAL_SEEDS, "block {k} out of range");
@@ -78,7 +86,7 @@ fn multi_job_seeds() -> Vec<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) => (50..58).collect(),
         Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) | Some(SPILL_BLOCK)
-        | Some(RECOVERY_BLOCK) => vec![],
+        | Some(RECOVERY_BLOCK) | Some(PARALLEL_BLOCK) => vec![],
         Some(k) => vec![k * BLOCK_SIZE],
         None => vec![0, 25],
     }
@@ -121,6 +129,16 @@ fn recovery_seeds() -> Vec<u64> {
         Some(RECOVERY_BLOCK) => (90..98).collect(),
         Some(_) => vec![],
         None => vec![90],
+    }
+}
+
+/// Parallel-simulation scenario seeds: block 10 sweeps eight; a local
+/// run samples one; the other blocks skip.
+fn parallel_seeds() -> Vec<u64> {
+    match seed_block() {
+        Some(PARALLEL_BLOCK) => (100..108).collect(),
+        Some(_) => vec![],
+        None => vec![100],
     }
 }
 
@@ -289,6 +307,25 @@ fn crash_recovery_preserves_outputs_and_bounds_retries() {
                 ))
                 .collect::<Vec<_>>()
                 .join(" ")
+        );
+    }
+}
+
+#[test]
+fn sharded_simulation_matches_serial_byte_for_byte() {
+    // The parallel-simulation oracle (ISSUE 9): an 8-job mixed-policy
+    // fleet with Poisson arrivals over one shared platform, run serially
+    // and again under `sim_shards` ∈ {2, 8}, must render byte-identical
+    // canonical traces and per-job sink fingerprints, and report zero
+    // same-instant gate ties (the determinism must be order-independent,
+    // not order-lucky).
+    for seed in parallel_seeds() {
+        let report = parallel_check(seed).unwrap_or_else(|e| {
+            panic!("parallel-simulation oracle failed — reproduce with wukong::sim::parallel_check({seed}): {e}")
+        });
+        println!(
+            "parallel seed {:>3}: {} jobs, shards {:?} all byte-identical, makespan {:.2}s",
+            report.seed, report.jobs, report.shard_counts, report.makespan,
         );
     }
 }
