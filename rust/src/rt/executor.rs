@@ -392,6 +392,10 @@ where
     let shard_ctx = crate::rt::sharded::current();
     if let Some(ctx) = &shard_ctx {
         let _ = core.shared.coordinator.set(ctx.coord.clone());
+        // Expose this shard's wake queue to the coordinator: an
+        // undrained cross-shard grant must cap the shard's advertised
+        // horizon and veto the all-parked deadlock verdict.
+        ctx.coord.register_shared(ctx.shard, &core.shared);
     }
 
     CURRENT.with(|c| {

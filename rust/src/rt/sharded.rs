@@ -18,7 +18,13 @@
 //!   time of any future event it can still cause on another shard:
 //!   its clock while running or gate-waiting, its next timer deadline
 //!   while blocked waiting for an advance grant, and infinity once it
-//!   is parked with no timers or done.
+//!   is parked with no timers or done. A wake sitting **undrained** in
+//!   a shard's queue (typically a stamped cross-shard grant) makes the
+//!   advertised status stale — the shard will resume and may act as
+//!   early as its current cursor — so the coordinator caps such a
+//!   shard's effective horizon at its cursor until the queue drains
+//!   (each shard's executor `Shared` wake queue is registered with the
+//!   coordinator for exactly this check).
 //! * A shard with **no holds** (no task enqueued on a cross-shard
 //!   rendezvous) can receive no cross-shard wake at all, so it advances
 //!   straight to its next timer deadline.
@@ -40,7 +46,11 @@
 //! makes conservative synchronization livelock-free. Among blocked
 //! shards the one holding the minimum deadline always receives a grant
 //! (`W >= its own deadline` cannot cap it below the deadline of the
-//! minimum holder), so the fleet cannot collectively stall.
+//! minimum holder), so the fleet cannot collectively stall. A
+//! pending-wake cursor cap can transiently push `W` below every timer
+//! deadline, but only while the capped shard's thread has an undrained
+//! (already-notified) wake — it drains in bounded wall-clock time and
+//! the cap lifts, so liveness is unaffected.
 //!
 //! **Determinism**: [`gate`] is a synchronous sequence point for
 //! order-sensitive shared-substrate mutations (executor-id allocation,
@@ -104,6 +114,12 @@ impl ShardState {
 
 struct CoordState {
     shards: Vec<ShardState>,
+    /// Each shard's executor `Shared` handle (weak — `Shared` itself
+    /// holds an `Arc<Coordinator>`, a strong reference here would leak
+    /// the fleet), registered by `block_on` so the coordinator can see
+    /// undrained wake queues: a wake in flight means the shard's
+    /// advertised status is stale.
+    shareds: Vec<std::sync::Weak<crate::rt::executor::Shared>>,
     /// Count of same-instant cross-shard gate admissions broken by
     /// arrival order — the documented determinism soundness boundary.
     tie_breaks: u64,
@@ -113,12 +129,34 @@ struct CoordState {
 }
 
 impl CoordState {
+    /// True when a wake (typically a grant stamped by another shard)
+    /// sits undrained in `shard`'s queue.
+    fn wake_pending(&self, shard: usize) -> bool {
+        self.shareds[shard]
+            .upgrade()
+            .is_some_and(|sh| sh.has_pending_wakes())
+    }
+
+    /// Effective horizon of shard `i`. While a wake is pending the
+    /// shard's status lies about its future — a Blocked shard
+    /// advertises its timer deadline and a Parked shard infinity, but
+    /// the drained wake may resume it to act (e.g. a gated substrate
+    /// mutation after re-sleeping to the grant's stamp) at any instant
+    /// >= its cursor, which is always <= the grant's stamp — so the
+    /// horizon is capped at the cursor until the queue drains.
+    fn horizon_of(&self, i: usize) -> u128 {
+        let s = &self.shards[i];
+        if s.status != Status::Done && self.wake_pending(i) {
+            s.cursor
+        } else {
+            s.horizon()
+        }
+    }
+
     fn min_other_horizon(&self, shard: usize) -> u128 {
-        self.shards
-            .iter()
-            .enumerate()
-            .filter(|(i, s)| *i != shard && s.status != Status::Done)
-            .map(|(_, s)| s.horizon())
+        (0..self.shards.len())
+            .filter(|&i| i != shard && self.shards[i].status != Status::Done)
+            .map(|i| self.horizon_of(i))
             .min()
             .unwrap_or(u128::MAX)
     }
@@ -129,6 +167,11 @@ impl CoordState {
             match s.status {
                 Status::Done => {}
                 Status::Parked => {
+                    if self.wake_pending(i) {
+                        // A deliverable wake exists: the shard only
+                        // *looks* parked until its thread drains it.
+                        return None;
+                    }
                     if first.is_none() {
                         first = Some(i);
                     }
@@ -169,6 +212,7 @@ impl Coordinator {
                         holds: 0,
                     })
                     .collect(),
+                shareds: (0..n).map(|_| std::sync::Weak::new()).collect(),
                 tie_breaks: 0,
                 aborted: None,
             }),
@@ -201,6 +245,18 @@ impl Coordinator {
     pub(crate) fn notify_wake(&self) {
         let _guard = self.state.lock();
         self.cv.notify_all();
+    }
+
+    /// Registers `shard`'s executor `Shared` so the coordinator can see
+    /// its wake queue: an undrained wake caps the shard's effective
+    /// horizon at its cursor and vetoes the all-parked deadlock verdict.
+    /// Called by `block_on` when it detects it is running as a shard.
+    pub(crate) fn register_shared(
+        &self,
+        shard: usize,
+        shared: &Arc<crate::rt::executor::Shared>,
+    ) {
+        self.state.lock().unwrap().shareds[shard] = Arc::downgrade(shared);
     }
 
     fn abort_check(&self, st: &CoordState, shard: usize) {
@@ -321,20 +377,27 @@ impl Coordinator {
         loop {
             self.abort_check(&st, shard);
             let mut ties = 0u64;
-            let admitted = st
-                .shards
-                .iter()
-                .enumerate()
-                .filter(|(i, s)| *i != shard && s.status != Status::Done)
-                .all(|(_, s)| {
-                    let h = s.horizon();
-                    if h > t {
-                        true
-                    } else if h == t && s.is_waiting() {
-                        ties += 1;
-                        true
+            let admitted = (0..st.shards.len())
+                .filter(|&i| i != shard && st.shards[i].status != Status::Done)
+                .all(|i| {
+                    let s = &st.shards[i];
+                    if st.wake_pending(i) {
+                        // An undrained wake (e.g. a grant stamped at or
+                        // before `t`) may resume this peer to mutate the
+                        // substrate at any instant >= its cursor; its
+                        // advertised status is stale, so no tie-break —
+                        // wait until it drains and re-sleeps to the stamp.
+                        s.cursor > t
                     } else {
-                        false
+                        let h = s.horizon();
+                        if h > t {
+                            true
+                        } else if h == t && s.is_waiting() {
+                            ties += 1;
+                            true
+                        } else {
+                            false
+                        }
                     }
                 });
             if admitted {
@@ -502,19 +565,28 @@ where
     let stats = ShardStats {
         tie_breaks: coord.tie_breaks(),
     };
+    // The shard that halted the fleet (deadlock detector or panic) is
+    // the one whose payload explains the failure; peers only raise
+    // secondary "halted by shard N" panics. Resume the culprit's
+    // payload if its join carried one, so a lower-index peer's
+    // secondary panic cannot mask the root cause.
+    let culprit = coord.state.lock().unwrap().aborted;
     let mut results = Vec::with_capacity(joined.len());
+    let mut culprit_panic = None;
     let mut first_panic = None;
-    for r in joined {
+    for (i, r) in joined.into_iter().enumerate() {
         match r {
             Ok(v) => results.push(v),
             Err(p) => {
-                if first_panic.is_none() {
+                if culprit == Some(i) {
+                    culprit_panic = Some(p);
+                } else if first_panic.is_none() {
                     first_panic = Some(p);
                 }
             }
         }
     }
-    if let Some(p) = first_panic {
+    if let Some(p) = culprit_panic.or(first_panic) {
         std::panic::resume_unwind(p);
     }
     (results, stats)
@@ -605,6 +677,90 @@ mod tests {
                 })
                 .collect(),
         );
+    }
+
+    #[test]
+    fn cross_shard_handoff_survives_peer_exit() {
+        // Regression: shard 1 hands the semaphore to parked shard 0 and
+        // immediately returns. Until the coordinator could see pending
+        // wakes, `mark_done` could observe shard 0 still Parked (grant
+        // pushed but not yet drained by its thread) and abort the fleet
+        // as deadlocked. Looped because the window is OS-timing-sized.
+        use crate::rt::sync::Semaphore;
+        for _ in 0..20 {
+            let sem = Semaphore::new(1);
+            let sem0 = sem.clone();
+            let sem1 = sem;
+            let mains: Vec<Box<dyn FnOnce() -> Duration + Send>> = vec![
+                Box::new(move || {
+                    rt::run_virtual(async move {
+                        rt::sleep(Duration::from_millis(1)).await;
+                        // Parked (no timers) until shard 1's release,
+                        // whose grant is stamped at 5ms.
+                        let _p = sem0.acquire_owned().await;
+                        rt::now().duration_since(SimInstant::default())
+                    })
+                }),
+                Box::new(move || {
+                    rt::run_virtual(async move {
+                        let _p = sem1.acquire_owned().await;
+                        rt::sleep(Duration::from_millis(5)).await;
+                        rt::now().duration_since(SimInstant::default())
+                    })
+                }),
+            ];
+            let outs = run_sharded(mains);
+            assert_eq!(
+                outs,
+                vec![Duration::from_millis(5), Duration::from_millis(5)]
+            );
+        }
+    }
+
+    #[test]
+    fn pending_grant_caps_peer_gate_admission() {
+        // Regression (conservative-horizon soundness): shard 1 releases
+        // the semaphore at 5ms — the grant, stamped 5ms, lands in parked
+        // shard 0's queue — then gates a shared mutation at 6ms. Shard
+        // 0's stale Parked status advertises an infinite horizon, so
+        // without the pending-wake cursor cap shard 1's gate could be
+        // admitted before shard 0 acts at 5ms, making the mutation
+        // order OS-scheduling-dependent. Serial order is 0-then-1.
+        use crate::rt::sync::Semaphore;
+        for _ in 0..20 {
+            let sem = Semaphore::new(1);
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let mains: Vec<Box<dyn FnOnce() + Send>> = vec![
+                Box::new({
+                    let sem = sem.clone();
+                    let log = log.clone();
+                    move || {
+                        rt::run_virtual(async move {
+                            rt::sleep(Duration::from_millis(1)).await;
+                            let _p = sem.acquire_owned().await; // resumes at 5ms
+                            let _g = gate();
+                            log.lock().unwrap().push(0u32);
+                        })
+                    }
+                }),
+                Box::new({
+                    let sem = sem.clone();
+                    let log = log.clone();
+                    move || {
+                        rt::run_virtual(async move {
+                            let p = sem.acquire_owned().await;
+                            rt::sleep(Duration::from_millis(5)).await;
+                            drop(p); // grant stamped 5ms -> shard 0
+                            rt::sleep(Duration::from_millis(1)).await;
+                            let _g = gate();
+                            log.lock().unwrap().push(1u32);
+                        })
+                    }
+                }),
+            ];
+            run_sharded(mains);
+            assert_eq!(*log.lock().unwrap(), vec![0, 1]);
+        }
     }
 
     #[test]
