@@ -13,11 +13,20 @@
 //! an event another shard could still send it. [`low_water`] exposes the
 //! fleet-wide minimum (the global virtual time every shard has provably
 //! passed); it is `None` in ordinary single-clock runs.
+//!
+//! Since the `TimeSource` split the executor clock is a trait object
+//! resolved once at `block_on` entry; this facade is source-agnostic.
+//! [`time_source_kind`] tells diagnostics which family the calling
+//! executor runs on (virtual vs wall) without anything above the runtime
+//! branching on it per tick.
 
 use std::time::Duration;
 
 /// An instant on the (possibly virtual) simulation timeline.
 pub type SimInstant = crate::rt::SimInstant;
+
+/// Which kind of clock drives the calling executor.
+pub type TimeSourceKind = crate::rt::TimeSourceKind;
 
 /// Returns the current (virtual or wall) time.
 #[inline]
@@ -37,6 +46,13 @@ pub fn try_now() -> Option<SimInstant> {
 #[inline]
 pub fn low_water() -> Option<SimInstant> {
     crate::rt::sharded::low_water()
+}
+
+/// Which kind of [`TimeSource`](crate::rt::TimeSource) drives the calling
+/// executor; `None` outside a running executor.
+#[inline]
+pub fn time_source_kind() -> Option<TimeSourceKind> {
+    crate::rt::executor::try_with_core(|core| core.time_kind())
 }
 
 /// Sleeps for `d` on the (virtual or wall) timeline.
@@ -116,6 +132,15 @@ mod tests {
             sleep(Duration::ZERO).await;
             assert_eq!(now(), t0);
         });
+    }
+
+    #[test]
+    fn time_source_kind_reports_the_executor_clock() {
+        assert_eq!(time_source_kind(), None); // outside any executor
+        let k = rt::run_virtual(async { time_source_kind() });
+        assert_eq!(k, Some(TimeSourceKind::Virtual));
+        let k = rt::run_real(async { time_source_kind() });
+        assert_eq!(k, Some(TimeSourceKind::Wall));
     }
 
     #[test]

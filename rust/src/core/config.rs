@@ -362,6 +362,13 @@ pub struct SpillConfig {
     /// deletion instant. `u64::MAX` (default) never deletes —
     /// bit-identical to the uncapped tier.
     pub max_spill_bytes: u64,
+    /// Promote an object back to the warm KV tier after this many cold
+    /// reads: on the Nth read the object leaves the spill set (its
+    /// storage-seconds settle at the promotion instant) and is
+    /// re-inserted into the reader's arena, so further reads are warm.
+    /// `0` (default) never promotes — bit-identical to the
+    /// promotion-free tier.
+    pub promote_after_reads: u32,
 }
 
 impl Default for SpillConfig {
@@ -372,6 +379,7 @@ impl Default for SpillConfig {
             bandwidth_bps: 90e6,
             cost_gb_s: 0.023 / (30.0 * 24.0 * 3600.0),
             max_spill_bytes: u64::MAX,
+            promote_after_reads: 0,
         }
     }
 }

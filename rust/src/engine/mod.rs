@@ -10,12 +10,16 @@
 //! the multi-tenant [`JobService`] on top: many concurrent jobs — each
 //! with its own `JobId`-scoped arena, channels, and metrics — over one
 //! [`SharedPlatform`], with seeded open-loop arrivals and FIFO/fair
-//! admission.
+//! admission. [`server`] puts a wall-clock HTTP front door over the
+//! service (`wukong serve`): submissions arrive over localhost sockets,
+//! run on a `Mode::Real` executor, and every session records its
+//! arrival trace for the `sim::replay_check` record→replay oracle.
 
 pub mod client;
 pub mod driver;
 pub mod policies;
 pub mod policy;
+pub mod server;
 pub mod service;
 pub mod wukong;
 
@@ -25,9 +29,11 @@ pub(crate) mod serverful;
 
 pub use client::{Client, JobResult};
 pub use driver::{EngineDriver, ForensicRun, SharedPlatform};
+pub use server::{serve_on, ServeOutcome};
 pub use service::{
     job_cost_usd, run_service, Admission, ArrivalProfile, JobOutcome, JobRequest, JobService,
-    ServiceConfig, ServiceReport, Shed, ShedReason,
+    LiveObserver, LiveSubmission, RecordedJob, ServiceConfig, ServiceReport, SessionRecording,
+    Shed, ShedReason,
 };
 pub use policy::{
     CentralizedSpec, DecentralizedSpec, ExecutionMode, Notification, SchedulingPolicy,

@@ -1,0 +1,168 @@
+//! Pure request handlers: `(state, method, path, body)` → [`Response`].
+//!
+//! No sockets here — the unit tests below drive every handler directly,
+//! and [`http`](super::http) is a thin framing shim over [`handle`].
+
+use super::routes::{route, Route};
+use super::state::{JobStatus, ServerState, SubmitError};
+
+/// A to-be-serialized HTTP response: status code plus a plain-text body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    fn new(status: u16, body: impl Into<String>) -> Self {
+        Response {
+            status,
+            body: body.into(),
+        }
+    }
+}
+
+/// Dispatches one request against the shared state.
+pub fn handle(state: &ServerState, method: &str, path: &str, body: &str) -> Response {
+    match route(method, path) {
+        None => Response::new(404, "no such route\n"),
+        Some(Route::SubmitJob) => match state.submit(body.trim()) {
+            Ok((id, fresh)) => Response::new(
+                200,
+                format!(
+                    "job={id}\nstatus={}\n",
+                    if fresh { "queued" } else { "known" }
+                ),
+            ),
+            Err(SubmitError::BadSpec(e)) => Response::new(400, format!("bad spec: {e}\n")),
+            Err(SubmitError::Closed) => Response::new(503, "shutting down\n"),
+        },
+        Some(Route::JobStatus(id)) => match state.status(id) {
+            None => Response::new(404, format!("no job {id}\n")),
+            Some(status) => Response::new(200, format!("job={id}\nstatus={}\n", label(&status))),
+        },
+        Some(Route::JobResult(id)) => match state.status(id) {
+            None => Response::new(404, format!("no job {id}\n")),
+            Some(JobStatus::Done {
+                ok,
+                fingerprint,
+                row,
+            }) => {
+                let mut body = format!("job={id}\nok={ok}\n{row}\n");
+                for (task, hash) in &fingerprint {
+                    body.push_str(&format!("fingerprint t{}=0x{hash:016x}\n", task.0));
+                }
+                Response::new(200, body)
+            }
+            Some(JobStatus::Shed { reason }) => {
+                Response::new(200, format!("job={id}\nshed reason={reason}\n"))
+            }
+            Some(_) => Response::new(202, format!("job={id}\npending\n")),
+        },
+        Some(Route::Trace) => Response::new(200, state.trace()),
+        Some(Route::Shutdown) => {
+            if state.shutdown() {
+                Response::new(200, "draining\n")
+            } else {
+                Response::new(200, "already draining\n")
+            }
+        }
+    }
+}
+
+fn label(status: &JobStatus) -> String {
+    match status {
+        JobStatus::Queued => "queued".to_string(),
+        JobStatus::Running => "running".to_string(),
+        JobStatus::Done { ok, .. } => format!("done ok={ok}"),
+        JobStatus::Shed { reason } => format!("shed reason={reason}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::service::LiveSubmission;
+    use crate::rt::sync::mpsc;
+
+    /// State with a live receiver (kept so sends succeed without any
+    /// service loop running).
+    fn state() -> (ServerState, mpsc::Receiver<LiveSubmission>) {
+        let (tx, rx) = mpsc::unbounded();
+        (ServerState::new(tx), rx)
+    }
+
+    #[test]
+    fn bad_spec_is_a_400_with_the_parse_error() {
+        let (state, _rx) = state();
+        let resp = handle(&state, "POST", "/jobs", "shape=ring");
+        assert_eq!(resp.status, 400);
+        assert!(resp.body.contains("unknown shape"), "{}", resp.body);
+        // Nothing was registered for the failed submit.
+        let resp = handle(&state, "GET", "/jobs/1", "");
+        assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn unknown_job_id_and_unknown_route_are_404() {
+        let (state, _rx) = state();
+        assert_eq!(handle(&state, "GET", "/jobs/5", "").status, 404);
+        assert_eq!(handle(&state, "GET", "/jobs/5/result", "").status, 404);
+        assert_eq!(handle(&state, "GET", "/bogus", "").status, 404);
+        assert_eq!(handle(&state, "DELETE", "/jobs", "").status, 404);
+    }
+
+    #[test]
+    fn double_submit_is_idempotent_and_pending_results_say_202() {
+        let (state, mut rx) = state();
+        let first = handle(&state, "POST", "/jobs", "len=2&name=a");
+        assert_eq!(first.status, 200);
+        assert!(first.body.contains("job=1"), "{}", first.body);
+        assert!(first.body.contains("status=queued"), "{}", first.body);
+        let again = handle(&state, "POST", "/jobs", "len=2&name=a");
+        assert_eq!(again.status, 200);
+        assert!(again.body.contains("job=1"), "idempotent: {}", again.body);
+        assert!(again.body.contains("status=known"), "{}", again.body);
+        // Exactly ONE submission reached the service channel.
+        assert!(rx.try_recv().is_ok());
+        assert!(rx.try_recv().is_err(), "resubmit must not forward again");
+        // A different spec is a different job.
+        let other = handle(&state, "POST", "/jobs", "len=2&name=b");
+        assert!(other.body.contains("job=2"), "{}", other.body);
+        // Unfinished jobs poll as 202.
+        assert_eq!(handle(&state, "GET", "/jobs/1/result", "").status, 202);
+    }
+
+    #[test]
+    fn shutdown_closes_the_door_and_later_submits_are_503() {
+        let (state, _rx) = state();
+        assert_eq!(handle(&state, "POST", "/shutdown", "").status, 200);
+        let resp = handle(&state, "POST", "/jobs", "len=2");
+        assert_eq!(resp.status, 503);
+        // Shutdown is itself idempotent.
+        assert_eq!(handle(&state, "POST", "/shutdown", "").status, 200);
+    }
+
+    #[test]
+    fn observer_transitions_surface_in_status_and_result() {
+        use crate::core::JobId;
+        use crate::engine::service::{LiveObserver, ShedReason};
+        let (state, _rx) = state();
+        handle(&state, "POST", "/jobs", "len=2&name=a");
+        handle(&state, "POST", "/jobs", "len=2&name=b");
+        state.on_admitted(JobId(1));
+        assert!(handle(&state, "GET", "/jobs/1", "").body.contains("running"));
+        state.on_completed(JobId(1), true, &[(crate::core::TaskId(3), 0xBEEF)], "row");
+        let resp = handle(&state, "GET", "/jobs/1/result", "");
+        assert_eq!(resp.status, 200);
+        assert!(resp.body.contains("ok=true"), "{}", resp.body);
+        assert!(
+            resp.body.contains("fingerprint t3=0x000000000000beef"),
+            "{}",
+            resp.body
+        );
+        state.on_shed(JobId(2), ShedReason::QueueFull);
+        let resp = handle(&state, "GET", "/jobs/2", "");
+        assert!(resp.body.contains("shed reason=queue-full"), "{}", resp.body);
+    }
+}

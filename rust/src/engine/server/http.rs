@@ -1,0 +1,148 @@
+//! Minimal HTTP/1.1 framing over `std::net` — enough for the front
+//! door's five routes and its tests/load generator. One thread per
+//! connection, `Connection: close` semantics, plain-text bodies. (The
+//! build environment is offline: no hyper, no tokio — the async side of
+//! the server is the crate's own `rt` executor, and these threads only
+//! do blocking socket I/O plus a mutex-guarded state poke.)
+
+use super::handlers;
+use super::state::ServerState;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Largest accepted request (head + body) — a front-door sanity cap.
+const MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// Accepts connections until the listener errors (usually process
+/// exit), one handler thread per connection.
+pub fn accept_loop(listener: TcpListener, state: Arc<ServerState>) {
+    for conn in listener.incoming() {
+        let Ok(stream) = conn else { continue };
+        let state = Arc::clone(&state);
+        std::thread::spawn(move || {
+            let _ = serve_conn(stream, &state);
+        });
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, state: &ServerState) -> std::io::Result<()> {
+    let (method, path, body) = match read_request(&mut stream) {
+        Ok(parts) => parts,
+        Err(e) => {
+            let _ = write_response(
+                &mut stream,
+                &handlers::Response {
+                    status: 400,
+                    body: format!("malformed request: {e}\n"),
+                },
+            );
+            return Ok(());
+        }
+    };
+    let resp = handlers::handle(state, &method, &path, &body);
+    write_response(&mut stream, &resp)
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Reads one request: request line, headers (only `Content-Length` is
+/// honored), body.
+fn read_request(stream: &mut TcpStream) -> std::io::Result<(String, String, String)> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_REQUEST_BYTES {
+            return Err(bad("request head too large"));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(bad("connection closed mid-request"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).map_err(|_| bad("non-utf8 head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().ok_or_else(|| bad("empty request"))?;
+    let mut parts = request_line.split(' ');
+    let method = parts.next().ok_or_else(|| bad("missing method"))?.to_string();
+    let path = parts.next().ok_or_else(|| bad("missing path"))?.to_string();
+    let content_length = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.trim().parse::<usize>())
+        .transpose()
+        .map_err(|_| bad("bad content-length"))?
+        .unwrap_or(0);
+    if content_length > MAX_REQUEST_BYTES {
+        return Err(bad("request body too large"));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(bad("connection closed mid-body"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body = String::from_utf8(body).map_err(|_| bad("non-utf8 body"))?;
+    Ok((method, path, body))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+pub fn write_response(stream: &mut TcpStream, resp: &handlers::Response) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+/// A one-shot blocking HTTP client (tests, the load generator, the CI
+/// smoke): sends `method path` with `body`, returns `(status, body)`.
+pub fn request(addr: &str, method: &str, path: &str, body: &str) -> std::io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let raw = String::from_utf8(raw).map_err(|_| bad("non-utf8 response"))?;
+    let (head, resp_body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| bad("truncated response"))?;
+    let status = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| bad("bad status line"))?;
+    Ok((status, resp_body.to_string()))
+}

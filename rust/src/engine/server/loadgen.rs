@@ -1,0 +1,108 @@
+//! Seeded open-loop load generator for the front door.
+//!
+//! Open loop means the schedule never waits for the server: arrival
+//! offsets are precomputed from the seed (the same
+//! [`ArrivalProfile::Poisson`] machinery the simulator uses), and each
+//! submission fires at its offset whether or not earlier requests have
+//! been answered — the tenant-traffic model the paper's bursty pitch
+//! assumes, now aimed at a real socket.
+
+use crate::core::SplitMix64;
+use crate::engine::service::ArrivalProfile;
+use std::time::Instant;
+
+/// What to generate and where to aim it.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// `host:port` of a running `wukong serve`.
+    pub addr: String,
+    /// Target arrival rate, jobs per second (Poisson gaps around it).
+    pub rps: f64,
+    /// Total jobs to submit.
+    pub jobs: usize,
+    /// Seed for both the arrival schedule and the per-job spec mix.
+    pub seed: u64,
+    /// Post `/shutdown` after the last submission, draining the server.
+    pub shutdown: bool,
+}
+
+/// What came back.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LoadSummary {
+    pub submitted: usize,
+    /// 200s — accepted (or idempotent-known) submissions.
+    pub accepted: usize,
+    /// Non-200 responses (shed at the door, draining, bad spec).
+    pub refused: usize,
+    /// Transport errors (connect/read failures).
+    pub errors: usize,
+}
+
+/// Runs the generator to completion (blocking; one request at a time —
+/// saturation benchmarking is a recorded ROADMAP follow-up).
+pub fn run_load(cfg: &LoadConfig) -> LoadSummary {
+    let mean_gap_ms = 1000.0 / cfg.rps.max(1e-9);
+    let offsets = ArrivalProfile::Poisson { mean_gap_ms }.arrival_offsets(cfg.jobs, cfg.seed);
+    let mut rng = SplitMix64::new(cfg.seed ^ 0x10AD_6E2E_u64);
+    let start = Instant::now();
+    let mut summary = LoadSummary::default();
+    for (i, offset) in offsets.iter().enumerate() {
+        let elapsed = start.elapsed();
+        if *offset > elapsed {
+            std::thread::sleep(*offset - elapsed);
+        }
+        let len = 2 + (rng.next_u64() % 6) as usize;
+        let tenant = rng.next_u64() % 4;
+        let seed = rng.next_u64();
+        let spec = format!("shape=chain&len={len}&ms=2&name=load-{i}&tenant={tenant}&seed={seed}");
+        summary.submitted += 1;
+        match super::http::request(&cfg.addr, "POST", "/jobs", &spec) {
+            Ok((200, _)) => summary.accepted += 1,
+            Ok(_) => summary.refused += 1,
+            Err(_) => summary.errors += 1,
+        }
+    }
+    if cfg.shutdown {
+        let _ = super::http::request(&cfg.addr, "POST", "/shutdown", "");
+    }
+    summary
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::SimConfig;
+    use crate::engine::server::serve_on;
+    use crate::engine::service::ServiceConfig;
+    use std::net::TcpListener;
+
+    #[test]
+    fn load_generator_drives_a_live_server_to_completion() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = listener.local_addr().unwrap().to_string();
+        let gen = std::thread::spawn(move || {
+            run_load(&LoadConfig {
+                addr,
+                rps: 200.0,
+                jobs: 4,
+                seed: 7,
+                shutdown: true,
+            })
+        });
+        let out = serve_on(listener, ServiceConfig::new(SimConfig::test(), 7));
+        let summary = gen.join().expect("load thread");
+        assert_eq!(summary.submitted, 4);
+        assert_eq!(summary.accepted, 4, "{summary:?}");
+        assert_eq!(summary.errors, 0, "{summary:?}");
+        assert_eq!(out.report.completed() + out.report.rejected.len(), 4);
+        assert!(out.report.all_ok());
+        assert_eq!(out.recording.jobs.len(), 4);
+        // The recorded offsets are non-decreasing — the monotonic-clock
+        // invariant ArrivalProfile::Recorded relies on.
+        assert!(out
+            .recording
+            .jobs
+            .windows(2)
+            .all(|w| w[0].offset_ns <= w[1].offset_ns));
+    }
+}

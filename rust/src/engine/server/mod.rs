@@ -1,0 +1,127 @@
+//! The wall-clock HTTP front door over the multi-tenant job service.
+//!
+//! `wukong serve` binds a plain `std::net::TcpListener` (the build
+//! environment is offline — no hyper/axum; the HTTP/1.1 framing is
+//! hand-rolled in [`http`]) and runs [`JobService::run_live`] on a
+//! `Mode::Real` executor: modeled latencies become real async sleeps
+//! behind the same [`TimeSource`](crate::rt::TimeSource) split the
+//! virtual simulator uses, so the engine code is byte-for-byte the code
+//! the oracles sweep.
+//!
+//! The module splits the classic three ways:
+//! - [`routes`] — URL → typed route (`POST /jobs`, `GET /jobs/:id`,
+//!   `GET /jobs/:id/result`, `GET /trace`, `POST /shutdown`),
+//! - [`handlers`] — pure `(state, method, path, body) → Response`
+//!   functions, unit-testable without sockets,
+//! - [`state`] — the shared job registry, which doubles as the
+//!   service's [`LiveObserver`].
+//!
+//! Every session **records** its arrival trace ([`SessionRecording`]:
+//! offsets, raw specs, tenants, seeds). `sim::replay_check` feeds such
+//! recordings back through the virtual-time service and requires
+//! byte-identical per-job sink fingerprints and shed decisions — the
+//! record→replay equivalence oracle that keeps the live front door
+//! honest against the simulator.
+
+pub mod handlers;
+pub mod http;
+pub mod loadgen;
+pub mod routes;
+pub mod spec;
+pub mod state;
+
+pub use handlers::{handle, Response};
+pub use loadgen::{run_load, LoadConfig, LoadSummary};
+pub use routes::{route, Route};
+pub use spec::build_request;
+pub use state::{JobStatus, ServerState};
+
+use crate::engine::service::{
+    JobService, LiveObserver, LiveSubmission, ServiceConfig, ServiceReport, SessionRecording,
+};
+use crate::rt::sync::mpsc;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+/// Everything one live session produced: the final fleet report and the
+/// replayable arrival recording.
+pub struct ServeOutcome {
+    pub report: ServiceReport,
+    pub recording: SessionRecording,
+}
+
+/// Serves the front door on an already-bound listener until a
+/// `POST /shutdown` drains the session, then returns the final report
+/// and recording. Blocks the calling thread (it hosts the `Mode::Real`
+/// executor); accept/connection threads run beside it.
+pub fn serve_on(listener: TcpListener, cfg: ServiceConfig) -> ServeOutcome {
+    let (tx, rx) = mpsc::unbounded::<LiveSubmission>();
+    let state = Arc::new(ServerState::new(tx));
+    let accept_state = Arc::clone(&state);
+    std::thread::spawn(move || http::accept_loop(listener, accept_state));
+    let service = JobService::new(cfg);
+    let observer: Arc<dyn LiveObserver> = Arc::clone(&state) as Arc<dyn LiveObserver>;
+    let (report, recording) = crate::rt::block_on(
+        async move { service.run_live(rx, observer).await },
+        crate::rt::Mode::Real,
+    );
+    // Late `GET /trace` calls (the process may keep serving until it
+    // exits) see the canonical trace, not just the arrival log.
+    state.set_final_trace(report.render_trace());
+    ServeOutcome { report, recording }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::SimConfig;
+
+    #[test]
+    fn front_door_serves_submit_poll_result_and_shutdown_over_localhost() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = listener.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || {
+            let spec = "shape=chain&len=3&ms=2&name=smoke&tenant=0&seed=5";
+            let (status, body) = http::request(&addr, "POST", "/jobs", spec).expect("submit");
+            assert_eq!(status, 200, "{body}");
+            assert!(body.contains("job=1"), "{body}");
+            // Idempotent double-submit: same spec, same job id, no new job.
+            let (status, body2) = http::request(&addr, "POST", "/jobs", spec).expect("resubmit");
+            assert_eq!(status, 200);
+            assert!(body2.contains("job=1"), "{body2}");
+            // Poll the result until the job completes (modeled work is
+            // ~6 ms of real sleeps in serve mode).
+            let mut result = None;
+            for _ in 0..500 {
+                let (status, body) =
+                    http::request(&addr, "GET", "/jobs/1/result", "").expect("poll");
+                if status == 200 {
+                    result = Some(body);
+                    break;
+                }
+                assert_eq!(status, 202, "pending polls say 202: {body}");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            let result = result.expect("job finished within the poll budget");
+            assert!(result.contains("fingerprint"), "{result}");
+            let (status, trace) = http::request(&addr, "GET", "/trace", "").expect("trace");
+            assert_eq!(status, 200);
+            assert!(trace.contains("arrival 1 "), "{trace}");
+            let (status, _) = http::request(&addr, "GET", "/jobs/99", "").expect("status 99");
+            assert_eq!(status, 404, "unknown job id");
+            let (status, _) = http::request(&addr, "POST", "/shutdown", "").expect("shutdown");
+            assert_eq!(status, 200);
+        });
+        let cfg = ServiceConfig::new(SimConfig::test(), 1);
+        let out = serve_on(listener, cfg);
+        client.join().expect("client thread");
+        assert_eq!(out.report.completed(), 1);
+        assert!(out.report.all_ok());
+        assert_eq!(out.recording.jobs.len(), 1);
+        assert_eq!(out.recording.jobs[0].name, "smoke");
+        assert_eq!(
+            out.recording.jobs[0].spec,
+            "shape=chain&len=3&ms=2&name=smoke&tenant=0&seed=5"
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! URL routing: `(method, path)` → typed [`Route`].
+//!
+//! Kept separate from the handlers so the route table is readable at a
+//! glance and handler logic never string-matches paths.
+
+/// The front door's route table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// `POST /jobs` — submit a job spec (body), idempotent per spec.
+    SubmitJob,
+    /// `GET /jobs/:id` — lifecycle status of one job.
+    JobStatus(u64),
+    /// `GET /jobs/:id/result` — result of one finished job (202 while
+    /// pending).
+    JobResult(u64),
+    /// `GET /trace` — the arrival log, plus the canonical trace once
+    /// the session has ended.
+    Trace,
+    /// `POST /shutdown` — drop the ingest side; the session drains and
+    /// the server's final report is produced.
+    Shutdown,
+}
+
+/// Resolves a request line to a route. `None` is a 404.
+pub fn route(method: &str, path: &str) -> Option<Route> {
+    match (method, path) {
+        ("POST", "/jobs") => Some(Route::SubmitJob),
+        ("POST", "/shutdown") => Some(Route::Shutdown),
+        ("GET", "/trace") => Some(Route::Trace),
+        ("GET", _) => {
+            let rest = path.strip_prefix("/jobs/")?;
+            if let Some(id) = rest.strip_suffix("/result") {
+                Some(Route::JobResult(id.parse().ok()?))
+            } else {
+                Some(Route::JobStatus(rest.parse().ok()?))
+            }
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_resolve_and_reject() {
+        assert_eq!(route("POST", "/jobs"), Some(Route::SubmitJob));
+        assert_eq!(route("GET", "/jobs/7"), Some(Route::JobStatus(7)));
+        assert_eq!(route("GET", "/jobs/7/result"), Some(Route::JobResult(7)));
+        assert_eq!(route("GET", "/trace"), Some(Route::Trace));
+        assert_eq!(route("POST", "/shutdown"), Some(Route::Shutdown));
+        for (m, p) in [
+            ("GET", "/jobs"),
+            ("GET", "/jobs/x"),
+            ("GET", "/jobs/7/other"),
+            ("DELETE", "/jobs/7"),
+            ("POST", "/trace"),
+            ("GET", "/nope"),
+        ] {
+            assert_eq!(route(m, p), None, "{m} {p}");
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! The deterministic job-spec parser: `k=v&k=v` strings → [`JobRequest`].
+//!
+//! The front door accepts specs in request bodies; the recording stores
+//! them verbatim; the replay oracle rebuilds requests from them through
+//! this same function — so the parser MUST be a pure function of the
+//! spec string (no clocks, no global state), or record→replay breaks.
+//!
+//! Keys (all optional):
+//! - `shape=chain|fan` — DAG family (default `chain`),
+//! - `len=N`           — tasks in the chain / fan width, 1..=512 (default 4),
+//! - `ms=F`            — per-task modeled sleep in milliseconds (default 5),
+//! - `bytes=N`         — per-task output payload bytes (default 8),
+//! - `name=S`          — job name (default `<shape>-<len>`),
+//! - `tenant=N`        — tenant id (default 0),
+//! - `priority=N`      — admission priority 0..=255 (default 0),
+//! - `seed=N`          — per-job simulation seed (default 1).
+
+use crate::compute::Payload;
+use crate::dag::DagBuilder;
+use crate::engine::policies::WukongPolicy;
+use crate::engine::service::JobRequest;
+use std::sync::Arc;
+
+/// Largest accepted `len` — a front-door sanity cap, not an engine limit.
+pub const MAX_LEN: usize = 512;
+
+/// Builds a [`JobRequest`] from a spec string. Pure and deterministic:
+/// the same spec always builds the same request (same DAG topology,
+/// payloads, seed), which is what lets a recorded session replay.
+pub fn build_request(spec: &str) -> Result<JobRequest, String> {
+    let mut shape = "chain";
+    let mut len = 4usize;
+    let mut ms = 5.0f64;
+    let mut bytes = 8u64;
+    let mut name: Option<String> = None;
+    let mut tenant = 0u32;
+    let mut priority = 0u8;
+    let mut seed = 1u64;
+
+    for pair in spec.split('&').filter(|p| !p.is_empty()) {
+        let (key, value) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("malformed pair '{pair}' (want key=value)"))?;
+        match key {
+            "shape" => {
+                shape = match value {
+                    "chain" => "chain",
+                    "fan" => "fan",
+                    other => return Err(format!("unknown shape '{other}' (want chain|fan)")),
+                }
+            }
+            "len" => {
+                len = value
+                    .parse()
+                    .map_err(|_| format!("bad len '{value}'"))?;
+                if len == 0 || len > MAX_LEN {
+                    return Err(format!("len {len} out of range 1..={MAX_LEN}"));
+                }
+            }
+            "ms" => {
+                ms = value.parse().map_err(|_| format!("bad ms '{value}'"))?;
+                if !(ms >= 0.0 && ms.is_finite()) {
+                    return Err(format!("ms {ms} must be finite and >= 0"));
+                }
+            }
+            "bytes" => bytes = value.parse().map_err(|_| format!("bad bytes '{value}'"))?,
+            "name" => name = Some(value.to_string()),
+            "tenant" => tenant = value.parse().map_err(|_| format!("bad tenant '{value}'"))?,
+            "priority" => {
+                priority = value.parse().map_err(|_| format!("bad priority '{value}'"))?
+            }
+            "seed" => seed = value.parse().map_err(|_| format!("bad seed '{value}'"))?,
+            other => return Err(format!("unknown key '{other}'")),
+        }
+    }
+
+    let mut b = DagBuilder::new();
+    match shape {
+        "chain" => {
+            let mut prev = b.add_task("t0", Payload::Sleep { ms }, bytes, &[]);
+            for i in 1..len {
+                prev = b.add_task(format!("t{i}"), Payload::Sleep { ms }, bytes, &[prev]);
+            }
+        }
+        "fan" => {
+            let root = b.add_task("root", Payload::Sleep { ms }, bytes, &[]);
+            for i in 0..len {
+                b.add_task(format!("leaf{i}"), Payload::Sleep { ms }, bytes, &[root]);
+            }
+        }
+        _ => unreachable!("shape validated above"),
+    }
+    let dag = b.build().map_err(|e| format!("dag build failed: {e:?}"))?;
+    Ok(JobRequest {
+        name: name.unwrap_or_else(|| format!("{shape}-{len}")),
+        tenant,
+        priority,
+        seed,
+        dag,
+        policy: Arc::new(WukongPolicy),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let req = build_request("").unwrap();
+        assert_eq!(req.name, "chain-4");
+        assert_eq!(req.dag.len(), 4);
+        assert_eq!((req.tenant, req.priority, req.seed), (0, 0, 1));
+
+        let req = build_request("shape=fan&len=3&name=f&tenant=2&priority=9&seed=77").unwrap();
+        assert_eq!(req.name, "f");
+        assert_eq!(req.dag.len(), 4, "root + 3 leaves");
+        assert_eq!((req.tenant, req.priority, req.seed), (2, 9, 77));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "nonsense",
+            "shape=ring",
+            "len=0",
+            "len=100000",
+            "ms=NaN",
+            "tenant=-1",
+            "mystery=1",
+        ] {
+            assert!(build_request(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn same_spec_builds_the_same_request() {
+        let spec = "shape=chain&len=6&ms=3&bytes=16&tenant=1&seed=42";
+        let a = build_request(spec).unwrap();
+        let b = build_request(spec).unwrap();
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.dag.len(), b.dag.len());
+    }
+}

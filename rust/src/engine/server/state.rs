@@ -1,0 +1,184 @@
+//! Shared front-door state: the job registry the HTTP handlers read and
+//! the [`LiveObserver`] the service loop writes.
+//!
+//! One `Mutex` guards everything — handler threads and the executor
+//! thread both take it for microseconds at a time, and the front door is
+//! a test/bench surface, not a throughput product (ROADMAP records the
+//! saturation follow-up).
+
+use crate::core::{JobId, TaskId};
+use crate::engine::service::{LiveObserver, LiveSubmission, ShedReason};
+use crate::rt::sync::mpsc;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Where one submitted job is in its lifecycle, as the front door sees
+/// it. Transitions: `Queued` → `Running` → `Done`, or `Queued` → `Shed`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    /// Accepted and forwarded to the service; not yet admitted.
+    Queued,
+    /// Admitted into a job slot.
+    Running,
+    /// Finished; carries the engine's success bit, the bit-exact sink
+    /// fingerprint, and the formatted outcome row.
+    Done {
+        ok: bool,
+        fingerprint: Vec<(TaskId, u64)>,
+        row: String,
+    },
+    /// Shed without running (queue-full / preempted / budget).
+    Shed { reason: String },
+}
+
+/// Why a submission was not accepted.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The spec failed to parse; the message names the offending pair.
+    BadSpec(String),
+    /// The session is draining (a shutdown was requested).
+    Closed,
+}
+
+struct JobView {
+    spec: String,
+    status: JobStatus,
+}
+
+struct Inner {
+    /// The ingest side of the live session. `None` once a shutdown
+    /// request dropped it (the service loop then drains and exits).
+    tx: Option<mpsc::Sender<LiveSubmission>>,
+    /// Index `i` is job `i + 1` — the service assigns ids in channel
+    /// order, and `submit` holds the lock across send, so the two
+    /// numbering schemes agree by construction.
+    jobs: Vec<JobView>,
+    /// Idempotency map: a spec string resubmitted verbatim returns the
+    /// original job id instead of creating a duplicate.
+    by_spec: HashMap<String, u64>,
+    /// The session's canonical trace, installed after the service loop
+    /// returns.
+    final_trace: Option<String>,
+}
+
+/// The registry behind the HTTP handlers. Doubles as the service's
+/// [`LiveObserver`]: admission/completion/shed callbacks update job
+/// statuses in place.
+pub struct ServerState {
+    inner: Mutex<Inner>,
+}
+
+impl ServerState {
+    pub fn new(tx: mpsc::Sender<LiveSubmission>) -> Self {
+        ServerState {
+            inner: Mutex::new(Inner {
+                tx: Some(tx),
+                jobs: Vec::new(),
+                by_spec: HashMap::new(),
+                final_trace: None,
+            }),
+        }
+    }
+
+    /// Parses and forwards one submission. Returns `(job id, fresh)` —
+    /// `fresh` is false when the spec was an idempotent resubmit.
+    pub fn submit(&self, spec: &str) -> Result<(u64, bool), SubmitError> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(&id) = inner.by_spec.get(spec) {
+            return Ok((id, false));
+        }
+        let Some(tx) = inner.tx.as_ref() else {
+            return Err(SubmitError::Closed);
+        };
+        let req = super::spec::build_request(spec).map_err(SubmitError::BadSpec)?;
+        if tx
+            .send(LiveSubmission {
+                req,
+                spec: spec.to_string(),
+            })
+            .is_err()
+        {
+            // The service loop is gone (receiver dropped) — treat like
+            // an explicit shutdown.
+            inner.tx = None;
+            return Err(SubmitError::Closed);
+        }
+        let id = inner.jobs.len() as u64 + 1;
+        inner.jobs.push(JobView {
+            spec: spec.to_string(),
+            status: JobStatus::Queued,
+        });
+        inner.by_spec.insert(spec.to_string(), id);
+        Ok((id, true))
+    }
+
+    /// Status of job `id`, or `None` for an unknown id.
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        let inner = self.inner.lock().unwrap();
+        let idx = id.checked_sub(1)? as usize;
+        inner.jobs.get(idx).map(|j| j.status.clone())
+    }
+
+    /// Drops the ingest sender so the live session drains and returns.
+    /// `true` if this call closed it, `false` if it was already closed.
+    pub fn shutdown(&self) -> bool {
+        self.inner.lock().unwrap().tx.take().is_some()
+    }
+
+    pub fn set_final_trace(&self, trace: String) {
+        self.inner.lock().unwrap().final_trace = Some(trace);
+    }
+
+    /// The trace view: one arrival line per submission (the server-side
+    /// mirror of the [`SessionRecording`]), plus the session's canonical
+    /// trace once it has ended.
+    ///
+    /// [`SessionRecording`]: crate::engine::service::SessionRecording
+    pub fn trace(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (i, j) in inner.jobs.iter().enumerate() {
+            out.push_str(&format!("arrival {} spec={}\n", i + 1, j.spec));
+        }
+        if let Some(t) = &inner.final_trace {
+            out.push_str(t);
+        }
+        out
+    }
+
+    fn set_status(&self, job: JobId, status: JobStatus) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(idx) = job.0.checked_sub(1) else {
+            return;
+        };
+        if let Some(view) = inner.jobs.get_mut(idx as usize) {
+            view.status = status;
+        }
+    }
+}
+
+impl LiveObserver for ServerState {
+    fn on_admitted(&self, job: JobId) {
+        self.set_status(job, JobStatus::Running);
+    }
+
+    fn on_completed(&self, job: JobId, ok: bool, fingerprint: &[(TaskId, u64)], row: &str) {
+        self.set_status(
+            job,
+            JobStatus::Done {
+                ok,
+                fingerprint: fingerprint.to_vec(),
+                row: row.to_string(),
+            },
+        );
+    }
+
+    fn on_shed(&self, job: JobId, reason: ShedReason) {
+        self.set_status(
+            job,
+            JobStatus::Shed {
+                reason: reason.to_string(),
+            },
+        );
+    }
+}

@@ -36,7 +36,7 @@ use crate::faas::Billing;
 use crate::kvstore::{ArenaForensics, JobArena};
 use crate::metrics::JobReport;
 use crate::rt::sync::mpsc;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -77,12 +77,25 @@ pub enum ArrivalProfile {
         intra_ms: f64,
         idle_ms: f64,
     },
+    /// Explicit arrival offsets (nanoseconds from session start), as
+    /// captured by a live wall-clock session's [`SessionRecording`] —
+    /// the replay half of the record→replay oracle. Offsets must be
+    /// non-decreasing (a live session records them from one monotonic
+    /// clock, so they are by construction); requests beyond the recorded
+    /// length reuse the last offset. The arrival seed is ignored.
+    Recorded { offsets_ns: Vec<u64> },
 }
 
 impl ArrivalProfile {
     /// Arrival offsets (from service start) for `n` jobs. Non-decreasing;
     /// the first job arrives at 0.
     pub fn arrival_offsets(&self, n: usize, seed: u64) -> Vec<Duration> {
+        if let ArrivalProfile::Recorded { offsets_ns } = self {
+            let last = offsets_ns.last().copied().unwrap_or(0);
+            return (0..n)
+                .map(|i| Duration::from_nanos(offsets_ns.get(i).copied().unwrap_or(last)))
+                .collect();
+        }
         let mut rng = SplitMix64::new(seed ^ 0xA881_11A1_5EED_u64);
         let mut t_ms = 0.0f64;
         (0..n)
@@ -103,6 +116,9 @@ impl ArrivalProfile {
                             } else {
                                 intra_ms.max(0.0)
                             }
+                        }
+                        ArrivalProfile::Recorded { .. } => {
+                            unreachable!("recorded profiles return verbatim above")
                         }
                     };
                 }
@@ -162,6 +178,83 @@ pub struct Shed {
     pub reason: ShedReason,
 }
 
+/// One submission into a live (wall-clock) session: the built request
+/// plus the raw spec string it was built from. The spec is recorded
+/// verbatim so a virtual-time replay can rebuild the identical request
+/// through the same deterministic spec parser.
+pub struct LiveSubmission {
+    pub req: JobRequest,
+    pub spec: String,
+}
+
+/// What a live session records about one submission — everything a
+/// replay needs to rebuild it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecordedJob {
+    /// Arrival offset from session start, nanoseconds (monotonic — a
+    /// live session stamps every arrival from one wall clock).
+    pub offset_ns: u64,
+    /// The raw job spec as submitted; replay rebuilds the request from
+    /// this through the same parser the front door used.
+    pub spec: String,
+    pub name: String,
+    pub tenant: u32,
+    pub priority: u8,
+    pub seed: u64,
+}
+
+/// The arrival trace of one live session — the replay recipe the
+/// record→replay oracle (`sim::replay_check`) feeds back through the
+/// virtual-time service.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SessionRecording {
+    /// Submissions in arrival order (index `i` is job `i + 1`).
+    pub jobs: Vec<RecordedJob>,
+}
+
+impl SessionRecording {
+    /// The replay arrival profile: the recorded offsets, verbatim.
+    pub fn replay_profile(&self) -> ArrivalProfile {
+        ArrivalProfile::Recorded {
+            offsets_ns: self.jobs.iter().map(|j| j.offset_ns).collect(),
+        }
+    }
+
+    /// Canonical text form: one line per submission, arrival order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (i, j) in self.jobs.iter().enumerate() {
+            out.push_str(&format!(
+                "arrival {} offset_ns={} name={} tenant={} priority={} seed={} spec={}\n",
+                i + 1,
+                j.offset_ns,
+                j.name,
+                j.tenant,
+                j.priority,
+                j.seed,
+                j.spec,
+            ));
+        }
+        out
+    }
+}
+
+/// Callbacks a live session fires as jobs move through the service —
+/// the HTTP front door's state registry implements this to surface job
+/// status without reaching into the service loop. `()` is the no-op
+/// observer for tests.
+pub trait LiveObserver: Send + Sync {
+    /// `job` left the wait queue and started running.
+    fn on_admitted(&self, _job: JobId) {}
+    /// `job` finished; `ok` is the engine's success bit, `fingerprint`
+    /// the bit-exact sink digest, `row` the formatted outcome row.
+    fn on_completed(&self, _job: JobId, _ok: bool, _fingerprint: &[(TaskId, u64)], _row: &str) {}
+    /// `job` was shed without ever running.
+    fn on_shed(&self, _job: JobId, _reason: ShedReason) {}
+}
+
+impl LiveObserver for () {}
+
 /// Service configuration: the shared-platform base config plus the
 /// arrival/admission policy.
 #[derive(Clone, Debug)]
@@ -194,7 +287,22 @@ pub struct ServiceConfig {
     /// (accumulated from each [`JobOutcome::cost_usd`]) reaches it, that
     /// tenant's arriving *and queued* jobs are shed with
     /// [`ShedReason::Budget`]. Infinite by default.
+    ///
+    /// With a budget **refill** armed (both refill knobs below set), the
+    /// semantics soften from shed to *pause*: over-budget tenants' jobs
+    /// park in the wait queue instead of being shed, and resume when the
+    /// next window boundary raises the effective budget.
     pub tenant_budget_usd: f64,
+    /// Dollars added to every tenant's *effective* budget at each
+    /// [`budget_refill_window`](Self::budget_refill_window) boundary:
+    /// at elapsed time `t` the effective budget is
+    /// `tenant_budget_usd + refill * floor(t / window)`. `0.0` (the
+    /// default) disarms the refill and restores the hard shed-at-budget
+    /// semantics bit-for-bit.
+    pub budget_refill_usd_per_window: f64,
+    /// Length of one refill window. Meaningless while the refill amount
+    /// is `0.0`.
+    pub budget_refill_window: Duration,
     /// Demote budget-evicted arenas to the cold spill tier instead of
     /// destroying them (late `get`s then pay the cold penalty rather
     /// than failing with `MissingObject`). Defaults from
@@ -235,6 +343,8 @@ impl ServiceConfig {
             queue_cap: 64,
             kv_byte_budget: u64::MAX,
             tenant_budget_usd: f64::INFINITY,
+            budget_refill_usd_per_window: 0.0,
+            budget_refill_window: Duration::ZERO,
             spill_enabled,
             spill_latency_ms,
             spill_cost_gb_s,
@@ -270,6 +380,22 @@ impl ServiceConfig {
     pub fn with_tenant_budget(mut self, usd: f64) -> Self {
         self.tenant_budget_usd = usd;
         self
+    }
+
+    /// Arms the time-windowed budget refill: `usd` dollars join every
+    /// tenant's effective budget at each `window` boundary, and
+    /// over-budget tenants' jobs **pause** in the queue instead of being
+    /// shed (see `budget_refill_usd_per_window`).
+    pub fn with_budget_refill(mut self, usd: f64, window: Duration) -> Self {
+        self.budget_refill_usd_per_window = usd;
+        self.budget_refill_window = window;
+        self
+    }
+
+    /// Whether the time-windowed refill is armed (both knobs set): the
+    /// pause-instead-of-shed budget regime.
+    pub fn refill_active(&self) -> bool {
+        self.budget_refill_usd_per_window > 0.0 && self.budget_refill_window > Duration::ZERO
     }
 
     /// Arms (or disarms) the cold spill tier for budget-evicted
@@ -416,6 +542,10 @@ pub struct ServiceReport {
     /// Cold reads served by the spill tier / bytes they streamed.
     pub spill_reads: u64,
     pub spill_read_bytes: u64,
+    /// Objects promoted back to the warm KV tier after repeated cold
+    /// reads ([`SpillConfig::promote_after_reads`](crate::core::SpillConfig)
+    /// — zero with promotion off).
+    pub spill_promotions: u64,
     /// GB-seconds of cold storage settled over the run (all spill sets
     /// are purged at end of run, so this is the whole bill).
     pub spill_gb_seconds: f64,
@@ -571,13 +701,19 @@ impl ServiceReport {
         // trace format.
         if self.spill_demoted_bytes > 0 || self.spill_reads > 0 {
             out.push_str(&format!(
-                "spill demoted_bytes={} reads={} read_bytes={} gb_seconds={:.9} cost_usd={:.12}\n",
+                "spill demoted_bytes={} reads={} read_bytes={} gb_seconds={:.9} cost_usd={:.12}",
                 self.spill_demoted_bytes,
                 self.spill_reads,
                 self.spill_read_bytes,
                 self.spill_gb_seconds,
                 self.spill_cost_usd,
             ));
+            // Promotion suffix only when promotions happened, so runs
+            // with the knob off render the exact pre-promotion format.
+            if self.spill_promotions > 0 {
+                out.push_str(&format!(" promotions={}", self.spill_promotions));
+            }
+            out.push('\n');
         }
         // Same activity gate for the fleet recovery ledger: fault-free
         // (and recovery-off) service runs render the pre-recovery format.
@@ -619,44 +755,58 @@ impl JobService {
     }
 
     /// Position within `queue` of the next job to admit, per the
-    /// admission policy. `None` iff the queue is empty.
+    /// admission policy. Tenants in `parked` (over their effective
+    /// budget under an armed refill — always empty otherwise) are
+    /// skipped: their jobs wait for the next refill window. `None` iff
+    /// no admittable job is queued.
     fn pick(
         &self,
         queue: &VecDeque<usize>,
         requests: &[Option<JobRequest>],
         tenant_admitted: &HashMap<u32, usize>,
+        parked: &HashSet<u32>,
     ) -> Option<usize> {
         if queue.is_empty() {
             return None;
         }
+        let tenant_of =
+            |idx: usize| -> u32 { requests[idx].as_ref().expect("queued twice").tenant };
         match self.cfg.admission {
-            Admission::Fifo => Some(0),
+            Admission::Fifo => queue
+                .iter()
+                .position(|&idx| !parked.contains(&tenant_of(idx))),
             Admission::Fair => {
                 // Least-admitted tenant first; arrival order breaks ties.
-                let mut best = 0usize;
+                let mut best: Option<usize> = None;
                 let mut best_load = usize::MAX;
                 for (pos, &idx) in queue.iter().enumerate() {
-                    let tenant = requests[idx].as_ref().expect("queued twice").tenant;
+                    let tenant = tenant_of(idx);
+                    if parked.contains(&tenant) {
+                        continue;
+                    }
                     let load = *tenant_admitted.get(&tenant).unwrap_or(&0);
                     if load < best_load {
                         best_load = load;
-                        best = pos;
+                        best = Some(pos);
                     }
                 }
-                Some(best)
+                best
             }
             Admission::Priority => {
                 // Highest priority first; arrival order breaks ties.
-                let mut best = 0usize;
+                let mut best: Option<usize> = None;
                 let mut best_prio = 0u8;
                 for (pos, &idx) in queue.iter().enumerate() {
+                    if parked.contains(&tenant_of(idx)) {
+                        continue;
+                    }
                     let prio = requests[idx].as_ref().expect("queued twice").priority;
-                    if pos == 0 || prio > best_prio {
+                    if best.is_none() || prio > best_prio {
                         best_prio = prio;
-                        best = pos;
+                        best = Some(pos);
                     }
                 }
-                Some(best)
+                best
             }
         }
     }
@@ -693,14 +843,42 @@ impl JobService {
                 reason,
             });
         };
-        let over_budget = |spent: &HashMap<u32, f64>, tenant: u32| {
-            *spent.get(&tenant).unwrap_or(&0.0) >= self.cfg.tenant_budget_usd
+        // With the refill armed, a tenant's effective budget grows by
+        // `refill` dollars at every window boundary; without it, the
+        // budget is the flat configured cap (identical to every prior
+        // release).
+        let refill = self.cfg.refill_active();
+        let budget_at = |elapsed: Duration| -> f64 {
+            if refill {
+                let windows =
+                    (elapsed.as_nanos() / self.cfg.budget_refill_window.as_nanos()) as f64;
+                self.cfg.tenant_budget_usd + self.cfg.budget_refill_usd_per_window * windows
+            } else {
+                self.cfg.tenant_budget_usd
+            }
+        };
+        let over_budget = |spent: &HashMap<u32, f64>, tenant: u32, elapsed: Duration| {
+            *spent.get(&tenant).unwrap_or(&0.0) >= budget_at(elapsed)
         };
 
         while outcomes.len() + rejected.len() < n {
+            // Tenants paused by the refill regime: over their effective
+            // budget *right now*, jobs parked until the next window.
+            // Always empty with the refill off, so `pick` degenerates to
+            // its classic policies.
+            let parked: HashSet<u32> = if refill {
+                let elapsed = clock::now() - t0;
+                queue
+                    .iter()
+                    .map(|&idx| requests[idx].as_ref().expect("queued twice").tenant)
+                    .filter(|&t| over_budget(&tenant_spent, t, elapsed))
+                    .collect()
+            } else {
+                HashSet::new()
+            };
             // Admit while job slots are free.
             while running < self.cfg.max_concurrent_jobs {
-                let Some(pos) = self.pick(&queue, &requests, &tenant_admitted) else {
+                let Some(pos) = self.pick(&queue, &requests, &tenant_admitted, &parked) else {
                     break;
                 };
                 let idx = queue.remove(pos).expect("picked position exists");
@@ -779,9 +957,11 @@ impl JobService {
                     let req = requests[idx].as_ref().expect("arrived twice");
                     (req.tenant, req.priority)
                 };
-                if over_budget(&tenant_spent, tenant) {
+                if !refill && over_budget(&tenant_spent, tenant, clock::now() - t0) {
                     // The tenant's dollar budget is exhausted: reject at
-                    // the door, before any substrate is touched.
+                    // the door, before any substrate is touched. With
+                    // the refill armed the job queues instead — it will
+                    // park until a window boundary refills the tenant.
                     shed(&mut rejected, &mut requests, idx, ShedReason::Budget);
                 } else if running >= self.cfg.max_concurrent_jobs
                     && queue.len() >= self.cfg.queue_cap
@@ -817,13 +997,31 @@ impl JobService {
                 continue; // try to admit it right away
             }
 
-            // Wait for the next event: a completion, or the next arrival.
-            let completed: Option<JobOutcome> = if next_arrival < n {
-                let wait = arrivals[next_arrival].saturating_sub(clock::now() - t0);
+            // Wait for the next event: a completion, the next arrival,
+            // or — with jobs parked under the refill regime — the next
+            // refill-window boundary (which may unpark a tenant).
+            let next_wake: Option<Duration> = {
+                let arrival = (next_arrival < n).then(|| arrivals[next_arrival]);
+                let boundary = if refill && !queue.is_empty() {
+                    let w_ns = self.cfg.budget_refill_window.as_nanos() as u64;
+                    let elapsed_ns = (clock::now() - t0).as_nanos() as u64;
+                    Some(Duration::from_nanos(
+                        (elapsed_ns / w_ns + 1).saturating_mul(w_ns),
+                    ))
+                } else {
+                    None
+                };
+                match (arrival, boundary) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                }
+            };
+            let completed: Option<JobOutcome> = if let Some(at) = next_wake {
+                let wait = at.saturating_sub(clock::now() - t0);
                 match crate::rt::timeout(wait, done_rx.recv()).await {
                     Ok(Some(outcome)) => Some(outcome),
                     Ok(None) => unreachable!("service holds a live sender"),
-                    Err(_) => None, // arrival due — absorbed at loop top
+                    Err(_) => None, // arrival or refill due — loop top handles it
                 }
             } else if running > 0 {
                 match done_rx.recv().await {
@@ -852,8 +1050,9 @@ impl JobService {
                 evicted.extend(platform.kv.enforce_kv_budget(self.cfg.kv_byte_budget));
                 // Budget sweep: tenants only cross their budget at a
                 // completion, so shedding their queued jobs here keeps
-                // the queue free of unadmittable entries.
-                if over_budget(&tenant_spent, outcome.tenant) {
+                // the queue free of unadmittable entries. Skipped under
+                // the refill regime — over-budget jobs park instead.
+                if !refill && over_budget(&tenant_spent, outcome.tenant, clock::now() - t0) {
                     let mut pos = 0;
                     while pos < queue.len() {
                         let qidx = queue[pos];
@@ -902,6 +1101,7 @@ impl JobService {
             spill_demoted_bytes: spill.demoted_bytes(),
             spill_reads: spill.reads(),
             spill_read_bytes: spill.read_bytes(),
+            spill_promotions: spill.promotions(),
             spill_gb_seconds,
             spill_cost_usd: spill_gb_seconds * base.spill.cost_gb_s,
             resident_kv_bytes: platform.kv.resident_kv_bytes(),
@@ -909,6 +1109,295 @@ impl JobService {
             registered_arenas: platform.kv.registered_arena_count(),
             tie_breaks: 0,
         }
+    }
+
+    /// Runs the service **live**: submissions stream in over `rx` from
+    /// outside the executor (the HTTP front door's accept threads) at
+    /// whatever wall-clock moments tenants choose, until every sender
+    /// is dropped. Meant for `Mode::Real` executors ([`crate::rt::block_on`]
+    /// over [`WallTime`](crate::rt::WallTime)); runs under virtual time
+    /// too, which is how the equivalence tests drive it.
+    ///
+    /// Every submission is recorded — arrival offset, raw spec, tenant,
+    /// priority, seed — into the returned [`SessionRecording`]. Feeding
+    /// that recording back through [`run`](Self::run) with
+    /// [`ArrivalProfile::Recorded`] replays the session in virtual
+    /// time; `sim::replay_check` pins per-job fingerprints and shed
+    /// decisions equal between the two.
+    pub async fn run_live(
+        &self,
+        mut rx: mpsc::Receiver<LiveSubmission>,
+        observer: Arc<dyn LiveObserver>,
+    ) -> (ServiceReport, SessionRecording) {
+        enum LiveEvent {
+            Submit(LiveSubmission),
+            Done(JobOutcome),
+            IngestClosed,
+        }
+        let base = self.cfg.effective_base();
+        let platform = SharedPlatform::new(&base);
+        let t0 = clock::now();
+
+        // Merge external submissions and in-executor completions into
+        // one event stream (the runtime has no select). The pump task
+        // holds an ExternalGuard for as long as the ingest side is
+        // open, so an otherwise-idle executor parks for the HTTP
+        // threads instead of declaring deadlock.
+        let (evt_tx, mut evt_rx) = mpsc::unbounded::<LiveEvent>();
+        let pump_tx = evt_tx.clone();
+        crate::rt::spawn(async move {
+            let _guard = crate::rt::ExternalGuard::register();
+            while let Some(sub) = rx.recv().await {
+                let _ = pump_tx.send(LiveEvent::Submit(sub));
+            }
+            let _ = pump_tx.send(LiveEvent::IngestClosed);
+        });
+
+        let mut requests: Vec<Option<JobRequest>> = Vec::new();
+        let mut arrivals: Vec<Duration> = Vec::new();
+        let mut recording = SessionRecording::default();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut tenant_admitted: HashMap<u32, usize> = HashMap::new();
+        let mut tenant_spent: HashMap<u32, f64> = HashMap::new();
+        let mut running = 0usize;
+        let mut outcomes: Vec<JobOutcome> = Vec::new();
+        let mut rejected: Vec<Shed> = Vec::new();
+        let mut evicted: Vec<JobId> = Vec::new();
+        let mut ingest_open = true;
+
+        let shed = |rejected: &mut Vec<Shed>,
+                    requests: &mut [Option<JobRequest>],
+                    idx: usize,
+                    reason: ShedReason| {
+            let req = requests[idx].take().expect("shed twice");
+            rejected.push(Shed {
+                job: JobId(idx as u64 + 1),
+                name: req.name,
+                tenant: req.tenant,
+                priority: req.priority,
+                reason,
+            });
+        };
+        let refill = self.cfg.refill_active();
+        let budget_at = |elapsed: Duration| -> f64 {
+            if refill {
+                let windows =
+                    (elapsed.as_nanos() / self.cfg.budget_refill_window.as_nanos()) as f64;
+                self.cfg.tenant_budget_usd + self.cfg.budget_refill_usd_per_window * windows
+            } else {
+                self.cfg.tenant_budget_usd
+            }
+        };
+        let over_budget = |spent: &HashMap<u32, f64>, tenant: u32, elapsed: Duration| {
+            *spent.get(&tenant).unwrap_or(&0.0) >= budget_at(elapsed)
+        };
+
+        while ingest_open || running > 0 || !queue.is_empty() {
+            // Admit while job slots are free — the serial admit body.
+            let parked: HashSet<u32> = if refill {
+                let elapsed = clock::now() - t0;
+                queue
+                    .iter()
+                    .map(|&idx| requests[idx].as_ref().expect("queued twice").tenant)
+                    .filter(|&t| over_budget(&tenant_spent, t, elapsed))
+                    .collect()
+            } else {
+                HashSet::new()
+            };
+            while running < self.cfg.max_concurrent_jobs {
+                let Some(pos) = self.pick(&queue, &requests, &tenant_admitted, &parked) else {
+                    break;
+                };
+                let idx = queue.remove(pos).expect("picked position exists");
+                let req = requests[idx].take().expect("admitted twice");
+                *tenant_admitted.entry(req.tenant).or_insert(0) += 1;
+                running += 1;
+
+                let job = JobId(idx as u64 + 1);
+                let weight = tenant_nic_weight(&base, req.tenant);
+                if weight != 1 {
+                    platform.kv.set_job_nic_weight(job, weight);
+                }
+                observer.on_admitted(job);
+                let submitted = arrivals[idx];
+                let started = clock::now() - t0;
+                let mut job_cfg = base.clone();
+                job_cfg.seed = req.seed;
+                let platform = Arc::clone(&platform);
+                let tx = evt_tx.clone();
+                let sampling = self.cfg.sampling;
+                let snapshot = self.cfg.kv_byte_budget < u64::MAX;
+                crate::rt::spawn(async move {
+                    let mut driver = EngineDriver::with_policy(job_cfg, req.policy)
+                        .on_platform(platform)
+                        .for_job(job)
+                        .for_tenant(req.tenant);
+                    if sampling {
+                        driver = driver.with_sampling();
+                    }
+                    let run = driver.run_forensic(&req.dag).await;
+                    let fingerprint = crate::sim::harness::fingerprint_outputs(&run.outputs);
+                    let forensics = if snapshot {
+                        run.kv.as_ref().map(|kv| kv.forensics())
+                    } else {
+                        None
+                    };
+                    let _ = tx.send(LiveEvent::Done(JobOutcome {
+                        job,
+                        tenant: req.tenant,
+                        name: req.name,
+                        priority: req.priority,
+                        cost_usd: 0.0, // filled by the completion fold
+                        submitted,
+                        started,
+                        finished: clock::now() - t0,
+                        report: run.report,
+                        fingerprint,
+                        metrics: run.metrics,
+                        kv: run.kv,
+                        forensics,
+                    }));
+                });
+            }
+
+            // Block for the next event. With jobs parked under the
+            // refill regime, also wake at the next window boundary.
+            let event = if refill && !queue.is_empty() {
+                let w_ns = self.cfg.budget_refill_window.as_nanos() as u64;
+                let elapsed_ns = (clock::now() - t0).as_nanos() as u64;
+                let at = Duration::from_nanos((elapsed_ns / w_ns + 1).saturating_mul(w_ns));
+                let wait = at.saturating_sub(clock::now() - t0);
+                match crate::rt::timeout(wait, evt_rx.recv()).await {
+                    Ok(ev) => ev,
+                    Err(_) => continue, // boundary reached — re-admit
+                }
+            } else {
+                evt_rx.recv().await
+            };
+            match event {
+                Some(LiveEvent::Submit(sub)) => {
+                    let idx = requests.len();
+                    let offset = clock::now() - t0;
+                    arrivals.push(offset);
+                    recording.jobs.push(RecordedJob {
+                        offset_ns: offset.as_nanos() as u64,
+                        spec: sub.spec,
+                        name: sub.req.name.clone(),
+                        tenant: sub.req.tenant,
+                        priority: sub.req.priority,
+                        seed: sub.req.seed,
+                    });
+                    let (tenant, priority) = (sub.req.tenant, sub.req.priority);
+                    requests.push(Some(sub.req));
+                    // The serial door decision, verbatim.
+                    if !refill && over_budget(&tenant_spent, tenant, offset) {
+                        shed(&mut rejected, &mut requests, idx, ShedReason::Budget);
+                        observer.on_shed(JobId(idx as u64 + 1), ShedReason::Budget);
+                    } else if running >= self.cfg.max_concurrent_jobs
+                        && queue.len() >= self.cfg.queue_cap
+                    {
+                        let victim = if self.cfg.admission == Admission::Priority {
+                            let mut victim: Option<(usize, u8)> = None;
+                            for (pos, &qidx) in queue.iter().enumerate() {
+                                let p =
+                                    requests[qidx].as_ref().expect("queued twice").priority;
+                                if victim.is_none_or(|(_, vp)| p <= vp) {
+                                    victim = Some((pos, p));
+                                }
+                            }
+                            victim.filter(|&(_, vp)| vp < priority).map(|(pos, _)| pos)
+                        } else {
+                            None
+                        };
+                        match victim {
+                            Some(pos) => {
+                                let vidx = queue.remove(pos).expect("victim position exists");
+                                shed(&mut rejected, &mut requests, vidx, ShedReason::Preempted);
+                                observer.on_shed(JobId(vidx as u64 + 1), ShedReason::Preempted);
+                                queue.push_back(idx);
+                            }
+                            None => {
+                                shed(&mut rejected, &mut requests, idx, ShedReason::QueueFull);
+                                observer.on_shed(JobId(idx as u64 + 1), ShedReason::QueueFull);
+                            }
+                        }
+                    } else {
+                        queue.push_back(idx);
+                    }
+                }
+                Some(LiveEvent::Done(mut outcome)) => {
+                    running -= 1;
+                    let cost = job_cost_usd(&self.cfg.base, &outcome.report);
+                    outcome.cost_usd = cost;
+                    *tenant_spent.entry(outcome.tenant).or_insert(0.0) += cost;
+                    platform.kv.retire(outcome.job);
+                    evicted.extend(platform.kv.enforce_kv_budget(self.cfg.kv_byte_budget));
+                    if !refill
+                        && over_budget(&tenant_spent, outcome.tenant, clock::now() - t0)
+                    {
+                        let mut pos = 0;
+                        while pos < queue.len() {
+                            let qidx = queue[pos];
+                            if requests[qidx].as_ref().expect("queued twice").tenant
+                                == outcome.tenant
+                            {
+                                queue.remove(pos);
+                                shed(&mut rejected, &mut requests, qidx, ShedReason::Budget);
+                                observer.on_shed(JobId(qidx as u64 + 1), ShedReason::Budget);
+                            } else {
+                                pos += 1;
+                            }
+                        }
+                    }
+                    observer.on_completed(
+                        outcome.job,
+                        outcome.report.is_ok(),
+                        &outcome.fingerprint,
+                        &outcome.row(),
+                    );
+                    outcomes.push(outcome);
+                }
+                Some(LiveEvent::IngestClosed) => ingest_open = false,
+                None => unreachable!("service holds a live event sender"),
+            }
+        }
+
+        // The serial epilogue, verbatim.
+        let makespan = clock::now() - t0;
+        outcomes.sort_by_key(|o| o.job);
+        rejected.sort_by_key(|r| r.job);
+        let spill = platform.kv.spill();
+        let job_tenant: HashMap<u64, u32> =
+            outcomes.iter().map(|o| (o.job.0, o.tenant)).collect();
+        for bill in spill.purge_all(clock::now()) {
+            if let Some(&tenant) = job_tenant.get(&bill.job) {
+                *tenant_spent.entry(tenant).or_insert(0.0) +=
+                    bill.gb_seconds * base.spill.cost_gb_s;
+            }
+        }
+        let spill_gb_seconds = spill.settled_gb_seconds();
+        let mut tenant_spend: Vec<(u32, f64)> = tenant_spent.into_iter().collect();
+        tenant_spend.sort_by_key(|&(t, _)| t);
+        let report = ServiceReport {
+            outcomes,
+            rejected,
+            makespan,
+            peak_concurrency: platform.peak_concurrency(),
+            fleet_cost_usd: platform.total_cost_usd(),
+            evicted,
+            tenant_spend,
+            spill_demoted_bytes: spill.demoted_bytes(),
+            spill_reads: spill.reads(),
+            spill_read_bytes: spill.read_bytes(),
+            spill_promotions: spill.promotions(),
+            spill_gb_seconds,
+            spill_cost_usd: spill_gb_seconds * base.spill.cost_gb_s,
+            resident_kv_bytes: platform.kv.resident_kv_bytes(),
+            pubsub_namespaces: platform.kv.pubsub_namespace_count(),
+            registered_arenas: platform.kv.registered_arena_count(),
+            tie_breaks: 0,
+        };
+        (report, recording)
     }
 
     /// Panics unless the configuration is in the contention-free regime
@@ -936,6 +1425,12 @@ impl JobService {
             self.cfg.tenant_budget_usd.is_infinite(),
             "sim_shards > 1 requires an infinite tenant_budget_usd \
              (budget shedding depends on global completion order)"
+        );
+        assert!(
+            !self.cfg.refill_active(),
+            "sim_shards > 1 requires the budget refill to be disarmed \
+             (windowed pause/resume admission depends on global \
+             completion order)"
         );
         assert!(
             b.faults.crash_prob == 0.0 && b.faults.cold_start_spread == 0.0 && !b.faults.lethal,
@@ -1057,6 +1552,7 @@ impl JobService {
             spill_demoted_bytes: spill.demoted_bytes(),
             spill_reads: spill.reads(),
             spill_read_bytes: spill.read_bytes(),
+            spill_promotions: spill.promotions(),
             spill_gb_seconds,
             spill_cost_usd: spill_gb_seconds * base.spill.cost_gb_s,
             resident_kv_bytes: platform.kv.resident_kv_bytes(),
@@ -1444,6 +1940,170 @@ mod tests {
             .unwrap();
         assert!(spent0 >= 1e-6, "tenant 0 spent {spent0}");
         assert!(report.outcomes.iter().all(|o| o.cost_usd > 0.0));
+    }
+
+    #[test]
+    fn budget_refill_pauses_over_budget_jobs_until_the_next_window() {
+        // Same regime as the shed test — the budget covers less than one
+        // job, and the second arrival lands after the first completion
+        // tripped it — but with the refill armed the job *parks* in the
+        // queue and runs once the window boundary raises the effective
+        // budget, instead of being shed.
+        let jobs = vec![chain_job("t0-a", 0, 1, 3), chain_job("t0-b", 0, 2, 3)];
+        let cfg = ServiceConfig::new(SimConfig::test(), 8)
+            .with_profile(ArrivalProfile::Uniform { gap_ms: 5000.0 })
+            .with_concurrency(4, 16)
+            .with_tenant_budget(1e-6)
+            // One dollar per 10 s window: at t0-b's 5 s arrival no window
+            // has elapsed (still over budget -> parked), at 10 s the
+            // first refill clears it.
+            .with_budget_refill(1.0, Duration::from_secs(10));
+        assert!(cfg.refill_active());
+        let report = run_service(cfg, jobs);
+        assert!(
+            report.rejected.is_empty(),
+            "refill pauses instead of shedding: {:?}",
+            report
+                .rejected
+                .iter()
+                .map(|s| (s.name.clone(), s.reason))
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(report.completed(), 2);
+        assert!(report.all_ok());
+        let b = report.outcomes.iter().find(|o| o.name == "t0-b").unwrap();
+        assert_eq!(b.submitted, Duration::from_secs(5));
+        assert!(
+            b.started >= Duration::from_secs(10),
+            "parked until the first refill boundary, started at {:?}",
+            b.started
+        );
+    }
+
+    #[test]
+    fn recorded_profile_replays_offsets_verbatim() {
+        let profile = ArrivalProfile::Recorded {
+            offsets_ns: vec![0, 5_000_000, 7_000_000],
+        };
+        // The arrival seed is ignored: any seed replays the same offsets.
+        let a = profile.arrival_offsets(3, 1);
+        let b = profile.arrival_offsets(3, 999);
+        assert_eq!(a, b);
+        assert_eq!(
+            a,
+            vec![
+                Duration::ZERO,
+                Duration::from_millis(5),
+                Duration::from_nanos(7_000_000)
+            ]
+        );
+        // Beyond the recorded length the last offset repeats; a shorter
+        // request truncates.
+        assert_eq!(profile.arrival_offsets(5, 1)[4], Duration::from_nanos(7_000_000));
+        assert_eq!(profile.arrival_offsets(2, 1).len(), 2);
+    }
+
+    #[test]
+    fn live_session_in_virtual_time_records_and_replays_fingerprints() {
+        // Submissions queued before the executor starts all land at the
+        // same virtual instant, so the three jobs run concurrently and
+        // complete out of arrival order (short before long). The
+        // recording fed back through the classic service must reproduce
+        // every job's sink fingerprint.
+        let lens: &[(&str, u32, u64, usize)] =
+            &[("long", 0, 11, 8), ("short", 1, 12, 2), ("tail", 0, 13, 3)];
+        let cfg = ServiceConfig::new(SimConfig::test(), 3).with_concurrency(4, 16);
+        let service = JobService::new(cfg.clone());
+        let (tx, rx) = mpsc::unbounded::<LiveSubmission>();
+        for &(name, tenant, seed, len) in lens {
+            let _ = tx.send(LiveSubmission {
+                req: chain_job(name, tenant, seed, len),
+                spec: format!("chain:{len} name={name} tenant={tenant} seed={seed}"),
+            });
+        }
+        drop(tx);
+        let (live, recording) =
+            crate::rt::run_virtual(async move { service.run_live(rx, Arc::new(())).await });
+        assert_eq!(live.completed(), 3);
+        assert!(live.all_ok());
+        assert!(live.rejected.is_empty());
+        assert_eq!(recording.jobs.len(), 3);
+        assert_eq!(recording.jobs[0].name, "long");
+        assert!(recording.render().contains("arrival 2 offset_ns="));
+        // Out-of-order completion: the later-arriving short chain ends
+        // before the first-arriving long one.
+        let finished = |n: &str| live.outcomes.iter().find(|o| o.name == n).unwrap().finished;
+        assert!(finished("long") > finished("short"));
+
+        let replay_jobs: Vec<JobRequest> = recording
+            .jobs
+            .iter()
+            .map(|r| {
+                let len = lens.iter().find(|l| l.0 == r.name).unwrap().3;
+                chain_job(&r.name, r.tenant, r.seed, len)
+            })
+            .collect();
+        let replay = run_service(cfg.with_profile(recording.replay_profile()), replay_jobs);
+        assert_eq!(replay.completed(), 3);
+        assert!(replay.rejected.is_empty());
+        for (a, b) in live.outcomes.iter().zip(&replay.outcomes) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.fingerprint, b.fingerprint, "{} fingerprint", a.name);
+        }
+    }
+
+    #[test]
+    fn recorded_wall_session_with_out_of_order_completion_replays_identically() {
+        // The satellite scenario: a *wall-clock* session (Mode::Real —
+        // modeled sleeps really sleep) where a short job submitted after
+        // a long one finishes first. The recorded trace replayed through
+        // the virtual-time service must reproduce the fingerprints and
+        // the (empty) shed set.
+        let cfg = ServiceConfig::new(SimConfig::test(), 3).with_concurrency(4, 16);
+        let service = JobService::new(cfg.clone());
+        let (tx, rx) = mpsc::unbounded::<LiveSubmission>();
+        let submitter = std::thread::spawn(move || {
+            let _ = tx.send(LiveSubmission {
+                req: chain_job("long", 0, 21, 10),
+                spec: "chain:10 name=long".to_string(),
+            });
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            let _ = tx.send(LiveSubmission {
+                req: chain_job("short", 1, 22, 2),
+                spec: "chain:2 name=short".to_string(),
+            });
+        });
+        let (live, recording) = crate::rt::block_on(
+            async move { service.run_live(rx, Arc::new(())).await },
+            crate::rt::Mode::Real,
+        );
+        submitter.join().unwrap();
+        assert_eq!(live.completed(), 2);
+        assert!(live.all_ok());
+        let finished = |n: &str| live.outcomes.iter().find(|o| o.name == n).unwrap().finished;
+        assert!(
+            finished("long") > finished("short"),
+            "10x5ms chain outlives a 2x5ms chain submitted 10ms later"
+        );
+        assert!(recording.jobs[0].offset_ns <= recording.jobs[1].offset_ns);
+
+        let replay_jobs: Vec<JobRequest> = recording
+            .jobs
+            .iter()
+            .map(|r| {
+                let len = if r.name == "long" { 10 } else { 2 };
+                chain_job(&r.name, r.tenant, r.seed, len)
+            })
+            .collect();
+        let replay = run_service(cfg.with_profile(recording.replay_profile()), replay_jobs);
+        assert_eq!(replay.completed(), 2);
+        assert!(replay.rejected.is_empty(), "shed decisions match the live run");
+        for (a, b) in live.outcomes.iter().zip(&replay.outcomes) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.fingerprint, b.fingerprint, "{} fingerprint", a.name);
+        }
     }
 
     #[test]

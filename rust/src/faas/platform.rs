@@ -8,6 +8,13 @@
 //! attaches through a [`FaasHandle`], which records that job's
 //! invocations, cold starts, and billed time into the job's own metrics
 //! hub.
+//!
+//! All latencies here (cold starts, body durations, backoffs, lease
+//! timeouts) are expressed as `clock::sleep` waits, so the platform is
+//! time-source-agnostic: under the executor's `VirtualTime` source they
+//! advance the deterministic simulation clock, and under `WallTime` (the
+//! HTTP `serve` front door) the *same* code performs real async sleeps —
+//! no platform code branches on the clock kind.
 
 use crate::core::{
     clock, EngineError, EngineResult, ExecutorId, FaasConfig, FaultConfig, SplitMix64,

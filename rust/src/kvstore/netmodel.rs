@@ -36,6 +36,12 @@
 //! oversized transfers clear in proportionally fewer rotations. Weight 1
 //! (the default for every unconfigured job) is bit-identical to the
 //! unweighted discipline, and solo-job timing is weight-independent.
+//!
+//! The model holds the NIC by sleeping through `clock::sleep`, which
+//! makes it time-source-agnostic: the serial-bandwidth server and its
+//! DRR rotation run unchanged whether the executor clock is the
+//! deterministic `VirtualTime` source or the wall-clock `WallTime`
+//! source behind the `serve` front door.
 
 use crate::core::{clock, FaultConfig, JobId, SplitMix64};
 use std::collections::{HashMap, VecDeque};

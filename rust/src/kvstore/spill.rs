@@ -37,6 +37,18 @@
 //! used. The `u64::MAX` default never deletes — bit-identical to the
 //! uncapped tier.
 //!
+//! ## Promotion on repeated cold reads
+//!
+//! `SpillConfig::promote_after_reads = N` (0 = off, the default) turns
+//! the Nth cold read of an object into a **promotion**: the object
+//! leaves its spill set — the set's storage-seconds settle at the
+//! promotion instant into the pending-bill queue (the cap-deletion
+//! pattern, so the owning tenant still pays for the residency) and the
+//! meter restarts at the reduced size — and the caller re-inserts the
+//! bytes into its warm arena, so further reads skip the cold penalty.
+//! With the knob at 0 [`SpillTier::read_promoting`] is byte-identical
+//! to [`SpillTier::read`].
+//!
 //! With `SpillConfig::enabled = false` (the default) every method is a
 //! no-op returning "absent", so eviction remains destruction and the
 //! engine is bit-identical to the pre-spill behavior.
@@ -87,6 +99,13 @@ pub struct SpillTier {
     /// Cumulative successful cold reads / bytes served.
     reads: AtomicU64,
     read_bytes: AtomicU64,
+    /// Per-(uid, key) cold-read tallies; populated only while
+    /// `promote_after_reads > 0` (the promotion-off path never locks in
+    /// a tally).
+    read_counts: Mutex<HashMap<(u64, u64), u32>>,
+    /// Cumulative objects / payload bytes promoted back to the warm tier.
+    promotions: AtomicU64,
+    promoted_bytes: AtomicU64,
     /// GB-seconds already settled by purges.
     settled_gb_seconds: Mutex<f64>,
     /// Bills of sets deleted by the capacity cap, awaiting collection by
@@ -108,6 +127,9 @@ impl SpillTier {
             demoted_bytes: AtomicU64::new(0),
             reads: AtomicU64::new(0),
             read_bytes: AtomicU64::new(0),
+            read_counts: Mutex::new(HashMap::new()),
+            promotions: AtomicU64::new(0),
+            promoted_bytes: AtomicU64::new(0),
             settled_gb_seconds: Mutex::new(0.0),
             pending_bills: Mutex::new(Vec::new()),
             cap_deleted_bytes: AtomicU64::new(0),
@@ -224,6 +246,53 @@ impl SpillTier {
         Some(obj)
     }
 
+    /// [`SpillTier::read`] plus the promotion policy: the returned flag
+    /// is `true` when this was the `promote_after_reads`-th cold read of
+    /// the object and it has left the tier — the caller must re-insert
+    /// the bytes into its warm arena (the object would otherwise be
+    /// lost). With the knob at 0 this is byte-identical to `read`.
+    pub fn read_promoting(&self, uid: u64, raw: u64, now: SimInstant) -> Option<(DataObj, bool)> {
+        let obj = self.read(uid, raw, now)?;
+        if self.cfg.promote_after_reads == 0 {
+            return Some((obj, false));
+        }
+        {
+            let mut counts = self.read_counts.lock().unwrap();
+            let seen = counts.entry((uid, raw)).or_insert(0);
+            *seen += 1;
+            if *seen < self.cfg.promote_after_reads {
+                return Some((obj, false));
+            }
+            counts.remove(&(uid, raw));
+        }
+        // Promote: drop the object from its set. The set's residency so
+        // far settles at `now` into the pending-bill queue (attributed
+        // to the owning job, like a cap deletion) and the meter restarts
+        // at the reduced size, so billing still closes to zero.
+        let mut sets = self.sets.lock().unwrap();
+        let Some(set) = sets.get_mut(&uid) else {
+            return Some((obj, false));
+        };
+        let Some(removed) = set.objects.remove(&raw) else {
+            return Some((obj, false));
+        };
+        let gb_seconds = Self::accrue(set.bytes, set.demoted_at, now);
+        *self.settled_gb_seconds.lock().unwrap() += gb_seconds;
+        self.pending_bills.lock().unwrap().push(SpillSettlement {
+            job: set.job,
+            bytes: removed.bytes,
+            gb_seconds,
+        });
+        set.demoted_at = now;
+        set.bytes -= removed.bytes;
+        if set.objects.is_empty() {
+            sets.remove(&uid);
+        }
+        self.promotions.fetch_add(1, Ordering::Relaxed);
+        self.promoted_bytes.fetch_add(removed.bytes, Ordering::Relaxed);
+        Some((obj, true))
+    }
+
     /// Free, synchronous existence probe — no metrics, no storage-second
     /// accrual. Used by the recovery watchdog's lineage walk, which must
     /// not recompute an intermediate that merely demoted to cold storage
@@ -322,6 +391,17 @@ impl SpillTier {
     /// Cumulative payload bytes served by cold reads.
     pub fn read_bytes(&self) -> u64 {
         self.read_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative objects promoted back to the warm tier (zero with the
+    /// promotion knob off).
+    pub fn promotions(&self) -> u64 {
+        self.promotions.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative payload bytes promoted back to the warm tier.
+    pub fn promoted_bytes(&self) -> u64 {
+        self.promoted_bytes.load(Ordering::Relaxed)
     }
 
     /// Dollars of storage-seconds settled so far.
@@ -468,6 +548,76 @@ mod tests {
         assert_eq!(t.cap_deleted_bytes(), 0);
         assert_eq!(t.live_bytes(), 8 * (u32::MAX as u64));
         assert_eq!(t.purge_all(at(1)).len(), 8);
+    }
+
+    fn promoting_tier(promote_after_reads: u32) -> SpillTier {
+        SpillTier::new(
+            SpillConfig {
+                enabled: true,
+                promote_after_reads,
+                ..SpillConfig::default()
+            },
+            &FaultConfig::default(),
+        )
+    }
+
+    #[test]
+    fn promotion_off_read_promoting_is_identical_to_read() {
+        let t = tier(true); // promote_after_reads = 0
+        t.demote(1, 7, vec![(0, DataObj::synthetic(100))], at(0));
+        for _ in 0..10 {
+            let (obj, promoted) = t.read_promoting(1, 0, at(1)).unwrap();
+            assert_eq!(obj.bytes, 100);
+            assert!(!promoted, "knob at 0 never promotes");
+        }
+        assert_eq!(t.promotions(), 0);
+        assert_eq!(t.reads(), 10);
+        assert_eq!(t.live_bytes(), 100, "object never leaves the tier");
+    }
+
+    #[test]
+    fn nth_cold_read_promotes_and_settles_residency() {
+        let t = promoting_tier(3);
+        t.demote(
+            1,
+            7,
+            vec![(10, DataObj::synthetic(2_000_000_000)), (11, DataObj::synthetic(50))],
+            at(0),
+        );
+        assert!(!t.read_promoting(1, 10, at(2)).unwrap().1);
+        assert!(!t.read_promoting(1, 10, at(4)).unwrap().1);
+        // Third read of key 10 promotes it; key 11 stays parked.
+        let (obj, promoted) = t.read_promoting(1, 10, at(10)).unwrap();
+        assert!(promoted);
+        assert_eq!(obj.bytes, 2_000_000_000);
+        assert_eq!(t.promotions(), 1);
+        assert_eq!(t.promoted_bytes(), 2_000_000_000);
+        assert_eq!(t.live_bytes(), 50);
+        assert!(t.read(1, 10, at(11)).is_none(), "promotion is real");
+        assert!(t.peek(1, 11), "sibling object survives");
+        // The whole set's residency 0..10 s settled at promotion and the
+        // remainder accrues from the promotion instant — billing still
+        // closes to zero: ~2 GB * 10 s = 20.0000005 GB-s settled.
+        let expected = (2_000_000_050u64 as f64) * 1e-9 * 10.0;
+        assert!((t.settled_gb_seconds() - expected).abs() < 1e-9);
+        let bills = t.purge_all(at(20));
+        assert_eq!(bills.len(), 2, "promotion bill + end-of-run purge");
+        assert_eq!(bills[0].job, 7);
+        assert_eq!(bills[0].bytes, 2_000_000_000);
+        assert_eq!(bills[1].bytes, 50);
+        assert!((bills[1].gb_seconds - 50.0 * 1e-9 * 10.0).abs() < 1e-18);
+        assert_eq!(t.live_gb_seconds(at(30)), 0.0, "billing closes to zero");
+    }
+
+    #[test]
+    fn fully_promoted_set_leaves_no_residue() {
+        let t = promoting_tier(1);
+        t.demote(4, 40, vec![(0, DataObj::synthetic(100))], at(0));
+        let (_, promoted) = t.read_promoting(4, 0, at(5)).unwrap();
+        assert!(promoted, "first read promotes at threshold 1");
+        assert_eq!(t.live_bytes(), 0);
+        assert_eq!(t.purge_all(at(10)).len(), 1, "only the promotion bill");
+        assert_eq!(t.live_gb_seconds(at(10)), 0.0);
     }
 
     #[test]

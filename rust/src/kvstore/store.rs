@@ -632,9 +632,14 @@ impl JobArena {
     /// the spill tier, sleeping the tier's seeded latency + streaming
     /// penalty. The cold store is its own endpoint — shard NICs are not
     /// held, so a burst of cold fetches never head-of-line-blocks live
-    /// jobs' KV traffic.
+    /// jobs' KV traffic. Under `SpillConfig::promote_after_reads` the
+    /// Nth cold read promotes the object: the tier hands it back for the
+    /// last time and the arena re-inserts it warm, so further reads are
+    /// served from the KV cluster at warm cost.
     async fn get_cold(&self, key: ObjectKey, t0: clock::SimInstant) -> EngineResult<DataObj> {
-        let Some(obj) = self.store.spill.read(self.uid, key.raw(), clock::now()) else {
+        let Some((obj, promoted)) =
+            self.store.spill.read_promoting(self.uid, key.raw(), clock::now())
+        else {
             return Err(EngineError::MissingObject {
                 key: key.to_string(),
             });
@@ -645,6 +650,13 @@ impl JobArena {
             self.metrics.record_net_bytes(obj.bytes);
         }
         self.metrics.record_spill_read(obj.bytes);
+        if promoted {
+            // Promotion is the cold transfer this read already paid for,
+            // landing in the warm tier instead of evaporating: no extra
+            // modeled cost, same accounting as any other store.
+            self.store_obj(key, obj.clone());
+            self.metrics.record_spill_promotion();
+        }
         self.metrics
             .record_kv_op(KvOpKind::Read, obj.bytes, clock::now() - t0);
         Ok(obj)
@@ -1464,6 +1476,54 @@ mod tests {
                 a.get(ObjectKey::output(TaskId(1)), 1e9).await.unwrap_err(),
                 EngineError::MissingObject { .. }
             ));
+        });
+    }
+
+    #[test]
+    fn repeated_cold_reads_promote_back_to_the_warm_tier() {
+        crate::rt::run_virtual(async {
+            let metrics = Arc::new(MetricsHub::new());
+            let store = KvStore::with_spill(
+                NetConfig::default(),
+                FaultConfig::default(),
+                metrics.clone(),
+                false,
+                SpillConfig {
+                    enabled: true,
+                    promote_after_reads: 2,
+                    ..SpillConfig::default()
+                },
+            );
+            let a = store.arena(JobId(1), 2);
+            let key = ObjectKey::output(TaskId(0));
+            a.put(key, DataObj::synthetic(90_000_000), 1e9).await;
+            store.retire(JobId(1));
+            assert_eq!(store.enforce_kv_budget(0), vec![JobId(1)]);
+            assert!(!a.peek_contains(key));
+
+            // First cold read: served cold, object stays parked.
+            a.get(key, 1e9).await.unwrap();
+            assert_eq!(metrics.spill_promotions(), 0);
+            assert!(!a.peek_contains(key));
+
+            // Second cold read hits the threshold: the object leaves the
+            // tier and re-enters the arena warm. The promoting read
+            // itself is still cold-priced (15 ms TTFB + 1 s streaming).
+            let t0 = clock::now();
+            a.get(key, 1e9).await.unwrap();
+            assert_eq!(
+                clock::now() - t0,
+                Duration::from_millis(15) + Duration::from_secs(1)
+            );
+            assert_eq!(metrics.spill_promotions(), 1);
+            assert!(a.peek_contains(key));
+            assert_eq!(store.spill().live_bytes(), 0);
+            assert_eq!(a.resident_bytes(), 90_000_000);
+
+            // Further reads are warm — the cold-read meter stops.
+            let obj = a.get(key, 1e9).await.unwrap();
+            assert_eq!(obj.bytes, 90_000_000);
+            assert_eq!(metrics.spill_reads(), 2, "no third cold read");
         });
     }
 

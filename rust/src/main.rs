@@ -9,6 +9,8 @@
 //! wukong stats --workload svd1 --size 200000
 //! wukong dot --workload tr --size 16
 //! wukong service --jobs 12 --profile burst --admission fair
+//! wukong serve --addr 127.0.0.1:7077
+//! wukong load --addr 127.0.0.1:7077 --rps 50 --jobs 20 --shutdown on
 //! ```
 
 use wukong::baselines::{CentralizedEngine, DaskCluster, DesignIteration};
@@ -27,6 +29,8 @@ wukong — serverless DAG engine (WUKONG reproduction), virtual-time simulator
 USAGE:
     wukong <run|compare|stats|dot> --workload <W> --size <N> [OPTIONS]
     wukong service [--jobs <N>] [OPTIONS]
+    wukong serve [--addr <HOST:PORT>] [SERVICE OPTIONS]
+    wukong load --addr <HOST:PORT> [--rps <F>] [--jobs <N>] [--shutdown on|off]
 
 OPTIONS:
     --workload <tr|gemm|svd1|svd2|svc>   workload (required except service)
@@ -65,6 +69,22 @@ SERVICE OPTIONS (multi-tenant: many jobs, one shared platform):
     --spill-latency-ms <F>    cold-tier access latency in ms (default 15)
     --spill-cost-gb-s <F>     storage price in USD per GB-second
                               (default: S3-standard $0.023/GB-month)
+    --budget-refill <USD>     dollars added to every tenant's effective
+                              budget per refill window; with it set,
+                              over-budget jobs pause in the queue instead
+                              of being shed (default 0 = off)
+    --refill-window-s <F>     refill window length in seconds (default 60)
+
+SERVE OPTIONS (wall-clock HTTP front door over the job service):
+    --addr <HOST:PORT>    bind address (default 127.0.0.1:7077); routes:
+                          POST /jobs, GET /jobs/:id, GET /jobs/:id/result,
+                          GET /trace, POST /shutdown
+
+LOAD OPTIONS (seeded open-loop generator against a running serve):
+    --addr <HOST:PORT>    target server (default 127.0.0.1:7077)
+    --rps <F>             target arrival rate, jobs/second (default 20)
+    --jobs <N>            jobs to submit (default 12, shared with service)
+    --shutdown <on|off>   POST /shutdown after the last job (default off)
 ";
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -106,6 +126,12 @@ struct Args {
     spill: bool,
     spill_latency_ms: Option<f64>,
     spill_cost_gb_s: Option<f64>,
+    budget_refill: f64,
+    refill_window_s: f64,
+    // serve / load mode
+    addr: String,
+    rps: f64,
+    load_shutdown: bool,
     // locality knobs (None = keep the SimConfig default)
     locality: bool,
     min_local_bytes: Option<u64>,
@@ -123,7 +149,8 @@ fn parse_args() -> Args {
         die("missing command");
     }
     let command = argv[0].clone();
-    if !["run", "compare", "stats", "dot", "service"].contains(&command.as_str()) {
+    if !["run", "compare", "stats", "dot", "service", "serve", "load"].contains(&command.as_str())
+    {
         die(&format!("unknown command '{command}'"));
     }
     let mut workload = None;
@@ -142,6 +169,11 @@ fn parse_args() -> Args {
     let mut spill = false;
     let mut spill_latency_ms = None;
     let mut spill_cost_gb_s = None;
+    let mut budget_refill = 0.0f64;
+    let mut refill_window_s = 60.0f64;
+    let mut addr = "127.0.0.1:7077".to_string();
+    let mut rps = 20.0f64;
+    let mut load_shutdown = false;
     let mut locality = false;
     let mut min_local_bytes = None;
     let mut cluster_width = None;
@@ -204,6 +236,21 @@ fn parse_args() -> Args {
                 spill_cost_gb_s =
                     Some(val.parse().unwrap_or_else(|_| die("bad --spill-cost-gb-s")))
             }
+            "--budget-refill" => {
+                budget_refill = val.parse().unwrap_or_else(|_| die("bad --budget-refill"))
+            }
+            "--refill-window-s" => {
+                refill_window_s = val.parse().unwrap_or_else(|_| die("bad --refill-window-s"))
+            }
+            "--addr" => addr = val.clone(),
+            "--rps" => rps = val.parse().unwrap_or_else(|_| die("bad --rps")),
+            "--shutdown" => {
+                load_shutdown = match val.as_str() {
+                    "on" => true,
+                    "off" => false,
+                    v => die(&format!("bad --shutdown '{v}' (want on|off)")),
+                }
+            }
             "--locality" => {
                 locality = match val.as_str() {
                     "on" => true,
@@ -240,6 +287,11 @@ fn parse_args() -> Args {
         spill,
         spill_latency_ms,
         spill_cost_gb_s,
+        budget_refill,
+        refill_window_s,
+        addr,
+        rps,
+        load_shutdown,
         locality,
         min_local_bytes,
         cluster_width,
@@ -339,7 +391,11 @@ fn run_service_mode(args: &Args, cfg: &SimConfig) {
         .with_admission(admission)
         .with_concurrency(args.max_concurrent, args.queue_cap)
         .with_kv_budget(args.kv_budget)
-        .with_tenant_budget(args.tenant_budget);
+        .with_tenant_budget(args.tenant_budget)
+        .with_budget_refill(
+            args.budget_refill,
+            std::time::Duration::from_secs_f64(args.refill_window_s),
+        );
     let report = run_service(svc_cfg, requests);
     for o in &report.outcomes {
         println!("{}", o.row());
@@ -374,8 +430,66 @@ fn run_service_mode(args: &Args, cfg: &SimConfig) {
             report.spill_gb_seconds,
             report.spill_cost_usd
         );
+        if report.spill_promotions > 0 {
+            println!(
+                "spill promotions: {} objects rehydrated to the warm tier",
+                report.spill_promotions
+            );
+        }
     }
     println!("{}", report.fleet_row());
+}
+
+/// Binds the wall-clock HTTP front door and serves until a
+/// `POST /shutdown` drains the session, then prints the same per-job
+/// rows and fleet summary the virtual-time service mode prints.
+fn run_serve_mode(args: &Args, cfg: &SimConfig) {
+    let admission = match args.admission.as_str() {
+        "fifo" => Admission::Fifo,
+        "fair" => Admission::Fair,
+        "priority" => Admission::Priority,
+        a => die(&format!("unknown admission '{a}'")),
+    };
+    let mut cfg = cfg.clone();
+    match args.nic.as_str() {
+        "drr" => cfg.net.nic_fair_queueing = true,
+        "fifo" => cfg.net.nic_fair_queueing = false,
+        n => die(&format!("unknown nic discipline '{n}'")),
+    }
+    let listener = std::net::TcpListener::bind(&args.addr)
+        .unwrap_or_else(|e| die(&format!("cannot bind {}: {e}", args.addr)));
+    let local = listener.local_addr().expect("bound listener has an address");
+    println!(
+        "serving on http://{local} (POST /jobs, GET /jobs/:id[/result], GET /trace, POST /shutdown)"
+    );
+    let svc_cfg = ServiceConfig::new(cfg, args.seed)
+        .with_admission(admission)
+        .with_concurrency(args.max_concurrent, args.queue_cap)
+        .with_kv_budget(args.kv_budget)
+        .with_tenant_budget(args.tenant_budget)
+        .with_budget_refill(
+            args.budget_refill,
+            std::time::Duration::from_secs_f64(args.refill_window_s),
+        );
+    let out = wukong::engine::server::serve_on(listener, svc_cfg);
+    for o in &out.report.outcomes {
+        println!("{}", o.row());
+    }
+    for s in &out.report.rejected {
+        println!(
+            "{:<6} t{:<2} p{:<2} {:<14} SHED ({})",
+            s.job.to_string(),
+            s.tenant,
+            s.priority,
+            s.name,
+            s.reason
+        );
+    }
+    println!("{}", out.report.fleet_row());
+    println!(
+        "recorded {} arrivals (replayable through ArrivalProfile::Recorded)",
+        out.recording.jobs.len()
+    );
 }
 
 fn main() {
@@ -400,6 +514,24 @@ fn main() {
     }
     if args.command == "service" {
         run_service_mode(&args, &cfg);
+        return;
+    }
+    if args.command == "serve" {
+        run_serve_mode(&args, &cfg);
+        return;
+    }
+    if args.command == "load" {
+        let summary = wukong::engine::server::run_load(&wukong::engine::server::LoadConfig {
+            addr: args.addr.clone(),
+            rps: args.rps,
+            jobs: args.jobs,
+            seed: args.seed,
+            shutdown: args.load_shutdown,
+        });
+        println!(
+            "load: submitted={} accepted={} refused={} errors={}",
+            summary.submitted, summary.accepted, summary.refused, summary.errors
+        );
         return;
     }
     let workload = args.workload.unwrap_or_else(|| die("--workload is required"));

@@ -68,6 +68,9 @@ pub struct MetricsHub {
     spill_bytes_demoted: AtomicU64,
     spill_reads: AtomicU64,
     spill_bytes_read: AtomicU64,
+    /// Objects promoted back to the warm KV tier after repeated cold
+    /// reads (zero unless `SpillConfig::promote_after_reads` is armed).
+    spill_promotions: AtomicU64,
     // crash recovery (platform retries + engine watchdog); all zero on a
     // fault-free run, so recovery trace lines stay activity-gated
     invoke_retries: AtomicU64,
@@ -177,6 +180,11 @@ impl MetricsHub {
         self.spill_bytes_read.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// One object promoted from the spill tier back to the warm KV tier.
+    pub fn record_spill_promotion(&self) {
+        self.spill_promotions.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One platform retry of a failed invocation attempt, after sleeping
     /// `backoff` of seeded exponential backoff (zero when unconfigured).
     pub fn record_invoke_retry(&self, backoff: Duration) {
@@ -262,6 +270,9 @@ impl MetricsHub {
     }
     pub fn spill_bytes_read(&self) -> u64 {
         self.spill_bytes_read.load(Ordering::Relaxed)
+    }
+    pub fn spill_promotions(&self) -> u64 {
+        self.spill_promotions.load(Ordering::Relaxed)
     }
     pub fn invoke_retries(&self) -> u64 {
         self.invoke_retries.load(Ordering::Relaxed)

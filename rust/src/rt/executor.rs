@@ -9,15 +9,29 @@
 //!
 //! 1. drain the wake queue into the ready list, poll everything ready;
 //! 2. if the root future finished → return;
-//! 3. otherwise advance time: **virtual** mode jumps the clock to the
-//!    earliest timer deadline; **real** mode sleeps on the condvar until
-//!    that deadline or an external wakeup;
+//! 3. otherwise advance time: a **virtual** source jumps the clock to the
+//!    earliest timer deadline; a **wall** source sleeps on the condvar
+//!    until that deadline or an external wakeup;
 //! 4. if there are no timers and no ready tasks, wait for an external
 //!    wakeup if any [`ExternalGuard`] is alive — otherwise every task is
 //!    blocked forever: deadlock, which panics loudly (a scheduler bug in
 //!    this codebase, never a user error).
+//!
+//! ## The `TimeSource` split
+//!
+//! The clock itself lives behind the [`TimeSource`] trait, resolved
+//! exactly once at [`block_on`] entry and never consulted for *which*
+//! source it is on the task hot path — `Core::now()` is one virtual call
+//! either way, and the idle-advance branch dispatches on the cached
+//! [`TimeSourceKind`]. [`VirtualTime`] is the deterministic
+//! discrete-event clock every simulation and oracle runs on;
+//! [`WallTime`] reads a monotonic OS instant and turns timer waits into
+//! real condvar sleeps, which is what the `serve` front door runs on.
+//! The virtual path is bit-identical to the pre-trait executor by
+//! construction: same cursor representation, same max-jump advance, same
+//! firing order.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BinaryHeap;
 use std::future::Future;
 use std::pin::Pin;
@@ -38,6 +52,94 @@ pub enum Mode {
     Virtual,
     /// Wall-clock time.
     Real,
+}
+
+/// Which family a [`TimeSource`] belongs to. The executor's idle loop
+/// dispatches on this (jump-to-deadline vs sleep-to-deadline); everything
+/// above the runtime treats it as an opaque tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeSourceKind {
+    /// Deterministic discrete-event time (advances only via
+    /// [`TimeSource::advance_ns`]).
+    Virtual,
+    /// Monotonic OS time (advances on its own; `advance_ns` is a no-op).
+    Wall,
+}
+
+/// The clock behind an executor. Resolved to a concrete source exactly
+/// once, at [`block_on`] entry — no per-tick mode checks anywhere above
+/// the idle loop, which is how the virtual path stays bit-identical to
+/// the pre-trait executor by construction.
+///
+/// Implementations are single-executor-thread objects (`Core` is `Rc`),
+/// so interior mutability via [`Cell`] is the expected shape.
+pub trait TimeSource {
+    /// Which idle-advance discipline this source needs.
+    fn kind(&self) -> TimeSourceKind;
+    /// Nanoseconds since the executor started.
+    fn now_ns(&self) -> u128;
+    /// Moves a virtual cursor forward to `to` (monotonic: never moves
+    /// backwards). Wall sources ignore it — the OS advances for them.
+    fn advance_ns(&self, to: u128);
+}
+
+/// The deterministic discrete-event clock: a plain nanosecond cursor that
+/// jumps to the next timer deadline whenever the executor is idle.
+#[derive(Default)]
+pub struct VirtualTime {
+    cursor: Cell<u128>,
+}
+
+impl VirtualTime {
+    /// A virtual clock starting at nanosecond 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl TimeSource for VirtualTime {
+    fn kind(&self) -> TimeSourceKind {
+        TimeSourceKind::Virtual
+    }
+    fn now_ns(&self) -> u128 {
+        self.cursor.get()
+    }
+    fn advance_ns(&self, to: u128) {
+        if to > self.cursor.get() {
+            self.cursor.set(to);
+        }
+    }
+}
+
+/// Monotonic OS time: `now_ns` reads the elapsed wall time since
+/// construction, and timer waits become real condvar sleeps.
+pub struct WallTime {
+    start: std::time::Instant,
+}
+
+impl WallTime {
+    /// A wall clock whose epoch is the moment of construction.
+    pub fn new() -> Self {
+        WallTime {
+            start: std::time::Instant::now(),
+        }
+    }
+}
+
+impl Default for WallTime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TimeSource for WallTime {
+    fn kind(&self) -> TimeSourceKind {
+        TimeSourceKind::Wall
+    }
+    fn now_ns(&self) -> u128 {
+        self.start.elapsed().as_nanos()
+    }
+    fn advance_ns(&self, _to: u128) {}
 }
 
 type TaskId = usize;
@@ -138,11 +240,8 @@ impl Ord for Timer {
 
 /// Executor-thread state.
 pub(crate) struct Core {
-    mode: Mode,
-    /// Virtual nanoseconds since simulation start (virtual mode), or the
-    /// wall-clock start instant (real mode).
-    now_ns: RefCell<u128>,
-    start: std::time::Instant,
+    /// The clock, resolved once at `block_on` entry.
+    time: Box<dyn TimeSource>,
     tasks: RefCell<Vec<Option<Pin<Box<dyn Future<Output = ()>>>>>>,
     /// Cached wakers, one per task slot (allocating a fresh Arc waker on
     /// every poll dominated the hot path before this cache).
@@ -186,10 +285,12 @@ pub(crate) fn try_now() -> Option<SimInstant> {
 
 impl Core {
     pub(crate) fn now(&self) -> SimInstant {
-        match self.mode {
-            Mode::Virtual => SimInstant::from_nanos(*self.now_ns.borrow()),
-            Mode::Real => SimInstant::from_nanos(self.start.elapsed().as_nanos()),
-        }
+        SimInstant::from_nanos(self.time.now_ns())
+    }
+
+    /// Which kind of clock drives this executor.
+    pub(crate) fn time_kind(&self) -> TimeSourceKind {
+        self.time.kind()
     }
 
     pub(crate) fn register_timer(&self, deadline: SimInstant, waker: Waker) {
@@ -362,14 +463,28 @@ impl Drop for ExternalGuard {
 }
 
 /// Runs `fut` to completion on a fresh executor with the given clock mode.
+/// `Mode::Virtual` resolves to [`VirtualTime`], `Mode::Real` to
+/// [`WallTime`] — the two built-in [`TimeSource`]s.
 pub fn block_on<F: Future + 'static>(fut: F, mode: Mode) -> F::Output
 where
     F::Output: 'static,
 {
+    let time: Box<dyn TimeSource> = match mode {
+        Mode::Virtual => Box::new(VirtualTime::new()),
+        Mode::Real => Box::new(WallTime::new()),
+    };
+    block_on_with_source(fut, time)
+}
+
+/// Runs `fut` to completion on a fresh executor driven by `time`. The
+/// source is resolved here, once — nothing re-inspects it mid-run.
+pub fn block_on_with_source<F: Future + 'static>(fut: F, time: Box<dyn TimeSource>) -> F::Output
+where
+    F::Output: 'static,
+{
+    let kind = time.kind();
     let core = Rc::new(Core {
-        mode,
-        now_ns: RefCell::new(0),
-        start: std::time::Instant::now(),
+        time,
         tasks: RefCell::new(Vec::new()),
         wakers: RefCell::new(Vec::new()),
         pending_spawn: RefCell::new(Vec::new()),
@@ -446,8 +561,8 @@ where
             let timers = core.timers.borrow();
             timers.peek().map(|t| t.deadline_ns)
         };
-        match (mode, next_deadline) {
-            (Mode::Virtual, Some(deadline)) => {
+        match (kind, next_deadline) {
+            (TimeSourceKind::Virtual, Some(deadline)) => {
                 // While an external (off-thread) operation is pending, the
                 // virtual clock must NOT advance: real compute takes zero
                 // virtual time by design. Wait for the external wake.
@@ -460,12 +575,11 @@ where
                     // shard's clock may safely move. A partial grant
                     // (below `deadline`) fires nothing — the loop simply
                     // re-enters `advance` from the new cursor.
-                    let cursor = *core.now_ns.borrow();
+                    let cursor = core.time.now_ns();
                     match ctx.coord.advance(ctx.shard, cursor, deadline, &core.shared) {
                         crate::rt::sharded::Advance::Wake => continue,
                         crate::rt::sharded::Advance::Clock(granted) => {
-                            let mut now = core.now_ns.borrow_mut();
-                            *now = (*now).max(granted);
+                            core.time.advance_ns(granted);
                         }
                     }
                 } else {
@@ -476,11 +590,10 @@ where
                         continue;
                     }
                     drop(q);
-                    let mut now = core.now_ns.borrow_mut();
-                    *now = (*now).max(deadline);
+                    core.time.advance_ns(deadline);
                 }
                 // Fire every timer due at the (new) current time.
-                let now = *core.now_ns.borrow();
+                let now = core.time.now_ns();
                 let mut timers = core.timers.borrow_mut();
                 while let Some(t) = timers.peek() {
                     if t.deadline_ns <= now {
@@ -490,8 +603,8 @@ where
                     }
                 }
             }
-            (Mode::Real, Some(deadline)) => {
-                let now = core.start.elapsed().as_nanos();
+            (TimeSourceKind::Wall, Some(deadline)) => {
+                let now = core.time.now_ns();
                 if now >= deadline {
                     let mut timers = core.timers.borrow_mut();
                     while let Some(t) = timers.peek() {
@@ -726,6 +839,63 @@ mod tests {
             )
         }]);
         assert_eq!(outs, vec![11]);
+    }
+
+    #[test]
+    fn explicit_virtual_source_is_bit_identical_to_mode_virtual() {
+        // The TimeSource inertness pin: a timing-sensitive future (timer
+        // ordering + spawned joins) must observe exactly the same instants
+        // under `Mode::Virtual` and under an explicitly supplied
+        // `VirtualTime` — the trait split changes no virtual behavior.
+        fn scenario() -> impl Future<Output = Vec<(usize, u128)>> {
+            async {
+                let log = std::rc::Rc::new(RefCell::new(Vec::new()));
+                let mut handles = Vec::new();
+                for (i, ms) in [(0usize, 30u64), (1, 10), (2, 20), (3, 10)] {
+                    let log = log.clone();
+                    handles.push(spawn(async move {
+                        sleep(Duration::from_millis(ms)).await;
+                        log.borrow_mut().push((i, (now() - SimInstant::default()).as_nanos()));
+                    }));
+                }
+                for h in handles {
+                    h.await;
+                }
+                let out = log.borrow().clone();
+                out
+            }
+        }
+        let via_mode = block_on(scenario(), Mode::Virtual);
+        let via_source = block_on_with_source(scenario(), Box::new(VirtualTime::new()));
+        assert_eq!(via_mode, via_source);
+        assert_eq!(via_mode, vec![
+            (1, 10_000_000),
+            (3, 10_000_000),
+            (2, 20_000_000),
+            (0, 30_000_000),
+        ]);
+    }
+
+    #[test]
+    fn wall_source_reports_wall_kind_and_really_sleeps() {
+        let wall = std::time::Instant::now();
+        let kind = block_on_with_source(
+            async {
+                sleep(Duration::from_millis(30)).await;
+                with_core(|core| core.time_kind())
+            },
+            Box::new(WallTime::new()),
+        );
+        assert_eq!(kind, TimeSourceKind::Wall);
+        assert!(wall.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn mode_maps_to_the_matching_source_kind() {
+        let k = block_on(async { with_core(|core| core.time_kind()) }, Mode::Virtual);
+        assert_eq!(k, TimeSourceKind::Virtual);
+        let k = block_on(async { with_core(|core| core.time_kind()) }, Mode::Real);
+        assert_eq!(k, TimeSourceKind::Wall);
     }
 
     #[test]

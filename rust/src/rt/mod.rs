@@ -12,7 +12,10 @@
 //!   the next timer deadline whenever all tasks are blocked — ordinary
 //!   `async` code becomes a deterministic discrete-event simulation,
 //! * [`Mode::Real`] wall-clock execution of the *same* code (used by the
-//!   real-compute examples),
+//!   real-compute examples and the HTTP `serve` front door),
+//! * a [`TimeSource`] trait behind both clocks ([`VirtualTime`],
+//!   [`WallTime`]), resolved once at [`block_on`] entry — callers can
+//!   supply their own source via [`block_on_with_source`],
 //! * async **sync primitives** with FIFO fairness ([`sync::Mutex`],
 //!   [`sync::Semaphore`], [`sync::mpsc`], [`sync::oneshot`]) — fairness
 //!   matters because NICs are modeled as FIFO queueing servers,
@@ -32,7 +35,10 @@ pub mod sync;
 pub mod time;
 
 pub use combinators::{block_on_simple, join_all, yield_now};
-pub use executor::{block_on, spawn, ExternalGuard, JoinHandle, Mode};
+pub use executor::{
+    block_on, block_on_with_source, spawn, ExternalGuard, JoinHandle, Mode, TimeSource,
+    TimeSourceKind, VirtualTime, WallTime,
+};
 pub use sharded::{run_sharded, run_sharded_stats, ShardStats};
 pub use time::{now, sleep, sleep_until, timeout, Elapsed, SimInstant};
 

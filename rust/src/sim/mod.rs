@@ -23,7 +23,10 @@
 //! replays to an identical [`trace`]; [`oracle::parallel_check`] proves
 //! sharded parallel simulation (`rt::sharded`,
 //! `ServiceConfig::sim_shards`) byte-identical to the serial service for
-//! the same seed. `rust/tests/sim_differential.rs`
+//! the same seed; [`oracle::replay_check`] proves a recorded wall-clock
+//! front-door session (`engine::server`, `wukong serve`) replays through
+//! the virtual-time service with byte-identical fingerprints and shed
+//! decisions. `rust/tests/sim_differential.rs`
 //! sweeps these over seed ranges in CI; see `rust/src/engine/README.md`
 //! for how to reproduce a failing seed from a CI log.
 
@@ -34,7 +37,8 @@ pub mod trace;
 pub use harness::{fingerprint_outputs, paper_policies, ModeKind, PolicyRun, SimHarness};
 pub use oracle::{
     determinism_check, differential_check, governance_check, locality_check, multi_job_check,
-    multi_job_determinism_check, parallel_check, recovery_check, spill_check, DifferentialReport,
-    GovernanceReport, LocalityReport, MultiJobReport, ParallelReport, RecoveryReport, SpillReport,
+    multi_job_determinism_check, parallel_check, recovery_check, replay_check, spill_check,
+    DifferentialReport, GovernanceReport, LocalityReport, MultiJobReport, ParallelReport,
+    RecoveryReport, ReplayReport, SpillReport,
 };
 pub use trace::{first_divergence, render_trace};

@@ -23,12 +23,15 @@
 //! `differential_check(seed)` — no other state is involved.
 
 use crate::compute::DataObj;
-use crate::core::{clock, mix64, FaultConfig, JobId, ObjectKey, SimConfig, TaskId};
+use crate::core::{clock, mix64, FaultConfig, JobId, ObjectKey, SimConfig, SplitMix64, TaskId};
 use crate::dag::Dag;
 use crate::engine::policies::{PubSubPolicy, WukongPolicy};
+use crate::engine::server::build_request;
 use crate::engine::service::{
-    run_service, Admission, ArrivalProfile, JobRequest, ServiceConfig, ServiceReport, ShedReason,
+    run_service, Admission, ArrivalProfile, JobRequest, JobService, LiveSubmission, ServiceConfig,
+    ServiceReport, SessionRecording, ShedReason,
 };
+use crate::rt::sync::mpsc;
 use crate::engine::SchedulingPolicy;
 use crate::kvstore::{ArenaForensics, KvStore};
 use crate::metrics::{MetricsHub, RecoveryStats};
@@ -1134,6 +1137,166 @@ pub fn parallel_check(seed: u64) -> Result<ParallelReport, String> {
         jobs: JOBS,
         shard_counts: SHARD_COUNTS.to_vec(),
         makespan: serial.makespan.as_secs_f64(),
+    })
+}
+
+/// Summary of one passing record→replay check.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub seed: u64,
+    pub jobs: usize,
+    /// Virtual makespan of the replayed session, seconds.
+    pub replay_makespan: f64,
+}
+
+/// Seeded job-spec mix of the record→replay scenario, written in the
+/// front door's `k=v&k=v` spec language so the oracle exercises the same
+/// parser ([`build_request`]) the HTTP handlers use.
+fn replay_specs(seed: u64, jobs: usize) -> Vec<String> {
+    let mut rng = SplitMix64::new(seed ^ 0x7265_706C_6179); // "replay"
+    (0..jobs)
+        .map(|i| {
+            let shape = if rng.next_u64() % 3 == 0 { "fan" } else { "chain" };
+            let len = 2 + (rng.next_u64() % 5) as usize;
+            let tenant = rng.next_u64() % 3;
+            let job_seed = rng.next_u64();
+            format!("shape={shape}&len={len}&ms=2&name=rp{i}&tenant={tenant}&seed={job_seed}")
+        })
+        .collect()
+}
+
+/// The record→replay equivalence oracle for the wall-clock front door
+/// (`engine::server`, `wukong serve`): a **real-time** live session
+/// (`rt::Mode::Real` — modeled sleeps really sleep, submissions arrive
+/// from an OS thread at real offsets) records its arrival trace, and
+/// feeding that [`SessionRecording`] back through the **virtual-time**
+/// service must reproduce
+///
+/// * byte-identical per-job sink fingerprints,
+/// * identical admission/shed decisions (the scenario is provisioned so
+///   neither side sheds — any shed on either side is a divergence),
+/// * and a deterministic replay: replaying the recording twice yields
+///   byte-identical canonical traces.
+///
+/// This is the bridge claim of the `TimeSource` split: the wall clock
+/// changes *when* things happen, never *what* they compute.
+pub fn replay_check(seed: u64) -> Result<ReplayReport, String> {
+    const JOBS: usize = 4;
+    let specs = replay_specs(seed, JOBS);
+    let mut submissions = Vec::with_capacity(JOBS);
+    for spec in &specs {
+        let req = build_request(spec)
+            .map_err(|e| format!("seed {seed}: spec {spec:?} failed to parse: {e}"))?;
+        submissions.push(LiveSubmission { req, spec: spec.clone() });
+    }
+
+    // Live half: the session runs against the wall clock while an OS
+    // thread feeds it submissions a couple of real milliseconds apart.
+    let cfg = ServiceConfig::new(SimConfig::test(), seed).with_concurrency(JOBS, JOBS);
+    let service = JobService::new(cfg.clone());
+    let (tx, rx) = mpsc::unbounded::<LiveSubmission>();
+    let submitter = std::thread::spawn(move || {
+        for sub in submissions {
+            let _ = tx.send(sub);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    });
+    let (live, recording) = crate::rt::block_on(
+        async move { service.run_live(rx, Arc::new(())).await },
+        crate::rt::Mode::Real,
+    );
+    submitter
+        .join()
+        .map_err(|_| format!("seed {seed}: submitter thread panicked"))?;
+
+    if recording.jobs.len() != JOBS {
+        return Err(format!(
+            "seed {seed}: recorded {} arrivals, submitted {JOBS}",
+            recording.jobs.len()
+        ));
+    }
+    if recording.jobs.windows(2).any(|w| w[0].offset_ns > w[1].offset_ns) {
+        return Err(format!(
+            "seed {seed}: recorded arrival offsets are not monotonic"
+        ));
+    }
+    for (r, spec) in recording.jobs.iter().zip(&specs) {
+        if &r.spec != spec {
+            return Err(format!(
+                "seed {seed}: recorded spec {:?} != submitted {spec:?}",
+                r.spec
+            ));
+        }
+    }
+    if live.completed() != JOBS || !live.rejected.is_empty() {
+        return Err(format!(
+            "seed {seed}: live session completed {}/{JOBS} with {} shed — the \
+             scenario is provisioned to shed nothing",
+            live.completed(),
+            live.rejected.len()
+        ));
+    }
+    if !live.all_ok() {
+        return Err(format!("seed {seed}: live session has failed jobs"));
+    }
+
+    // Replay half: rebuild every request from the *recorded* spec (the
+    // parser is the deterministic link between the two halves) and run
+    // the recorded offsets through the virtual-time service.
+    let rebuild = |recording: &SessionRecording| -> Result<Vec<JobRequest>, String> {
+        recording
+            .jobs
+            .iter()
+            .map(|r| {
+                build_request(&r.spec).map_err(|e| {
+                    format!("seed {seed}: recorded spec {:?} no longer parses: {e}", r.spec)
+                })
+            })
+            .collect()
+    };
+    let replay_cfg = cfg.with_profile(recording.replay_profile());
+    let replay = run_service(replay_cfg.clone(), rebuild(&recording)?);
+    if replay.completed() != JOBS || !replay.rejected.is_empty() {
+        return Err(format!(
+            "seed {seed}: REPLAY DIVERGED — virtual replay completed {}/{JOBS} \
+             with {} shed; the live session completed all and shed none",
+            replay.completed(),
+            replay.rejected.len()
+        ));
+    }
+    for (a, b) in live.outcomes.iter().zip(replay.outcomes.iter()) {
+        if a.job != b.job || a.name != b.name {
+            return Err(format!(
+                "seed {seed}: REPLAY DIVERGED — outcome order mismatch \
+                 (live job {} {:?} vs replay job {} {:?})",
+                a.job.0, a.name, b.job.0, b.name
+            ));
+        }
+        if a.fingerprint != b.fingerprint {
+            return Err(format!(
+                "seed {seed}: REPLAY DIVERGED — job {} ({}) sink fingerprints \
+                 differ between the wall-clock session and its virtual replay",
+                a.job.0, a.name
+            ));
+        }
+    }
+
+    // Replay-of-replay: the virtual half must itself be deterministic,
+    // byte for byte.
+    let again = run_service(replay_cfg, rebuild(&recording)?);
+    let (t1, t2) = (replay.render_trace(), again.render_trace());
+    if t1 != t2 {
+        let (line, left, right) = first_divergence(&t1, &t2).expect("traces differ");
+        return Err(format!(
+            "seed {seed}: replay is not deterministic — trace line {line}:\n  \
+             first:  {left}\n  second: {right}"
+        ));
+    }
+
+    Ok(ReplayReport {
+        seed,
+        jobs: JOBS,
+        replay_makespan: replay.makespan.as_secs_f64(),
     })
 }
 

@@ -11,13 +11,13 @@
 //! `WUKONG_SIM_SEED_BLOCK=<k>` to run only seeds `[10k, 10k+10)` — the CI
 //! matrix fans the blocks out in parallel (0–4 single-job; 5 multi-job;
 //! 6 governance; 7 locality; 8 spill; 9 recovery; 10 parallel
-//! simulation); an unset variable (local `cargo test`) runs the whole
-//! range. To reproduce a CI failure locally:
+//! simulation; 11 record→replay); an unset variable (local `cargo test`)
+//! runs the whole range. To reproduce a CI failure locally:
 //! `wukong::sim::differential_check(<seed from the log>)`.
 
 use wukong::sim::{
     determinism_check, differential_check, governance_check, locality_check, multi_job_check,
-    multi_job_determinism_check, parallel_check, recovery_check, spill_check,
+    multi_job_determinism_check, parallel_check, recovery_check, replay_check, spill_check,
 };
 
 const BLOCK_SIZE: u64 = 10;
@@ -55,6 +55,13 @@ const RECOVERY_BLOCK: u64 = 9;
 /// byte-for-byte as the serial service, with zero same-instant gate
 /// ties) and skips the other sweeps.
 const PARALLEL_BLOCK: u64 = 10;
+/// The dedicated record→replay CI block (`WUKONG_SIM_SEED_BLOCK=11`):
+/// sweeps the wall-clock front-door oracle (a `Mode::Real` live session
+/// records its arrival trace; the virtual-time replay must reproduce
+/// per-job sink fingerprints and shed decisions byte-for-byte, and the
+/// replay itself must be trace-deterministic) and skips the other
+/// sweeps.
+const REPLAY_BLOCK: u64 = 11;
 
 fn seed_block() -> Option<u64> {
     std::env::var("WUKONG_SIM_SEED_BLOCK").ok().map(|block| {
@@ -69,7 +76,8 @@ fn seed_block() -> Option<u64> {
 fn seed_range() -> std::ops::Range<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) | Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK)
-        | Some(SPILL_BLOCK) | Some(RECOVERY_BLOCK) | Some(PARALLEL_BLOCK) => 0..0,
+        | Some(SPILL_BLOCK) | Some(RECOVERY_BLOCK) | Some(PARALLEL_BLOCK)
+        | Some(REPLAY_BLOCK) => 0..0,
         Some(k) => {
             let lo = k * BLOCK_SIZE;
             assert!(lo < TOTAL_SEEDS, "block {k} out of range");
@@ -86,7 +94,7 @@ fn multi_job_seeds() -> Vec<u64> {
     match seed_block() {
         Some(MULTI_JOB_BLOCK) => (50..58).collect(),
         Some(GOVERNANCE_BLOCK) | Some(LOCALITY_BLOCK) | Some(SPILL_BLOCK)
-        | Some(RECOVERY_BLOCK) | Some(PARALLEL_BLOCK) => vec![],
+        | Some(RECOVERY_BLOCK) | Some(PARALLEL_BLOCK) | Some(REPLAY_BLOCK) => vec![],
         Some(k) => vec![k * BLOCK_SIZE],
         None => vec![0, 25],
     }
@@ -139,6 +147,18 @@ fn parallel_seeds() -> Vec<u64> {
         Some(PARALLEL_BLOCK) => (100..108).collect(),
         Some(_) => vec![],
         None => vec![100],
+    }
+}
+
+/// Record→replay scenario seeds: block 11 sweeps eight; a local run
+/// samples one; the other blocks skip. (Each seed runs a short *real*
+/// wall-clock session — this block really sleeps, a few tens of
+/// milliseconds per seed.)
+fn replay_seeds() -> Vec<u64> {
+    match seed_block() {
+        Some(REPLAY_BLOCK) => (110..118).collect(),
+        Some(_) => vec![],
+        None => vec![110],
     }
 }
 
@@ -326,6 +346,25 @@ fn sharded_simulation_matches_serial_byte_for_byte() {
         println!(
             "parallel seed {:>3}: {} jobs, shards {:?} all byte-identical, makespan {:.2}s",
             report.seed, report.jobs, report.shard_counts, report.makespan,
+        );
+    }
+}
+
+#[test]
+fn recorded_wall_clock_sessions_replay_byte_identically() {
+    // The record→replay oracle (ISSUE 10): a live `Mode::Real` session —
+    // submissions arriving from an OS thread at real offsets, modeled
+    // sleeps really sleeping — records its arrival trace; replaying that
+    // recording through the virtual-time service must reproduce every
+    // job's sink fingerprint and the (empty) shed set, and the replay
+    // itself must render byte-identical traces when run twice.
+    for seed in replay_seeds() {
+        let report = replay_check(seed).unwrap_or_else(|e| {
+            panic!("record→replay oracle failed — reproduce with wukong::sim::replay_check({seed}): {e}")
+        });
+        println!(
+            "replay seed {:>3}: {} jobs recorded live and replayed byte-identically, replay makespan {:.2}s",
+            report.seed, report.jobs, report.replay_makespan,
         );
     }
 }
